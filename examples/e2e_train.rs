@@ -1,0 +1,107 @@
+//! End-to-end validation driver (DESIGN.md §Experiment index, EXPERIMENTS.md
+//! §E2E): train the default transformer chain (≈3.3M params; `--artifacts
+//! artifacts/wide` for the ≈100M-class geometry) for a few hundred SGD
+//! steps on synthetic regression data, executing the *optimal
+//! checkpointing schedule* under a real memory budget, and log the loss
+//! curve. Proves all layers compose: Pallas kernels → JAX stages → HLO
+//! artifacts → PJRT runtime → DP schedule → ledger-enforced execution →
+//! SGD — with Python nowhere on the path.
+//!
+//! ```sh
+//! cargo run --release --example e2e_train -- \
+//!     [--artifacts artifacts/default] [--steps 300] [--memory-frac 0.6]
+//!     [--lr 0.05] [--out results/e2e_loss.csv]
+//! ```
+
+use std::io::Write as _;
+
+use anyhow::{Context, Result};
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::runtime::Runtime;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{optimal_schedule, store_all_schedule};
+use chainckpt::train::{mean_loss, SyntheticData, Trainer};
+use chainckpt::util::{fmt_bytes, Args};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = args.str("artifacts", "artifacts/default");
+    let steps = args.usize("steps", 300);
+    let frac = args.f64("memory-frac", 0.6);
+    let lr = args.f64("lr", 0.05) as f32;
+    let out = args.str("out", "results/e2e_loss.csv");
+
+    let rt = Runtime::load(&dir).context("run `make artifacts` first")?;
+    println!(
+        "loaded {} ({} stages, {} params, input {:?})",
+        dir,
+        rt.manifest.stages.len(),
+        rt.manifest.param_count,
+        rt.manifest.input_shape
+    );
+
+    let chain = measured_chain(&rt, EstimatorConfig::default())?;
+    let store_all = chain.store_all_memory();
+    let budget = (store_all as f64 * frac) as u64;
+    println!(
+        "measured ideal iter: {:.1} ms | store-all {} | budget {} ({:.0}%)",
+        chain.ideal_time() / 1e3,
+        fmt_bytes(store_all),
+        fmt_bytes(budget),
+        100.0 * frac
+    );
+
+    let schedule = optimal_schedule(&chain, budget)
+        .with_context(|| format!("no schedule fits {}", fmt_bytes(budget)))?;
+    let sim = simulate(&chain, &schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = simulate(&chain, &store_all_schedule(&chain)).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "optimal schedule: {} ops (+{} recomputed fwds), predicted {:.1} ms/iter \
+         (store-all would be {:.1} ms at {})",
+        sim.ops,
+        sim.recomputed_forwards,
+        sim.makespan / 1e3,
+        base.makespan / 1e3,
+        fmt_bytes(base.peak_bytes)
+    );
+
+    let data = SyntheticData::generate(&rt, 16, 7)?;
+    let mut trainer = Trainer::new(&rt, schedule, lr, Some(budget), 42)?;
+    let t0 = std::time::Instant::now();
+    let logs = trainer.train(&data, steps, steps.div_euclid(20).max(1), |log| {
+        println!(
+            "step {:>5}  loss {:.6}  {:>7.1} ms/step  peak {}",
+            log.step,
+            log.loss,
+            log.step_time_s * 1e3,
+            fmt_bytes(log.peak_bytes)
+        );
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let first = logs[0].loss;
+    let last = mean_loss(&logs, 20);
+    let imgs = steps as u64 * rt.manifest.input_shape[0] as u64;
+    println!("────────────────────────────────────────────");
+    println!("steps            : {steps} ({:.1} s wall)", wall);
+    println!("loss             : {first:.6} → {last:.6}");
+    println!("throughput       : {:.2} sequences/s", imgs as f64 / wall);
+    println!(
+        "peak activations : {} (budget {}, store-all {})",
+        fmt_bytes(logs.iter().map(|l| l.peak_bytes).max().unwrap()),
+        fmt_bytes(budget),
+        fmt_bytes(store_all)
+    );
+
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(&out)?;
+    writeln!(f, "step,loss,step_time_s,peak_bytes")?;
+    for l in &logs {
+        writeln!(f, "{},{},{},{}", l.step, l.loss, l.step_time_s, l.peak_bytes)?;
+    }
+    println!("loss curve → {out}");
+    anyhow::ensure!(last < first, "loss did not decrease");
+    Ok(())
+}

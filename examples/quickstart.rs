@@ -1,0 +1,65 @@
+//! Quickstart: the whole system in ~60 lines.
+//!
+//! 1. Load the AOT-compiled chain (`make artifacts` builds it once).
+//! 2. Measure per-stage costs (paper §5.1).
+//! 3. Solve for the optimal checkpointing schedule under a memory budget
+//!    (paper §4.2, Theorem 1).
+//! 4. Train a few SGD steps executing that schedule — Python never runs.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::runtime::Runtime;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::optimal_schedule;
+use chainckpt::train::{SyntheticData, Trainer};
+use chainckpt::util::fmt_bytes;
+
+fn main() -> Result<()> {
+    // 1. compiled artifacts → PJRT executables
+    let rt = Runtime::load("artifacts/quickstart")?;
+    println!(
+        "chain: {} stages, {} params",
+        rt.manifest.stages.len(),
+        rt.manifest.param_count
+    );
+
+    // 2. parameter estimation: measure u_f, u_b per stage
+    let chain = measured_chain(&rt, EstimatorConfig::default())?;
+    println!(
+        "measured: ideal iter {:.0} µs, store-all memory {}",
+        chain.ideal_time(),
+        fmt_bytes(chain.store_all_memory())
+    );
+
+    // 3. optimal persistent schedule for 70% of the store-all footprint
+    let budget = chain.store_all_memory() * 7 / 10;
+    let schedule = optimal_schedule(&chain, budget)
+        .expect("no schedule fits this budget");
+    let sim = simulate(&chain, &schedule)?;
+    println!(
+        "schedule @ {}: {} ops, {} recomputed forwards, predicted {:.0} µs (+{:.1}% vs ideal)",
+        fmt_bytes(budget),
+        sim.ops,
+        sim.recomputed_forwards,
+        sim.makespan,
+        100.0 * (sim.makespan / chain.ideal_time() - 1.0),
+    );
+    println!("ops: {}", schedule.compact());
+
+    // 4. train a few steps under the memory ledger
+    let data = SyntheticData::generate(&rt, 4, 7)?;
+    let mut trainer = Trainer::new(&rt, schedule, 0.1, Some(budget), 42)?;
+    trainer.train(&data, 20, 5, |log| {
+        println!(
+            "step {:>3}  loss {:.5}  peak {}",
+            log.step,
+            log.loss,
+            fmt_bytes(log.peak_bytes)
+        );
+    })?;
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Measured counterpart of the paper's Figure 3: run all four strategies
+//! on the *real* compiled chain and report wall-clock throughput against
+//! ledger peak memory. (The figure harness `chainckpt figures` uses the
+//! V100 roofline simulator; this example uses actual CPU-PJRT execution.)
+//!
+//! ```sh
+//! cargo run --release --example strategy_comparison -- \
+//!     [--artifacts artifacts/default] [--points 5] [--reps 3] \
+//!     [--out results/measured_fig3.csv]
+//! ```
+
+use std::io::Write as _;
+
+use anyhow::{Context, Result};
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
+use chainckpt::runtime::{lit_from_vec, Runtime};
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{
+    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, Schedule,
+};
+use chainckpt::util::{fmt_bytes, median, Args, Rng};
+
+struct Row {
+    strategy: &'static str,
+    param: String,
+    peak: u64,
+    predicted_us: f64,
+    measured_ms: f64,
+    throughput: f64,
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = args.str("artifacts", "artifacts/default");
+    let points = args.usize("points", 5);
+    let reps = args.usize("reps", 3);
+    let out = args.str("out", "results/measured_fig3.csv");
+
+    let rt = Runtime::load(&dir).context("run `make artifacts` first")?;
+    let chain = measured_chain(&rt, EstimatorConfig::default())?;
+    let batch = rt.manifest.input_shape[0] as u64;
+    let n = rt.manifest.stages.len();
+
+    let mut rng = Rng::new(17);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let input = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape)?;
+    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut measure = |strategy: &'static str, param: String, sched: &Schedule| -> Result<()> {
+        let sim = simulate(&chain, sched).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut ex = Executor::new(&rt, 1)?;
+        ex.set_data_param(n - 1, &target)?;
+        let mut times = Vec::new();
+        for r in 0..=reps {
+            let res = ex.run(sched, &input, None)?;
+            if r > 0 {
+                times.push(res.elapsed_s);
+            }
+        }
+        let t = median(&mut times);
+        println!(
+            "{strategy:<12} {param:>12}  peak {:>12}  {:>8.1} ms/iter  {:>7.2} seq/s",
+            fmt_bytes(sim.peak_bytes),
+            t * 1e3,
+            batch as f64 / t
+        );
+        rows.push(Row {
+            strategy,
+            param,
+            peak: sim.peak_bytes,
+            predicted_us: sim.makespan,
+            measured_ms: t * 1e3,
+            throughput: batch as f64 / t,
+        });
+        Ok(())
+    };
+
+    println!("strategy            param          peak        time         throughput");
+    measure("pytorch", "-".into(), &store_all_schedule(&chain))?;
+    for k in paper_segment_sweep(chain.len() - 1).into_iter().take(points) {
+        measure("sequential", format!("{k}seg"), &periodic_schedule(&chain, k))?;
+    }
+    let lo = chain.min_memory_hint();
+    let hi = chain.store_all_memory();
+    for i in 1..=points as u64 {
+        let m = lo + (hi - lo) * i / points as u64;
+        if let Some(s) = solve(&chain, m, 300, Mode::Full) {
+            measure("optimal", fmt_bytes(m), &s)?;
+        }
+        if let Some(s) = solve(&chain, m, 300, Mode::AdRevolve) {
+            measure("revolve", fmt_bytes(m), &s)?;
+        }
+    }
+
+    // paper §5.3 model-accuracy check: predicted (estimator × schedule)
+    // vs measured throughput, like the paper's 7.8 % MAPE claim
+    let mape: f64 = rows
+        .iter()
+        .map(|r| ((r.predicted_us / 1e3 - r.measured_ms) / r.measured_ms).abs())
+        .sum::<f64>()
+        / rows.len() as f64;
+    println!("\ncost-model MAPE vs measured iteration time: {:.1} % (paper: 7.8 %)", 100.0 * mape);
+
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(&out)?;
+    writeln!(f, "strategy,param,peak_bytes,predicted_us,measured_ms,throughput_seq_s")?;
+    for r in &rows {
+        writeln!(
+            f,
+            "{},{},{},{:.1},{:.3},{:.3}",
+            r.strategy, r.param, r.peak, r.predicted_us, r.measured_ms, r.throughput
+        )?;
+    }
+    println!("wrote {out}");
+    Ok(())
+}

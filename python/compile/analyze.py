@@ -1,0 +1,139 @@
+"""L1 structural performance analysis (DESIGN.md §Perf).
+
+``interpret=True`` Pallas gives CPU-numpy execution, so wall-clock here is
+*not* a TPU proxy. What we can and do optimize/verify is kernel
+*structure*: per-grid-step VMEM footprint (must fit the ~16 MiB/core
+budget with double-buffering headroom) and the MXU utilization profile of
+each matmul tile (how close tile shapes are to the 128×128 systolic
+array). This module computes both for every kernel instantiation the
+chain presets actually use, and is asserted by
+``python/tests/test_analyze.py`` + reported in EXPERIMENTS.md §Perf.
+
+Run:  python -m compile.analyze [--preset default]
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+from .kernels.fused_dense import TILE_M, TILE_N, pick_block
+from .model import build_chain
+from .stages import Attn, Dense, Loss, Mlp
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TPU core (v4-ish)
+BYTES = 4
+MXU = 128
+
+
+@dataclass
+class KernelReport:
+    name: str
+    grid: tuple
+    vmem_bytes: int
+    mxu_util: float  # 0..1, min over the matmul dims vs the 128x128 array
+    notes: str
+
+    @property
+    def vmem_frac(self) -> float:
+        return self.vmem_bytes / VMEM_BUDGET
+
+
+def _mxu_util(m: int, k: int, n: int) -> float:
+    """Utilization of a 128×128 systolic pass for an (m×k)·(k×n) tile:
+    limited by how fully the tile fills the array's two spatial dims."""
+    fill = lambda d: min(d, MXU) / MXU if d % MXU != 0 else 1.0
+    return min(fill(m), fill(n))
+
+
+def dense_report(name: str, m: int, k: int, n: int, save: bool) -> KernelReport:
+    bm, bn = pick_block(m, TILE_M), pick_block(n, TILE_N)
+    # x tile (bm, K) + w tile (K, bn) + bias (bn) + out tile(s) (bm, bn)
+    outs = 2 if save else 1
+    vmem = BYTES * (bm * k + k * bn + bn + outs * bm * bn)
+    return KernelReport(
+        name=name,
+        grid=(m // bm, n // bn),
+        vmem_bytes=vmem,
+        mxu_util=_mxu_util(bm, k, bn),
+        notes=f"tiles ({bm}×{k})·({k}×{bn})" + (" +preact store" if save else ""),
+    )
+
+
+def layernorm_report(name: str, m: int, d: int) -> KernelReport:
+    bm = pick_block(m, 128)
+    vmem = BYTES * (bm * d * 2 + bm)  # in tile + xhat tile + rstd
+    return KernelReport(
+        name=name,
+        grid=(m // bm,),
+        vmem_bytes=vmem,
+        mxu_util=0.0,  # VPU-only kernel (reductions), MXU not used
+        notes=f"row tile ({bm}×{d}), VPU reductions",
+    )
+
+
+def attention_report(name: str, bh: int, t: int, dh: int) -> KernelReport:
+    # q,k,v (t,dh) + scores/probs (t,t) + ctx (t,dh) resident per step
+    vmem = BYTES * (3 * t * dh + 2 * t * t + t * dh)
+    return KernelReport(
+        name=name,
+        grid=(bh,),
+        vmem_bytes=vmem,
+        mxu_util=_mxu_util(t, dh, t),
+        notes=f"per-(batch·head) slice: qkv ({t}×{dh}), probs ({t}×{t})",
+    )
+
+
+def analyze_chain(preset: str) -> list[KernelReport]:
+    chain = build_chain(preset)
+    reports: list[KernelReport] = []
+    seen = set()
+    for st in chain.stages:
+        if st.sig in seen:
+            continue
+        seen.add(st.sig)
+        m = st.batch * st.seq
+        if isinstance(st, Dense):
+            reports.append(
+                dense_report(f"{st.sig}/fused_dense", m, st.d_in, st.d_out, save=False)
+            )
+            if st.activation != "none":
+                reports.append(
+                    dense_report(f"{st.sig}/fused_dense_save", m, st.d_in, st.d_out, True)
+                )
+        elif isinstance(st, Mlp):
+            reports.append(layernorm_report(f"{st.sig}/layernorm", m, st.d))
+            reports.append(dense_report(f"{st.sig}/ffn_in", m, st.d, st.f, True))
+            reports.append(dense_report(f"{st.sig}/ffn_out", m, st.f, st.d, False))
+        elif isinstance(st, Attn):
+            reports.append(layernorm_report(f"{st.sig}/layernorm", m, st.d))
+            reports.append(
+                attention_report(
+                    f"{st.sig}/attention", st.batch * st.heads, st.seq, st.dh
+                )
+            )
+        elif isinstance(st, Loss):
+            pass  # elementwise, no kernel
+    return reports
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="default")
+    args = ap.parse_args()
+    reports = analyze_chain(args.preset)
+    print(f"{'kernel':<44} {'grid':>10} {'VMEM':>10} {'%bud':>6} {'MXU':>5}  notes")
+    for r in reports:
+        print(
+            f"{r.name:<44} {str(r.grid):>10} {r.vmem_bytes:>10} "
+            f"{100 * r.vmem_frac:>5.1f}% {100 * r.mxu_util:>4.0f}%  {r.notes}"
+        )
+    worst = max(reports, key=lambda r: r.vmem_frac)
+    print(
+        f"\nworst VMEM: {worst.name} at {100 * worst.vmem_frac:.1f}% of "
+        f"{VMEM_BUDGET >> 20} MiB budget"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""AOT pipeline: lower every stage entry point to HLO *text* + manifest.
+
+This is the only place Python touches the system; it runs once at build
+time (``make artifacts``).  For each unique stage signature we lower three
+jitted functions (fwd / fwd_all / bwd) to StableHLO and convert to XLA HLO
+text, which the Rust runtime parses with ``HloModuleProto::from_text_file``.
+
+HLO **text** — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Calling convention (recorded in manifest.json, relied on by rust/src/runtime):
+  fwd      inputs  [θ_0..θ_{P-1}, a_in]            outputs (a_out,)
+  fwd_all  inputs  [θ_0..θ_{P-1}, a_in]            outputs (a_out, ā_1..ā_E)
+  bwd      inputs  [θ_0..θ_{P-1}, a_in, a_out, ā_1..ā_E, δ_out]
+           outputs (δ_in, ∂θ_0..∂θ_{G-1})           (G = non-data params)
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ChainSpec, build_chain
+from .stages import Stage
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XLA HLO text (the 64-bit-id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_stage(stage: Stage) -> dict[str, str]:
+    """Returns {entry_point: hlo_text} for one stage signature."""
+    p_specs = [_spec(p.shape) for p in stage.params]
+    x_spec = _spec(stage.in_shape)
+    abar_specs = [_spec(stage.out_shape)] + [_spec(t.shape) for t in stage.abar_extras]
+    dy_spec = _spec(stage.delta_out_shape)
+    n_p = len(p_specs)
+
+    def fwd_fn(*args):
+        return (stage.fwd(list(args[:n_p]), args[n_p]),)
+
+    def fwd_all_fn(*args):
+        return tuple(stage.fwd_all(list(args[:n_p]), args[n_p]))
+
+    def bwd_fn(*args):
+        params = list(args[:n_p])
+        x = args[n_p]
+        abar = tuple(args[n_p + 1 : n_p + 1 + len(abar_specs)])
+        dy = args[-1]
+        return tuple(stage.bwd(params, x, abar, dy))
+
+    # keep_unused=True: the Rust executor passes every manifest-declared
+    # input positionally, so unused ones (e.g. a_out for a stage whose
+    # backward doesn't need it) must stay in the HLO entry signature.
+    jit = lambda f: jax.jit(f, keep_unused=True)
+    return {
+        "fwd": to_hlo_text(jit(fwd_fn).lower(*p_specs, x_spec)),
+        "fwd_all": to_hlo_text(jit(fwd_all_fn).lower(*p_specs, x_spec)),
+        "bwd": to_hlo_text(jit(bwd_fn).lower(*p_specs, x_spec, *abar_specs, dy_spec)),
+    }
+
+
+def build_manifest(chain: ChainSpec, files: dict[str, dict[str, str]]) -> dict:
+    sigs = {}
+    for stage in chain.stages:
+        if stage.sig in sigs:
+            continue
+        sigs[stage.sig] = {
+            "kind": stage.kind,
+            "files": files[stage.sig],
+            "params": [
+                {"name": p.name, "shape": list(p.shape), "init": p.init}
+                for p in stage.params
+            ],
+            "in_shape": list(stage.in_shape),
+            "out_shape": list(stage.out_shape),
+            "abar_extras": [
+                {"name": t.name, "shape": list(t.shape)} for t in stage.abar_extras
+            ],
+            "w_a": stage.w_a,
+            "w_abar": stage.w_abar,
+            "flops_fwd": stage.flops_fwd(),
+            "flops_bwd": stage.flops_bwd(),
+            "n_grads": sum(1 for p in stage.params if p.init != "data"),
+        }
+    return {
+        "preset": chain.name,
+        "dtype": "f32",
+        "input_shape": list(chain.input_shape),
+        "param_count": chain.param_count(),
+        "stages": [
+            {"name": f"stage_{i}_{st.kind}", "kind": st.kind, "sig": st.sig}
+            for i, st in enumerate(chain.stages)
+        ],
+        "signatures": sigs,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="default")
+    ap.add_argument("--out-dir", default=None, help="default: ../artifacts/<preset>")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--blocks", type=int, default=None)
+    args = ap.parse_args()
+
+    overrides = {
+        k: v
+        for k, v in dict(batch=args.batch, seq=args.seq, blocks=args.blocks).items()
+        if v is not None
+    }
+    chain = build_chain(args.preset, **overrides)
+    out_dir = args.out_dir or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", args.preset
+    )
+    os.makedirs(out_dir, exist_ok=True)
+
+    files: dict[str, dict[str, str]] = {}
+    total = 0
+    for stage in chain.stages:
+        if stage.sig in files:
+            continue
+        hlos = lower_stage(stage)
+        entry_files = {}
+        for entry, text in hlos.items():
+            fname = f"{stage.sig}_{entry}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entry_files[entry] = fname
+            total += len(text)
+        files[stage.sig] = entry_files
+        print(f"lowered {stage.sig}: fwd/fwd_all/bwd")
+
+    manifest = build_manifest(chain, files)
+    manifest["content_hash"] = hashlib.sha256(
+        json.dumps(manifest, sort_keys=True).encode()
+    ).hexdigest()[:16]
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(
+        f"wrote {len(files)} signatures ({total} HLO chars), "
+        f"manifest for L+1={chain.length} stages, "
+        f"{manifest['param_count']} params → {out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

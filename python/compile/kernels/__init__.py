@@ -1,0 +1,15 @@
+"""L1: Pallas kernels for the chain's stage hot-spots + pure-jnp oracles."""
+
+from .attention import attention
+from .fused_dense import fused_dense, fused_dense_save, pick_block
+from .layernorm import layernorm
+from . import ref
+
+__all__ = [
+    "attention",
+    "fused_dense",
+    "fused_dense_save",
+    "layernorm",
+    "pick_block",
+    "ref",
+]

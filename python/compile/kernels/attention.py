@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: scaled-dot-product attention per (batch*head) slice.
+
+Grid = one program per (batch, head). Each step holds q/k/v slices
+(T, dh) in VMEM, forms the (T, T) score tile, softmaxes it in-register and
+writes back both the context (T, dh) and the probability matrix (T, T).
+
+TPU mapping of the paper's GPU framing: where a CUDA implementation would
+assign the (T, T) score tile to a threadblock in shared memory, here the
+BlockSpec pins it to VMEM and the two matmuls (q·kᵀ and p·v) hit the MXU.
+The probs output exists *because of the paper's model*: F_all checkpoints
+ā ⊇ {probs} so B never recomputes the softmax; F∅/Fck would simply drop it.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, c_ref, p_ref):
+    q = q_ref[0].astype(jnp.float32)  # (T, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (T, T)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    c = jnp.dot(p, v, preferred_element_type=jnp.float32)  # (T, dh)
+    c_ref[0] = c.astype(c_ref.dtype)
+    p_ref[0] = p.astype(p_ref.dtype)
+
+
+@jax.jit
+def attention(q, k, v):
+    """q, k, v: (BH, T, dh) → (ctx: (BH, T, dh), probs: (BH, T, T)).
+
+    Callers with (B, H, T, dh) tensors flatten the leading two axes; the
+    kernel treats each (batch, head) slice independently.
+    """
+    bh, t, dh = q.shape
+    grid = (bh,)
+    return pl.pallas_call(
+        _attention_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((bh, t, t), q.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t, t), lambda i: (i, 0, 0)),
+        ),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,120 @@
+"""L1 Pallas kernel: fused dense layer  ``y = act(x @ w + b)``.
+
+The stage hot-spot of the heterogeneous chain. On a real TPU the BlockSpecs
+below express the HBM→VMEM schedule: ``x`` is streamed in (bm, K) row tiles,
+``w`` in (K, bn) column tiles, and each grid step produces one MXU-shaped
+(bm, bn) output tile with the bias-add and GELU fused into the epilogue —
+the standard "one pass over HBM" fusion that the paper's F-operations assume
+when they charge a single ``u_f`` per stage.
+
+Lowered with ``interpret=True`` so the emitted HLO runs on the CPU PJRT
+client (real-TPU Mosaic custom-calls cannot). Structure — tile shapes, VMEM
+footprint, fusion — is what we optimize; see DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu
+
+# MXU-friendly tile targets. 128 matches both the MXU systolic array edge
+# and the lane dimension of VMEM tiles.
+TILE_M = 128
+TILE_N = 128
+
+
+def pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (prefers ``target``)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, activation: str):
+    # x_ref: (bm, K) VMEM tile; w_ref: (K, bn); b_ref: (bn,); o_ref: (bm, bn)
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    # MXU matmul with f32 accumulation regardless of input dtype.
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if activation == "gelu":
+        z = gelu(z)
+    o_ref[...] = z.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_dense(x2d, w, b, activation: str = "gelu"):
+    """``act(x2d @ w + b)`` for x2d: (M, K), w: (K, N), b: (N,).
+
+    Callers with (B, T, D) inputs reshape to (B*T, D) first (see
+    ``compile.stages``); the kernel itself is purely 2-D.
+    """
+    m, k = x2d.shape
+    k2, n = w.shape
+    assert k == k2, (x2d.shape, w.shape)
+    bm = pick_block(m, TILE_M)
+    bn = pick_block(n, TILE_N)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((m, n), x2d.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x2d, w, b)
+
+
+def _dense_preact_kernel(x_ref, w_ref, b_ref, z_ref, y_ref, *, activation: str):
+    # Variant used by fwd_all: also materializes the pre-activation z, the
+    # tensor the backward pass needs (ā = {y, z}).
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    z_ref[...] = z.astype(z_ref.dtype)
+    y = gelu(z) if activation == "gelu" else z
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_dense_save(x2d, w, b, activation: str = "gelu"):
+    """Like :func:`fused_dense` but returns ``(y, z)`` with z = x@w+b.
+
+    This is the F_all form: one extra VMEM→HBM store per tile buys the
+    backward pass out of recomputing the matmul.
+    """
+    m, k = x2d.shape
+    _, n = w.shape
+    bm = pick_block(m, TILE_M)
+    bn = pick_block(n, TILE_N)
+    grid = (m // bm, n // bn)
+    z, y = pl.pallas_call(
+        functools.partial(_dense_preact_kernel, activation=activation),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, n), x2d.dtype),
+            jax.ShapeDtypeStruct((m, n), x2d.dtype),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ),
+        interpret=True,
+    )(x2d, w, b)
+    return y, z

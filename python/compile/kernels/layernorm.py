@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: row-wise layernorm producing (xhat, rstd).
+
+Each grid step normalizes a (bm, D) tile of rows entirely inside VMEM — one
+HBM read of the tile, two HBM writes (xhat and the per-row rstd). The
+affine scale/shift is applied by the caller (``compile.stages``) so the
+same kernel serves both fwd and fwd_all, and the backward consumes exactly
+the two tensors this kernel emits.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fused_dense import pick_block
+
+EPS = 1e-5
+
+
+def _layernorm_kernel(x_ref, xhat_ref, rstd_ref):
+    x = x_ref[...].astype(jnp.float32)  # (bm, D)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + EPS)
+    xhat_ref[...] = ((x - mu) * rstd).astype(xhat_ref.dtype)
+    rstd_ref[...] = rstd[:, 0].astype(rstd_ref.dtype)
+
+
+@jax.jit
+def layernorm(x2d):
+    """x2d: (M, D) → (xhat: (M, D), rstd: (M,))."""
+    m, d = x2d.shape
+    bm = pick_block(m, 128)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _layernorm_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m, d), x2d.dtype),
+            jax.ShapeDtypeStruct((m,), x2d.dtype),
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(x2d)

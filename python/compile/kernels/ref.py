@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package must agree with the corresponding function here
+to ~1e-5 (f32) across the shape sweeps in ``python/tests/test_kernels.py``.
+These are also the building blocks of the hand-derived stage backwards in
+``compile.stages`` — keeping a single gelu/softmax definition guarantees the
+kernel, the forward artifact and the backward artifact all use the *same*
+nonlinearity.
+"""
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654  # sqrt(2/pi)
+GELU_C = 0.044715
+
+
+def gelu(z):
+    """tanh-approximation GELU (used consistently in kernels and backwards)."""
+    return 0.5 * z * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (z + GELU_C * z**3)))
+
+
+def gelu_grad(z):
+    """d gelu / dz for the tanh approximation."""
+    inner = SQRT_2_OVER_PI * (z + GELU_C * z**3)
+    t = jnp.tanh(inner)
+    dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * z**2)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * dinner
+
+
+def dense_ref(x, w, b, activation="gelu"):
+    """x: (..., K) @ w: (K, N) + b: (N,), optional GELU."""
+    z = jnp.einsum("...k,kn->...n", x, w) + b
+    if activation == "gelu":
+        return gelu(z)
+    if activation == "none":
+        return z
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def dense_preact_ref(x, w, b):
+    """Pre-activation z = x @ w + b (what fwd_all checkpoints)."""
+    return jnp.einsum("...k,kn->...n", x, w) + b
+
+
+def layernorm_ref(x, eps=1e-5):
+    """Row-wise layernorm over the last axis.
+
+    Returns (xhat, rstd): the normalized rows and the reciprocal stddev,
+    exactly the tensors the backward pass consumes.
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mu) * rstd
+    return xhat, rstd
+
+
+def softmax_ref(s):
+    """Numerically-stable softmax over the last axis."""
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def attention_ref(q, k, v):
+    """Scaled-dot-product attention.
+
+    q, k, v: (B, H, T, dh). Returns (ctx, probs) where probs is the softmax
+    attention matrix (B, H, T, T) — checkpointed by fwd_all because the
+    backward needs it.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = softmax_ref(s)
+    c = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    return c, p

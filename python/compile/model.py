@@ -1,0 +1,139 @@
+"""L2: the heterogeneous chain model (paper Fig. 1a) and its presets.
+
+A ``ChainSpec`` is an ordered list of stages (the last one is always the
+loss stage F^{L+1}/B^{L+1}).  This module also provides reference
+*composed* forward/backward execution in pure JAX, used by the tests to
+check that chaining the per-stage hand-derived backwards reproduces
+``jax.grad`` of the end-to-end loss — the correctness contract the Rust
+executor relies on.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .stages import Attn, Dense, Loss, Mlp, Stage
+
+PRESETS = {
+    # Tiny chain for smoke tests and the quickstart example.
+    "quickstart": dict(batch=2, seq=16, d=64, heads=4, ffn=128, blocks=1),
+    # Default chain for the end-to-end training example: a GPT-style
+    # trunk. ~3.2M parameters at d=256.
+    "default": dict(batch=8, seq=64, d=256, heads=4, ffn=1024, blocks=4),
+    # Wide chain: 100M-class stage shapes (d=768, ffn=3072 — GPT-2 base
+    # geometry); used to exercise realistic activation/parameter ratios.
+    "wide": dict(batch=4, seq=128, d=768, heads=12, ffn=3072, blocks=6),
+}
+
+
+@dataclass
+class ChainSpec:
+    name: str
+    stages: list  # [Stage], last is Loss
+
+    @property
+    def length(self) -> int:
+        """L+1 in the paper's notation (compute stages + loss)."""
+        return len(self.stages)
+
+    @property
+    def input_shape(self) -> tuple:
+        return self.stages[0].in_shape
+
+    def param_count(self) -> int:
+        return sum(
+            int(np.prod(p.shape))
+            for st in self.stages
+            for p in st.params
+            if p.init != "data"
+        )
+
+
+def build_chain(preset: str = "default", **overrides) -> ChainSpec:
+    cfg = dict(PRESETS[preset])
+    cfg.update(overrides)
+    b, t, d = cfg["batch"], cfg["seq"], cfg["d"]
+    stages: list[Stage] = [Dense(b, t, d, d, activation="gelu")]
+    for _ in range(cfg["blocks"]):
+        stages.append(Attn(b, t, d, cfg["heads"]))
+        stages.append(Mlp(b, t, d, cfg["ffn"]))
+    stages.append(Dense(b, t, d, d, activation="none"))  # output head
+    stages.append(Loss(b, t, d))
+    return ChainSpec(name=preset, stages=stages)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (mirrors the Rust executor's initializer; tests use this)
+# ---------------------------------------------------------------------------
+
+
+def init_stage_params(stage: Stage, key) -> list:
+    params = []
+    for spec in stage.params:
+        key, sub = jax.random.split(key)
+        if spec.init == "xavier":
+            fan_in, fan_out = spec.shape[0], spec.shape[-1]
+            lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+            params.append(jax.random.uniform(sub, spec.shape, jnp.float32, -lim, lim))
+        elif spec.init == "zeros":
+            params.append(jnp.zeros(spec.shape, jnp.float32))
+        elif spec.init == "ones":
+            params.append(jnp.ones(spec.shape, jnp.float32))
+        elif spec.init == "data":
+            params.append(jax.random.normal(sub, spec.shape, jnp.float32))
+        else:
+            raise ValueError(spec.init)
+    return params
+
+
+def init_chain_params(chain: ChainSpec, seed: int = 0) -> list[list]:
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for stage in chain.stages:
+        key, sub = jax.random.split(key)
+        out.append(init_stage_params(stage, sub))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Composed reference execution (ground truth for tests)
+# ---------------------------------------------------------------------------
+
+
+def chain_forward(chain: ChainSpec, all_params: list, x):
+    """End-to-end forward; returns the scalar loss."""
+    a = x
+    for stage, params in zip(chain.stages, all_params):
+        a = stage.fwd(params, a)
+    return a
+
+
+def chain_forward_ref(chain: ChainSpec, all_params: list, x):
+    """Pure-jnp end-to-end forward (differentiable; no Pallas)."""
+    a = x
+    for stage, params in zip(chain.stages, all_params):
+        a = stage.fwd_ref(params, a)
+    return a
+
+
+def chain_backward_manual(chain: ChainSpec, all_params: list, x):
+    """Runs the store-all schedule in pure JAX: Fall everywhere, then B
+    right-to-left.  Returns (loss, dx, grads-per-stage) — the values the
+    Rust executor must reproduce for *any* valid schedule."""
+    acts = [x]
+    abars = []
+    for stage, params in zip(chain.stages, all_params):
+        abar = stage.fwd_all(params, acts[-1])
+        abars.append(abar)
+        acts.append(abar[0])
+    loss = acts[-1]
+    delta = jnp.ones((), jnp.float32)
+    grads = [None] * len(chain.stages)
+    for i in reversed(range(len(chain.stages))):
+        out = chain.stages[i].bwd(all_params[i], acts[i], abars[i], delta)
+        delta, grads[i] = out[0], list(out[1:])
+    return loss, delta, grads

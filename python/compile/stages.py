@@ -1,0 +1,508 @@
+"""L2: stage definitions for the heterogeneous chain (paper §3.1).
+
+Each stage ℓ is an opaque block with parameters θℓ and three lowered entry
+points, exactly matching the paper's operation set (Table 1):
+
+  ``fwd``     : (θ…, a_in)            → (a_out,)             — F∅ / Fck
+  ``fwd_all`` : (θ…, a_in)            → (a_out, ā-extras…)   — F_all
+  ``bwd``     : (θ…, a_in, ā…, δ_out) → (δ_in, ∂θ…)          — B
+
+with ā ≡ (a_out, *extras): following the paper, ā^ℓ *includes* a^ℓ but not
+a^{ℓ-1}.  The backward passes are hand-derived (no autodiff inside the
+artifact) so that B really consumes the checkpointed ā rather than silently
+re-running the forward — this is what makes u_b independent of the schedule,
+the property the DP cost model relies on.  Every bwd is validated against
+``jax.vjp`` in ``python/tests/test_stages.py``.
+
+All tensors are positional and flat (no pytrees) so the Rust executor can
+feed Literals by index; the ordering contract is recorded in manifest.json.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from .kernels import attention, fused_dense, fused_dense_save, layernorm
+from .kernels.ref import attention_ref, dense_ref, gelu_grad, layernorm_ref
+
+DTYPE = jnp.float32
+BYTES = 4  # f32
+
+
+def _nelem(shape) -> int:
+    return int(math.prod(shape)) if shape else 1
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor of a stage.
+
+    ``init`` tells the Rust side how to initialize it:
+      * ``xavier`` — U(±sqrt(6/(fan_in+fan_out))) for weight matrices
+      * ``zeros`` / ``ones`` — biases / layernorm gains
+      * ``data``  — not a parameter at all: per-batch data fed by the
+        executor (the loss stage's regression target).
+    """
+
+    name: str
+    shape: tuple
+    init: str
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: tuple
+
+    @property
+    def bytes(self) -> int:
+        return _nelem(self.shape) * BYTES
+
+
+class Stage:
+    """Base class; concrete stages fill in the forward/backward callables."""
+
+    kind: str = "?"
+
+    def __init__(self, batch: int, seq: int):
+        self.batch = batch
+        self.seq = seq
+
+    # --- signature / manifest plumbing -----------------------------------
+    @property
+    def sig(self) -> str:
+        raise NotImplementedError
+
+    @property
+    def params(self) -> list[ParamSpec]:
+        raise NotImplementedError
+
+    @property
+    def in_shape(self) -> tuple:
+        raise NotImplementedError
+
+    @property
+    def out_shape(self) -> tuple:
+        raise NotImplementedError
+
+    @property
+    def abar_extras(self) -> list[TensorSpec]:
+        """Checkpointed intermediates beyond a_out itself."""
+        raise NotImplementedError
+
+    @property
+    def delta_in_shape(self) -> tuple:
+        return self.in_shape
+
+    @property
+    def delta_out_shape(self) -> tuple:
+        return self.out_shape
+
+    # Sizes the DP consumes (paper: ω_a, ω_ā; ω_δ == ω_a).
+    @property
+    def w_a(self) -> int:
+        return _nelem(self.out_shape) * BYTES
+
+    @property
+    def w_abar(self) -> int:
+        return self.w_a + sum(t.bytes for t in self.abar_extras)
+
+    def flops_fwd(self) -> int:
+        raise NotImplementedError
+
+    def flops_bwd(self) -> int:
+        # Rule of thumb: backward does ~2x the forward matmul work.
+        return 2 * self.flops_fwd()
+
+    # --- compute ----------------------------------------------------------
+    def fwd(self, params, x):
+        raise NotImplementedError
+
+    def fwd_all(self, params, x):
+        raise NotImplementedError
+
+    def bwd(self, params, x, abar, dy):
+        """Returns (dx, *param_grads) — grads ordered like ``self.params``."""
+        raise NotImplementedError
+
+    def fwd_ref(self, params, x):
+        """Pure-jnp forward (no Pallas) — differentiable; used by the tests
+        to cross-check the hand-derived ``bwd`` against ``jax.vjp``."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by backward passes
+# ---------------------------------------------------------------------------
+
+
+def _ln_bwd(dh2d, xhat, rstd, g):
+    """Backward of h = xhat*g + b given grad dh (all 2-D, rstd (M,))."""
+    dxhat = dh2d * g
+    gg = jnp.sum(dh2d * xhat, axis=0)
+    gb = jnp.sum(dh2d, axis=0)
+    mean1 = jnp.mean(dxhat, axis=-1, keepdims=True)
+    mean2 = jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    dx = rstd[:, None] * (dxhat - mean1 - xhat * mean2)
+    return dx, gg, gb
+
+
+# ---------------------------------------------------------------------------
+# Dense: y = act(x @ W + b)
+# ---------------------------------------------------------------------------
+
+
+class Dense(Stage):
+    kind = "dense"
+
+    def __init__(self, batch, seq, d_in, d_out, activation="gelu"):
+        super().__init__(batch, seq)
+        self.d_in, self.d_out, self.activation = d_in, d_out, activation
+
+    @property
+    def sig(self):
+        return f"dense_b{self.batch}t{self.seq}_{self.d_in}x{self.d_out}_{self.activation}"
+
+    @property
+    def params(self):
+        return [
+            ParamSpec("w", (self.d_in, self.d_out), "xavier"),
+            ParamSpec("b", (self.d_out,), "zeros"),
+        ]
+
+    @property
+    def in_shape(self):
+        return (self.batch, self.seq, self.d_in)
+
+    @property
+    def out_shape(self):
+        return (self.batch, self.seq, self.d_out)
+
+    @property
+    def abar_extras(self):
+        if self.activation == "none":
+            return []  # linear backward needs only x and δ
+        m = self.batch * self.seq
+        return [TensorSpec("z", (m, self.d_out))]
+
+    def flops_fwd(self):
+        return 2 * self.batch * self.seq * self.d_in * self.d_out
+
+    def _x2d(self, x):
+        return x.reshape(self.batch * self.seq, self.d_in)
+
+    def fwd(self, params, x):
+        w, b = params
+        y = fused_dense(self._x2d(x), w, b, activation=self.activation)
+        return y.reshape(self.out_shape)
+
+    def fwd_ref(self, params, x):
+        w, b = params
+        return dense_ref(x, w, b, self.activation)
+
+    def fwd_all(self, params, x):
+        w, b = params
+        if self.activation == "none":
+            return (self.fwd(params, x),)
+        y, z = fused_dense_save(self._x2d(x), w, b, activation=self.activation)
+        return (y.reshape(self.out_shape), z)
+
+    def bwd(self, params, x, abar, dy):
+        w, b = params
+        x2d = self._x2d(x)
+        dy2d = dy.reshape(self.batch * self.seq, self.d_out)
+        if self.activation == "none":
+            dz = dy2d
+        else:
+            (_, z) = abar
+            dz = dy2d * gelu_grad(z)
+        dx = (dz @ w.T).reshape(self.in_shape)
+        gw = x2d.T @ dz
+        gb = jnp.sum(dz, axis=0)
+        return dx, gw, gb
+
+
+# ---------------------------------------------------------------------------
+# Mlp: pre-LN feed-forward block with residual
+#   y = x + W2·gelu(W1·LN(x)+c1)+c2
+# ---------------------------------------------------------------------------
+
+
+class Mlp(Stage):
+    kind = "mlp"
+
+    def __init__(self, batch, seq, d, f):
+        super().__init__(batch, seq)
+        self.d, self.f = d, f
+
+    @property
+    def sig(self):
+        return f"mlp_b{self.batch}t{self.seq}_{self.d}x{self.f}"
+
+    @property
+    def params(self):
+        return [
+            ParamSpec("g", (self.d,), "ones"),
+            ParamSpec("beta", (self.d,), "zeros"),
+            ParamSpec("w1", (self.d, self.f), "xavier"),
+            ParamSpec("c1", (self.f,), "zeros"),
+            ParamSpec("w2", (self.f, self.d), "xavier"),
+            ParamSpec("c2", (self.d,), "zeros"),
+        ]
+
+    @property
+    def in_shape(self):
+        return (self.batch, self.seq, self.d)
+
+    out_shape = in_shape
+
+    @property
+    def abar_extras(self):
+        m = self.batch * self.seq
+        return [
+            TensorSpec("xhat", (m, self.d)),
+            TensorSpec("rstd", (m,)),
+            TensorSpec("z1", (m, self.f)),
+            TensorSpec("u", (m, self.f)),
+        ]
+
+    def flops_fwd(self):
+        return 4 * self.batch * self.seq * self.d * self.f
+
+    def _pieces(self, params, x):
+        g, beta, w1, c1, w2, c2 = params
+        x2d = x.reshape(self.batch * self.seq, self.d)
+        xhat, rstd = layernorm(x2d)
+        h = xhat * g + beta
+        u, z1 = fused_dense_save(h, w1, c1, activation="gelu")  # u = gelu(z1)
+        z2 = fused_dense(u, w2, c2, activation="none")
+        y = x + z2.reshape(self.in_shape)
+        return y, xhat, rstd, z1, u
+
+    def fwd(self, params, x):
+        return self._pieces(params, x)[0]
+
+    def fwd_ref(self, params, x):
+        g, beta, w1, c1, w2, c2 = params
+        x2d = x.reshape(self.batch * self.seq, self.d)
+        xhat, rstd = layernorm_ref(x2d)
+        h = xhat * g + beta
+        u = dense_ref(h, w1, c1, "gelu")
+        z2 = dense_ref(u, w2, c2, "none")
+        return x + z2.reshape(self.in_shape)
+
+    def fwd_all(self, params, x):
+        y, xhat, rstd, z1, u = self._pieces(params, x)
+        return (y, xhat, rstd, z1, u)
+
+    def bwd(self, params, x, abar, dy):
+        g, beta, w1, c1, w2, c2 = params
+        (_, xhat, rstd, z1, u) = abar
+        m = self.batch * self.seq
+        dy2d = dy.reshape(m, self.d)
+        # residual: y = x + z2  → dz2 = dy
+        gw2 = u.T @ dy2d
+        gc2 = jnp.sum(dy2d, axis=0)
+        du = dy2d @ w2.T
+        dz1 = du * gelu_grad(z1)
+        h = xhat * g + beta  # cheap recompute from checkpointed xhat
+        gw1 = h.T @ dz1
+        gc1 = jnp.sum(dz1, axis=0)
+        dh = dz1 @ w1.T
+        dx_ln, gg, gbeta = _ln_bwd(dh, xhat, rstd, g)
+        dx = dy + dx_ln.reshape(self.in_shape)
+        return dx, gg, gbeta, gw1, gc1, gw2, gc2
+
+
+# ---------------------------------------------------------------------------
+# Attn: pre-LN multi-head self-attention block with residual
+# ---------------------------------------------------------------------------
+
+
+class Attn(Stage):
+    kind = "attn"
+
+    def __init__(self, batch, seq, d, heads):
+        super().__init__(batch, seq)
+        assert d % heads == 0
+        self.d, self.heads = d, heads
+        self.dh = d // heads
+
+    @property
+    def sig(self):
+        return f"attn_b{self.batch}t{self.seq}_{self.d}h{self.heads}"
+
+    @property
+    def params(self):
+        d = self.d
+        return [
+            ParamSpec("g", (d,), "ones"),
+            ParamSpec("beta", (d,), "zeros"),
+            ParamSpec("wq", (d, d), "xavier"),
+            ParamSpec("wk", (d, d), "xavier"),
+            ParamSpec("wv", (d, d), "xavier"),
+            ParamSpec("wo", (d, d), "xavier"),
+        ]
+
+    @property
+    def in_shape(self):
+        return (self.batch, self.seq, self.d)
+
+    out_shape = in_shape
+
+    @property
+    def abar_extras(self):
+        m = self.batch * self.seq
+        bh, t, dh = self.batch * self.heads, self.seq, self.dh
+        return [
+            TensorSpec("xhat", (m, self.d)),
+            TensorSpec("rstd", (m,)),
+            TensorSpec("q", (bh, t, dh)),
+            TensorSpec("k", (bh, t, dh)),
+            TensorSpec("v", (bh, t, dh)),
+            TensorSpec("p", (bh, t, t)),  # the big one: O(T²) attention probs
+            TensorSpec("c", (bh, t, dh)),
+        ]
+
+    def flops_fwd(self):
+        m = self.batch * self.seq
+        proj = 4 * 2 * m * self.d * self.d
+        scores = 2 * 2 * self.batch * self.heads * self.seq * self.seq * self.dh
+        return proj + scores
+
+    def _split(self, t2d):
+        # (M, D) → (B·H, T, dh)
+        return (
+            t2d.reshape(self.batch, self.seq, self.heads, self.dh)
+            .transpose(0, 2, 1, 3)
+            .reshape(self.batch * self.heads, self.seq, self.dh)
+        )
+
+    def _merge(self, t3d):
+        # (B·H, T, dh) → (M, D)
+        return (
+            t3d.reshape(self.batch, self.heads, self.seq, self.dh)
+            .transpose(0, 2, 1, 3)
+            .reshape(self.batch * self.seq, self.d)
+        )
+
+    def _pieces(self, params, x):
+        g, beta, wq, wk, wv, wo = params
+        m = self.batch * self.seq
+        x2d = x.reshape(m, self.d)
+        xhat, rstd = layernorm(x2d)
+        h = xhat * g + beta
+        q = self._split(h @ wq)
+        k = self._split(h @ wk)
+        v = self._split(h @ wv)
+        c, p = attention(q, k, v)
+        o = self._merge(c) @ wo
+        y = x + o.reshape(self.in_shape)
+        return y, xhat, rstd, q, k, v, p, c
+
+    def fwd(self, params, x):
+        return self._pieces(params, x)[0]
+
+    def fwd_ref(self, params, x):
+        g, beta, wq, wk, wv, wo = params
+        m = self.batch * self.seq
+        x2d = x.reshape(m, self.d)
+        xhat, rstd = layernorm_ref(x2d)
+        h = xhat * g + beta
+        q = self._split(h @ wq).reshape(self.batch, self.heads, self.seq, self.dh)
+        k = self._split(h @ wk).reshape(self.batch, self.heads, self.seq, self.dh)
+        v = self._split(h @ wv).reshape(self.batch, self.heads, self.seq, self.dh)
+        c, _ = attention_ref(q, k, v)
+        o = self._merge(c.reshape(self.batch * self.heads, self.seq, self.dh)) @ wo
+        return x + o.reshape(self.in_shape)
+
+    def fwd_all(self, params, x):
+        return self._pieces(params, x)
+
+    def bwd(self, params, x, abar, dy):
+        g, beta, wq, wk, wv, wo = params
+        (_, xhat, rstd, q, k, v, p, c) = abar
+        m = self.batch * self.seq
+        dy2d = dy.reshape(m, self.d)
+        cf = self._merge(c)
+        # output projection
+        gwo = cf.T @ dy2d
+        dc = self._split(dy2d @ wo.T)
+        # attention: c = p @ v
+        dp = jnp.einsum("btd,bsd->bts", dc, v)
+        dv = jnp.einsum("bts,btd->bsd", p, dc)
+        # softmax backward
+        ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+        scale = 1.0 / jnp.sqrt(jnp.asarray(self.dh, DTYPE))
+        dq = jnp.einsum("bts,bsd->btd", ds, k) * scale
+        dk = jnp.einsum("bts,btd->bsd", ds, q) * scale
+        # projections back to h
+        dq2d, dk2d, dv2d = self._merge(dq), self._merge(dk), self._merge(dv)
+        h = xhat * g + beta
+        gwq = h.T @ dq2d
+        gwk = h.T @ dk2d
+        gwv = h.T @ dv2d
+        dh = dq2d @ wq.T + dk2d @ wk.T + dv2d @ wv.T
+        dx_ln, gg, gbeta = _ln_bwd(dh, xhat, rstd, g)
+        dx = dy + dx_ln.reshape(self.in_shape)
+        return dx, gg, gbeta, gwq, gwk, gwv, gwo
+
+
+# ---------------------------------------------------------------------------
+# Loss (stage L+1 in the paper): mean-squared error against a per-batch
+# target fed by the executor as a "data" parameter. δ^{L+1} is the scalar 1.
+# ---------------------------------------------------------------------------
+
+
+class Loss(Stage):
+    kind = "loss"
+
+    def __init__(self, batch, seq, d):
+        super().__init__(batch, seq)
+        self.d = d
+
+    @property
+    def sig(self):
+        return f"loss_b{self.batch}t{self.seq}_{self.d}"
+
+    @property
+    def params(self):
+        return [ParamSpec("target", (self.batch, self.seq, self.d), "data")]
+
+    @property
+    def in_shape(self):
+        return (self.batch, self.seq, self.d)
+
+    @property
+    def out_shape(self):
+        return ()  # scalar loss
+
+    @property
+    def abar_extras(self):
+        return []
+
+    @property
+    def delta_out_shape(self):
+        return ()
+
+    def flops_fwd(self):
+        return 3 * self.batch * self.seq * self.d
+
+    def fwd(self, params, x):
+        (t,) = params
+        return jnp.mean((x - t) ** 2)
+
+    fwd_ref = fwd
+
+    def fwd_all(self, params, x):
+        return (self.fwd(params, x),)
+
+    def bwd(self, params, x, abar, dy):
+        (t,) = params
+        n = _nelem(self.in_shape)
+        dx = dy * 2.0 * (x - t) / n
+        # the target is data, not a parameter: no gradient emitted
+        return (dx,)

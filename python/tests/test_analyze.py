@@ -1,0 +1,51 @@
+"""§Perf structural targets for the Pallas kernels, asserted.
+
+See compile/analyze.py: interpret-mode wall-clock is meaningless for TPU,
+so the perf contract for L1 is structural — every kernel instantiation
+used by the shipped presets must (1) fit its per-step working set in the
+VMEM budget with double-buffering headroom, and (2) keep matmul tiles
+MXU-shaped wherever a matmul exists.
+"""
+
+import pytest
+
+from compile.analyze import VMEM_BUDGET, analyze_chain, dense_report
+
+PRESETS = ["quickstart", "default", "wide"]
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_vmem_budget_with_double_buffering(preset):
+    for r in analyze_chain(preset):
+        assert r.vmem_bytes * 2 <= VMEM_BUDGET, (
+            f"{r.name}: {r.vmem_bytes}B x2 (double-buffered) exceeds VMEM"
+        )
+
+
+@pytest.mark.parametrize("preset", ["default", "wide"])
+def test_matmul_tiles_are_mxu_shaped(preset):
+    # (the `quickstart` preset is deliberately tiny for smoke tests and
+    # exempt — its 16-token attention can't fill a 128-wide array)
+    for r in analyze_chain(preset):
+        if r.mxu_util > 0.0:  # kernels that use the MXU at all
+            assert r.mxu_util >= 0.5, f"{r.name}: MXU util {r.mxu_util:.0%}"
+
+
+def test_wide_preset_hits_full_mxu_tiles():
+    # d=768, ffn=3072, seq*batch = 512: every matmul tile dimension is a
+    # multiple of 128 → 100% fill of the systolic array
+    for r in analyze_chain("wide"):
+        if "dense" in r.name or "ffn" in r.name:
+            assert r.mxu_util == 1.0, f"{r.name}: {r.mxu_util:.0%}"
+
+
+def test_grid_covers_whole_problem():
+    r = dense_report("probe", m=512, k=256, n=256, save=False)
+    gm, gn = r.grid
+    assert gm * min(512, 128) == 512
+    assert gn * min(256, 128) == 256
+
+
+def test_report_notes_mention_tiling():
+    r = dense_report("probe", m=512, k=256, n=256, save=True)
+    assert "128×256" in r.notes and "preact" in r.notes

@@ -1,0 +1,120 @@
+"""AOT pipeline: HLO text artifacts + manifest consistency.
+
+Checks that lowering produces parseable HLO text with the calling
+convention the Rust runtime expects (parameter arity, tuple outputs), and
+that the manifest's byte/shape arithmetic agrees with the stage specs.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile.aot import build_manifest, lower_stage
+from compile.model import build_chain
+from compile.stages import Dense, Loss
+
+
+@pytest.fixture(scope="module")
+def lowered_dense():
+    return Dense(2, 8, 16, 16, activation="gelu"), lower_stage(
+        Dense(2, 8, 16, 16, activation="gelu")
+    )
+
+
+def test_hlo_text_has_entry(lowered_dense):
+    _, hlos = lowered_dense
+    for entry, text in hlos.items():
+        assert "ENTRY" in text, entry
+        assert "HloModule" in text, entry
+
+
+def _entry_param_count(text: str) -> int:
+    """Number of parameters of the ENTRY computation (ignores the parameter
+    instructions of nested fused/mapped computations)."""
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    count = 0
+    for line in lines[start:]:
+        if "parameter(" in line:
+            count += 1
+        if line.strip() == "}":
+            break
+    return count
+
+
+def test_hlo_parameter_arity(lowered_dense):
+    stage, hlos = lowered_dense
+    n_params = len(stage.params)
+    # fwd/fwd_all take θ… + a_in
+    for entry in ("fwd", "fwd_all"):
+        count = _entry_param_count(hlos[entry])
+        assert count == n_params + 1, (entry, count)
+    # bwd takes θ… + a_in + ā(1+extras) + δ
+    n_abar = 1 + len(stage.abar_extras)
+    assert _entry_param_count(hlos["bwd"]) == n_params + 1 + n_abar + 1
+
+
+def test_hlo_output_is_tuple(lowered_dense):
+    # return_tuple=True: the ROOT of every entry computation is a tuple,
+    # which the Rust side unwraps positionally.
+    _, hlos = lowered_dense
+    for entry, text in hlos.items():
+        root_lines = [l for l in text.splitlines() if "ROOT" in l]
+        assert any("tuple" in l or "(" in l for l in root_lines), entry
+
+
+def test_loss_stage_lowered_shapes():
+    stage = Loss(2, 8, 16)
+    hlos = lower_stage(stage)
+    # loss fwd output is a scalar f32
+    assert "f32[]" in hlos["fwd"]
+    # bwd emits only δ_in (no grads for the data param)
+    assert "f32[2,8,16]" in hlos["bwd"]
+
+
+def test_manifest_consistency():
+    chain = build_chain("quickstart")
+    files = {
+        st.sig: {e: f"{st.sig}_{e}.hlo.txt" for e in ("fwd", "fwd_all", "bwd")}
+        for st in chain.stages
+    }
+    m = build_manifest(chain, files)
+    assert m["preset"] == "quickstart"
+    assert len(m["stages"]) == chain.length
+    # every referenced signature exists
+    for entry in m["stages"]:
+        assert entry["sig"] in m["signatures"]
+    # shape chaining recorded correctly
+    sigs = m["signatures"]
+    seq = [sigs[s["sig"]] for s in m["stages"]]
+    for a, b in zip(seq, seq[1:]):
+        assert a["out_shape"] == b["in_shape"]
+    # byte accounting matches the stage objects
+    for st in chain.stages:
+        rec = sigs[st.sig]
+        assert rec["w_a"] == st.w_a
+        assert rec["w_abar"] == st.w_abar
+        assert rec["w_abar"] >= rec["w_a"]
+        n_extras = len(rec["abar_extras"])
+        expected = rec["w_a"] + sum(
+            int(np.prod(t["shape"])) * 4 for t in rec["abar_extras"]
+        )
+        assert rec["w_abar"] == expected, (st.sig, n_extras)
+    # manifest is JSON-serializable as written
+    json.dumps(m)
+
+
+def test_signature_dedup():
+    """Two stages with the same signature must share one artifact set."""
+    chain = build_chain("default")
+    sig_list = [s.sig for s in chain.stages]
+    m = build_manifest(
+        chain,
+        {
+            s.sig: {e: "x" for e in ("fwd", "fwd_all", "bwd")}
+            for s in chain.stages
+        },
+    )
+    assert len(m["signatures"]) == len(set(sig_list))
+    assert len(m["signatures"]) < len(sig_list)  # default preset repeats blocks

@@ -1,0 +1,113 @@
+"""Composed-chain correctness: the store-all schedule in pure JAX must
+reproduce jax.grad of the end-to-end loss, and the chain presets must have
+the shape/accounting structure the Rust side assumes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    PRESETS,
+    build_chain,
+    chain_backward_manual,
+    chain_forward,
+    chain_forward_ref,
+    init_chain_params,
+)
+from compile.stages import Loss
+
+
+@pytest.fixture(scope="module")
+def quickstart():
+    chain = build_chain("quickstart")
+    params = init_chain_params(chain, seed=3)
+    x = jax.random.normal(jax.random.PRNGKey(7), chain.input_shape, jnp.float32)
+    return chain, params, x
+
+
+def test_forward_matches_ref(quickstart):
+    chain, params, x = quickstart
+    np.testing.assert_allclose(
+        chain_forward(chain, params, x),
+        chain_forward_ref(chain, params, x),
+        atol=1e-4,
+        rtol=1e-4,
+    )
+
+
+def test_manual_backward_matches_autodiff(quickstart):
+    chain, params, x = quickstart
+    loss, dx, grads = chain_backward_manual(chain, params, x)
+
+    def loss_fn(ps, xx):
+        return chain_forward_ref(chain, ps, xx)
+
+    g_auto, dx_auto = jax.grad(loss_fn, argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(dx, dx_auto, atol=2e-4, rtol=2e-4)
+    for i, (stage, gm, ga) in enumerate(zip(chain.stages, grads, g_auto)):
+        trainable = [p for p in stage.params if p.init != "data"]
+        assert len(gm) == len(trainable), stage.sig
+        for j in range(len(gm)):
+            np.testing.assert_allclose(
+                gm[j], ga[j], atol=2e-4, rtol=2e-4, err_msg=f"stage {i} grad {j}"
+            )
+
+
+def test_loss_is_finite_scalar(quickstart):
+    chain, params, x = quickstart
+    loss = chain_forward(chain, params, x)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+
+
+def test_gradient_step_decreases_loss(quickstart):
+    """One SGD step along the manual gradients must reduce the loss —
+    the end-to-end signal the Rust trainer reproduces."""
+    chain, params, x = quickstart
+    loss0, _, grads = chain_backward_manual(chain, params, x)
+    lr = 0.05
+    new_params = []
+    for stage, ps, gs in zip(chain.stages, params, grads):
+        trainable = iter(gs)
+        updated = []
+        for spec, p in zip(stage.params, ps):
+            if spec.init == "data":
+                updated.append(p)
+            else:
+                updated.append(p - lr * next(trainable))
+        new_params.append(updated)
+    loss1 = chain_forward(chain, new_params, x)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_preset_structure(preset):
+    chain = build_chain(preset)
+    # last stage is the loss, shapes chain up correctly
+    assert isinstance(chain.stages[-1], Loss)
+    for a, b in zip(chain.stages, chain.stages[1:]):
+        assert a.out_shape == b.in_shape, (a.sig, b.sig)
+    assert chain.param_count() > 0
+    # ω_ā ≥ ω_a everywhere (ā includes a) — the DP relies on this
+    for st in chain.stages:
+        assert st.w_abar >= st.w_a
+
+
+def test_heterogeneity_is_real():
+    """The paper's whole point: stages must differ in ω_ā/ω_a ratios.
+    attention (checkpoints the T×T probs) must be far heavier relative to
+    its output than the linear head (ratio exactly 1)."""
+    chain = build_chain("default")
+    ratios = {st.kind: st.w_abar / max(st.w_a, 1) for st in chain.stages}
+    assert ratios["attn"] > 2.0
+    assert any(
+        st.kind == "dense" and st.w_abar == st.w_a for st in chain.stages
+    ), "expected a linear stage with ā == {a}"
+
+
+def test_override_plumbs_through():
+    chain = build_chain("quickstart", batch=3, seq=8, blocks=2)
+    assert chain.input_shape[0] == 3 and chain.input_shape[1] == 8
+    # 2 transformer blocks → 2·(attn+mlp) + dense head/tail + loss
+    assert chain.length == 2 * 2 + 2 + 1

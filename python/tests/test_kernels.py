@@ -1,0 +1,180 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the activation switch) so the BlockSpec
+tiling logic is exercised across divisible/non-divisible, tiny and
+MXU-sized dimensions.  THE core correctness signal for layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_dense, fused_dense_save, layernorm, pick_block
+from compile.kernels.ref import (
+    attention_ref,
+    dense_ref,
+    dense_preact_ref,
+    gelu,
+    gelu_grad,
+    layernorm_ref,
+    softmax_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+@settings(**SETTINGS)
+def test_pick_block_divides(dim, target):
+    b = pick_block(dim, target)
+    assert dim % b == 0
+    assert 1 <= b <= max(dim, target)
+
+
+def test_pick_block_prefers_target():
+    assert pick_block(256, 128) == 128
+    assert pick_block(512, 128) == 128
+    assert pick_block(100, 128) == 100  # whole dim when smaller than target
+    assert pick_block(96, 128) == 96
+
+
+# ---------------------------------------------------------------------------
+# fused dense
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 4, 32, 128, 160, 256]),
+    k=st.sampled_from([8, 48, 64]),
+    n=st.sampled_from([8, 24, 64, 128]),
+    act=st.sampled_from(["gelu", "none"]),
+)
+@settings(**SETTINGS)
+def test_fused_dense_matches_ref(m, k, n, act):
+    x = _rand(0, (m, k))
+    w = _rand(1, (k, n), 0.3)
+    b = _rand(2, (n,))
+    got = fused_dense(x, w, b, activation=act)
+    want = dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@given(
+    m=st.sampled_from([4, 64, 256]),
+    k=st.sampled_from([16, 64]),
+    n=st.sampled_from([16, 128]),
+)
+@settings(**SETTINGS)
+def test_fused_dense_save_matches_ref(m, k, n):
+    x = _rand(3, (m, k))
+    w = _rand(4, (k, n), 0.3)
+    b = _rand(5, (n,))
+    y, z = fused_dense_save(x, w, b, activation="gelu")
+    np.testing.assert_allclose(z, dense_preact_ref(x, w, b), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(y, gelu(jnp.asarray(z)), atol=1e-5, rtol=1e-5)
+    # the two entry points must agree exactly on y
+    np.testing.assert_allclose(y, fused_dense(x, w, b, activation="gelu"), atol=1e-6)
+
+
+def test_fused_dense_save_linear_identity():
+    # activation="none": y == z (stored pre-activation is the output)
+    x, w, b = _rand(0, (8, 8)), _rand(1, (8, 8)), _rand(2, (8,))
+    y, z = fused_dense_save(x, w, b, activation="none")
+    np.testing.assert_allclose(y, z, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# gelu derivative (consumed by every hand-derived backward)
+# ---------------------------------------------------------------------------
+
+
+@given(scale=st.sampled_from([0.1, 1.0, 3.0]))
+@settings(**SETTINGS)
+def test_gelu_grad_matches_autodiff(scale):
+    z = _rand(7, (64,), scale)
+    auto = jax.vmap(jax.grad(gelu))(z)
+    np.testing.assert_allclose(gelu_grad(z), auto, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.sampled_from([1, 8, 128, 192]),
+    d=st.sampled_from([4, 64, 256]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+@settings(**SETTINGS)
+def test_layernorm_matches_ref(m, d, scale):
+    x = _rand(8, (m, d), scale)
+    xhat, rstd = layernorm(x)
+    xhat_ref, rstd_ref = layernorm_ref(x)
+    np.testing.assert_allclose(xhat, xhat_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(rstd, rstd_ref[:, 0], atol=1e-4, rtol=1e-4)
+
+
+def test_layernorm_rows_normalized():
+    x = _rand(9, (32, 128), 5.0)
+    xhat, _ = layernorm(x)
+    np.testing.assert_allclose(np.mean(xhat, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(xhat), -1), 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    bh=st.sampled_from([1, 2, 8]),
+    t=st.sampled_from([4, 16, 64]),
+    dh=st.sampled_from([8, 16, 64]),
+)
+@settings(**SETTINGS)
+def test_attention_matches_ref(bh, t, dh):
+    q = _rand(10, (bh, t, dh))
+    k = _rand(11, (bh, t, dh))
+    v = _rand(12, (bh, t, dh))
+    c, p = attention(q, k, v)
+    cr, pr = attention_ref(q[:, None], k[:, None], v[:, None])
+    np.testing.assert_allclose(c, cr[:, 0], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(p, pr[:, 0], atol=1e-5, rtol=1e-5)
+
+
+def test_attention_probs_are_distributions():
+    q = _rand(13, (4, 32, 16), 2.0)
+    k = _rand(14, (4, 32, 16), 2.0)
+    v = _rand(15, (4, 32, 16))
+    _, p = attention(q, k, v)
+    assert np.all(np.asarray(p) >= 0)
+    np.testing.assert_allclose(np.sum(p, -1), 1.0, atol=1e-5)
+
+
+def test_softmax_ref_stable_at_large_logits():
+    s = jnp.array([[1e4, 1e4 + 1.0, 0.0]])
+    p = softmax_ref(s)
+    assert np.all(np.isfinite(np.asarray(p)))
+    np.testing.assert_allclose(np.sum(p, -1), 1.0, atol=1e-6)
+
+
+def test_attention_uniform_probs_for_equal_keys():
+    # identical keys → uniform attention → ctx is the mean of v rows
+    q = _rand(16, (2, 8, 4))
+    k = jnp.ones((2, 8, 4), jnp.float32)
+    v = _rand(17, (2, 8, 4))
+    c, p = attention(q, k, v)
+    np.testing.assert_allclose(p, 1.0 / 8, atol=1e-6)
+    np.testing.assert_allclose(c, jnp.mean(v, 1, keepdims=True).repeat(8, 1), atol=1e-5)

@@ -1,0 +1,126 @@
+"""L2 correctness: per-stage hand-derived backwards vs jax.vjp.
+
+For every stage kind we check, on randomized inputs:
+  1. fwd == fwd_ref (the Pallas path equals the pure-jnp path),
+  2. fwd_all[0] == fwd (F_all and F∅ compute the same a_out),
+  3. fwd_all extras have exactly the manifest shapes,
+  4. bwd(δ) == jax.vjp(fwd_ref)(δ) for both δ_in and every parameter grad,
+  5. the ω_a / ω_ā byte arithmetic matches the actual tensors.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import init_stage_params
+from compile.stages import Attn, Dense, Loss, Mlp
+
+B, T = 2, 16
+
+
+def stage_cases():
+    return [
+        Dense(B, T, 32, 48, activation="gelu"),
+        Dense(B, T, 48, 32, activation="none"),
+        Mlp(B, T, 32, 64),
+        Attn(B, T, 32, 4),
+        Loss(B, T, 32),
+    ]
+
+
+@pytest.fixture(params=stage_cases(), ids=lambda s: s.sig)
+def stage(request):
+    return request.param
+
+
+def _inputs(stage, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = init_stage_params(stage, key)
+    # perturb zero-initialized params so grads are informative
+    params = [
+        p + 0.01 * jax.random.normal(jax.random.PRNGKey(i + 100), p.shape)
+        for i, p in enumerate(params)
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), stage.in_shape, jnp.float32)
+    dy = jax.random.normal(
+        jax.random.PRNGKey(seed + 2), stage.delta_out_shape, jnp.float32
+    )
+    return params, x, dy
+
+
+def test_fwd_matches_ref(stage):
+    params, x, _ = _inputs(stage)
+    np.testing.assert_allclose(
+        stage.fwd(params, x), stage.fwd_ref(params, x), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_fwd_all_head_is_fwd(stage):
+    params, x, _ = _inputs(stage)
+    abar = stage.fwd_all(params, x)
+    np.testing.assert_allclose(abar[0], stage.fwd(params, x), atol=1e-6, rtol=1e-6)
+
+
+def test_abar_shapes_match_spec(stage):
+    params, x, _ = _inputs(stage)
+    abar = stage.fwd_all(params, x)
+    assert len(abar) == 1 + len(stage.abar_extras)
+    assert abar[0].shape == stage.out_shape
+    for tensor, spec in zip(abar[1:], stage.abar_extras):
+        assert tensor.shape == spec.shape, spec.name
+
+
+def test_memory_sizes_match_tensors(stage):
+    params, x, _ = _inputs(stage)
+    abar = stage.fwd_all(params, x)
+    actual_abar_bytes = sum(int(np.prod(t.shape)) * 4 for t in abar)
+    assert stage.w_abar == actual_abar_bytes
+    assert stage.w_a == int(np.prod(stage.out_shape)) * 4
+
+
+def test_bwd_matches_vjp(stage):
+    params, x, dy = _inputs(stage)
+    abar = stage.fwd_all(params, x)
+    out = stage.bwd(params, x, abar, dy)
+    dx_manual, grads_manual = out[0], out[1:]
+
+    y_ref, vjp = jax.vjp(lambda p, xx: stage.fwd_ref(p, xx), params, x)
+    grads_auto, dx_auto = vjp(dy)
+
+    np.testing.assert_allclose(dx_manual, dx_auto, atol=2e-4, rtol=2e-4)
+    trainable = [p for p in stage.params if p.init != "data"]
+    assert len(grads_manual) == len(trainable)
+    for gm, ga, spec in zip(grads_manual, grads_auto, stage.params):
+        np.testing.assert_allclose(
+            gm, ga, atol=2e-4, rtol=2e-4, err_msg=f"grad {spec.name}"
+        )
+
+
+def test_bwd_linearity_in_delta(stage):
+    """B is linear in δ: bwd(2δ) == 2·bwd(δ) — a structural invariant the
+    executor exploits when seeding δ^{L+1} = 1."""
+    params, x, dy = _inputs(stage)
+    abar = stage.fwd_all(params, x)
+    out1 = stage.bwd(params, x, abar, dy)
+    out2 = stage.bwd(params, x, abar, 2.0 * dy)
+    for a, b in zip(out1, out2):
+        np.testing.assert_allclose(2.0 * a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_loss_gradient_direction():
+    """MSE loss: δ_in must point from target toward prediction."""
+    stage = Loss(B, T, 8)
+    t = jnp.zeros(stage.in_shape)
+    x = jnp.ones(stage.in_shape)
+    (dx,) = stage.bwd([t], x, (stage.fwd([t], x),), jnp.ones(()))
+    n = float(np.prod(stage.in_shape))
+    np.testing.assert_allclose(dx, 2.0 / n, atol=1e-6)
+
+
+def test_dense_linear_has_empty_abar():
+    """A pure linear stage needs no extra checkpoint: ā == {a} exactly, so
+    the DP should see ω_ā == ω_a (the F_all-dominates-Fck corner)."""
+    st = Dense(B, T, 16, 16, activation="none")
+    assert st.abar_extras == []
+    assert st.w_abar == st.w_a

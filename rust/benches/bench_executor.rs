@@ -1,0 +1,103 @@
+//! Executor benchmark: end-to-end iteration throughput of the real
+//! compiled chain per strategy, plus the L3 replay *overhead* — the time
+//! the coordinator spends outside PJRT compute (value store, ledger,
+//! literal plumbing). DESIGN.md §Perf targets replay overhead < 5 % of
+//! step time.
+//!
+//! ```sh
+//! cargo bench --bench bench_executor -- [--artifacts artifacts/quickstart] [--reps 5]
+//! ```
+
+use std::time::Instant;
+
+use chainckpt::estimator::{estimate, measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
+use chainckpt::runtime::{lit_from_vec, Runtime};
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{periodic_schedule, solve, store_all_schedule, Mode, Schedule};
+use chainckpt::util::{fmt_bytes, median, Args, Rng};
+
+fn main() {
+    let args = Args::from_env();
+    let dir = args.str("artifacts", "artifacts/quickstart");
+    let reps = args.usize("reps", 5);
+
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping executor bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = EstimatorConfig::default();
+    let chain = measured_chain(&rt, cfg).unwrap();
+    let n = rt.manifest.stages.len();
+    let batch = rt.manifest.input_shape[0] as u64;
+
+    let mut rng = Rng::new(9);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let input = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+
+    // pure-compute floor: Σ median entry times (what PJRT alone costs)
+    let timings = estimate(&rt, cfg).unwrap();
+    let compute_floor_ms: f64 =
+        timings.iter().map(|t| (t.uf_us + t.ub_us) / 1e3).sum();
+
+    let run = |name: &str, sched: &Schedule| {
+        let sim = simulate(&chain, sched).unwrap();
+        let mut ex = Executor::new(&rt, 1).unwrap();
+        ex.set_data_param(n - 1, &target).unwrap();
+        let mut times = Vec::new();
+        for r in 0..=reps {
+            let t0 = Instant::now();
+            ex.run(sched, &input, None).unwrap();
+            if r > 0 {
+                times.push(t0.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        let t = median(&mut times);
+        // overhead proxy: measured minus the per-op compute floor scaled
+        // by the actual op multiset of this schedule
+        let sched_floor: f64 = sched
+            .ops
+            .iter()
+            .map(|op| {
+                let l = op.stage() as usize;
+                if l == 0 {
+                    return 0.0;
+                }
+                match op {
+                    chainckpt::solver::Op::Bwd(_) => timings[l - 1].ub_us / 1e3,
+                    chainckpt::solver::Op::DropA(_) => 0.0,
+                    _ => timings[l - 1].uf_us / 1e3,
+                }
+            })
+            .sum();
+        let overhead_pct = 100.0 * (t - sched_floor).max(0.0) / t;
+        println!(
+            "{name:<14} {:>4} ops  peak {:>12}  {:>8.2} ms/iter  {:>7.2} seq/s  L3 overhead ~{:>4.1}%",
+            sched.ops.len(),
+            fmt_bytes(sim.peak_bytes),
+            t,
+            batch as f64 * 1e3 / t,
+            overhead_pct
+        );
+        (t, overhead_pct)
+    };
+
+    println!("chain {} — compute floor {compute_floor_ms:.2} ms/iter", chain.name);
+    let (_, ov1) = run("pytorch", &store_all_schedule(&chain));
+    run("sequential-2", &periodic_schedule(&chain, 2));
+    run("sequential-4", &periodic_schedule(&chain, 4));
+    let tight = chain.store_all_memory() * 3 / 4;
+    if let Some(s) = solve(&chain, tight, 300, Mode::Full) {
+        run("optimal-75%", &s);
+    }
+    if let Some(s) = solve(&chain, tight, 300, Mode::AdRevolve) {
+        run("revolve-75%", &s);
+    }
+    println!(
+        "\nDESIGN.md §Perf target: L3 replay overhead < 5 % of step time (store-all: {ov1:.1} %)"
+    );
+}

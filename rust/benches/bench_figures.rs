@@ -1,0 +1,74 @@
+//! Figure-regeneration benchmark: produces the data behind **every table
+//! and figure of the paper's evaluation (§5.4, Figures 3–13)** plus the
+//! headline summary table (optimal vs best-sequential average gain —
+//! the paper reports **+17.2 %**), and times each figure.
+//!
+//! Output: `results/figure{3..13}.csv`, `results/summary.csv`, and a
+//! printed per-figure gain table (this is `chainckpt figures` with
+//! timing assertions wrapped around it).
+//!
+//! ```sh
+//! cargo bench --bench bench_figures            # headline subset (3,5,6,9,12)
+//! cargo bench --bench bench_figures -- --full  # every figure incl. the
+//!                                              # ResNet-1001 sweeps (~25 min
+//!                                              # on one core)
+//! cargo bench --bench bench_figures -- --quick # figs 3 and 5 only
+//! ```
+
+use std::time::Instant;
+
+use chainckpt::figures::{figure, optimal_vs_sequential, summary_gain, to_csv};
+use chainckpt::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let figs: Vec<u32> = if args.has("quick") {
+        vec![3, 5]
+    } else if args.has("full") {
+        (3..=13).collect()
+    } else {
+        vec![3, 5, 6, 9, 12] // one per family + the headline case
+    };
+
+    std::fs::create_dir_all("results").ok();
+    let mut all = Vec::new();
+    println!("{:>6} {:>8} {:>10} {:>18}", "figure", "panels", "time (s)", "avg gain vs seq");
+    for f in figs {
+        let t0 = Instant::now();
+        let panels = figure(f);
+        let dt = t0.elapsed().as_secs_f64();
+        std::fs::write(format!("results/figure{f}.csv"), to_csv(&panels)).unwrap();
+        let gain = summary_gain(&panels);
+        println!(
+            "{:>6} {:>8} {:>10.1} {:>17}",
+            f,
+            panels.len(),
+            dt,
+            gain.map(|g| format!("+{:.1} %", 100.0 * g)).unwrap_or_else(|| "-".into()),
+        );
+        all.extend(panels);
+    }
+
+    // headline summary table (paper: +17.2 % average)
+    let mut csv = String::from("chain,batch,gain_pct,seq_img_s,opt_img_s\n");
+    for p in &all {
+        if let Some((g, seq, opt)) = optimal_vs_sequential(p) {
+            csv.push_str(&format!(
+                "{},{},{:.2},{:.3},{:.3}\n",
+                p.chain_name, p.batch, 100.0 * g, seq, opt
+            ));
+        }
+    }
+    std::fs::write("results/summary.csv", csv).unwrap();
+
+    if let Some(g) = summary_gain(&all) {
+        println!(
+            "\nSUMMARY: optimal beats best sequential by +{:.1} % on average over {} panels \
+             (paper §5.4: +17.2 %)",
+            100.0 * g,
+            all.len()
+        );
+        assert!(g > 0.0, "optimal must win on average");
+    }
+    println!("→ results/figure*.csv, results/summary.csv");
+}

@@ -1,0 +1,89 @@
+//! Solver benchmark — reproduces the paper's §5.2 cost claims:
+//! "running time below 1 second on most networks; the longest was
+//! ResNet-1001 (chain length 339): below 20 seconds at S = 500".
+//!
+//! Custom harness (the offline build has no criterion): median-of-N
+//! wall-clock per configuration, printed as a table and written to
+//! `results/bench_solver.csv`.
+//!
+//! ```sh
+//! cargo bench --bench bench_solver            # full sweep
+//! cargo bench --bench bench_solver -- --quick # CI-sized subset
+//! ```
+
+use std::time::Instant;
+
+use chainckpt::chain::{profiles, Chain};
+use chainckpt::solver::{solve, Mode};
+use chainckpt::util::{median, Args};
+
+
+struct Case {
+    name: &'static str,
+    chain: Chain,
+    slots: usize,
+}
+
+fn time_solve(chain: &Chain, slots: usize, reps: usize) -> (f64, f64) {
+    let memory = chain.store_all_memory() / 2;
+    let mut samples = Vec::new();
+    let mut cost = f64::NAN;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let s = solve(chain, memory, slots, Mode::Full);
+        samples.push(t0.elapsed().as_secs_f64());
+        cost = s.map(|s| s.predicted_time).unwrap_or(f64::INFINITY);
+    }
+    (median(&mut samples), cost)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let reps = if quick { 2 } else { 3 };
+
+    let mut cases = vec![
+        Case { name: "resnet18-224", chain: profiles::resnet(18, 224, 16), slots: 500 },
+        Case { name: "resnet50-224", chain: profiles::resnet(50, 224, 16), slots: 500 },
+        Case { name: "resnet101-1000", chain: profiles::resnet(101, 1000, 8), slots: 500 },
+        Case { name: "densenet201-224", chain: profiles::densenet(201, 224, 16), slots: 500 },
+        Case { name: "inception-500", chain: profiles::inception_v3(500, 8), slots: 500 },
+    ];
+    if !quick {
+        // the paper's worst case: L = 336, S = 500 (§5.2: < 20 s in C)
+        cases.push(Case {
+            name: "resnet1001-224-S150",
+            chain: profiles::resnet(1001, 224, 1),
+            slots: 150,
+        });
+        cases.push(Case {
+            name: "resnet1001-224-S500",
+            chain: profiles::resnet(1001, 224, 1),
+            slots: 500,
+        });
+    }
+
+    println!("{:<22} {:>6} {:>7} {:>12} {:>14}", "case", "L+1", "S", "solve (s)", "cost (ms)");
+    let mut csv = String::from("case,chain_len,slots,solve_s,cost_ms\n");
+    for c in &cases {
+        let (t, cost) = time_solve(&c.chain, c.slots, reps);
+        println!(
+            "{:<22} {:>6} {:>7} {:>12.3} {:>14.2}",
+            c.name,
+            c.chain.len(),
+            c.slots,
+            t,
+            cost
+        );
+        csv.push_str(&format!("{},{},{},{:.4},{:.3}\n", c.name, c.chain.len(), c.slots, t, cost));
+        // paper budget checks (generous ×2 headroom for the CI machine)
+        if c.chain.len() < 150 {
+            assert!(t < 2.0, "{}: small chains must solve in ~1 s (paper §5.2)", c.name);
+        } else if c.slots >= 500 {
+            assert!(t < 40.0, "{}: ResNet-1001 must solve in ~20 s (paper §5.2)", c.name);
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/bench_solver.csv", csv).ok();
+    println!("→ results/bench_solver.csv");
+}

@@ -1,0 +1,151 @@
+//! Memory discretization (paper §5.2).
+//!
+//! The DP table is indexed by an integer number of *memory slots*. Given a
+//! budget `M` and a slot count `S` (the paper uses `S = 500`), every byte
+//! size is expressed as `ceil(bytes / (M/S))` slots. Rounding *up* keeps
+//! the schedule conservative: a schedule feasible in slot space is
+//! feasible in bytes (at the cost of ≤ `1 + 1/S` size overestimation).
+
+use super::Chain;
+
+/// Paper's default number of memory slots.
+pub const DEFAULT_SLOTS: usize = 500;
+
+/// A chain with all sizes pre-converted to memory slots for a specific
+/// budget. This is the solver's input.
+#[derive(Debug, Clone)]
+pub struct DiscreteChain {
+    /// `wa[ℓ]` for `ℓ ∈ 0..=L+1`, in slots.
+    pub wa: Vec<u32>,
+    /// `wd[ℓ]` (`ω_δ`) for `ℓ ∈ 0..=L+1`, in slots.
+    pub wd: Vec<u32>,
+    /// `wabar[ℓ-1]` for `ℓ ∈ 1..=L+1`, in slots.
+    pub wabar: Vec<u32>,
+    pub of: Vec<u32>,
+    pub ob: Vec<u32>,
+    pub uf: Vec<f64>,
+    pub ub: Vec<f64>,
+    /// Total budget in slots (the table's m-axis upper bound).
+    pub slots: usize,
+    /// Bytes per slot (`M / S`).
+    pub slot_bytes: f64,
+}
+
+impl DiscreteChain {
+    /// Discretize `chain` against a byte budget `memory` with `slots` slots.
+    pub fn new(chain: &Chain, memory: u64, slots: usize) -> Self {
+        assert!(slots > 0 && memory > 0);
+        let slot_bytes = memory as f64 / slots as f64;
+        let to_slots = |bytes: u64| -> u32 {
+            if bytes == 0 {
+                0
+            } else {
+                ((bytes as f64 / slot_bytes).ceil() as u64).max(1) as u32
+            }
+        };
+        let l1 = chain.len();
+        DiscreteChain {
+            wa: (0..=l1).map(|l| to_slots(chain.wa(l))).collect(),
+            wd: (0..=l1).map(|l| to_slots(chain.wdelta(l))).collect(),
+            wabar: (1..=l1).map(|l| to_slots(chain.wabar(l))).collect(),
+            of: (1..=l1).map(|l| to_slots(chain.of(l))).collect(),
+            ob: (1..=l1).map(|l| to_slots(chain.ob(l))).collect(),
+            uf: (1..=l1).map(|l| chain.uf(l)).collect(),
+            ub: (1..=l1).map(|l| chain.ub(l)).collect(),
+            slots,
+            slot_bytes,
+        }
+    }
+
+    /// Number of stages `L+1`.
+    pub fn len(&self) -> usize {
+        self.wabar.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.wabar.is_empty()
+    }
+
+    /// Budget available to the top-level DP call: `M - ω_a^0` in slots
+    /// (Algorithm 1 line 12 — the chain input is resident throughout but
+    /// charged outside the recursion's limit).
+    pub fn top_budget(&self) -> Option<u32> {
+        (self.slots as u32).checked_sub(self.wa[0])
+    }
+
+    // 1-based accessors mirroring `Chain`.
+    pub fn wa_s(&self, l: usize) -> u32 {
+        self.wa[l]
+    }
+    pub fn wd_s(&self, l: usize) -> u32 {
+        self.wd[l]
+    }
+    pub fn wabar_s(&self, l: usize) -> u32 {
+        self.wabar[l - 1]
+    }
+    pub fn of_s(&self, l: usize) -> u32 {
+        self.of[l - 1]
+    }
+    pub fn ob_s(&self, l: usize) -> u32 {
+        self.ob[l - 1]
+    }
+    pub fn uf_s(&self, l: usize) -> f64 {
+        self.uf[l - 1]
+    }
+    pub fn ub_s(&self, l: usize) -> f64 {
+        self.ub[l - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+
+    fn toy() -> Chain {
+        Chain::new(
+            "toy",
+            vec![Stage::new("s1", 1.0, 2.0, 100, 250), Stage::new("s2", 1.0, 1.0, 50, 50)],
+            400,
+        )
+    }
+
+    #[test]
+    fn rounds_up() {
+        let d = DiscreteChain::new(&toy(), 1000, 10); // slot = 100 bytes
+        assert_eq!(d.wa_s(0), 4); // 400 → 4 slots
+        assert_eq!(d.wa_s(1), 1); // 100 → 1
+        assert_eq!(d.wabar_s(1), 3); // 250 → ceil(2.5) = 3
+        assert_eq!(d.wa_s(2), 1); // 50 → 1 (rounded up)
+    }
+
+    #[test]
+    fn zero_stays_zero_nonzero_at_least_one() {
+        let d = DiscreteChain::new(&toy(), 1_000_000, 10);
+        assert_eq!(d.of_s(1), 0);
+        assert!(d.wa_s(2) >= 1, "tiny sizes must still occupy a slot");
+    }
+
+    #[test]
+    fn slot_feasibility_implies_byte_feasibility() {
+        // Σ slots ≤ S  ⇒  Σ bytes ≤ M, because each item's bytes ≤ slots·slot_bytes.
+        let c = toy();
+        let m = 777u64;
+        let d = DiscreteChain::new(&c, m, DEFAULT_SLOTS);
+        let items = [c.wa(0), c.wa(1), c.wabar(1), c.wa(2)];
+        let slot_items = [d.wa_s(0), d.wa_s(1), d.wabar_s(1), d.wa_s(2)];
+        let bytes: u64 = items.iter().sum();
+        let slots: u32 = slot_items.iter().sum();
+        if (slots as usize) <= DEFAULT_SLOTS {
+            assert!(bytes <= m);
+        }
+    }
+
+    #[test]
+    fn top_budget_subtracts_input() {
+        let d = DiscreteChain::new(&toy(), 1000, 10);
+        assert_eq!(d.top_budget(), Some(6)); // 10 - 4
+        let d2 = DiscreteChain::new(&toy(), 100, 10); // input alone needs 40 slots
+        assert_eq!(d2.top_budget(), None);
+    }
+}

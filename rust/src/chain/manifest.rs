@@ -1,0 +1,324 @@
+//! Deserialization of `artifacts/<preset>/manifest.json` — the contract
+//! between `python/compile/aot.py` (build time) and the Rust runtime.
+//! Parsed with the in-tree JSON substrate ([`crate::util::json`]).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Chain, Stage};
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `xavier` | `zeros` | `ones` | `data` (per-batch input, e.g. the
+    /// loss stage's regression target — never updated by SGD).
+    pub init: String,
+}
+
+impl ParamSpec {
+    pub fn nelem(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn is_data(&self) -> bool {
+        self.init == "data"
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn nelem(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SignatureSpec {
+    pub kind: String,
+    /// entry point → HLO text filename: `fwd`, `fwd_all`, `bwd`.
+    pub files: HashMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub abar_extras: Vec<TensorSpec>,
+    pub w_a: u64,
+    pub w_abar: u64,
+    pub flops_fwd: u64,
+    pub flops_bwd: u64,
+    pub n_grads: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageRef {
+    pub name: String,
+    pub kind: String,
+    pub sig: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dtype: String,
+    pub input_shape: Vec<usize>,
+    pub param_count: u64,
+    pub stages: Vec<StageRef>,
+    pub signatures: HashMap<String, SignatureSpec>,
+    pub content_hash: String,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+fn field<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).with_context(|| format!("manifest: missing field '{key}'"))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    Ok(field(v, key)?
+        .as_str()
+        .with_context(|| format!("manifest: '{key}' not a string"))?
+        .to_string())
+}
+
+fn shape_field(v: &Json, key: &str) -> Result<Vec<usize>> {
+    field(v, key)?.shape().with_context(|| format!("manifest: '{key}' not a shape"))
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    field(v, key)?.as_u64().with_context(|| format!("manifest: '{key}' not an integer"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest.json")?;
+
+        let stages = field(&root, "stages")?
+            .as_arr()
+            .context("'stages' not an array")?
+            .iter()
+            .map(|s| {
+                Ok(StageRef {
+                    name: str_field(s, "name")?,
+                    kind: str_field(s, "kind")?,
+                    sig: str_field(s, "sig")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut signatures = HashMap::new();
+        for (name, s) in field(&root, "signatures")?.as_obj().context("'signatures' not an object")? {
+            let files = field(s, "files")?
+                .as_obj()
+                .context("'files' not an object")?
+                .iter()
+                .map(|(k, v)| {
+                    Ok((k.clone(), v.as_str().context("file not a string")?.to_string()))
+                })
+                .collect::<Result<HashMap<_, _>>>()?;
+            let params = field(s, "params")?
+                .as_arr()
+                .context("'params' not an array")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: str_field(p, "name")?,
+                        shape: shape_field(p, "shape")?,
+                        init: str_field(p, "init")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let abar_extras = field(s, "abar_extras")?
+                .as_arr()
+                .context("'abar_extras' not an array")?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec { name: str_field(t, "name")?, shape: shape_field(t, "shape")? })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            signatures.insert(
+                name.clone(),
+                SignatureSpec {
+                    kind: str_field(s, "kind")?,
+                    files,
+                    params,
+                    in_shape: shape_field(s, "in_shape")?,
+                    out_shape: shape_field(s, "out_shape")?,
+                    abar_extras,
+                    w_a: u64_field(s, "w_a")?,
+                    w_abar: u64_field(s, "w_abar")?,
+                    flops_fwd: u64_field(s, "flops_fwd")?,
+                    flops_bwd: u64_field(s, "flops_bwd")?,
+                    n_grads: u64_field(s, "n_grads")? as usize,
+                },
+            );
+        }
+
+        let m = Manifest {
+            preset: str_field(&root, "preset")?,
+            dtype: str_field(&root, "dtype")?,
+            input_shape: shape_field(&root, "input_shape")?,
+            param_count: u64_field(&root, "param_count")?,
+            stages,
+            signatures,
+            content_hash: root
+                .get("content_hash")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            dir,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, dir.to_path_buf())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.dtype == "f32", "only f32 manifests supported");
+        ensure!(!self.stages.is_empty(), "empty chain");
+        for st in &self.stages {
+            if !self.signatures.contains_key(&st.sig) {
+                bail!("stage {} references missing signature {}", st.name, st.sig);
+            }
+        }
+        let sig = |s: &StageRef| &self.signatures[&s.sig];
+        ensure!(sig(&self.stages[0]).in_shape == self.input_shape, "first stage input mismatch");
+        for w in self.stages.windows(2) {
+            ensure!(
+                sig(&w[0]).out_shape == sig(&w[1]).in_shape,
+                "shape break between {} and {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+        for (name, s) in &self.signatures {
+            ensure!(s.w_abar >= s.w_a, "signature {name}: ω_ā < ω_a");
+            for entry in ["fwd", "fwd_all", "bwd"] {
+                ensure!(s.files.contains_key(entry), "signature {name}: missing {entry}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn sig_of(&self, stage_index: usize) -> &SignatureSpec {
+        &self.signatures[&self.stages[stage_index].sig]
+    }
+
+    /// Bytes of the chain input `a^0`.
+    pub fn input_bytes(&self) -> u64 {
+        4 * self.input_shape.iter().product::<usize>() as u64
+    }
+
+    /// Path of one HLO artifact.
+    pub fn hlo_path(&self, sig: &str, entry: &str) -> PathBuf {
+        self.dir.join(&self.signatures[sig].files[entry])
+    }
+
+    /// Build the solver's [`Chain`] from manifest sizes and *measured*
+    /// per-stage timings (`uf[i]`, `ub[i]` for stage `i+1`; from the
+    /// [`crate::estimator`]).
+    pub fn to_chain(&self, uf: &[f64], ub: &[f64]) -> Chain {
+        assert_eq!(uf.len(), self.stages.len());
+        assert_eq!(ub.len(), self.stages.len());
+        let stages = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let s = self.sig_of(i);
+                Stage::new(st.name.clone(), uf[i], ub[i], s.w_a, s.w_abar)
+            })
+            .collect();
+        Chain::new(format!("manifest:{}", self.preset), stages, self.input_bytes())
+    }
+
+    /// A chain with *analytic* timings (FLOPs / device rate) — usable
+    /// without running the estimator, e.g. for solver-only workflows.
+    pub fn to_chain_analytic(&self, flops_per_us: f64) -> Chain {
+        let uf: Vec<f64> = (0..self.stages.len())
+            .map(|i| (self.sig_of(i).flops_fwd as f64 / flops_per_us).max(1.0))
+            .collect();
+        let ub: Vec<f64> = (0..self.stages.len())
+            .map(|i| (self.sig_of(i).flops_bwd as f64 / flops_per_us).max(1.0))
+            .collect();
+        self.to_chain(&uf, &ub)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> &'static str {
+        r#"{
+          "preset": "test", "dtype": "f32", "input_shape": [2, 4, 8],
+          "param_count": 100,
+          "stages": [
+            {"name": "stage_0_dense", "kind": "dense", "sig": "d"},
+            {"name": "stage_1_loss", "kind": "loss", "sig": "l"}
+          ],
+          "signatures": {
+            "d": {"kind": "dense",
+                  "files": {"fwd": "d_fwd.hlo.txt", "fwd_all": "d_fa.hlo.txt", "bwd": "d_bwd.hlo.txt"},
+                  "params": [{"name": "w", "shape": [8, 8], "init": "xavier"}],
+                  "in_shape": [2, 4, 8], "out_shape": [2, 4, 8],
+                  "abar_extras": [{"name": "z", "shape": [8, 8]}],
+                  "w_a": 256, "w_abar": 512, "flops_fwd": 1024, "flops_bwd": 2048,
+                  "n_grads": 1},
+            "l": {"kind": "loss",
+                  "files": {"fwd": "l_fwd.hlo.txt", "fwd_all": "l_fa.hlo.txt", "bwd": "l_bwd.hlo.txt"},
+                  "params": [{"name": "target", "shape": [2, 4, 8], "init": "data"}],
+                  "in_shape": [2, 4, 8], "out_shape": [],
+                  "abar_extras": [],
+                  "w_a": 4, "w_abar": 4, "flops_fwd": 10, "flops_bwd": 20,
+                  "n_grads": 0}
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(manifest_json(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.input_bytes(), 2 * 4 * 8 * 4);
+        assert!(m.sig_of(1).params[0].is_data());
+        assert_eq!(m.hlo_path("d", "fwd"), PathBuf::from("/tmp/d_fwd.hlo.txt"));
+    }
+
+    #[test]
+    fn to_chain_uses_measured_times() {
+        let m = Manifest::parse(manifest_json(), PathBuf::from("/tmp")).unwrap();
+        let c = m.to_chain(&[5.0, 1.0], &[10.0, 2.0]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.uf(1), 5.0);
+        assert_eq!(c.ub(2), 2.0);
+        assert_eq!(c.wa(1), 256);
+        assert_eq!(c.wabar(1), 512);
+        assert_eq!(c.wa0, 256);
+    }
+
+    #[test]
+    fn shape_break_rejected() {
+        let bad = manifest_json().replace("\"out_shape\": [2, 4, 8]", "\"out_shape\": [9, 9]");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn missing_entry_rejected() {
+        let bad = manifest_json().replace("\"bwd\": \"d_bwd.hlo.txt\"", "\"x\": \"y\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,207 @@
+//! The heterogeneous-chain cost model (paper §3.1).
+//!
+//! A [`Chain`] is the sequence of stages `1..=L+1` (the last stage is the
+//! loss, `F^{L+1}/B^{L+1}` in the paper's notation) plus the size of the
+//! chain input `a^0`. Each [`Stage`] carries everything the dynamic
+//! program consumes: forward/backward durations `u_f`, `u_b`, the
+//! activation byte counts `ω_a` (output) and `ω_ā` (full checkpoint — by
+//! the paper's convention `ā^ℓ ⊇ a^ℓ`, so `ω_ā ≥ ω_a`), and the transient
+//! per-op memory overheads `o_f`, `o_b`. `ω_δ = ω_a` (a gradient has the
+//! shape of its activation), matching the paper's "in practice" remark.
+
+mod discretize;
+pub mod manifest;
+pub mod profiles;
+
+pub use discretize::{DiscreteChain, DEFAULT_SLOTS};
+
+/// One stage of the chain (a layer or an arbitrarily complex block).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    /// Human-readable name (e.g. `stage_3_attn` or `layer2.block1`).
+    pub name: String,
+    /// Forward duration `u_f^ℓ` (any consistent unit; the executor uses µs,
+    /// the profiles use ms — the solver only compares sums).
+    pub uf: f64,
+    /// Backward duration `u_b^ℓ`.
+    pub ub: f64,
+    /// Bytes of the stage output `a^ℓ`.
+    pub wa: u64,
+    /// Bytes of the full checkpoint `ā^ℓ` (includes `a^ℓ`).
+    pub wabar: u64,
+    /// Bytes of the gradient `ω_δ^ℓ`. In practice equal to `wa` (the
+    /// paper's remark) — kept separate because the §4.1 counterexample
+    /// and the DP's formulas treat it independently.
+    pub wd: u64,
+    /// Transient peak overhead of the forward op, in bytes.
+    pub of: u64,
+    /// Transient peak overhead of the backward op, in bytes.
+    pub ob: u64,
+}
+
+impl Stage {
+    /// Convenience constructor used by tests and profiles (`ω_δ = ω_a`).
+    pub fn new(name: impl Into<String>, uf: f64, ub: f64, wa: u64, wabar: u64) -> Self {
+        assert!(wabar >= wa, "ā must include a (ω_ā ≥ ω_a)");
+        Stage { name: name.into(), uf, ub, wa, wabar, wd: wa, of: 0, ob: 0 }
+    }
+
+    pub fn with_overheads(mut self, of: u64, ob: u64) -> Self {
+        self.of = of;
+        self.ob = ob;
+        self
+    }
+
+    /// Override the gradient size `ω_δ^ℓ` (§4.1-style constructions).
+    pub fn with_delta_size(mut self, wd: u64) -> Self {
+        self.wd = wd;
+        self
+    }
+}
+
+/// A heterogeneous chain: stages `1..=L+1` plus the input size `ω_a^0`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chain {
+    pub name: String,
+    /// `stages[ℓ-1]` is stage `ℓ` for `ℓ ∈ 1..=L+1`. The final entry is
+    /// the loss stage; its `wa` is the (tiny) loss scalar.
+    pub stages: Vec<Stage>,
+    /// Bytes of the chain input `a^0` (= `ω_a^0`, also `ω_δ^0`).
+    pub wa0: u64,
+}
+
+impl Chain {
+    pub fn new(name: impl Into<String>, stages: Vec<Stage>, wa0: u64) -> Self {
+        assert!(!stages.is_empty(), "a chain needs at least one stage");
+        Chain { name: name.into(), stages, wa0 }
+    }
+
+    /// Number of stages including the loss stage (`L+1`).
+    pub fn len(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// `ω_a^ℓ` for `ℓ ∈ 0..=L+1` (bytes).
+    pub fn wa(&self, l: usize) -> u64 {
+        if l == 0 {
+            self.wa0
+        } else {
+            self.stages[l - 1].wa
+        }
+    }
+
+    /// `ω_ā^ℓ` for `ℓ ∈ 1..=L+1` (bytes).
+    pub fn wabar(&self, l: usize) -> u64 {
+        self.stages[l - 1].wabar
+    }
+
+    /// `ω_δ^ℓ` for `ℓ ∈ 0..=L+1` (bytes). `ω_δ^0 = ω_a^0` by convention
+    /// (the input gradient replaces the input).
+    pub fn wdelta(&self, l: usize) -> u64 {
+        if l == 0 {
+            self.wa0
+        } else {
+            self.stages[l - 1].wd
+        }
+    }
+
+    pub fn uf(&self, l: usize) -> f64 {
+        self.stages[l - 1].uf
+    }
+
+    pub fn ub(&self, l: usize) -> f64 {
+        self.stages[l - 1].ub
+    }
+
+    pub fn of(&self, l: usize) -> u64 {
+        self.stages[l - 1].of
+    }
+
+    pub fn ob(&self, l: usize) -> u64 {
+        self.stages[l - 1].ob
+    }
+
+    /// Lower bound on any schedule's makespan: every forward and backward
+    /// runs at least once (this is exactly the store-all time).
+    pub fn ideal_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.uf + s.ub).sum()
+    }
+
+    /// Memory needed by the store-all (plain PyTorch) strategy: all `ā`
+    /// resident at the end of the forward sweep, plus input and the widest
+    /// transient. A cheap upper bound used to pick sweep ranges.
+    pub fn store_all_memory(&self) -> u64 {
+        let abar_total: u64 = self.stages.iter().map(|s| s.wabar).sum();
+        let max_transient = self
+            .stages
+            .iter()
+            .map(|s| s.of.max(s.ob) + s.wa)
+            .max()
+            .unwrap_or(0);
+        self.wa0 + abar_total + max_transient
+    }
+
+    /// Smallest memory for which *some* schedule might exist — used as the
+    /// low end of figure sweeps. (Not tight; the DP decides feasibility.)
+    pub fn min_memory_hint(&self) -> u64 {
+        let max_pair = (1..=self.len())
+            .map(|l| self.wa(l - 1) + self.wa(l) + self.of(l))
+            .max()
+            .unwrap_or(0);
+        let max_bwd = (1..=self.len())
+            .map(|l| self.wa(l - 1) + self.wabar(l) + self.wdelta(l) + self.ob(l))
+            .max()
+            .unwrap_or(0);
+        max_pair.max(max_bwd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Chain {
+        Chain::new(
+            "toy",
+            vec![
+                Stage::new("s1", 1.0, 2.0, 100, 250),
+                Stage::new("s2", 3.0, 4.0, 50, 60),
+                Stage::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            400,
+        )
+    }
+
+    #[test]
+    fn indexing_is_one_based() {
+        let c = toy();
+        assert_eq!(c.wa(0), 400);
+        assert_eq!(c.wa(1), 100);
+        assert_eq!(c.wa(3), 4);
+        assert_eq!(c.wabar(1), 250);
+        assert_eq!(c.uf(2), 3.0);
+        assert_eq!(c.ub(3), 0.5);
+        assert_eq!(c.wdelta(2), c.wa(2));
+    }
+
+    #[test]
+    fn ideal_time_sums_everything() {
+        assert_eq!(toy().ideal_time(), 1.0 + 2.0 + 3.0 + 4.0 + 0.5 + 0.5);
+    }
+
+    #[test]
+    fn store_all_memory_dominates_min_hint() {
+        let c = toy();
+        assert!(c.store_all_memory() >= c.min_memory_hint());
+    }
+
+    #[test]
+    #[should_panic]
+    fn abar_must_include_a() {
+        Stage::new("bad", 1.0, 1.0, 100, 50);
+    }
+}

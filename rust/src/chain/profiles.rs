@@ -1,0 +1,442 @@
+//! Analytic per-layer profiles of the paper's benchmark networks.
+//!
+//! The paper measures `(u_f, u_b, ω_a, ω_ā)` for every layer of
+//! torchvision's ResNet / DenseNet / Inception v3 (plus the ResNet-200 /
+//! ResNet-1001 variants of He et al.) on a V100, then feeds those vectors
+//! to the DP. We regenerate the vectors *analytically* from the published
+//! layer shape math: FLOP counts and activation byte counts follow
+//! directly from (depth, image size, batch size), and a V100-like roofline
+//! [`DeviceModel`] converts FLOPs/bytes to durations. What the figures
+//! depend on — the heterogeneity *structure* (early layers: huge
+//! activations, cheap math; late layers: the reverse; DenseNet's growing
+//! concatenations; Inception's mixed blocks) — is preserved exactly.
+//! See DESIGN.md §Hardware-adaptation.
+
+use super::{Chain, Stage};
+
+/// Roofline device model used to turn FLOPs and bytes into durations (ms).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    /// Effective FP32 throughput, FLOP/s.
+    pub flops_per_s: f64,
+    /// Effective memory bandwidth, bytes/s.
+    pub bytes_per_s: f64,
+    /// Fixed per-stage launch overhead, seconds.
+    pub overhead_s: f64,
+}
+
+impl DeviceModel {
+    /// V100-PCIE-ish effective numbers (15.7 TFLOP/s peak × ~45% conv
+    /// efficiency; 900 GB/s × ~70%).
+    pub const V100: DeviceModel = DeviceModel {
+        flops_per_s: 7.0e12,
+        bytes_per_s: 6.3e11,
+        overhead_s: 3.0e-5,
+    };
+
+    /// Duration in milliseconds of a stage moving `bytes` and computing
+    /// `flops` (roofline: bound by the slower of compute and memory).
+    pub fn time_ms(&self, flops: f64, bytes: f64) -> f64 {
+        let t = (flops / self.flops_per_s).max(bytes / self.bytes_per_s) + self.overhead_s;
+        t * 1e3
+    }
+}
+
+/// Accumulates stages while tracking the running tensor shape.
+struct Builder {
+    dev: DeviceModel,
+    batch: u64,
+    stages: Vec<Stage>,
+}
+
+const B4: u64 = 4; // f32 bytes
+
+impl Builder {
+    fn new(dev: DeviceModel, batch: u64) -> Self {
+        Builder { dev, batch, stages: Vec::new() }
+    }
+
+    /// Push one stage. `flops`: forward FLOPs. `out_elems`: elements of
+    /// `a^ℓ` per batch item. `saved_elems`: *extra* per-item elements in
+    /// `ā^ℓ` beyond the output itself (conv/bn/relu intermediates).
+    fn stage(&mut self, name: String, flops: f64, out_elems: u64, saved_elems: u64) {
+        let wa = B4 * self.batch * out_elems;
+        let wabar = wa + B4 * self.batch * saved_elems;
+        // forward traffic ≈ read input (~output-sized) + write ā
+        let uf = self.dev.time_ms(flops, (wa + wabar) as f64);
+        // backward: ~2× FLOPs, reads ā + δ, writes δ
+        let ub = self.dev.time_ms(2.0 * flops, (wabar + 2 * wa) as f64);
+        self.stages.push(Stage::new(name, uf, ub, wa, wabar));
+    }
+
+    /// Final classifier + loss stage (small, closes the chain).
+    fn head_and_loss(&mut self, in_elems: u64, classes: u64) {
+        let flops = 2.0 * (self.batch * in_elems * classes) as f64;
+        self.stage("fc".into(), flops, classes, 0);
+        let loss_flops = 4.0 * (self.batch * classes) as f64;
+        let wa = B4; // scalar loss
+        let uf = self.dev.time_ms(loss_flops, (B4 * self.batch * classes) as f64);
+        self.stages.push(Stage::new("loss", uf, uf, wa, wa));
+    }
+}
+
+fn conv_flops(b: u64, h_out: u64, w_out: u64, cin: u64, cout: u64, k: u64) -> f64 {
+    2.0 * (b * h_out * w_out * cin * cout * k * k) as f64
+}
+
+// ---------------------------------------------------------------------------
+// ResNet
+// ---------------------------------------------------------------------------
+
+/// Bottleneck block counts per torchvision / He et al.
+fn resnet_blocks(depth: u32) -> (&'static [u64], bool) {
+    // (layer block counts, is_bottleneck)
+    match depth {
+        18 => (&[2, 2, 2, 2], false),
+        34 => (&[3, 4, 6, 3], false),
+        50 => (&[3, 4, 6, 3], true),
+        101 => (&[3, 4, 23, 3], true),
+        152 => (&[3, 8, 36, 3], true),
+        200 => (&[3, 24, 36, 3], true),
+        d => panic!("unsupported resnet depth {d} (use 18/34/50/101/152/200/1001)"),
+    }
+}
+
+/// ImageNet-style ResNet: stem (conv7 s2 + maxpool s2), 4 layers, head.
+/// One chain stage per residual block — the paper's sequentialization.
+pub fn resnet(depth: u32, image: u64, batch: u64) -> Chain {
+    if depth == 1001 {
+        return resnet1001(image, batch);
+    }
+    let dev = DeviceModel::V100;
+    let (blocks, bottleneck) = resnet_blocks(depth);
+    let expansion: u64 = if bottleneck { 4 } else { 1 };
+    let mut b = Builder::new(dev, batch);
+
+    // stem: conv7x7/2 (64ch) + bn/relu + maxpool/2
+    let h1 = image / 2;
+    let h2 = image / 4;
+    b.stage(
+        "stem".into(),
+        conv_flops(batch, h1, h1, 3, 64, 7),
+        64 * h2 * h2,
+        64 * h1 * h1, // pre-pool feature map checkpointed
+    );
+
+    let mut cin = 64u64;
+    let mut h = h2;
+    for (li, &n) in blocks.iter().enumerate() {
+        let mid = 64 << li; // 64,128,256,512
+        let cout = mid * expansion;
+        for bi in 0..n {
+            let stride = if li > 0 && bi == 0 { 2 } else { 1 };
+            let h_out = h / stride;
+            let (flops, saved) = if bottleneck {
+                let f = conv_flops(batch, h, h, cin, mid, 1)
+                    + conv_flops(batch, h_out, h_out, mid, mid, 3)
+                    + conv_flops(batch, h_out, h_out, mid, cout, 1)
+                    + if stride == 2 || cin != cout {
+                        conv_flops(batch, h_out, h_out, cin, cout, 1)
+                    } else {
+                        0.0
+                    };
+                // saved: conv1 out (+bn/relu copy), conv2 out (+copy), conv3 pre-add
+                let s = 2 * mid * h * h + 2 * mid * h_out * h_out + cout * h_out * h_out;
+                (f, s)
+            } else {
+                let f = conv_flops(batch, h_out, h_out, cin, cout, 3)
+                    + conv_flops(batch, h_out, h_out, cout, cout, 3)
+                    + if stride == 2 || cin != cout {
+                        conv_flops(batch, h_out, h_out, cin, cout, 1)
+                    } else {
+                        0.0
+                    };
+                let s = 2 * cout * h_out * h_out + cout * h_out * h_out;
+                (f, s)
+            };
+            b.stage(
+                format!("layer{}.{}", li + 1, bi),
+                flops,
+                cout * h_out * h_out,
+                saved,
+            );
+            cin = cout;
+            h = h_out;
+        }
+    }
+    b.head_and_loss(cin, 1000);
+    let input_bytes = B4 * batch * 3 * image * image;
+    Chain::new(format!("resnet{depth}-i{image}-b{batch}"), b.stages, input_bytes)
+}
+
+/// CIFAR-style pre-activation ResNet-1001 (He et al. 2016): 3 groups of
+/// 111 bottleneck blocks at channels (64, 128, 256), evaluated by the
+/// paper at ImageNet image sizes. Chain length = 333 blocks + stem + head,
+/// matching the paper's "chain of length 339" within a few stages.
+fn resnet1001(image: u64, batch: u64) -> Chain {
+    let dev = DeviceModel::V100;
+    let mut b = Builder::new(dev, batch);
+    // stem: conv3x3 16ch, stride 1 (CIFAR style) — huge at image 224+
+    b.stage(
+        "stem".into(),
+        conv_flops(batch, image, image, 3, 16, 3),
+        16 * image * image,
+        16 * image * image,
+    );
+    let mut cin = 16u64;
+    let mut h = image;
+    for (gi, mid) in [16u64, 32, 64].into_iter().enumerate() {
+        let cout = mid * 4;
+        for bi in 0..111u64 {
+            let stride = if gi > 0 && bi == 0 { 2 } else { 1 };
+            let h_out = h / stride;
+            let flops = conv_flops(batch, h, h, cin, mid, 1)
+                + conv_flops(batch, h_out, h_out, mid, mid, 3)
+                + conv_flops(batch, h_out, h_out, mid, cout, 1)
+                + if cin != cout { conv_flops(batch, h_out, h_out, cin, cout, 1) } else { 0.0 };
+            let saved = 2 * mid * h * h + 2 * mid * h_out * h_out + cout * h_out * h_out;
+            b.stage(format!("g{}.{}", gi + 1, bi), flops, cout * h_out * h_out, saved);
+            cin = cout;
+            h = h_out;
+        }
+    }
+    b.head_and_loss(cin, 1000);
+    let input_bytes = B4 * batch * 3 * image * image;
+    Chain::new(format!("resnet1001-i{image}-b{batch}"), b.stages, input_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// DenseNet
+// ---------------------------------------------------------------------------
+
+fn densenet_config(depth: u32) -> (u64, &'static [u64], u64) {
+    // (growth rate, block layer counts, stem channels)
+    match depth {
+        121 => (32, &[6, 12, 24, 16], 64),
+        161 => (48, &[6, 12, 36, 24], 96),
+        169 => (32, &[6, 12, 32, 32], 64),
+        201 => (32, &[6, 12, 48, 32], 64),
+        d => panic!("unsupported densenet depth {d} (use 121/161/169/201)"),
+    }
+}
+
+/// DenseNet: one chain stage per dense layer; the stage output is the
+/// running concatenation (this is what makes DenseNet memory-quadratic
+/// and the paper's motivating case [18]).
+pub fn densenet(depth: u32, image: u64, batch: u64) -> Chain {
+    let dev = DeviceModel::V100;
+    let (g, blocks, stem_c) = densenet_config(depth);
+    let mut b = Builder::new(dev, batch);
+
+    let h1 = image / 2;
+    let mut h = image / 4;
+    b.stage(
+        "stem".into(),
+        conv_flops(batch, h1, h1, 3, stem_c, 7),
+        stem_c * h * h,
+        stem_c * h1 * h1,
+    );
+
+    let mut c = stem_c;
+    for (bi, &layers) in blocks.iter().enumerate() {
+        for li in 0..layers {
+            // bn-relu-conv1x1(4g) then bn-relu-conv3x3(g), concat output
+            let flops = conv_flops(batch, h, h, c, 4 * g, 1) + conv_flops(batch, h, h, 4 * g, g, 3);
+            let out = (c + g) * h * h; // concatenated features
+            let saved = 2 * 4 * g * h * h + g * h * h; // bottleneck intermediates
+            b.stage(format!("dense{}.{}", bi + 1, li), flops, out, saved);
+            c += g;
+        }
+        if bi + 1 < blocks.len() {
+            // transition: conv1x1 halving channels + avgpool/2
+            let c2 = c / 2;
+            let flops = conv_flops(batch, h, h, c, c2, 1);
+            let h2 = h / 2;
+            b.stage(format!("trans{}", bi + 1), flops, c2 * h2 * h2, c2 * h * h);
+            c = c2;
+            h = h2;
+        }
+    }
+    b.head_and_loss(c, 1000);
+    let input_bytes = B4 * batch * 3 * image * image;
+    Chain::new(format!("densenet{depth}-i{image}-b{batch}"), b.stages, input_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Inception v3
+// ---------------------------------------------------------------------------
+
+/// Inception v3 as a sequential chain of its mixed modules (torchvision's
+/// `Mixed_5b..Mixed_7c`). Each module is modeled as its aggregate branch
+/// convolutions at the published channel configuration.
+pub fn inception_v3(image: u64, batch: u64) -> Chain {
+    let dev = DeviceModel::V100;
+    let mut b = Builder::new(dev, batch);
+
+    // stem: 3 convs /2 + pool + 2 convs + pool  → H/8 roughly, 192ch
+    let h2 = image / 2;
+    let h4 = image / 4;
+    let h8 = image / 8;
+    b.stage("stem.a".into(), conv_flops(batch, h2, h2, 3, 32, 3), 32 * h2 * h2, 32 * h2 * h2);
+    b.stage("stem.b".into(), conv_flops(batch, h2, h2, 32, 64, 3), 64 * h4 * h4, 64 * h2 * h2);
+    b.stage("stem.c".into(), conv_flops(batch, h4, h4, 64, 192, 3), 192 * h8 * h8, 192 * h4 * h4 / 2);
+
+    // (name, H divisor, Cin, Cout, equivalent conv3x3 pairs)
+    let modules: &[(&str, u64, u64, u64, f64)] = &[
+        ("mixed5b", 8, 192, 256, 1.6),
+        ("mixed5c", 8, 256, 288, 1.6),
+        ("mixed5d", 8, 288, 288, 1.6),
+        ("mixed6a", 16, 288, 768, 1.8), // reduction
+        ("mixed6b", 16, 768, 768, 2.2),
+        ("mixed6c", 16, 768, 768, 2.2),
+        ("mixed6d", 16, 768, 768, 2.2),
+        ("mixed6e", 16, 768, 768, 2.2),
+        ("mixed7a", 32, 768, 1280, 1.8), // reduction
+        ("mixed7b", 32, 1280, 2048, 2.4),
+        ("mixed7c", 32, 2048, 2048, 2.4),
+    ];
+    for &(name, div, cin, cout, pairs) in modules {
+        let h = (image / div).max(1);
+        let flops = pairs * conv_flops(batch, h, h, cin, cout, 3) / 2.0;
+        // branches keep several intermediate maps alive
+        let saved = (3 * cout / 2) * h * h;
+        b.stage(name.into(), flops, cout * h * h, saved);
+    }
+    b.head_and_loss(2048, 1000);
+    let input_bytes = B4 * batch * 3 * image * image;
+    Chain::new(format!("inception3-i{image}-b{batch}"), b.stages, input_bytes)
+}
+
+// ---------------------------------------------------------------------------
+// VGG
+// ---------------------------------------------------------------------------
+
+/// VGG-19: the classic heavyweight — enormous early activations with
+/// modest FLOPs, the opposite end of the heterogeneity spectrum.
+pub fn vgg19(image: u64, batch: u64) -> Chain {
+    let dev = DeviceModel::V100;
+    let cfg: &[(u64, u64)] = &[
+        // (channels, convs in the block before pooling)
+        (64, 2),
+        (128, 2),
+        (256, 4),
+        (512, 4),
+        (512, 4),
+    ];
+    let mut b = Builder::new(dev, batch);
+    let mut cin = 3u64;
+    let mut h = image;
+    for (bi, &(c, n)) in cfg.iter().enumerate() {
+        for ci in 0..n {
+            let flops = conv_flops(batch, h, h, cin, c, 3);
+            let last = ci == n - 1;
+            let h_out = if last { h / 2 } else { h };
+            b.stage(
+                format!("conv{}_{}", bi + 1, ci + 1),
+                flops,
+                c * h_out * h_out,
+                if last { c * h * h } else { c * h * h / 2 },
+            );
+            cin = c;
+            if last {
+                h = h_out;
+            }
+        }
+    }
+    // two FC layers then head
+    let fc_in = cin * h * h;
+    b.stage("fc6".into(), 2.0 * (batch * fc_in * 4096) as f64, 4096, 4096);
+    b.stage("fc7".into(), 2.0 * (batch * 4096 * 4096) as f64, 4096, 4096);
+    b.head_and_loss(4096, 1000);
+    let input_bytes = B4 * batch * 3 * image * image;
+    Chain::new(format!("vgg19-i{image}-b{batch}"), b.stages, input_bytes)
+}
+
+/// Look up a profile by family name (CLI surface).
+pub fn by_name(family: &str, depth: u32, image: u64, batch: u64) -> Chain {
+    match family {
+        "resnet" => resnet(depth, image, batch),
+        "densenet" => densenet(depth, image, batch),
+        "inception" => inception_v3(image, batch),
+        "vgg" => vgg19(image, batch),
+        f => panic!("unknown network family {f} (resnet/densenet/inception/vgg)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_chain_lengths() {
+        // stem + Σblocks + fc + loss
+        assert_eq!(resnet(18, 224, 1).len(), 1 + 8 + 2);
+        assert_eq!(resnet(50, 224, 1).len(), 1 + 16 + 2);
+        assert_eq!(resnet(101, 224, 1).len(), 1 + 33 + 2);
+        assert_eq!(resnet(152, 224, 1).len(), 1 + 50 + 2);
+        // paper: ResNet-1001 → chain of length 339; ours: 333 + 3 = 336
+        let n = resnet(1001, 224, 1).len();
+        assert!((330..=345).contains(&n), "got {n}");
+    }
+
+    #[test]
+    fn densenet_chain_lengths() {
+        // stem + Σlayers + 3 transitions + fc + loss
+        assert_eq!(densenet(121, 224, 1).len(), 1 + 58 + 3 + 2);
+        assert_eq!(densenet(201, 224, 1).len(), 1 + 98 + 3 + 2);
+    }
+
+    #[test]
+    fn batch_scales_activations_linearly() {
+        let c1 = resnet(50, 224, 1);
+        let c8 = resnet(50, 224, 8);
+        // (the loss stage outputs a batch-independent scalar — skip it)
+        for l in 1..c1.len() {
+            assert_eq!(8 * c1.wa(l), c8.wa(l));
+            assert_eq!(8 * c1.wabar(l), c8.wabar(l));
+        }
+    }
+
+    #[test]
+    fn early_layers_are_memory_heavy_late_layers_compute_heavy() {
+        // the heterogeneity the paper exploits
+        let c = resnet(101, 1000, 4);
+        let first_block = &c.stages[1];
+        let late_block = &c.stages[c.len() - 5];
+        let early_ratio = first_block.wabar as f64 / first_block.uf;
+        let late_ratio = late_block.wabar as f64 / late_block.uf;
+        assert!(
+            early_ratio > 2.0 * late_ratio,
+            "early {early_ratio:.0} vs late {late_ratio:.0}"
+        );
+    }
+
+    #[test]
+    fn densenet_outputs_grow() {
+        let c = densenet(121, 224, 1);
+        // within the first dense block, wa grows monotonically (concat)
+        let was: Vec<u64> = (2..=6).map(|l| c.wa(l)).collect();
+        assert!(was.windows(2).all(|w| w[1] > w[0]), "{was:?}");
+    }
+
+    #[test]
+    fn paper_scale_sanity_resnet101_img1000() {
+        // Fig. 3: PyTorch at bs1 uses ~2.8 GiB for activations; our
+        // store-all accounting should land within the same order.
+        let c = resnet(101, 1000, 1);
+        let gib = c.store_all_memory() as f64 / (1u64 << 30) as f64;
+        assert!((0.8..12.0).contains(&gib), "store-all = {gib:.2} GiB");
+        // and a V100-ish forward+backward should take tens–hundreds of ms
+        assert!((10.0..5000.0).contains(&c.ideal_time()), "{}", c.ideal_time());
+    }
+
+    #[test]
+    fn all_families_build() {
+        for image in [224, 500] {
+            let _ = resnet(34, image, 2);
+            let _ = densenet(169, image, 2);
+            let _ = inception_v3(image, 2);
+            let _ = vgg19(image, 2);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Parameter estimation (paper §5.1): measure `u_f^ℓ` and `u_b^ℓ` of
+//! every stage by timing its compiled entry points on dummy tensors.
+//!
+//! Like the paper's tool, this runs once before training: each stage's
+//! `fwd_all` is executed to materialize a realistic `ā^ℓ`, then `fwd` and
+//! `bwd` are timed over several repetitions (median of wall-clock). The
+//! measured vectors plus the manifest's byte counts give the solver's
+//! [`Chain`]. The assumption (also the paper's): stage compute does not
+//! depend on tensor *values*, so zero tensors time identically to real
+//! activations.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::chain::Chain;
+use crate::runtime::{lit_scalar, lit_zeros, Entry, Runtime};
+use crate::util::median;
+
+/// Measured timings for one stage (microseconds).
+#[derive(Debug, Clone)]
+pub struct StageTiming {
+    pub name: String,
+    pub uf_us: f64,
+    pub ub_us: f64,
+}
+
+/// Measurement configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EstimatorConfig {
+    /// Timed repetitions per entry (median taken).
+    pub reps: usize,
+    /// Untimed warmup executions per entry.
+    pub warmup: usize,
+}
+
+impl Default for EstimatorConfig {
+    fn default() -> Self {
+        EstimatorConfig { reps: 5, warmup: 2 }
+    }
+}
+
+/// Time every stage of the runtime's chain; returns per-stage timings in
+/// stage order.
+pub fn estimate(rt: &Runtime, cfg: EstimatorConfig) -> Result<Vec<StageTiming>> {
+    let manifest = &rt.manifest;
+    let mut out = Vec::with_capacity(manifest.stages.len());
+    for (i, st) in manifest.stages.iter().enumerate() {
+        let sig = manifest.sig_of(i);
+        // dummy parameters & input (values don't affect timing)
+        let params: Vec<Literal> = sig
+            .params
+            .iter()
+            .map(|p| lit_zeros(&p.shape))
+            .collect::<Result<Vec<_>>>()?;
+        let a_in = lit_zeros(&sig.in_shape)?;
+        let delta_out = if sig.out_shape.is_empty() {
+            lit_scalar(1.0f32)
+        } else {
+            lit_zeros(&sig.out_shape)?
+        };
+
+        let fwd_args: Vec<&Literal> =
+            params.iter().chain(std::iter::once(&a_in)).collect();
+
+        // materialize ā once for the backward's inputs
+        let abar = rt
+            .execute(&st.sig, Entry::FwdAll, &fwd_args)
+            .with_context(|| format!("estimating {}", st.name))?;
+        let mut bwd_args: Vec<&Literal> = params.iter().collect();
+        bwd_args.push(&a_in);
+        bwd_args.extend(abar.iter());
+        bwd_args.push(&delta_out);
+
+        let time_entry = |entry: Entry, args: &[&Literal]| -> Result<f64> {
+            for _ in 0..cfg.warmup {
+                rt.execute(&st.sig, entry, args)?;
+            }
+            let mut samples = Vec::with_capacity(cfg.reps);
+            for _ in 0..cfg.reps.max(1) {
+                let t0 = std::time::Instant::now();
+                rt.execute(&st.sig, entry, args)?;
+                samples.push(t0.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(median(&mut samples))
+        };
+
+        // u_f: the forward op (F∅/Fck/Fall all cost u_f in the model; we
+        // time fwd_all since that is what the optimal schedule mostly runs
+        // and the difference is one extra store)
+        let uf_us = time_entry(Entry::FwdAll, &fwd_args)?;
+        let ub_us = time_entry(Entry::Bwd, &bwd_args)?;
+        out.push(StageTiming { name: st.name.clone(), uf_us, ub_us });
+    }
+    Ok(out)
+}
+
+/// Convenience: estimate and assemble the solver's [`Chain`].
+pub fn measured_chain(rt: &Runtime, cfg: EstimatorConfig) -> Result<Chain> {
+    let timings = estimate(rt, cfg)?;
+    let uf: Vec<f64> = timings.iter().map(|t| t.uf_us).collect();
+    let ub: Vec<f64> = timings.iter().map(|t| t.ub_us).collect();
+    Ok(rt.manifest.to_chain(&uf, &ub))
+}
+
+/// Render timings as an aligned table for the CLI.
+pub fn format_table(timings: &[StageTiming], chain: &Chain) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<20} {:>10} {:>10} {:>12} {:>12}\n",
+        "stage", "u_f (µs)", "u_b (µs)", "ω_a", "ω_ā"
+    ));
+    for (i, t) in timings.iter().enumerate() {
+        let l = i + 1;
+        s.push_str(&format!(
+            "{:<20} {:>10.1} {:>10.1} {:>12} {:>12}\n",
+            t.name,
+            t.uf_us,
+            t.ub_us,
+            chain.wa(l),
+            chain.wabar(l)
+        ));
+    }
+    s
+}

@@ -1,0 +1,297 @@
+//! Real schedule execution over the PJRT runtime.
+//!
+//! The executor replays a [`Schedule`] with *exactly* the simulator's
+//! Table 1 semantics, but against live tensors: it holds the value store
+//! (`a^ℓ` / `ā^ℓ` / `δ^ℓ` literals), charges every allocation to a logical
+//! [`MemState`] ledger (enforcing the byte budget the schedule was solved
+//! for — the CPU host has no GPU-style OOM to do it for us), collects the
+//! per-stage gradients produced by the `B^ℓ` ops and captures the loss.
+//!
+//! One [`Executor::run`] call = one training iteration of the paper's
+//! processing phase. The replay loop passes `&Literal` references
+//! throughout — no tensor copies besides what PJRT itself does.
+
+mod params;
+
+pub use params::StageParams;
+
+use anyhow::{bail, ensure, Context, Result};
+use xla::{Literal, PjRtLoadedExecutable};
+
+use crate::chain::Chain;
+use crate::runtime::{lit_scalar, lit_to_vec, Entry, Runtime};
+use crate::simulator::MemState;
+use crate::solver::{Op, Schedule};
+use crate::util::Rng;
+
+/// Outcome of one executed iteration.
+#[derive(Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    /// Peak bytes charged to the ledger (activations + transients).
+    pub peak_bytes: u64,
+    /// Wall-clock of the schedule replay, seconds.
+    pub elapsed_s: f64,
+    /// Ops executed.
+    pub ops: usize,
+}
+
+pub struct Executor<'rt> {
+    rt: &'rt Runtime,
+    /// Pre-resolved executables per stage `[fwd, fwd_all, bwd]` — the hot
+    /// loop never touches the string-keyed registry.
+    exes: Vec<[&'rt PjRtLoadedExecutable; 3]>,
+    /// Per-stage parameters (stage order; independent even when stages
+    /// share a signature).
+    pub params: Vec<StageParams>,
+    /// Size model used by the ledger (timings unused here).
+    pub chain_sizes: Chain,
+    /// Gradients from the last iteration, per stage (trainable order).
+    grads: Vec<Vec<Vec<f32>>>,
+    // value store, 1-based stage indexing like the simulator
+    a: Vec<Option<Literal>>,
+    abar: Vec<Option<Vec<Literal>>>,
+    delta: Vec<Option<Literal>>,
+}
+
+/// Execute a pre-resolved entry point and decompose its tuple output.
+fn exec(exe: &PjRtLoadedExecutable, args: &[&Literal], what: &str) -> Result<Vec<Literal>> {
+    let outs = exe
+        .execute::<&Literal>(args)
+        .with_context(|| format!("executing {what}"))?;
+    let mut result = outs[0][0]
+        .to_literal_sync()
+        .with_context(|| format!("fetching result of {what}"))?;
+    result.decompose_tuple().context("decomposing result tuple")
+}
+
+/// Borrow `a^ℓ`: standalone tensor preferred, else the head of `ā^ℓ`.
+fn read_a<'s>(
+    a: &'s [Option<Literal>],
+    abar: &'s [Option<Vec<Literal>>],
+    l: usize,
+) -> Option<&'s Literal> {
+    if let Some(lit) = a[l].as_ref() {
+        return Some(lit);
+    }
+    if l >= 1 {
+        if let Some(vals) = abar[l - 1].as_ref() {
+            return Some(&vals[0]);
+        }
+    }
+    None
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn new(rt: &'rt Runtime, seed: u64) -> Result<Self> {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        for (i, _st) in rt.manifest.stages.iter().enumerate() {
+            let mut stream = rng.split(i as u64);
+            params.push(StageParams::init(rt.manifest.sig_of(i), &mut stream)?);
+        }
+        let n = rt.manifest.stages.len();
+        let exes = (0..n)
+            .map(|i| {
+                let sig = &rt.manifest.stages[i].sig;
+                [
+                    rt.executable(sig, Entry::Fwd),
+                    rt.executable(sig, Entry::FwdAll),
+                    rt.executable(sig, Entry::Bwd),
+                ]
+            })
+            .collect();
+        // ledger sizes from the manifest; timings are irrelevant here
+        let uf = vec![0.0; n];
+        let chain_sizes = rt.manifest.to_chain(&uf, &uf);
+        Ok(Executor {
+            rt,
+            exes,
+            params,
+            chain_sizes,
+            grads: vec![Vec::new(); n],
+            a: vec![None; n + 1],
+            abar: vec![None; n],
+            delta: vec![None; n + 1],
+        })
+    }
+
+    /// Number of stages `L+1`.
+    pub fn n_stages(&self) -> usize {
+        self.rt.manifest.stages.len()
+    }
+
+    /// Set a `data` param (the loss stage's target) before an iteration.
+    pub fn set_data_param(&mut self, stage: usize, data: &[f32]) -> Result<()> {
+        let sig = self.rt.manifest.sig_of(stage);
+        let idx = sig
+            .params
+            .iter()
+            .position(|p| p.is_data())
+            .with_context(|| format!("stage {stage} has no data param"))?;
+        self.params[stage].set_data(idx, data)
+    }
+
+    /// Gradients of the last iteration for stage `i` (0-based), in the
+    /// bwd artifact's output order (trainable params only).
+    pub fn grads(&self, stage: usize) -> &[Vec<f32>] {
+        &self.grads[stage]
+    }
+
+    /// Apply SGD to every stage with the last iteration's gradients.
+    pub fn sgd_step(&mut self, lr: f32) -> Result<()> {
+        for i in 0..self.params.len() {
+            let n_expected = self.params[i].trainable.len();
+            if self.grads[i].len() != n_expected {
+                bail!(
+                    "stage {i}: {} gradients recorded, expected {n_expected} — run an iteration first",
+                    self.grads[i].len()
+                );
+            }
+            let grads = std::mem::take(&mut self.grads[i]);
+            self.params[i].sgd_step(&grads, lr)?;
+        }
+        Ok(())
+    }
+
+    /// Run one iteration: places `input` as `a^0`, seeds `δ^{L+1} = 1`,
+    /// replays the schedule, enforces `memory_limit` (if any) on the
+    /// ledger, and returns the loss.
+    pub fn run(
+        &mut self,
+        schedule: &Schedule,
+        input: &Literal,
+        memory_limit: Option<u64>,
+    ) -> Result<StepResult> {
+        let n = self.n_stages();
+        let start = std::time::Instant::now();
+
+        // reset the value store and ledger
+        self.a.iter_mut().for_each(|x| *x = None);
+        self.abar.iter_mut().for_each(|x| *x = None);
+        self.delta.iter_mut().for_each(|x| *x = None);
+        for g in &mut self.grads {
+            g.clear();
+        }
+        self.a[0] = Some(input.clone());
+        self.delta[n] = Some(lit_scalar(1.0f32));
+        let mut ledger = MemState::initial(&self.chain_sizes);
+        let mut loss = f32::NAN;
+
+        for (oi, &op) in schedule.ops.iter().enumerate() {
+            match op {
+                Op::FwdNoSave(l) | Op::FwdCk(l) => {
+                    let l = l as usize;
+                    let mut out = {
+                        let a_in = read_a(&self.a, &self.abar, l - 1)
+                            .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
+                        let mut args: Vec<&Literal> =
+                            self.params[l - 1].literals.iter().collect();
+                        args.push(a_in);
+                        exec(self.exes[l - 1][0], &args, "fwd")?
+                    };
+                    ledger.touch_peak(self.chain_sizes.wa(l) + self.chain_sizes.of(l));
+                    ensure!(self.a[l].is_none(), "op #{oi} {op}: a^{l} already stored");
+                    self.a[l] = Some(out.swap_remove(0));
+                    ledger.store_a(l).map_err(anyhow::Error::msg)?;
+                    if matches!(op, Op::FwdNoSave(_)) {
+                        self.a[l - 1] = None;
+                        ledger.free_a_if_standalone(l - 1);
+                    }
+                    self.check_limit(&ledger, memory_limit, oi)?;
+                }
+                Op::FwdAll(l) => {
+                    let l = l as usize;
+                    let out = {
+                        let a_in = read_a(&self.a, &self.abar, l - 1)
+                            .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
+                        let mut args: Vec<&Literal> =
+                            self.params[l - 1].literals.iter().collect();
+                        args.push(a_in);
+                        exec(self.exes[l - 1][1], &args, "fwd_all")?
+                    };
+                    ledger.touch_peak(self.chain_sizes.wabar(l) + self.chain_sizes.of(l));
+                    ensure!(self.abar[l - 1].is_none(), "op #{oi} {op}: ā^{l} already stored");
+                    if l == n {
+                        // the loss stage's a_out is the loss scalar
+                        loss = lit_to_vec(&out[0])?[0];
+                    }
+                    self.abar[l - 1] = Some(out);
+                    ledger.store_abar(l).map_err(anyhow::Error::msg)?;
+                    self.check_limit(&ledger, memory_limit, oi)?;
+                }
+                Op::Bwd(l) => {
+                    let l = l as usize;
+                    let delta_out = self.delta[l]
+                        .take()
+                        .with_context(|| format!("op #{oi} {op}: δ^{l} missing"))?;
+                    let abar = self.abar[l - 1]
+                        .take()
+                        .with_context(|| format!("op #{oi} {op}: ā^{l} missing"))?;
+                    let mut out = {
+                        let a_in = read_a(&self.a, &self.abar, l - 1)
+                            .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
+                        let mut args: Vec<&Literal> =
+                            self.params[l - 1].literals.iter().collect();
+                        args.push(a_in);
+                        args.extend(abar.iter());
+                        args.push(&delta_out);
+                        exec(self.exes[l - 1][2], &args, "bwd")?
+                    };
+                    // ledger: δ^{ℓ-1} replaces a^{ℓ-1} (see simulator::Bwd)
+                    ledger.touch_peak(self.chain_sizes.ob(l));
+                    ensure!(
+                        self.delta[l - 1].is_none(),
+                        "op #{oi} {op}: δ^{} already stored",
+                        l - 1
+                    );
+                    let delta_in = out.remove(0);
+                    self.grads[l - 1] = out
+                        .iter()
+                        .map(lit_to_vec)
+                        .collect::<Result<Vec<_>>>()
+                        .with_context(|| format!("op #{oi} {op}: extracting grads"))?;
+                    self.delta[l - 1] = Some(delta_in);
+                    ledger.free_delta(l);
+                    ledger.free_abar(l);
+                    self.a[l - 1] = None;
+                    ledger.free_a_if_standalone(l - 1);
+                    ledger.store_delta(l - 1).map_err(anyhow::Error::msg)?;
+                    self.check_limit(&ledger, memory_limit, oi)?;
+                }
+                Op::DropA(l) => {
+                    let l = l as usize;
+                    ensure!(self.a[l].is_some(), "op #{oi} {op}: a^{l} not resident");
+                    self.a[l] = None;
+                    ledger.free_a_if_standalone(l);
+                }
+            }
+        }
+
+        ensure!(self.delta[0].is_some(), "schedule ended without δ^0");
+        ensure!(loss.is_finite(), "loss stage never taped (no Fall^{n})");
+        Ok(StepResult {
+            loss,
+            peak_bytes: ledger.peak,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            ops: schedule.ops.len(),
+        })
+    }
+
+    fn check_limit(&self, ledger: &MemState, limit: Option<u64>, oi: usize) -> Result<()> {
+        if let Some(limit) = limit {
+            ensure!(
+                ledger.peak <= limit,
+                "op #{oi}: memory limit exceeded (peak {} > budget {})",
+                ledger.peak,
+                limit
+            );
+        }
+        Ok(())
+    }
+
+    /// `δ^0` from the last iteration (gradient w.r.t. the chain input).
+    pub fn input_gradient(&self) -> Option<Vec<f32>> {
+        self.delta[0].as_ref().and_then(|l| lit_to_vec(l).ok())
+    }
+}

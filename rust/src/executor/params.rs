@@ -1,0 +1,90 @@
+//! Per-stage parameter storage: master f32 copies + cached Literals.
+//!
+//! Parameters are initialized Rust-side from the manifest's init specs
+//! (`xavier`/`zeros`/`ones`), so Python stays out of the runtime path.
+//! `data` params (the loss stage's target) are per-batch inputs set by the
+//! trainer before each iteration. The Literal cache means the hot loop
+//! never re-encodes parameters; it is invalidated by [`StageParams::sgd_step`].
+
+use anyhow::{ensure, Result};
+use xla::Literal;
+
+use crate::chain::manifest::SignatureSpec;
+use crate::runtime::lit_from_vec;
+use crate::util::Rng;
+
+pub struct StageParams {
+    /// Master copies, one per manifest param (data params stay empty).
+    pub values: Vec<Vec<f32>>,
+    /// Cached literals fed to every execute call (manifest order).
+    pub literals: Vec<Literal>,
+    /// Indices of trainable (non-data) params, in gradient order.
+    pub trainable: Vec<usize>,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl StageParams {
+    /// Initialize from the signature's specs with a per-stage RNG stream.
+    pub fn init(sig: &SignatureSpec, rng: &mut Rng) -> Result<Self> {
+        let mut values = Vec::new();
+        let mut literals = Vec::new();
+        let mut trainable = Vec::new();
+        let mut shapes = Vec::new();
+        for (i, p) in sig.params.iter().enumerate() {
+            let n = p.nelem();
+            let v: Vec<f32> = match p.init.as_str() {
+                "xavier" => {
+                    let fan_in = *p.shape.first().unwrap_or(&1);
+                    let fan_out = *p.shape.last().unwrap_or(&1);
+                    rng.xavier(fan_in, fan_out, n)
+                }
+                "zeros" => vec![0.0; n],
+                "ones" => vec![1.0; n],
+                "data" => vec![0.0; n], // placeholder until set_data
+                other => anyhow::bail!("unknown init '{other}' for param {}", p.name),
+            };
+            literals.push(lit_from_vec(&v, &p.shape)?);
+            if !p.is_data() {
+                trainable.push(i);
+            }
+            shapes.push(p.shape.clone());
+            values.push(v);
+        }
+        ensure!(trainable.len() == sig.n_grads, "n_grads mismatch vs manifest");
+        Ok(StageParams { values, literals, trainable, shapes })
+    }
+
+    /// Replace a `data` param (e.g. the loss target) for this iteration.
+    pub fn set_data(&mut self, index: usize, data: &[f32]) -> Result<()> {
+        ensure!(
+            data.len() == self.values[index].len(),
+            "data size mismatch: {} vs {}",
+            data.len(),
+            self.values[index].len()
+        );
+        self.values[index].copy_from_slice(data);
+        self.literals[index] = lit_from_vec(data, &self.shapes[index])?;
+        Ok(())
+    }
+
+    /// Plain SGD over the trainable params. `grads[j]` corresponds to
+    /// `trainable[j]` (the bwd artifact's output order).
+    pub fn sgd_step(&mut self, grads: &[Vec<f32>], lr: f32) -> Result<()> {
+        ensure!(grads.len() == self.trainable.len(), "gradient count mismatch");
+        for (j, &pi) in self.trainable.iter().enumerate() {
+            let p = &mut self.values[pi];
+            let g = &grads[j];
+            ensure!(g.len() == p.len(), "gradient size mismatch for param {pi}");
+            for (w, gi) in p.iter_mut().zip(g) {
+                *w -= lr * gi;
+            }
+            self.literals[pi] = lit_from_vec(p, &self.shapes[pi])?;
+        }
+        Ok(())
+    }
+
+    /// Total trainable scalar count.
+    pub fn n_trainable_scalars(&self) -> usize {
+        self.trainable.iter().map(|&i| self.values[i].len()).sum()
+    }
+}

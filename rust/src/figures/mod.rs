@@ -1,0 +1,324 @@
+//! Figure/table harness: regenerates every evaluation artifact of the
+//! paper's §5.4 (Figures 3–13 + the 17.2 % summary) as CSV series.
+//!
+//! Each figure is a set of panels (network, image size, batch size); each
+//! panel holds throughput-vs-peak-memory points for the four strategies:
+//!
+//! * `pytorch`    — store-all; one point (absent if it exceeds the device).
+//! * `sequential` — `checkpoint_sequential` over the paper's segment sweep.
+//! * `revolve`    — heterogeneous-AD optimum, 10 memory limits.
+//! * `optimal`    — this paper's DP, the same 10 memory limits.
+//!
+//! Timings come from the [`profiles`] V100 roofline; every point is
+//! produced by *simulating the actual schedule* (never the solver's claim
+//! alone), so the plots inherit the simulator's validity guarantees.
+
+use std::fmt::Write as _;
+
+use crate::chain::{profiles, Chain};
+use crate::simulator::simulate;
+use crate::solver::{
+    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, StrategyKind,
+};
+
+/// Memory of the paper's evaluation GPU (V100 16 GB, minus framework
+/// overhead — the paper reports 15.75 GB usable).
+pub const DEVICE_MEMORY: u64 = (15.75 * (1u64 << 30) as f64) as u64;
+
+/// One plotted point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub strategy: StrategyKind,
+    /// Sweep parameter: segment count (sequential) or memory budget bytes.
+    pub param: u64,
+    pub peak_bytes: u64,
+    pub makespan_ms: f64,
+    pub throughput: f64, // images / second
+}
+
+/// One panel = one (network, image, batch) plot of the paper.
+#[derive(Debug, Clone)]
+pub struct Panel {
+    pub chain_name: String,
+    pub batch: u64,
+    pub points: Vec<Point>,
+    /// Chain length L+1 (reported in the CSV header).
+    pub chain_len: usize,
+}
+
+/// Discretization used for figure generation. The paper uses S=500; long
+/// chains (ResNet-1001) get a coarser table to keep the full-figure run
+/// in CPU-minutes (the schedules stay valid — rounding is conservative).
+fn slots_for(chain: &Chain) -> usize {
+    if chain.len() > 150 {
+        150
+    } else {
+        400
+    }
+}
+
+/// Compute the four strategy curves for one chain. `device_memory` bounds
+/// which points are *feasible on the paper's GPU* (points above it are
+/// dropped, mirroring the paper's OOM squares).
+pub fn panel(chain: &Chain, batch: u64, device_memory: u64) -> Panel {
+    let mut points = Vec::new();
+    let slots = slots_for(chain);
+
+    // pytorch (store-all): a single point, if it fits
+    let sa = store_all_schedule(chain);
+    if let Ok(rep) = simulate(chain, &sa) {
+        if rep.peak_bytes <= device_memory {
+            points.push(Point {
+                strategy: StrategyKind::StoreAll,
+                param: 0,
+                peak_bytes: rep.peak_bytes,
+                makespan_ms: rep.makespan,
+                throughput: batch as f64 / (rep.makespan * 1e-3),
+            });
+        }
+    }
+
+    // sequential: the paper's segment sweep
+    for k in paper_segment_sweep(chain.len() - 1) {
+        let sched = periodic_schedule(chain, k);
+        if let Ok(rep) = simulate(chain, &sched) {
+            if rep.peak_bytes <= device_memory {
+                points.push(Point {
+                    strategy: StrategyKind::Periodic,
+                    param: k as u64,
+                    peak_bytes: rep.peak_bytes,
+                    makespan_ms: rep.makespan,
+                    throughput: batch as f64 / (rep.makespan * 1e-3),
+                });
+            }
+        }
+    }
+
+    // optimal & revolve: 10 memory limits equally spaced up to store-all
+    // memory (paper §5.3), clamped to the device.
+    let hi = chain.store_all_memory().min(device_memory);
+    for mode in [Mode::Full, Mode::AdRevolve] {
+        let strategy = match mode {
+            Mode::Full => StrategyKind::Optimal,
+            Mode::AdRevolve => StrategyKind::Revolve,
+        };
+        for i in 1..=10u64 {
+            let m = hi * i / 10;
+            let Some(sched) = solve(chain, m, slots, mode) else { continue };
+            let Ok(rep) = simulate(chain, &sched) else { continue };
+            debug_assert!(rep.peak_bytes <= m, "{strategy}: sim peak exceeds budget");
+            points.push(Point {
+                strategy,
+                param: m,
+                peak_bytes: rep.peak_bytes,
+                makespan_ms: rep.makespan,
+                throughput: batch as f64 / (rep.makespan * 1e-3),
+            });
+        }
+    }
+
+    Panel { chain_name: chain.name.clone(), batch, points, chain_len: chain.len() }
+}
+
+/// Panel spec: (family, depth, image, batch).
+pub type PanelSpec = (&'static str, u32, u64, u64);
+
+/// Every figure of the paper, as panel specs. Batch-size grids follow the
+/// paper's "powers of two from the smallest with reasonable throughput".
+pub fn figure_specs(fig: u32) -> Vec<PanelSpec> {
+    let mut v = Vec::new();
+    match fig {
+        3 => {
+            for bs in [1, 2, 4, 8] {
+                v.push(("resnet", 101, 1000, bs));
+            }
+        }
+        4 => {
+            for bs in [1, 2, 4, 8] {
+                v.push(("resnet", 1001, 224, bs));
+            }
+        }
+        5 => {
+            // "several situations": representative mixed selection
+            v.push(("resnet", 152, 500, 4));
+            v.push(("resnet", 50, 500, 16));
+            v.push(("densenet", 169, 224, 16));
+            v.push(("densenet", 121, 500, 8));
+            v.push(("inception", 0, 500, 8));
+            v.push(("vgg", 0, 500, 8));
+        }
+        6 => {
+            for d in [18, 34, 50, 101, 152, 200] {
+                for bs in [16, 32] {
+                    v.push(("resnet", d, 224, bs));
+                }
+            }
+        }
+        7 => {
+            for d in [18, 34, 50, 101, 152, 200] {
+                for bs in [4, 8] {
+                    v.push(("resnet", d, 500, bs));
+                }
+            }
+        }
+        8 => {
+            for d in [18, 34, 50, 101, 152] {
+                for bs in [1, 2, 4] {
+                    v.push(("resnet", d, 1000, bs));
+                }
+            }
+        }
+        9 => {
+            for d in [121, 161, 169, 201] {
+                for bs in [16, 32] {
+                    v.push(("densenet", d, 224, bs));
+                }
+            }
+        }
+        10 => {
+            for d in [121, 161, 169, 201] {
+                for bs in [4, 8] {
+                    v.push(("densenet", d, 500, bs));
+                }
+            }
+        }
+        11 => {
+            for d in [121, 161, 169, 201] {
+                for bs in [1, 2] {
+                    v.push(("densenet", d, 1000, bs));
+                }
+            }
+        }
+        12 => {
+            for (img, bss) in [(224u64, [16u64, 32]), (500, [4, 8]), (1000, [1, 2])] {
+                for bs in bss {
+                    v.push(("inception", 0, img, bs));
+                }
+            }
+        }
+        13 => {
+            let grids: [(u64, &[u64]); 3] =
+                [(224, &[1, 2, 4, 8]), (500, &[1, 2]), (1000, &[1, 2])];
+            for (img, bss) in grids {
+                for &bs in bss {
+                    v.push(("resnet", 1001, img, bs));
+                }
+            }
+        }
+        f => panic!("unknown figure {f} (paper has figures 3..=13)"),
+    }
+    v
+}
+
+/// Generate all panels of one figure.
+pub fn figure(fig: u32) -> Vec<Panel> {
+    figure_specs(fig)
+        .into_iter()
+        .map(|(family, depth, image, batch)| {
+            let chain = profiles::by_name(family, depth, image, batch);
+            panel(&chain, batch, DEVICE_MEMORY)
+        })
+        .collect()
+}
+
+/// CSV serialization of panels (one file per figure).
+pub fn to_csv(panels: &[Panel]) -> String {
+    let mut s = String::from("chain,chain_len,batch,strategy,param,peak_bytes,peak_gib,makespan_ms,throughput_img_s\n");
+    for p in panels {
+        for pt in &p.points {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{:.4},{:.3},{:.3}",
+                p.chain_name,
+                p.chain_len,
+                p.batch,
+                pt.strategy,
+                pt.param,
+                pt.peak_bytes,
+                pt.peak_bytes as f64 / (1u64 << 30) as f64,
+                pt.makespan_ms,
+                pt.throughput
+            );
+        }
+    }
+    s
+}
+
+/// The paper's §5.4 headline: ratio of `optimal` throughput to the *best*
+/// `sequential` throughput, with optimal restricted to at most the memory
+/// the best sequential point used. Returns (gain, best_seq, matched_opt)
+/// or None if either curve is missing.
+pub fn optimal_vs_sequential(panel: &Panel) -> Option<(f64, f64, f64)> {
+    let best_seq = panel
+        .points
+        .iter()
+        .filter(|p| p.strategy == StrategyKind::Periodic)
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
+    let opt = panel
+        .points
+        .iter()
+        .filter(|p| p.strategy == StrategyKind::Optimal)
+        .filter(|p| p.peak_bytes <= best_seq.peak_bytes)
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
+    Some((
+        opt.throughput / best_seq.throughput - 1.0,
+        best_seq.throughput,
+        opt.throughput,
+    ))
+}
+
+/// Summary over a set of panels: average percentage gain (paper: 17.2 %).
+pub fn summary_gain(panels: &[Panel]) -> Option<f64> {
+    let gains: Vec<f64> = panels.iter().filter_map(optimal_vs_sequential).map(|g| g.0).collect();
+    if gains.is_empty() {
+        return None;
+    }
+    Some(gains.iter().sum::<f64>() / gains.len() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_cover_all_figures() {
+        for f in 3..=13 {
+            assert!(!figure_specs(f).is_empty(), "figure {f}");
+        }
+    }
+
+    #[test]
+    fn small_panel_has_all_strategies() {
+        let chain = profiles::resnet(18, 224, 16);
+        let p = panel(&chain, 16, DEVICE_MEMORY);
+        for strat in [
+            StrategyKind::StoreAll,
+            StrategyKind::Periodic,
+            StrategyKind::Revolve,
+            StrategyKind::Optimal,
+        ] {
+            assert!(
+                p.points.iter().any(|pt| pt.strategy == strat),
+                "missing {strat} in {:?}",
+                p.points.iter().map(|x| x.strategy).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn optimal_dominates_sequential_on_small_panel() {
+        let chain = profiles::resnet(34, 224, 16);
+        let p = panel(&chain, 16, DEVICE_MEMORY);
+        let (gain, _, _) = optimal_vs_sequential(&p).expect("both curves present");
+        assert!(gain >= -1e-9, "optimal must not lose at equal memory: gain={gain}");
+    }
+
+    #[test]
+    fn csv_has_rows() {
+        let chain = profiles::resnet(18, 224, 8);
+        let p = panel(&chain, 8, DEVICE_MEMORY);
+        let csv = to_csv(&[p]);
+        assert!(csv.lines().count() > 10);
+        assert!(csv.starts_with("chain,"));
+    }
+}

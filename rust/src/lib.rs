@@ -1,0 +1,46 @@
+//! # chainckpt — optimal checkpointing for heterogeneous chains
+//!
+//! Reproduction of Beaumont, Eyraud-Dubois, Herrmann, Joly, Shilova,
+//! *"Optimal checkpointing for heterogeneous chains: how to train deep
+//! neural networks with limited memory"* (Inria RR-9302, 2019).
+//!
+//! The crate is the L3 coordinator of a three-layer stack:
+//!
+//! * [`chain`] — the heterogeneous-chain cost model (per-stage forward /
+//!   backward times, activation sizes `ω_a`, `ω_ā`, overheads) plus
+//!   analytic profiles of the paper's benchmark networks (ResNet,
+//!   DenseNet, Inception v3, VGG) and the memory-slot discretization.
+//! * [`solver`] — schedule computation: the paper's optimal persistent
+//!   dynamic program (Theorem 1, Algorithms 1–2) and the three baselines
+//!   it is evaluated against (`store-all` ≡ plain PyTorch, `sequential` ≡
+//!   `torch.utils.checkpoint_sequential`, `revolve` ≡ the Automatic
+//!   Differentiation adaptation).
+//! * [`simulator`] — a byte-accurate replay of any operation sequence
+//!   (Table 1 semantics): validity, peak memory, makespan. Ground truth
+//!   for every property test and for figure generation.
+//! * [`runtime`] — PJRT bridge: loads the AOT-compiled HLO-text artifacts
+//!   produced by `python/compile/aot.py` and executes them on the CPU
+//!   client. Python never runs at this point.
+//! * [`executor`] — runs a schedule against the real compiled stages with
+//!   a logical memory ledger, collecting gradients and the loss.
+//! * [`estimator`] — the paper's §5.1 parameter-estimation phase: measures
+//!   `u_f`, `u_b` per stage from the real executables.
+//! * [`train`] — SGD training driver (synthetic data, loss logging).
+//! * [`figures`] — regenerates every figure/table of the paper's §5.4
+//!   evaluation as CSV series.
+
+pub mod chain;
+pub mod estimator;
+pub mod executor;
+pub mod figures;
+pub mod runtime;
+pub mod simulator;
+pub mod solver;
+pub mod train;
+pub mod util;
+
+pub use chain::{Chain, Stage};
+pub use simulator::{simulate, SimReport};
+pub use solver::{
+    optimal_schedule, periodic_schedule, revolve_schedule, store_all_schedule, Op, Schedule,
+};

@@ -1,0 +1,357 @@
+//! `chainckpt` CLI — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   solve     compute a schedule for a profile chain and a memory budget
+//!   simulate  replay all four strategies on a profile chain
+//!   estimate  measure per-stage timings of compiled artifacts (§5.1)
+//!   train     run SGD with a checkpointing schedule over real artifacts
+//!   compare   measured throughput-vs-memory of all strategies (real run)
+//!   figures   regenerate the paper's Figures 3–13 + summary as CSV
+//!
+//! Run `chainckpt help` for flags.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+use chainckpt::chain::{profiles, Chain, DEFAULT_SLOTS};
+use chainckpt::estimator::{estimate, format_table, measured_chain, EstimatorConfig};
+use chainckpt::figures;
+use chainckpt::runtime::Runtime;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{
+    optimal_schedule, paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode,
+    Schedule,
+};
+use chainckpt::train::{mean_loss, SyntheticData, Trainer};
+use chainckpt::util::{fmt_bytes, Args, FLAG_SET};
+
+const USAGE: &str = "\
+chainckpt — optimal checkpointing for heterogeneous chains (RR-9302)
+
+USAGE:
+  chainckpt solve    --family resnet --depth 101 --image 1000 --batch 8 --memory 4G
+                     [--slots 500] [--strategy optimal|revolve] [--show-ops]
+  chainckpt simulate --family resnet --depth 101 --image 1000 --batch 8
+  chainckpt estimate [--artifacts artifacts/default]
+  chainckpt train    [--artifacts artifacts/default] [--memory 8M] [--steps 100]
+                     [--lr 0.05] [--strategy optimal|sequential|revolve|pytorch]
+                     [--segments 4] [--batches 8] [--log-every 10] [--out loss.csv]
+  chainckpt compare  [--artifacts artifacts/default] [--points 6] [--out compare.csv]
+  chainckpt figures  [--fig 3|all] [--out results]
+
+Profile flags: --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
+Sizes accept K/M/G suffixes (1024-based).
+";
+
+fn profile_chain(args: &Args) -> Chain {
+    let family = args.str("family", "resnet");
+    let depth = args.u32("depth", 101);
+    let image = args.u64("image", 1000);
+    let batch = args.u64("batch", 8);
+    profiles::by_name(&family, depth, image, batch)
+}
+
+fn describe(chain: &Chain, sched: &Schedule, budget: Option<u64>, unit: &str) -> Result<()> {
+    let rep = simulate(chain, sched).map_err(|e| anyhow::anyhow!("invalid schedule: {e}"))?;
+    println!("strategy        : {}", sched.strategy);
+    println!("ops             : {}", rep.ops);
+    println!("recomputed fwds : {}", rep.recomputed_forwards);
+    println!("makespan        : {:.3} {unit}", rep.makespan);
+    println!("ideal (no ckpt) : {:.3} {unit}", chain.ideal_time());
+    println!("overhead        : {:.1} %", 100.0 * (rep.makespan / chain.ideal_time() - 1.0));
+    println!("peak memory     : {}", fmt_bytes(rep.peak_bytes));
+    if let Some(m) = budget {
+        println!("budget          : {} (fits: {})", fmt_bytes(m), rep.peak_bytes <= m);
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let chain = profile_chain(args);
+    let memory = args.u64("memory", 4 << 30);
+    let slots = args.usize("slots", DEFAULT_SLOTS);
+    let mode = match args.str("strategy", "optimal").as_str() {
+        "optimal" => Mode::Full,
+        "revolve" => Mode::AdRevolve,
+        s => bail!("--strategy {s}: solve supports optimal|revolve"),
+    };
+    println!("chain {} (L+1 = {}), budget {}", chain.name, chain.len(), fmt_bytes(memory));
+    let t0 = std::time::Instant::now();
+    let Some(sched) = solve(&chain, memory, slots, mode) else {
+        bail!("no feasible persistent schedule within {}", fmt_bytes(memory));
+    };
+    println!("solve time      : {:.2} s (S = {slots})", t0.elapsed().as_secs_f64());
+    describe(&chain, &sched, Some(memory), "ms")?;
+    if args.has("show-ops") {
+        println!("{}", sched.compact());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let chain = profile_chain(args);
+    let batch = args.u64("batch", 8);
+    println!(
+        "chain {} (L+1 = {}), store-all memory {}",
+        chain.name,
+        chain.len(),
+        fmt_bytes(chain.store_all_memory())
+    );
+    let p = figures::panel(&chain, batch, figures::DEVICE_MEMORY);
+    println!(
+        "{:<12} {:>14} {:>12} {:>12} {:>14}",
+        "strategy", "param", "peak", "makespan", "throughput"
+    );
+    for pt in &p.points {
+        println!(
+            "{:<12} {:>14} {:>12} {:>9.2} ms {:>10.2} im/s",
+            pt.strategy.to_string(),
+            if pt.strategy == chainckpt::solver::StrategyKind::Periodic {
+                format!("{} segs", pt.param)
+            } else if pt.param > 0 {
+                fmt_bytes(pt.param)
+            } else {
+                "-".into()
+            },
+            fmt_bytes(pt.peak_bytes),
+            pt.makespan_ms,
+            pt.throughput
+        );
+    }
+    if let Some((gain, seq, opt)) = figures::optimal_vs_sequential(&p) {
+        println!(
+            "optimal vs best sequential: {:.2} vs {:.2} im/s → +{:.1} %",
+            opt,
+            seq,
+            100.0 * gain
+        );
+    }
+    Ok(())
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args.str("artifacts", "artifacts/default");
+    println!("loading artifacts from {dir} …");
+    let rt = Runtime::load(&dir).with_context(|| {
+        format!("loading {dir} (run `make artifacts` first?)")
+    })?;
+    println!(
+        "compiled {} executables for {} stages ({} params)",
+        rt.executable_count(),
+        rt.manifest.stages.len(),
+        rt.manifest.param_count
+    );
+    Ok(rt)
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = EstimatorConfig {
+        reps: args.usize("reps", 5),
+        warmup: args.usize("warmup", 2),
+    };
+    let timings = estimate(&rt, cfg)?;
+    let chain = measured_chain(&rt, cfg)?;
+    print!("{}", format_table(&timings, &chain));
+    println!(
+        "ideal iteration: {:.1} µs; store-all memory: {}",
+        chain.ideal_time(),
+        fmt_bytes(chain.store_all_memory())
+    );
+    Ok(())
+}
+
+fn pick_schedule(args: &Args, chain: &Chain, memory: u64) -> Result<Schedule> {
+    match args.str("strategy", "optimal").as_str() {
+        "optimal" => optimal_schedule(chain, memory)
+            .with_context(|| format!("no optimal schedule fits {}", fmt_bytes(memory))),
+        "revolve" => solve(chain, memory, DEFAULT_SLOTS, Mode::AdRevolve)
+            .with_context(|| format!("no revolve schedule fits {}", fmt_bytes(memory))),
+        "sequential" => Ok(periodic_schedule(chain, args.usize("segments", 4))),
+        "pytorch" => Ok(store_all_schedule(chain)),
+        s => bail!("unknown --strategy {s}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = EstimatorConfig::default();
+    let chain = measured_chain(&rt, cfg)?;
+    let store_all_mem = chain.store_all_memory();
+    let memory = args.u64("memory", store_all_mem / 2);
+    println!(
+        "measured chain: ideal {:.1} µs/iter, store-all {}, budget {}",
+        chain.ideal_time(),
+        fmt_bytes(store_all_mem),
+        fmt_bytes(memory)
+    );
+    let sched = pick_schedule(args, &chain, memory)?;
+    describe(&chain, &sched, Some(memory), "µs")?;
+
+    let steps = args.usize("steps", 100);
+    let lr = args.f64("lr", 0.05) as f32;
+    let n_batches = args.usize("batches", 8);
+    let log_every = args.usize("log-every", 10);
+    let data = SyntheticData::generate(&rt, n_batches, 7)?;
+    let mut trainer = Trainer::new(&rt, sched, lr, Some(memory), 42)?;
+    let logs = trainer.train(&data, steps, log_every, |log| {
+        println!(
+            "step {:>5}  loss {:.6}  {:.1} ms/step  peak {}",
+            log.step,
+            log.loss,
+            log.step_time_s * 1e3,
+            fmt_bytes(log.peak_bytes)
+        );
+    })?;
+    println!(
+        "final loss (mean of last 10): {:.6} (from {:.6})",
+        mean_loss(&logs, 10),
+        logs.first().map(|l| l.loss).unwrap_or(f32::NAN)
+    );
+    if let Some(out) = args.opt_str("out") {
+        let mut f = std::fs::File::create(out)?;
+        writeln!(f, "step,loss,step_time_s,peak_bytes")?;
+        for l in &logs {
+            writeln!(f, "{},{},{},{}", l.step, l.loss, l.step_time_s, l.peak_bytes)?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = EstimatorConfig::default();
+    let chain = measured_chain(&rt, cfg)?;
+    let points = args.usize("points", 6);
+    let reps = args.usize("reps", 3);
+    let batch = rt.manifest.input_shape[0] as u64;
+    let data = SyntheticData::generate(&rt, 2, 7)?;
+    let hi = chain.store_all_memory();
+    let lo = chain.min_memory_hint();
+    let mut rows: Vec<(String, String, u64, f64)> = Vec::new();
+
+    let mut run_measured = |name: String, param: String, sched: &Schedule| -> Result<()> {
+        let mut ex = chainckpt::executor::Executor::new(&rt, 1)?;
+        let loss_stage = rt.manifest.stages.len() - 1;
+        ex.set_data_param(loss_stage, &data.targets[0])?;
+        // warmup + timed medians
+        let mut times = Vec::new();
+        let mut peak = 0;
+        for r in 0..reps + 1 {
+            let res = ex.run(sched, &data.inputs[0], None)?;
+            peak = res.peak_bytes;
+            if r > 0 {
+                times.push(res.elapsed_s);
+            }
+        }
+        let t = chainckpt::util::median(&mut times);
+        println!(
+            "{:<12} {:>12} peak {:>12} {:>8.1} ms/iter {:>8.2} im/s",
+            name,
+            param,
+            fmt_bytes(peak),
+            t * 1e3,
+            batch as f64 / t
+        );
+        rows.push((name, param, peak, batch as f64 / t));
+        Ok(())
+    };
+
+    run_measured("pytorch".into(), "-".into(), &store_all_schedule(&chain))?;
+    for k in paper_segment_sweep(chain.len() - 1).into_iter().take(points) {
+        run_measured("sequential".into(), format!("{k} segs"), &periodic_schedule(&chain, k))?;
+    }
+    for i in 1..=points as u64 {
+        let m = lo + (hi - lo) * i / points as u64;
+        if let Some(s) = solve(&chain, m, DEFAULT_SLOTS, Mode::Full) {
+            run_measured("optimal".into(), fmt_bytes(m), &s)?;
+        }
+        if let Some(s) = solve(&chain, m, DEFAULT_SLOTS, Mode::AdRevolve) {
+            run_measured("revolve".into(), fmt_bytes(m), &s)?;
+        }
+    }
+    if let Some(out) = args.opt_str("out") {
+        let mut f = std::fs::File::create(out)?;
+        writeln!(f, "strategy,param,peak_bytes,throughput_img_s")?;
+        for (n, p, peak, thr) in &rows {
+            writeln!(f, "{n},{p},{peak},{thr}")?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let out_dir = PathBuf::from(args.str("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let which = args.str("fig", "all");
+    let figs: Vec<u32> = if which == "all" || which == FLAG_SET {
+        (3..=13).collect()
+    } else {
+        vec![which.parse().context("--fig must be 3..13 or 'all'")?]
+    };
+    let mut all_panels = Vec::new();
+    for f in figs {
+        let t0 = std::time::Instant::now();
+        let panels = figures::figure(f);
+        let path = out_dir.join(format!("figure{f}.csv"));
+        std::fs::write(&path, figures::to_csv(&panels))?;
+        let gain = figures::summary_gain(&panels);
+        println!(
+            "figure {f}: {} panels → {} ({:.1} s){}",
+            panels.len(),
+            path.display(),
+            t0.elapsed().as_secs_f64(),
+            gain.map(|g| format!("  avg optimal-vs-sequential gain: +{:.1} %", 100.0 * g))
+                .unwrap_or_default()
+        );
+        all_panels.extend(panels);
+    }
+    if let Some(g) = figures::summary_gain(&all_panels) {
+        println!(
+            "SUMMARY over {} panels: optimal beats best sequential by {:.1} % on average (paper: 17.2 %)",
+            all_panels.len(),
+            100.0 * g
+        );
+        let path = out_dir.join("summary.csv");
+        let mut s = String::from("chain,batch,gain_pct,seq_img_s,opt_img_s\n");
+        for p in &all_panels {
+            if let Some((gain, seq, opt)) = figures::optimal_vs_sequential(p) {
+                s.push_str(&format!(
+                    "{},{},{:.2},{:.3},{:.3}\n",
+                    p.chain_name,
+                    p.batch,
+                    100.0 * gain,
+                    seq,
+                    opt
+                ));
+            }
+        }
+        std::fs::write(&path, s)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "solve" => cmd_solve(&args),
+        "simulate" => cmd_simulate(&args),
+        "estimate" => cmd_estimate(&args),
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "figures" => cmd_figures(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

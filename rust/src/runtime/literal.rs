@@ -1,0 +1,32 @@
+//! Small [`xla::Literal`] helpers: shaped f32 construction / extraction.
+
+use anyhow::{ensure, Context, Result};
+use xla::Literal;
+
+/// Build an f32 literal of the given shape from a flat vector
+/// (row-major, matching jax's default layout).
+pub fn lit_from_vec(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    ensure!(data.len() == n, "shape {:?} needs {} elems, got {}", shape, n, data.len());
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Literal::vec1(data).reshape(&dims).context("reshaping literal")
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Zero-filled f32 literal of the given shape.
+pub fn lit_zeros(shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    lit_from_vec(&vec![0.0; n], shape)
+}
+
+/// Extract a literal's contents as a flat f32 vector.
+pub fn lit_to_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("extracting f32 data")
+}

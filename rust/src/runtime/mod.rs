@@ -1,0 +1,108 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//!
+//! One [`Runtime`] owns the PJRT CPU client plus one compiled executable
+//! per `(signature, entry)` pair. Signatures are shared between same-shape
+//! stages (the manifest deduplicates), so compilation cost is paid once
+//! per distinct shape — the paper's "computed once before training" phase.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids. See python/compile/aot.py.
+
+mod literal;
+
+pub use literal::{lit_from_vec, lit_scalar, lit_to_vec, lit_zeros};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::chain::manifest::Manifest;
+
+/// Entry points every stage signature exposes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Entry {
+    /// `(θ…, a_in) → (a_out,)` — used by both `F∅` and `Fck`.
+    Fwd,
+    /// `(θ…, a_in) → (a_out, ā-extras…)` — `Fall`.
+    FwdAll,
+    /// `(θ…, a_in, ā…, δ_out) → (δ_in, ∂θ…)` — `B`.
+    Bwd,
+}
+
+impl Entry {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Entry::Fwd => "fwd",
+            Entry::FwdAll => "fwd_all",
+            Entry::Bwd => "bwd",
+        }
+    }
+}
+
+/// Compiled artifact registry bound to a PJRT client.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<(String, Entry), PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load a manifest directory, compiling every `(signature, entry)`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        Self::from_manifest(manifest)
+    }
+
+    pub fn from_manifest(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for sig in manifest.signatures.keys() {
+            for entry in [Entry::Fwd, Entry::FwdAll, Entry::Bwd] {
+                let path = manifest.hlo_path(sig, entry.name());
+                let proto = HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {sig}/{}", entry.name()))?;
+                exes.insert((sig.clone(), entry), exe);
+            }
+        }
+        Ok(Runtime { client, manifest, exes })
+    }
+
+    pub fn executable(&self, sig: &str, entry: Entry) -> &PjRtLoadedExecutable {
+        &self.exes[&(sig.to_string(), entry)]
+    }
+
+    /// Execute one entry point. `args` in manifest order; the tuple output
+    /// is decomposed into positional [`Literal`]s.
+    pub fn execute(&self, sig: &str, entry: Entry, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .exes
+            .get(&(sig.to_string(), entry))
+            .with_context(|| format!("unknown executable {sig}/{}", entry.name()))?;
+        let outs = exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {sig}/{}", entry.name()))?;
+        let mut result = outs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {sig}/{}", entry.name()))?;
+        // aot.py lowers with return_tuple=True: always a tuple root.
+        let parts = result.decompose_tuple().context("decomposing result tuple")?;
+        Ok(parts)
+    }
+
+    /// Number of compiled executables (3 × distinct signatures).
+    pub fn executable_count(&self) -> usize {
+        self.exes.len()
+    }
+
+    /// Signature name of stage `stage_index` (0-based).
+    pub fn stage_sig(&self, stage_index: usize) -> &str {
+        &self.manifest.stages[stage_index].sig
+    }
+}

@@ -1,0 +1,236 @@
+//! Byte-accurate memory state for Table 1 semantics.
+//!
+//! Tracks which items — `a^ℓ`, `ā^ℓ`, `δ^ℓ` — are resident, the current
+//! byte total and the running peak. The paper's convention `ā^ℓ ⊇ a^ℓ`
+//! is honored: `a^ℓ` is *readable* whenever either the standalone tensor
+//! or the full checkpoint is stored, and consuming ops only free the
+//! standalone copy (a taped `ā^{ℓ-1}` survives until its own `B^{ℓ-1}`).
+
+use crate::chain::Chain;
+
+/// Why a sequence is invalid at some operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// An op needed `a^ℓ` (readable) and it was absent.
+    MissingActivation { op_index: usize, l: u32 },
+    /// `B^ℓ` needed `δ^ℓ` or `ā^ℓ` and it was absent.
+    MissingBackwardInput { op_index: usize, l: u32, what: &'static str },
+    /// An op produced an item that is already resident (schedules must not
+    /// double-store; this catches solver bugs early).
+    DuplicateStore { op_index: usize, item: String },
+    /// `B^ℓ` executed more than once.
+    DuplicateBackward { op_index: usize, l: u32 },
+    /// The sequence ended without producing `δ^0`.
+    IncompleteBackward,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::MissingActivation { op_index, l } => {
+                write!(f, "op #{op_index}: a^{l} not resident")
+            }
+            SimError::MissingBackwardInput { op_index, l, what } => {
+                write!(f, "op #{op_index}: B^{l} missing {what}")
+            }
+            SimError::DuplicateStore { op_index, item } => {
+                write!(f, "op #{op_index}: {item} already resident")
+            }
+            SimError::DuplicateBackward { op_index, l } => {
+                write!(f, "op #{op_index}: B^{l} executed twice")
+            }
+            SimError::IncompleteBackward => write!(f, "sequence ended without δ^0"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Resident-set tracker. Indices: `a`/`delta` over `0..=L+1`, `abar` over
+/// `1..=L+1` (stored at `l-1`).
+#[derive(Debug, Clone)]
+pub struct MemState {
+    a: Vec<bool>,
+    abar: Vec<bool>,
+    delta: Vec<bool>,
+    wa: Vec<u64>,
+    wd: Vec<u64>,
+    wabar: Vec<u64>,
+    pub current: u64,
+    pub peak: u64,
+}
+
+impl MemState {
+    /// Initial state of a full iteration: `{a^0, δ^{L+1}}` resident
+    /// (the DP's outer call assumes both stored; `δ^{L+1}` is the scalar
+    /// seed of the loss backward).
+    pub fn initial(chain: &Chain) -> Self {
+        let n = chain.len();
+        let wa: Vec<u64> = (0..=n).map(|l| chain.wa(l)).collect();
+        let wd: Vec<u64> = (0..=n).map(|l| chain.wdelta(l)).collect();
+        let wabar: Vec<u64> = (1..=n).map(|l| chain.wabar(l)).collect();
+        let mut st = MemState {
+            a: vec![false; n + 1],
+            abar: vec![false; n],
+            delta: vec![false; n + 1],
+            wa,
+            wd,
+            wabar,
+            current: 0,
+            peak: 0,
+        };
+        st.a[0] = true;
+        st.delta[n] = true;
+        st.current = st.wa[0] + st.wd[n]; // input + δ^{L+1} seed
+        st.peak = st.current;
+        st
+    }
+
+    pub fn n(&self) -> usize {
+        self.abar.len()
+    }
+
+    /// `a^ℓ` readable: standalone or inside `ā^ℓ`.
+    pub fn a_readable(&self, l: usize) -> bool {
+        self.a[l] || (l >= 1 && self.abar[l - 1])
+    }
+
+    pub fn has_a(&self, l: usize) -> bool {
+        self.a[l]
+    }
+
+    pub fn has_abar(&self, l: usize) -> bool {
+        self.abar[l - 1]
+    }
+
+    pub fn has_delta(&self, l: usize) -> bool {
+        self.delta[l]
+    }
+
+    /// Record a transient high-water mark: `current + extra` bytes live
+    /// during an op (inputs + freshly allocated outputs + overhead).
+    pub fn touch_peak(&mut self, extra: u64) {
+        self.peak = self.peak.max(self.current + extra);
+    }
+
+    pub fn store_a(&mut self, l: usize) -> Result<(), String> {
+        if self.a[l] {
+            return Err(format!("a^{l}"));
+        }
+        self.a[l] = true;
+        self.current += self.wa[l];
+        self.peak = self.peak.max(self.current);
+        Ok(())
+    }
+
+    pub fn store_abar(&mut self, l: usize) -> Result<(), String> {
+        if self.abar[l - 1] {
+            return Err(format!("ā^{l}"));
+        }
+        self.abar[l - 1] = true;
+        self.current += self.wabar[l - 1];
+        self.peak = self.peak.max(self.current);
+        Ok(())
+    }
+
+    pub fn store_delta(&mut self, l: usize) -> Result<(), String> {
+        if self.delta[l] {
+            return Err(format!("δ^{l}"));
+        }
+        self.delta[l] = true;
+        self.current += self.wd[l];
+        self.peak = self.peak.max(self.current);
+        Ok(())
+    }
+
+    /// Free the standalone `a^ℓ` if (and only if) it is resident — taped
+    /// copies inside `ā^ℓ` are not touched.
+    pub fn free_a_if_standalone(&mut self, l: usize) {
+        if self.a[l] {
+            self.a[l] = false;
+            self.current -= self.wa[l];
+        }
+    }
+
+    pub fn free_abar(&mut self, l: usize) {
+        debug_assert!(self.abar[l - 1]);
+        self.abar[l - 1] = false;
+        self.current -= self.wabar[l - 1];
+    }
+
+    pub fn free_delta(&mut self, l: usize) {
+        debug_assert!(self.delta[l]);
+        self.delta[l] = false;
+        self.current -= self.wd[l];
+    }
+
+    /// Resident items, for diagnostics.
+    pub fn resident(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (l, &p) in self.a.iter().enumerate() {
+            if p {
+                out.push(format!("a^{l}"));
+            }
+        }
+        for (i, &p) in self.abar.iter().enumerate() {
+            if p {
+                out.push(format!("ā^{}", i + 1));
+            }
+        }
+        for (l, &p) in self.delta.iter().enumerate() {
+            if p {
+                out.push(format!("δ^{l}"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+
+    fn chain() -> Chain {
+        Chain::new(
+            "t",
+            vec![Stage::new("s1", 1.0, 1.0, 10, 25), Stage::new("loss", 1.0, 1.0, 4, 4)],
+            8,
+        )
+    }
+
+    #[test]
+    fn initial_holds_input_and_seed() {
+        let st = MemState::initial(&chain());
+        assert!(st.a_readable(0));
+        assert!(st.has_delta(2));
+        assert_eq!(st.current, 8 + 4);
+    }
+
+    #[test]
+    fn abar_makes_a_readable() {
+        let mut st = MemState::initial(&chain());
+        st.store_abar(1).unwrap();
+        assert!(st.a_readable(1));
+        assert!(!st.has_a(1));
+        st.free_a_if_standalone(1); // no-op: only the taped copy exists
+        assert!(st.a_readable(1));
+        assert_eq!(st.current, 12 + 25);
+    }
+
+    #[test]
+    fn duplicate_store_rejected() {
+        let mut st = MemState::initial(&chain());
+        st.store_a(1).unwrap();
+        assert!(st.store_a(1).is_err());
+    }
+
+    #[test]
+    fn peak_tracks_transients() {
+        let mut st = MemState::initial(&chain());
+        let base = st.current;
+        st.touch_peak(100);
+        assert_eq!(st.peak, base + 100);
+        assert_eq!(st.current, base);
+    }
+}

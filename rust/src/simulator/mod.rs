@@ -1,0 +1,259 @@
+//! Discrete replay of a [`Schedule`] against a [`Chain`]: validity,
+//! byte-accurate peak memory, makespan (§3.1's definitions, verbatim).
+//!
+//! This module is the ground truth of the whole crate: every solver's
+//! output is replayed here (property tests), and the figure harness uses
+//! the reported `(peak, makespan)` pairs as the paper's plot coordinates.
+//! The executor mirrors these exact semantics against real PJRT buffers.
+
+mod memory;
+
+pub use memory::{MemState, SimError};
+
+use crate::chain::Chain;
+use crate::solver::{Op, Schedule};
+
+/// Outcome of a valid replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimReport {
+    /// Σ op durations (same unit as the chain's `u_f`/`u_b`).
+    pub makespan: f64,
+    /// Highest number of bytes simultaneously live (incl. transients).
+    pub peak_bytes: u64,
+    /// Total operations executed.
+    pub ops: usize,
+    /// Forward ops beyond the minimum `L+1` (recompute overhead).
+    pub recomputed_forwards: usize,
+}
+
+impl SimReport {
+    /// Throughput in items per time-unit for a given batch size.
+    pub fn throughput(&self, batch: u64) -> f64 {
+        batch as f64 / self.makespan
+    }
+}
+
+/// Replay `schedule` over `chain` from `{a^0, δ^{L+1}}`; checks every
+/// Table 1 precondition and that the sequence computes `δ^0` with each
+/// `B^ℓ` exactly once.
+pub fn simulate(chain: &Chain, schedule: &Schedule) -> Result<SimReport, SimError> {
+    let n = chain.len();
+    let mut st = MemState::initial(chain);
+    let mut makespan = 0.0f64;
+    let mut bwd_done = vec![false; n + 1];
+    let mut fwd_ops = 0usize;
+
+    for (i, &op) in schedule.ops.iter().enumerate() {
+        match op {
+            Op::FwdNoSave(l) => {
+                let l = l as usize;
+                if !st.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
+                }
+                // inputs + new output + transient overhead live together
+                st.touch_peak(chain.wa(l) + chain.of(l));
+                st.store_a(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                st.free_a_if_standalone(l - 1); // F∅ replaces its input
+                makespan += chain.uf(l);
+                fwd_ops += 1;
+            }
+            Op::FwdCk(l) => {
+                let l = l as usize;
+                if !st.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
+                }
+                st.touch_peak(chain.wa(l) + chain.of(l));
+                st.store_a(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                makespan += chain.uf(l);
+                fwd_ops += 1;
+            }
+            Op::FwdAll(l) => {
+                let l = l as usize;
+                if !st.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
+                }
+                st.touch_peak(chain.wabar(l) + chain.of(l));
+                st.store_abar(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                makespan += chain.uf(l);
+                fwd_ops += 1;
+            }
+            Op::Bwd(l) => {
+                let l = l as usize;
+                if bwd_done[l] {
+                    return Err(SimError::DuplicateBackward { op_index: i, l: l as u32 });
+                }
+                if !st.has_delta(l) {
+                    return Err(SimError::MissingBackwardInput {
+                        op_index: i,
+                        l: l as u32,
+                        what: "δ",
+                    });
+                }
+                if !st.has_abar(l) {
+                    return Err(SimError::MissingBackwardInput {
+                        op_index: i,
+                        l: l as u32,
+                        what: "ā",
+                    });
+                }
+                if !st.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
+                }
+                // Paper's Table 1 accounting: the output δ^{ℓ-1} *replaces*
+                // a^{ℓ-1} (ω_δ = ω_a) rather than transiently coexisting —
+                // this matches m_all's backward term ω_δ^s + ω_ā^s + o_b^s.
+                st.touch_peak(chain.ob(l));
+                st.free_delta(l);
+                st.free_abar(l);
+                st.free_a_if_standalone(l - 1);
+                st.store_delta(l - 1)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                bwd_done[l] = true;
+                makespan += chain.ub(l);
+            }
+            Op::DropA(l) => {
+                let l = l as usize;
+                if !st.has_a(l) {
+                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 });
+                }
+                st.free_a_if_standalone(l);
+            }
+        }
+    }
+
+    if !st.has_delta(0) || !bwd_done[1..=n].iter().all(|&b| b) {
+        return Err(SimError::IncompleteBackward);
+    }
+
+    Ok(SimReport {
+        makespan,
+        peak_bytes: st.peak,
+        ops: schedule.ops.len(),
+        recomputed_forwards: fwd_ops.saturating_sub(n),
+    })
+}
+
+/// Convenience: simulate and also check a byte budget.
+pub fn simulate_within(chain: &Chain, schedule: &Schedule, memory: u64) -> Option<SimReport> {
+    simulate(chain, schedule).ok().filter(|r| r.peak_bytes <= memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::solver::{store_all_schedule, Schedule, StrategyKind};
+
+    fn toy() -> Chain {
+        Chain::new(
+            "toy",
+            vec![
+                Stage::new("s1", 1.0, 2.0, 100, 250),
+                Stage::new("s2", 3.0, 4.0, 50, 120),
+                Stage::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            80,
+        )
+    }
+
+    #[test]
+    fn store_all_replays_clean() {
+        let c = toy();
+        let r = simulate(&c, &store_all_schedule(&c)).unwrap();
+        assert_eq!(r.makespan, c.ideal_time());
+        assert_eq!(r.recomputed_forwards, 0);
+        // peak ≥ input + all ā + δ seed
+        assert!(r.peak_bytes >= 80 + 250 + 120 + 4 + 4);
+    }
+
+    #[test]
+    fn paper_example_sequence_is_valid() {
+        // §3.1's example for L=4:
+        // Fck^1 F∅^2 Fck^3 Fall^4 Fall^5 B^5 B^4 Fall^3 B^3 Fall^1 Fall^2 B^2 B^1
+        let stages: Vec<Stage> =
+            (1..=5).map(|i| Stage::new(format!("s{i}"), 1.0, 1.0, 10, 20)).collect();
+        let c = Chain::new("l4", stages, 10);
+        let ops = vec![
+            Op::FwdCk(1),
+            Op::FwdNoSave(2),
+            Op::FwdCk(3),
+            Op::FwdAll(4),
+            Op::FwdAll(5),
+            Op::Bwd(5),
+            Op::Bwd(4),
+            Op::FwdAll(3),
+            Op::Bwd(3),
+            Op::FwdAll(1),
+            Op::FwdAll(2),
+            Op::Bwd(2),
+            Op::Bwd(1),
+        ];
+        let s = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        let r = simulate(&c, &s).unwrap();
+        assert_eq!(r.recomputed_forwards, 3); // F1, F2, F3 run twice... minus?
+        assert_eq!(r.ops, 13);
+    }
+
+    #[test]
+    fn missing_activation_detected() {
+        let c = toy();
+        let s = Schedule::new(vec![Op::FwdNoSave(2)], StrategyKind::Optimal, 0.0);
+        assert!(matches!(
+            simulate(&c, &s),
+            Err(SimError::MissingActivation { op_index: 0, l: 1 })
+        ));
+    }
+
+    #[test]
+    fn backward_without_tape_detected() {
+        let c = toy();
+        let s = Schedule::new(
+            vec![Op::FwdCk(1), Op::FwdCk(2), Op::FwdCk(3), Op::Bwd(3)],
+            StrategyKind::Optimal,
+            0.0,
+        );
+        assert!(matches!(
+            simulate(&c, &s),
+            Err(SimError::MissingBackwardInput { what: "ā", .. })
+        ));
+    }
+
+    #[test]
+    fn incomplete_backward_detected() {
+        let c = toy();
+        let s = Schedule::new(
+            vec![Op::FwdAll(1), Op::FwdAll(2), Op::FwdAll(3), Op::Bwd(3)],
+            StrategyKind::Optimal,
+            0.0,
+        );
+        assert_eq!(simulate(&c, &s), Err(SimError::IncompleteBackward));
+    }
+
+    #[test]
+    fn fwd_nosave_frees_input() {
+        // After F∅^1 the input a^0 must be gone: peak of a long F∅ sweep
+        // stays bounded by two consecutive activations.
+        let stages: Vec<Stage> =
+            (1..=5).map(|i| Stage::new(format!("s{i}"), 1.0, 1.0, 10, 10)).collect();
+        let c = Chain::new("sweep", stages, 10);
+        let mut ops: Vec<Op> = (1..=5).map(|l| Op::FwdNoSave(l)).collect();
+        // make it a full (invalid-at-end) sequence? No — check peak only.
+        ops.truncate(5);
+        let s = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        // IncompleteBackward expected, but peak can still be reasoned about
+        // via a manual state walk:
+        let mut st = MemState::initial(&c);
+        for l in 1..=5usize {
+            st.touch_peak(c.wa(l) + c.of(l));
+            st.store_a(l).unwrap();
+            st.free_a_if_standalone(l - 1);
+        }
+        // resident: a^5 + δ^5 seed; peak: 2 activations + seed
+        assert_eq!(st.current, 10 + 10);
+        assert_eq!(st.peak, 10 + 10 + 10);
+        let _ = s;
+    }
+}

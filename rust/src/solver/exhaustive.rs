@@ -1,0 +1,224 @@
+//! Exhaustive schedule search (Dijkstra over memory states) for *small*
+//! chains — the test oracle for the DP.
+//!
+//! Explores every valid operation sequence of the Table 1 model, including
+//! **non-persistent** ones (early drops of checkpointed values), so it
+//! computes the true optimum the paper's §4.1 shows persistent schedules
+//! cannot always reach. Exponential in chain length; intended for chains
+//! of ≤ ~8 stages inside tests.
+//!
+//! State: which `a^ℓ` / `ā^ℓ` are resident plus the current `δ` position
+//! (every valid sequence holds exactly one `δ` at a time: `B^ℓ` turns
+//! `δ^ℓ` into `δ^{ℓ-1}`). Costs are op durations; memory feasibility is
+//! checked per transition with the simulator's accounting (forwards hold
+//! input+output, backwards swap `δ^{ℓ-1}` in place of `a^{ℓ-1}`).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::chain::Chain;
+
+const MAX_STAGES: usize = 12;
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, PartialOrd, Ord)]
+struct State {
+    a: u16,    // bit l → a^l resident, l ∈ 0..=n
+    abar: u16, // bit (l-1) → ā^l resident, l ∈ 1..=n
+    delta: u8, // current δ position, n..=0
+}
+
+struct Search<'c> {
+    chain: &'c Chain,
+    n: usize,
+    memory: u64,
+}
+
+impl<'c> Search<'c> {
+    fn mem_of(&self, st: &State) -> u64 {
+        let mut m = 0;
+        for l in 0..=self.n {
+            if st.a >> l & 1 == 1 {
+                m += self.chain.wa(l);
+            }
+        }
+        for l in 1..=self.n {
+            if st.abar >> (l - 1) & 1 == 1 {
+                m += self.chain.wabar(l);
+            }
+        }
+        m + self.chain.wdelta(st.delta as usize)
+    }
+
+    fn a_readable(&self, st: &State, l: usize) -> bool {
+        (st.a >> l & 1 == 1) || (l >= 1 && st.abar >> (l - 1) & 1 == 1)
+    }
+
+    /// Enumerate `(next_state, op_cost)` for all valid ops, respecting the
+    /// memory limit (both the during-op peak and the resulting state).
+    fn successors(&self, st: &State, cur_mem: u64, out: &mut Vec<(State, f64)>) {
+        out.clear();
+        let n = self.n;
+        for l in 1..=n {
+            let has_a = st.a >> l & 1 == 1;
+            let has_abar = st.abar >> (l - 1) & 1 == 1;
+            let input_standalone = st.a >> (l - 1) & 1 == 1;
+            if self.a_readable(st, l - 1) {
+                // forwards: input + output live together + overhead
+                let peak = cur_mem + self.chain.wa(l) + self.chain.of(l);
+                if !has_a && !has_abar && peak <= self.memory {
+                    // Fck^l (keep input)
+                    let mut s = *st;
+                    s.a |= 1 << l;
+                    out.push((s, self.chain.uf(l)));
+                    // F∅^l (consume standalone input) — differs only if
+                    // the input was standalone
+                    if input_standalone {
+                        let mut s2 = s;
+                        s2.a &= !(1 << (l - 1));
+                        out.push((s2, self.chain.uf(l)));
+                    }
+                }
+                let peak_all = cur_mem + self.chain.wabar(l) + self.chain.of(l);
+                if !has_abar && !has_a && peak_all <= self.memory {
+                    // Fall^l
+                    let mut s = *st;
+                    s.abar |= 1 << (l - 1);
+                    out.push((s, self.chain.uf(l)));
+                }
+            }
+            // B^l
+            if st.delta as usize == l && has_abar && self.a_readable(st, l - 1) {
+                let peak = cur_mem + self.chain.ob(l);
+                if peak <= self.memory {
+                    let mut s = *st;
+                    s.delta = (l - 1) as u8;
+                    s.abar &= !(1 << (l - 1));
+                    s.a &= !(1 << (l - 1)); // δ^{l-1} replaces a^{l-1}
+                    out.push((s, self.chain.ub(l)));
+                }
+            }
+            // free drops (non-persistent moves)
+            if has_a {
+                let mut s = *st;
+                s.a &= !(1 << l);
+                out.push((s, 0.0));
+            }
+            if has_abar {
+                let mut s = *st;
+                s.abar &= !(1 << (l - 1));
+                out.push((s, 0.0));
+            }
+        }
+    }
+}
+
+/// True optimal cost over **all** valid schedules (persistent or not), or
+/// `None` if no schedule fits in `memory`. Panics on chains longer than
+/// [`MAX_STAGES`] (state space is exponential).
+pub fn exhaustive_optimal(chain: &Chain, memory: u64) -> Option<f64> {
+    let n = chain.len();
+    assert!(n <= MAX_STAGES, "exhaustive search is for tiny chains (≤ {MAX_STAGES})");
+    let search = Search { chain, n, memory };
+
+    let start = State { a: 1, abar: 0, delta: n as u8 };
+    if search.mem_of(&start) > memory {
+        return None;
+    }
+    let mut dist: HashMap<State, f64> = HashMap::new();
+    let mut heap: BinaryHeap<(Reverse<u64>, State)> = BinaryHeap::new();
+    // f64 keys in the heap via total-order bits (costs are non-negative)
+    let key = |c: f64| Reverse(c.to_bits());
+    dist.insert(start, 0.0);
+    heap.push((key(0.0), start));
+    let mut succ = Vec::new();
+
+    while let Some((Reverse(bits), st)) = heap.pop() {
+        let d = f64::from_bits(bits);
+        if st.delta == 0 {
+            return Some(d);
+        }
+        if dist.get(&st).is_some_and(|&best| d > best) {
+            continue;
+        }
+        let cur_mem = search.mem_of(&st);
+        search.successors(&st, cur_mem, &mut succ);
+        let moves = std::mem::take(&mut succ);
+        for &(ns, cost) in &moves {
+            let nd = d + cost;
+            if dist.get(&ns).is_none_or(|&best| nd < best) {
+                dist.insert(ns, nd);
+                heap.push((key(nd), ns));
+            }
+        }
+        succ = moves;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::solver::{solve, Mode};
+
+    fn tiny(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), i as f64, 2.0 * i as f64, 8 * i as u64, 12 * i as u64))
+            .collect();
+        stages.push(Stage::new("loss", 0.5, 0.5, 4, 4));
+        Chain::new("tiny", stages, 8)
+    }
+
+    #[test]
+    fn matches_ideal_with_plentiful_memory() {
+        let c = tiny(4);
+        let m = 10 * (c.store_all_memory() + c.wa0);
+        assert_eq!(exhaustive_optimal(&c, m), Some(c.ideal_time()));
+    }
+
+    #[test]
+    fn infeasible_when_starved() {
+        let c = tiny(4);
+        assert_eq!(exhaustive_optimal(&c, 8), None);
+    }
+
+    #[test]
+    fn never_worse_than_the_persistent_dp() {
+        // the exhaustive optimum ranges over a superset of schedules
+        for seed in 0..12u64 {
+            let mut rng = crate::util::Rng::new(seed);
+            let n = 2 + rng.below(3) as usize;
+            let mut stages: Vec<Stage> = (0..n)
+                .map(|i| {
+                    let wa = 4 * (1 + rng.below(8));
+                    let ratio = 1 + rng.below(3);
+                    Stage::new(
+                        format!("s{i}"),
+                        1.0 + rng.below(9) as f64,
+                        1.0 + rng.below(9) as f64,
+                        wa,
+                        wa * ratio,
+                    )
+                })
+                .collect();
+            stages.push(Stage::new("loss", 0.5, 0.5, 4, 4));
+            let c = Chain::new("rnd", stages, 4 * (1 + rng.below(8)));
+            let lo = c.min_memory_hint();
+            let hi = c.store_all_memory() + c.wa0;
+            for i in 1..=3u64 {
+                let m = lo + (hi - lo) * i / 3;
+                let exact = exhaustive_optimal(&c, m);
+                // exact discretization: slots = m (1 byte each) is too slow;
+                // use a fine grid and allow the DP the rounding slack
+                let dp = solve(&c, m, 1000, Mode::Full);
+                if let (Some(e), Some(d)) = (exact, dp) {
+                    assert!(
+                        e <= d.predicted_time + 1e-9,
+                        "seed {seed} m={m}: exhaustive {e} > DP {}",
+                        d.predicted_time
+                    );
+                }
+            }
+        }
+    }
+}

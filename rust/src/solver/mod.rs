@@ -1,0 +1,36 @@
+//! Schedule solvers: the paper's optimal persistent DP and the three
+//! comparison strategies of §5.3.
+//!
+//! | strategy     | paper name   | function |
+//! |--------------|--------------|----------|
+//! | store-all    | **PyTorch**  | [`store_all_schedule`] |
+//! | periodic     | **sequential** (`checkpoint_sequential`) | [`periodic_schedule`] |
+//! | AD optimum   | **revolve**  | [`revolve_schedule`] |
+//! | this paper   | **optimal**  | [`optimal_schedule`] |
+
+mod exhaustive;
+mod optimal;
+mod periodic;
+mod sequence;
+mod store_all;
+
+pub use exhaustive::exhaustive_optimal;
+pub use optimal::{solve, solve_table, DpTable, Mode};
+pub use periodic::{paper_segment_sweep, periodic_schedule, segment_bounds};
+pub use sequence::{Op, Schedule, StrategyKind};
+pub use store_all::store_all_schedule;
+
+use crate::chain::{Chain, DEFAULT_SLOTS};
+
+/// The paper's optimal persistent schedule (Theorem 1 / Algorithms 1–2)
+/// for a byte budget `memory`, with the default S=500 discretization.
+pub fn optimal_schedule(chain: &Chain, memory: u64) -> Option<Schedule> {
+    solve(chain, memory, DEFAULT_SLOTS, Mode::Full)
+}
+
+/// The heterogeneous-AD `revolve` baseline ([13], and [14] Appendix C):
+/// checkpoints layer inputs only; tapes each stage immediately before its
+/// backward.
+pub fn revolve_schedule(chain: &Chain, memory: u64) -> Option<Schedule> {
+    solve(chain, memory, DEFAULT_SLOTS, Mode::AdRevolve)
+}

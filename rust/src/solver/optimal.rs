@@ -1,0 +1,423 @@
+//! The paper's optimal persistent dynamic program (§4.2, Theorem 1,
+//! Algorithms 1–2), plus the `revolve` restriction used as a baseline.
+//!
+//! `C_BP(s,t,m)` is the optimal time to back-propagate the sub-chain
+//! `s..=t` with `m` memory slots, given `a^{s-1}` and `δ^t` resident
+//! (`a^{s-1}` charged *outside* `m`). Two ways to start:
+//!
+//! * `Fck^s` then `F∅` up to some `s'`: checkpoint `a^{s-1}`, sweep to
+//!   `a^{s'-1}`, solve `(s',t)` with `m − ω_a^{s'-1}`, then `(s,s'-1)`
+//!   with `m` — the classic AD split, generalized to heterogeneous sizes.
+//! * `Fall^s`: tape stage `s` entirely (`ā^s`), solve `(s+1,t)` with
+//!   `m − ω_ā^s`, then run `B^s` directly. This branch is the paper's new
+//!   operation — unavailable in the AD literature — and is what lets the
+//!   optimal strategy exploit *large* memories.
+//!
+//! [`Mode::AdRevolve`] disables the second branch for `t > s`, which is
+//! exactly the "revolve" comparator of §5.3 (heterogeneous AD optimum,
+//! storing only layer inputs, taping right before each backward).
+
+use super::sequence::{Op, Schedule, StrategyKind};
+use crate::chain::{Chain, DiscreteChain};
+
+/// Decision markers packed into the DP table.
+const DEC_INFEASIBLE: u16 = 0;
+const DEC_ALL: u16 = 1;
+// k >= 2 encodes the checkpoint split s' = s + (k - 1).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Full model of the paper (both branches).
+    Full,
+    /// AD model: `Fall` only immediately before its backward (revolve).
+    AdRevolve,
+}
+
+/// Packed triangular DP table: cost and decision for every `(s, t, m)`.
+pub struct DpTable {
+    n: usize,
+    slots: usize,
+    cost: Vec<f64>,
+    dec: Vec<u16>,
+}
+
+impl DpTable {
+    fn new(n: usize, slots: usize) -> Self {
+        let pairs = n * (n + 1) / 2;
+        DpTable {
+            n,
+            slots,
+            cost: vec![f64::INFINITY; pairs * (slots + 1)],
+            dec: vec![DEC_INFEASIBLE; pairs * (slots + 1)],
+        }
+    }
+
+    /// Triangular pair index for 1-based `s ≤ t`.
+    #[inline]
+    fn pair(&self, s: usize, t: usize) -> usize {
+        debug_assert!(1 <= s && s <= t && t <= self.n);
+        (t - 1) * t / 2 + (s - 1)
+    }
+
+    #[inline]
+    fn idx(&self, s: usize, t: usize, m: u32) -> usize {
+        self.pair(s, t) * (self.slots + 1) + m as usize
+    }
+
+    #[inline]
+    pub fn cost(&self, s: usize, t: usize, m: u32) -> f64 {
+        self.cost[self.idx(s, t, m)]
+    }
+
+    /// Cost row of one `(s, t)` cell: contiguous over the m axis.
+    #[inline]
+    fn row(&self, s: usize, t: usize) -> &[f64] {
+        let base = self.pair(s, t) * (self.slots + 1);
+        &self.cost[base..base + self.slots + 1]
+    }
+
+    /// Write a whole `(s, t)` cell at once (parallel fill writeback).
+    fn write_row(&mut self, s: usize, t: usize, cost: &[f64], dec: &[u16]) {
+        let base = self.pair(s, t) * (self.slots + 1);
+        self.cost[base..base + self.slots + 1].copy_from_slice(cost);
+        self.dec[base..base + self.slots + 1].copy_from_slice(dec);
+    }
+
+    #[inline]
+    fn dec(&self, s: usize, t: usize, m: u32) -> u16 {
+        self.dec[self.idx(s, t, m)]
+    }
+
+    #[inline]
+    fn set(&mut self, s: usize, t: usize, m: u32, cost: f64, dec: u16) {
+        let i = self.idx(s, t, m);
+        self.cost[i] = cost;
+        self.dec[i] = dec;
+    }
+}
+
+/// Full DP solve over a discretized chain. The table covers every
+/// `(s, t, m)`, so one solve supports reconstruction at any budget `≤ M`.
+pub fn solve_table(dc: &DiscreteChain, mode: Mode) -> DpTable {
+    let n = dc.len();
+    let slots = dc.slots;
+    let mut tab = DpTable::new(n, slots);
+
+    // Prefix sums of u_f for O(1) Σ u_f^{s..s'-1}.
+    let mut uf_prefix = vec![0.0f64; n + 1];
+    for l in 1..=n {
+        uf_prefix[l] = uf_prefix[l - 1] + dc.uf_s(l);
+    }
+
+    // Base case (eq. 1): C(s,s,m) = u_f + u_b  iff  m ≥ m_all^{s,s}.
+    for s in 1..=n {
+        let need = m_all(dc, s, s);
+        let cost = dc.uf_s(s) + dc.ub_s(s);
+        for m in 0..=slots as u32 {
+            if m >= need {
+                tab.set(s, s, m, cost, DEC_ALL);
+            }
+        }
+    }
+
+    // General case by increasing sub-chain length d = t - s (eq. 2).
+    // Cells on one diagonal depend only on strictly shorter sub-chains,
+    // so each diagonal is filled in parallel (scoped threads; no rayon in
+    // the offline build) and written back serially. The per-cell kernel
+    // iterates m *innermost over contiguous rows* — the dominant loop is
+    // two streaming adds + a compare over slot-indexed slices.
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    for d in 1..n {
+        let cells: Vec<usize> = ((d + 1)..=n).collect(); // t values; s = t - d
+        let results: Vec<(usize, Vec<f64>, Vec<u16>)> = if cells.len() < 2 || workers < 2 {
+            cells
+                .iter()
+                .map(|&t| {
+                    let (c, dec) = fill_cell(&tab, dc, &uf_prefix, t - d, t, mode);
+                    (t, c, dec)
+                })
+                .collect()
+        } else {
+            let chunk = cells.len().div_ceil(workers);
+            std::thread::scope(|scope| {
+                let tab_ref = &tab;
+                let uf_ref = &uf_prefix;
+                let handles: Vec<_> = cells
+                    .chunks(chunk)
+                    .map(|part| {
+                        scope.spawn(move || {
+                            part.iter()
+                                .map(|&t| {
+                                    let (c, dec) =
+                                        fill_cell(tab_ref, dc, uf_ref, t - d, t, mode);
+                                    (t, c, dec)
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            })
+        };
+        for (t, cost, dec) in results {
+            tab.write_row(t - d, t, &cost, &dec);
+        }
+    }
+    tab
+}
+
+/// Fill one `(s, t)` cell across the whole m axis (eq. 2).
+///
+/// Infinity propagates through the adds, so no explicit feasibility
+/// branches are needed in the inner loops: `∞ < best` is always false.
+fn fill_cell(
+    tab: &DpTable,
+    dc: &DiscreteChain,
+    uf_prefix: &[f64],
+    s: usize,
+    t: usize,
+    mode: Mode,
+) -> (Vec<f64>, Vec<u16>) {
+    let slots = dc.slots;
+    let mut best = vec![f64::INFINITY; slots + 1];
+    let mut dec = vec![DEC_INFEASIBLE; slots + 1];
+
+    // C1: Fck^s, F∅^{s+1..s'-1}, recurse (s',t) with m−ω_a^{s'-1} and
+    // (s,s'-1) with m.
+    let m_nosave = m_empty(dc, s, t) as usize;
+    for sp in (s + 1)..=t {
+        let hold = dc.wa_s(sp - 1) as usize; // a^{s'-1} stays resident
+        let pre = uf_prefix[sp - 1] - uf_prefix[s - 1];
+        let left = tab.row(s, sp - 1);
+        let right = tab.row(sp, t);
+        let code = (sp - s + 1) as u16;
+        let start = m_nosave.max(hold);
+        if start > slots {
+            continue;
+        }
+        for m in start..=slots {
+            let c = pre + right[m - hold] + left[m];
+            if c < best[m] {
+                best[m] = c;
+                dec[m] = code;
+            }
+        }
+    }
+
+    // C2: Fall^s, recurse (s+1,t) with m−ω_ā^s, B^s. (Absent in AD mode.)
+    if mode == Mode::Full {
+        let m_all_st = m_all(dc, s, t) as usize;
+        let habar = dc.wabar_s(s) as usize;
+        let fixed = dc.uf_s(s) + dc.ub_s(s);
+        let mid = tab.row(s + 1, t);
+        let start = m_all_st.max(habar);
+        if start <= slots {
+            for m in start..=slots {
+                let c = fixed + mid[m - habar];
+                if c < best[m] {
+                    best[m] = c;
+                    dec[m] = DEC_ALL;
+                }
+            }
+        }
+    }
+    (best, dec)
+}
+
+/// `m∅^{s,t}`: slots needed to sweep `F∅` from `s` to just before `t`
+/// with `δ^t` resident (paper §4.2).
+fn m_empty(dc: &DiscreteChain, s: usize, t: usize) -> u32 {
+    let wd_t = dc.wd_s(t);
+    let mut peak = wd_t + dc.wa_s(s) + dc.of_s(s);
+    for j in (s + 1)..t {
+        peak = peak.max(wd_t + dc.wa_s(j - 1) + dc.wa_s(j) + dc.of_s(j));
+    }
+    peak
+}
+
+/// `m_all^{s,t}`: slots needed to run `Fall^s` (with `δ^t` resident) and
+/// later `B^s` (with `δ^s` resident).
+fn m_all(dc: &DiscreteChain, s: usize, t: usize) -> u32 {
+    let fwd = dc.wd_s(t) + dc.wabar_s(s) + dc.of_s(s);
+    let bwd = dc.wd_s(s) + dc.wabar_s(s) + dc.ob_s(s);
+    fwd.max(bwd)
+}
+
+/// Algorithm 2: reconstruct the optimal sequence from the table.
+fn reconstruct(tab: &DpTable, dc: &DiscreteChain, s: usize, t: usize, m: u32, ops: &mut Vec<Op>) {
+    match tab.dec(s, t, m) {
+        DEC_INFEASIBLE => unreachable!("reconstruct called on infeasible cell"),
+        DEC_ALL if s == t => {
+            ops.push(Op::FwdAll(s as u32));
+            ops.push(Op::Bwd(s as u32));
+        }
+        DEC_ALL => {
+            ops.push(Op::FwdAll(s as u32));
+            reconstruct(tab, dc, s + 1, t, m - dc.wabar_s(s), ops);
+            ops.push(Op::Bwd(s as u32));
+        }
+        k => {
+            let sp = s + (k as usize - 1);
+            ops.push(Op::FwdCk(s as u32));
+            for j in (s + 1)..sp {
+                ops.push(Op::FwdNoSave(j as u32));
+            }
+            reconstruct(tab, dc, sp, t, m - dc.wa_s(sp - 1), ops);
+            reconstruct(tab, dc, s, sp - 1, m, ops);
+        }
+    }
+}
+
+/// One full solve: discretize, fill the table, reconstruct at the top
+/// budget `M − ω_a^0`. Returns `None` when no persistent schedule fits.
+pub fn solve(chain: &Chain, memory: u64, slots: usize, mode: Mode) -> Option<Schedule> {
+    let dc = DiscreteChain::new(chain, memory, slots);
+    let m0 = dc.top_budget()?;
+    let tab = solve_table(&dc, mode);
+    let n = dc.len();
+    let cost = tab.cost(1, n, m0);
+    if !cost.is_finite() {
+        return None;
+    }
+    let mut ops = Vec::new();
+    reconstruct(&tab, &dc, 1, n, m0, &mut ops);
+    let strategy = match mode {
+        Mode::Full => StrategyKind::Optimal,
+        Mode::AdRevolve => StrategyKind::Revolve,
+    };
+    Some(Schedule::new(ops, strategy, cost))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::{Stage, DEFAULT_SLOTS};
+
+    fn toy(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        Chain::new("toy", stages, 100)
+    }
+
+    #[test]
+    fn unlimited_memory_is_store_all_time() {
+        let c = toy(6);
+        let s = solve(&c, 1 << 30, DEFAULT_SLOTS, Mode::Full).unwrap();
+        assert!((s.predicted_time - c.ideal_time()).abs() < 1e-9);
+        // With memory to spare the optimal schedule tapes everything:
+        // no recomputation at all.
+        assert_eq!(s.recomputation_ops(c.len()), 0);
+        // And it is exactly Fall^1.. Fall^{L+1} B^{L+1}.. B^1.
+        let n = c.len() as u32;
+        for (i, op) in s.ops.iter().take(c.len()).enumerate() {
+            assert_eq!(*op, Op::FwdAll(i as u32 + 1));
+        }
+        for (i, op) in s.ops.iter().skip(c.len()).enumerate() {
+            assert_eq!(*op, Op::Bwd(n - i as u32));
+        }
+    }
+
+    #[test]
+    fn no_memory_is_infeasible() {
+        let c = toy(4);
+        assert!(solve(&c, 64, DEFAULT_SLOTS, Mode::Full).is_none());
+    }
+
+    #[test]
+    fn cost_monotone_in_memory() {
+        let c = toy(8);
+        let lo = c.min_memory_hint();
+        let hi = c.store_all_memory() + c.wa0;
+        let mut last = f64::INFINITY;
+        for i in 0..10 {
+            let m = lo + (hi - lo) * i / 9;
+            if let Some(s) = solve(&c, m, 200, Mode::Full) {
+                assert!(
+                    s.predicted_time <= last + 1e-9,
+                    "cost must not increase with memory: {} then {}",
+                    last,
+                    s.predicted_time
+                );
+                last = s.predicted_time;
+            }
+        }
+        assert!(last.is_finite(), "largest budget must be feasible");
+    }
+
+    #[test]
+    fn tight_memory_forces_recomputation() {
+        let c = toy(8);
+        let m = (c.store_all_memory() + c.wa0) / 3;
+        let s = solve(&c, m, DEFAULT_SLOTS, Mode::Full).unwrap();
+        assert!(s.recomputation_ops(c.len()) > 0);
+        assert!(s.predicted_time > c.ideal_time());
+    }
+
+    #[test]
+    fn revolve_never_beats_full_model() {
+        let c = toy(8);
+        let lo = c.min_memory_hint() * 2;
+        let hi = c.store_all_memory() + c.wa0;
+        for i in 0..6 {
+            let m = lo + (hi - lo) * i / 5;
+            let full = solve(&c, m, 300, Mode::Full);
+            let rev = solve(&c, m, 300, Mode::AdRevolve);
+            if let (Some(f), Some(r)) = (full, rev) {
+                assert!(
+                    f.predicted_time <= r.predicted_time + 1e-9,
+                    "m={m}: full {} > revolve {}",
+                    f.predicted_time,
+                    r.predicted_time
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn revolve_recomputes_every_backward_target() {
+        // In the AD model every B^ℓ is preceded by its own Fall^ℓ, so each
+        // stage's forward runs at least twice (except possibly stage s of
+        // the outermost base case).
+        let c = toy(5);
+        let s = solve(&c, c.store_all_memory() + c.wa0, 300, Mode::AdRevolve).unwrap();
+        let n_fall = s.ops.iter().filter(|o| matches!(o, Op::FwdAll(_))).count();
+        assert_eq!(n_fall, c.len(), "one Fall per backward");
+        assert!(s.predicted_time >= c.ideal_time());
+    }
+
+    #[test]
+    fn two_stage_manual_check() {
+        // Chain: stage1 (uf=10, ub=1, wa=8, wabar=16), loss (uf=1, ub=1, wa=1, wabar=1),
+        // input wa0=8. Unlimited memory: Fall^1 Fall^2 B^2 B^1 = 13.
+        let c = Chain::new(
+            "manual",
+            vec![Stage::new("s1", 10.0, 1.0, 8, 16), Stage::new("loss", 1.0, 1.0, 1, 1)],
+            8,
+        );
+        let s = solve(&c, 1 << 20, 100, Mode::Full).unwrap();
+        assert_eq!(s.predicted_time, 13.0);
+        assert_eq!(
+            s.ops,
+            vec![Op::FwdAll(1), Op::FwdAll(2), Op::Bwd(2), Op::Bwd(1)]
+        );
+    }
+
+    #[test]
+    fn table_supports_any_budget() {
+        let c = toy(5);
+        let dc = DiscreteChain::new(&c, 1 << 22, 100);
+        let tab = solve_table(&dc, Mode::Full);
+        let n = dc.len();
+        // cost at m is non-increasing along the m axis
+        let mut last = f64::INFINITY;
+        for m in 0..=dc.slots as u32 {
+            let cst = tab.cost(1, n, m);
+            assert!(cst <= last + 1e-9);
+            if cst.is_finite() {
+                last = cst;
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! The `sequential` baseline: PyTorch's `checkpoint_sequential` [1],
+//! implementing the sublinear-memory idea of Chen et al. [6].
+//!
+//! The compute chain `1..L` is split into `k` equal-length segments. The
+//! forward phase stores only each segment's *input* (`Fck` at the segment
+//! head, `F∅` inside) — except the **last** segment, which is taped
+//! directly (the paper: "each forward computation is thus performed
+//! twice, except those of the last segment"). During the backward phase
+//! each earlier segment is re-run with `Fall` from its stored input just
+//! before its backwards. The loss stage `L+1` is outside the segmented
+//! container and always taped.
+//!
+//! Non-optimality (the point of the paper's comparison): the segment
+//! layout is fixed up-front, so it cannot exploit the memory that frees
+//! up as later segments finish their backwards.
+
+use super::sequence::{Op, Schedule, StrategyKind};
+use crate::chain::Chain;
+
+/// Balanced segment boundaries: `k` contiguous segments covering `1..=l`.
+/// Returns `(start, end)` pairs, 1-based inclusive.
+pub fn segment_bounds(l: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k >= 1 && k <= l, "need 1 <= k <= L (got k={k}, L={l})");
+    let base = l / k;
+    let extra = l % k; // first `extra` segments get one more stage
+    let mut out = Vec::with_capacity(k);
+    let mut start = 1;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len - 1));
+        start += len;
+    }
+    out
+}
+
+/// Builds the `checkpoint_sequential(k)` schedule for the chain.
+/// `chain.len()` includes the loss stage, which is not segmented.
+pub fn periodic_schedule(chain: &Chain, segments: usize) -> Schedule {
+    let n = chain.len(); // L+1
+    let l = n - 1; // segmented part
+    assert!(l >= 1, "chain needs at least one compute stage before the loss");
+    let k = segments.clamp(1, l);
+    let bounds = segment_bounds(l, k);
+
+    let mut ops = Vec::new();
+    // Forward phase: checkpoint heads of segments 1..k-1, tape the last.
+    for (i, &(b, e)) in bounds.iter().enumerate() {
+        if i + 1 < k {
+            ops.push(Op::FwdCk(b as u32));
+            for j in (b + 1)..=e {
+                ops.push(Op::FwdNoSave(j as u32));
+            }
+        } else {
+            for j in b..=e {
+                ops.push(Op::FwdAll(j as u32));
+            }
+        }
+    }
+    // Loss stage: tape + backward.
+    ops.push(Op::FwdAll(n as u32));
+    ops.push(Op::Bwd(n as u32));
+    // Backward of the last (already taped) segment.
+    let (bk, ek) = bounds[k - 1];
+    for j in (bk..=ek).rev() {
+        ops.push(Op::Bwd(j as u32));
+    }
+    // Earlier segments: re-run with taping from the stored input, then backward.
+    for &(b, e) in bounds[..k - 1].iter().rev() {
+        for j in b..=e {
+            ops.push(Op::FwdAll(j as u32));
+        }
+        for j in (b..=e).rev() {
+            ops.push(Op::Bwd(j as u32));
+        }
+    }
+
+    // Predicted time: every stage once + segments 1..k-1 forwards again.
+    let recompute: f64 = bounds[..k - 1]
+        .iter()
+        .flat_map(|&(b, e)| (b..=e).map(|j| chain.uf(j)))
+        .sum();
+    let time = chain.ideal_time() + recompute;
+    Schedule::new(ops, StrategyKind::Periodic, time)
+}
+
+/// The segment counts the paper sweeps: 10 values from 2 to `2√L`
+/// (always including 2), deduplicated and clamped to `[1, L]`.
+pub fn paper_segment_sweep(l: usize) -> Vec<usize> {
+    let hi = (2.0 * (l as f64).sqrt()).round().max(2.0) as usize;
+    let mut out: Vec<usize> = Vec::new();
+    for i in 0..10 {
+        let v = 2 + (hi.saturating_sub(2)) * i / 9;
+        let v = v.clamp(1, l.max(1));
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+
+    fn toy(l: usize) -> Chain {
+        let mut st: Vec<Stage> = (1..=l)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 10, 30))
+            .collect();
+        st.push(Stage::new("loss", 0.1, 0.1, 1, 1));
+        Chain::new("toy", st, 10)
+    }
+
+    #[test]
+    fn bounds_are_balanced_and_cover() {
+        let b = segment_bounds(10, 3);
+        assert_eq!(b, vec![(1, 4), (5, 7), (8, 10)]);
+        let b = segment_bounds(6, 6);
+        assert_eq!(b.len(), 6);
+        assert_eq!(b[0], (1, 1));
+        assert_eq!(b[5], (6, 6));
+    }
+
+    #[test]
+    fn every_backward_once_every_nonlast_segment_twice() {
+        let c = toy(9);
+        let s = periodic_schedule(&c, 3);
+        for l in 1..=c.len() as u32 {
+            let n_b = s.ops.iter().filter(|o| matches!(o, Op::Bwd(x) if *x == l)).count();
+            assert_eq!(n_b, 1, "B^{l} exactly once");
+        }
+        // segments (1,3),(4,6),(7,9): stages 1..6 run twice, 7..9 + loss once
+        for l in 1..=6u32 {
+            assert_eq!(s.forward_count(l), 2, "stage {l}");
+        }
+        for l in 7..=10u32 {
+            assert_eq!(s.forward_count(l), 1, "stage {l}");
+        }
+    }
+
+    #[test]
+    fn single_segment_is_store_all_shaped() {
+        let c = toy(4);
+        let s = periodic_schedule(&c, 1);
+        assert_eq!(s.recomputation_ops(c.len()), 0);
+        assert!((s.predicted_time - c.ideal_time()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predicted_time_counts_recompute() {
+        let c = toy(9);
+        let s = periodic_schedule(&c, 3);
+        // 6 recomputed forwards at uf=1.0
+        assert!((s.predicted_time - (c.ideal_time() + 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_shape() {
+        let sweep = paper_segment_sweep(100);
+        assert_eq!(sweep[0], 2);
+        assert!(*sweep.last().unwrap() <= 20);
+        assert!(sweep.len() <= 10 && sweep.len() >= 2);
+        let tiny = paper_segment_sweep(3);
+        assert!(tiny.iter().all(|&k| k >= 1 && k <= 3));
+    }
+}

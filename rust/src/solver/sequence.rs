@@ -1,0 +1,144 @@
+//! Schedule IR: the operation alphabet of Table 1 and the sequences built
+//! from it. A [`Schedule`] is what every solver emits and what both the
+//! [`crate::simulator`] and the [`crate::executor`] consume.
+
+use std::fmt;
+
+/// One operation of the paper's Table 1. Stage indices are 1-based
+/// (`1..=L+1`; stage `L+1` is the loss).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// `F∅^ℓ`: forward without saving — `{a^{ℓ-1}} → {a^ℓ}`.
+    FwdNoSave(u32),
+    /// `Fck^ℓ`: forward, checkpointing the *input* — `{a^{ℓ-1}} → {a^{ℓ-1}, a^ℓ}`.
+    FwdCk(u32),
+    /// `Fall^ℓ`: forward, recording all intermediates — `{a^{ℓ-1}} → {a^{ℓ-1}, ā^ℓ}`.
+    FwdAll(u32),
+    /// `B^ℓ`: backward — `{δ^ℓ, ā^ℓ, a^{ℓ-1}} → {δ^{ℓ-1}}`.
+    Bwd(u32),
+    /// Explicitly discard a stored `a^ℓ` before its backward use. *Never*
+    /// emitted by the solvers (their schedules are memory-persistent);
+    /// exists so non-persistent schedules — like the paper's §4.1
+    /// counterexample — can be expressed and simulated. Free (0 time).
+    DropA(u32),
+}
+
+impl Op {
+    pub fn stage(&self) -> u32 {
+        match *self {
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) | Op::Bwd(l) | Op::DropA(l) => l,
+        }
+    }
+
+    pub fn is_forward(&self) -> bool {
+        matches!(self, Op::FwdNoSave(_) | Op::FwdCk(_) | Op::FwdAll(_))
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Op::FwdNoSave(l) => write!(f, "F∅^{l}"),
+            Op::FwdCk(l) => write!(f, "Fck^{l}"),
+            Op::FwdAll(l) => write!(f, "Fall^{l}"),
+            Op::Bwd(l) => write!(f, "B^{l}"),
+            Op::DropA(l) => write!(f, "drop a^{l}"),
+        }
+    }
+}
+
+/// Which solver produced a schedule (used for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    Optimal,
+    Revolve,
+    Periodic,
+    StoreAll,
+}
+
+impl fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            StrategyKind::Optimal => "optimal",
+            StrategyKind::Revolve => "revolve",
+            StrategyKind::Periodic => "sequential",
+            StrategyKind::StoreAll => "pytorch",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A complete computation sequence for one training iteration: computes
+/// `δ^0` from `a^0` (executing every `B^ℓ` exactly once).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub ops: Vec<Op>,
+    pub strategy: StrategyKind,
+    /// The solver's own makespan claim (same units as the chain's `u`).
+    /// The simulator independently verifies this.
+    pub predicted_time: f64,
+}
+
+impl Schedule {
+    pub fn new(ops: Vec<Op>, strategy: StrategyKind, predicted_time: f64) -> Self {
+        Schedule { ops, strategy, predicted_time }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Number of forward executions of stage `ℓ` (recomputation count).
+    pub fn forward_count(&self, l: u32) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| op.is_forward() && op.stage() == l)
+            .count()
+    }
+
+    /// Total forward ops minus the minimum (L+1): the recomputation
+    /// overhead the strategy pays for its memory savings.
+    pub fn recomputation_ops(&self, chain_len: usize) -> usize {
+        let fwd = self.ops.iter().filter(|op| op.is_forward()).count();
+        fwd.saturating_sub(chain_len)
+    }
+
+    /// Render as the paper's compact notation, e.g.
+    /// `Fck^1 F∅^2 Fck^3 Fall^4 Fall^5 B^5 B^4 …`.
+    pub fn compact(&self) -> String {
+        self.ops
+            .iter()
+            .map(|op| op.to_string())
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_paper_notation() {
+        assert_eq!(Op::FwdCk(1).to_string(), "Fck^1");
+        assert_eq!(Op::FwdNoSave(2).to_string(), "F∅^2");
+        assert_eq!(Op::FwdAll(5).to_string(), "Fall^5");
+        assert_eq!(Op::Bwd(5).to_string(), "B^5");
+    }
+
+    #[test]
+    fn counts() {
+        let s = Schedule::new(
+            vec![Op::FwdCk(1), Op::FwdNoSave(2), Op::FwdAll(1), Op::Bwd(1)],
+            StrategyKind::Optimal,
+            0.0,
+        );
+        assert_eq!(s.forward_count(1), 2);
+        assert_eq!(s.forward_count(2), 1);
+        assert_eq!(s.recomputation_ops(2), 1);
+    }
+}

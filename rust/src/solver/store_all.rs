@@ -1,0 +1,41 @@
+//! The `pytorch` baseline: store everything, no recomputation.
+//!
+//! This is what autograd does by default — `Fall^1 … Fall^{L+1}` then
+//! `B^{L+1} … B^1`. Fastest possible schedule, maximal memory. The figure
+//! harness uses it as the rightmost point of every plot (when it fits).
+
+use super::sequence::{Op, Schedule, StrategyKind};
+use crate::chain::Chain;
+
+/// Builds the store-all schedule. Always structurally valid; whether it
+/// fits in a given memory budget is the simulator's verdict.
+pub fn store_all_schedule(chain: &Chain) -> Schedule {
+    let n = chain.len() as u32;
+    let mut ops = Vec::with_capacity(2 * n as usize);
+    for l in 1..=n {
+        ops.push(Op::FwdAll(l));
+    }
+    for l in (1..=n).rev() {
+        ops.push(Op::Bwd(l));
+    }
+    Schedule::new(ops, StrategyKind::StoreAll, chain.ideal_time())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+
+    #[test]
+    fn shape() {
+        let c = Chain::new(
+            "t",
+            vec![Stage::new("a", 1.0, 1.0, 4, 8), Stage::new("b", 1.0, 1.0, 4, 4)],
+            4,
+        );
+        let s = store_all_schedule(&c);
+        assert_eq!(s.ops, vec![Op::FwdAll(1), Op::FwdAll(2), Op::Bwd(2), Op::Bwd(1)]);
+        assert_eq!(s.predicted_time, c.ideal_time());
+        assert_eq!(s.recomputation_ops(c.len()), 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser (substrate module — no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and an auto-generated usage line.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+pub const FLAG_SET: &str = "<set>";
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.flags.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(rest.to_string(), FLAG_SET.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|s| parse_size(s).unwrap_or_else(|| panic!("--{key}: bad number '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.u64(key, default as u64) as usize
+    }
+
+    pub fn u32(&self, key: &str, default: u32) -> u32 {
+        self.u64(key, default as u64) as u32
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float '{s}'")))
+            .unwrap_or(default)
+    }
+}
+
+/// Parse integer sizes with optional `K`/`M`/`G` (1024-based) suffix:
+/// `"512M"` → 536870912. Used for `--memory` budgets.
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    let base: f64 = num.parse().ok()?;
+    if base < 0.0 {
+        return None;
+    }
+    Some((base * mult as f64) as u64)
+}
+
+/// Human-readable bytes for reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const G: f64 = (1u64 << 30) as f64;
+    const M: f64 = (1u64 << 20) as f64;
+    const K: f64 = (1u64 << 10) as f64;
+    let b = b as f64;
+    if b >= G {
+        format!("{:.2} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.1} KiB", b / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // note: a bare `--flag` greedily takes a following non-flag token,
+        // so positionals must precede flags (documented grammar)
+        let a = parse(&["solve", "x", "--memory", "512M", "--slots=200", "--verbose"]);
+        assert_eq!(a.positional, vec!["solve", "x"]);
+        assert_eq!(a.u64("memory", 0), 512 << 20);
+        assert_eq!(a.usize("slots", 500), 200);
+        assert!(a.has("verbose"));
+        assert_eq!(a.str("missing", "d"), "d");
+    }
+
+    #[test]
+    fn size_suffixes() {
+        assert_eq!(parse_size("1024"), Some(1024));
+        assert_eq!(parse_size("1K"), Some(1024));
+        assert_eq!(parse_size("1.5G"), Some(3 * (1u64 << 29)));
+        assert_eq!(parse_size("2m"), Some(2 << 20));
+        assert_eq!(parse_size("x"), None);
+        assert_eq!(parse_size("-5"), None);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 << 20), "3.00 MiB");
+        assert_eq!(fmt_bytes(5 << 30), "5.00 GiB");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "v"]);
+        assert!(a.has("a"));
+        assert_eq!(a.str("a", ""), FLAG_SET);
+        assert_eq!(a.str("b", ""), "v");
+    }
+}

@@ -1,0 +1,36 @@
+//! Offline substrates: JSON, PRNG, CLI parsing, small helpers.
+//! (The build vendors only the `xla` crate's closure, so the usual
+//! ecosystem crates are reimplemented here at the scale this project
+//! needs — see Cargo.toml.)
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use cli::{fmt_bytes, parse_size, Args, FLAG_SET};
+pub use json::Value as Json;
+pub use rng::Rng;
+
+/// Median of a small sample (used by the estimator and benches).
+pub fn median(xs: &mut [f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&mut [7.0]), 7.0);
+    }
+}

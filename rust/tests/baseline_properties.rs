@@ -1,0 +1,141 @@
+//! Property tests for the three baseline strategies (§5.3) and the
+//! relationships the paper's evaluation depends on.
+
+mod common;
+
+use chainckpt::chain::profiles;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{
+    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode,
+};
+use common::{for_random_cases, random_chain};
+
+#[test]
+fn store_all_is_always_valid_and_fastest() {
+    for_random_cases(40, 0x51, |rng| {
+        let chain = random_chain(rng);
+        let rep = simulate(&chain, &store_all_schedule(&chain)).expect("store-all valid");
+        let rel = (rep.makespan - chain.ideal_time()).abs() / rep.makespan;
+        assert!(rel < 1e-12, "{} vs {}", rep.makespan, chain.ideal_time());
+        assert_eq!(rep.recomputed_forwards, 0);
+    });
+}
+
+#[test]
+fn periodic_is_always_valid() {
+    for_random_cases(40, 0x52, |rng| {
+        let chain = random_chain(rng);
+        let l = chain.len() - 1;
+        for k in 1..=l {
+            let sched = periodic_schedule(&chain, k);
+            let rep = simulate(&chain, &sched)
+                .unwrap_or_else(|e| panic!("periodic({k}) invalid: {e}"));
+            let rel = (rep.makespan - sched.predicted_time).abs() / rep.makespan;
+            assert!(rel < 1e-9, "periodic({k}) time claim off: {rel}");
+        }
+    });
+}
+
+#[test]
+fn more_segments_bounded_by_store_all_and_slower() {
+    // checkpoint_sequential's deal: every segmentation uses at most the
+    // store-all peak, and pays for it with (weakly) more time.
+    for_random_cases(30, 0x53, |rng| {
+        let chain = random_chain(rng);
+        let l = chain.len() - 1;
+        let sa_peak = simulate(&chain, &store_all_schedule(&chain)).unwrap().peak_bytes;
+        let ideal = chain.ideal_time();
+        for k in 1..=l.min(8) {
+            let rep = simulate(&chain, &periodic_schedule(&chain, k)).unwrap();
+            assert!(
+                rep.peak_bytes <= sa_peak,
+                "k={k}: periodic peak {} above store-all {}",
+                rep.peak_bytes,
+                sa_peak
+            );
+            assert!(rep.makespan >= ideal - 1e-9, "k={k}: faster than ideal?");
+        }
+    });
+}
+
+#[test]
+fn optimal_dominates_periodic_at_equal_memory() {
+    // The paper's headline comparison, as a hard invariant: give the DP
+    // the memory a periodic schedule used — it must never be slower.
+    for_random_cases(40, 0x54, |rng| {
+        let chain = random_chain(rng);
+        let l = chain.len() - 1;
+        for k in paper_segment_sweep(l) {
+            let seq = periodic_schedule(&chain, k);
+            let rep = simulate(&chain, &seq).unwrap();
+            // discretization rounds every size up (≤ 1 slot each), so give
+            // the DP the periodic peak plus a rounding margin: a handful of
+            // simultaneously-resident items at S=300 is well under 10 %.
+            let budget = rep.peak_bytes + rep.peak_bytes / 10;
+            let opt = solve(&chain, budget, 300, Mode::Full)
+                .unwrap_or_else(|| panic!("k={k}: optimal infeasible at periodic peak +10%"));
+            assert!(
+                opt.predicted_time <= rep.makespan * (1.0 + 1e-9),
+                "k={k}: optimal {} slower than periodic {} at m={budget}",
+                opt.predicted_time,
+                rep.makespan
+            );
+        }
+    });
+}
+
+#[test]
+fn optimal_dominates_store_all_at_equal_memory() {
+    for_random_cases(30, 0x55, |rng| {
+        let chain = random_chain(rng);
+        let rep = simulate(&chain, &store_all_schedule(&chain)).unwrap();
+        let budget = rep.peak_bytes + rep.peak_bytes / 10; // rounding margin
+        if let Some(opt) = solve(&chain, budget, 400, Mode::Full) {
+            assert!(opt.predicted_time <= rep.makespan * (1.0 + 1e-9));
+        }
+    });
+}
+
+#[test]
+fn revolve_forward_cost_reflects_double_compute() {
+    // In the AD model every stage is taped right before its backward, so
+    // total forward work ≥ Σ u_f + (work of reaching each stage) — at the
+    // very least each stage's own u_f twice, minus the first stage chain.
+    for_random_cases(25, 0x56, |rng| {
+        let chain = random_chain(rng);
+        let m = chain.store_all_memory() + chain.wa0;
+        let Some(rev) = solve(&chain, m, 300, Mode::AdRevolve) else { return };
+        let ideal: f64 = chain.ideal_time();
+        assert!(rev.predicted_time >= ideal - 1e-9);
+        let rep = simulate(&chain, &rev).unwrap();
+        // every stage's Fall counts once; all stages also ran in the sweep
+        assert!(rep.recomputed_forwards >= chain.len() - 1 - 1);
+    });
+}
+
+#[test]
+fn paper_curves_shape_on_profile_chains() {
+    // Fig. 3-style qualitative shape on a real profile: revolve's best
+    // throughput ≤ optimal's best; optimal's curve is monotone.
+    let chain = profiles::resnet(50, 500, 8);
+    let hi = chain.store_all_memory();
+    let mut opt_best = f64::INFINITY;
+    let mut rev_best = f64::INFINITY;
+    let mut last = f64::INFINITY;
+    for i in 1..=8u64 {
+        let m = hi * i / 8;
+        if let Some(s) = solve(&chain, m, 200, Mode::Full) {
+            assert!(s.predicted_time <= last * (1.0 + 1e-9));
+            last = s.predicted_time;
+            opt_best = opt_best.min(s.predicted_time);
+        }
+        if let Some(s) = solve(&chain, m, 200, Mode::AdRevolve) {
+            rev_best = rev_best.min(s.predicted_time);
+        }
+    }
+    assert!(opt_best < rev_best, "optimal must beat revolve somewhere");
+    // revolve can't go below ~double forward work
+    let fwd_total: f64 = (1..=chain.len()).map(|l| chain.uf(l)).sum();
+    let bwd_total: f64 = (1..=chain.len()).map(|l| chain.ub(l)).sum();
+    assert!(rev_best >= fwd_total + bwd_total - 1e-9);
+}

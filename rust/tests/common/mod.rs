@@ -1,0 +1,53 @@
+//! Shared test substrate: random chain generation + a mini property-test
+//! driver (the vendored build has no `proptest`; this covers what these
+//! tests need — seeded random cases with failure reporting by seed).
+
+use chainckpt::chain::{Chain, Stage};
+use chainckpt::util::Rng;
+
+/// Run `f` on `cases` seeded random inputs; on panic, report the seed so
+/// the case can be replayed deterministically.
+pub fn for_random_cases(cases: u64, base_seed: u64, mut f: impl FnMut(&mut Rng)) {
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// A random heterogeneous chain shaped like the measured ones: a few to a
+/// few dozen stages; activation sizes spanning two orders of magnitude;
+/// `ω_ā/ω_a` ratios from 1 (pure linear) to ~12 (attention-like); the
+/// final stage is a tiny "loss".
+pub fn random_chain(rng: &mut Rng) -> Chain {
+    let l = 2 + rng.below(18) as usize; // compute stages
+    let mut stages = Vec::with_capacity(l + 1);
+    for i in 0..l {
+        let wa = 64 * (1 + rng.below(256));
+        let ratio = 1.0 + rng.f32() * 11.0;
+        let wabar = (wa as f64 * ratio as f64) as u64;
+        let uf = 0.5 + rng.f32() as f64 * 50.0;
+        let ub = uf * (1.0 + rng.f32() as f64 * 2.0);
+        let mut st = Stage::new(format!("s{i}"), uf, ub, wa, wabar.max(wa));
+        if rng.below(4) == 0 {
+            st = st.with_overheads(rng.below(wa), rng.below(wa));
+        }
+        stages.push(st);
+    }
+    stages.push(Stage::new("loss", 0.5, 0.5, 4, 4));
+    let wa0 = 64 * (1 + rng.below(256));
+    Chain::new("random", stages, wa0)
+}
+
+/// A memory budget somewhere between "barely anything" and "roomy",
+/// biased to exercise the interesting middle of the feasibility range.
+pub fn random_budget(rng: &mut Rng, chain: &Chain) -> u64 {
+    let lo = chain.min_memory_hint();
+    let hi = chain.store_all_memory() + chain.wa0;
+    let frac = rng.f32() as f64;
+    lo + ((hi.saturating_sub(lo)) as f64 * frac * frac) as u64 + 1
+}

@@ -1,0 +1,139 @@
+//! Executor integration: the heart of the paper's correctness claim —
+//! **every valid schedule computes exactly the same gradients**, only the
+//! memory/time trade-off changes. Verified on the real compiled chain.
+
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
+use chainckpt::runtime::{lit_from_vec, Runtime};
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{
+    periodic_schedule, solve, store_all_schedule, Mode, Schedule,
+};
+use chainckpt::train::{SyntheticData, Trainer};
+use chainckpt::util::Rng;
+
+const DIR: &str = "artifacts/quickstart";
+
+fn runtime() -> Runtime {
+    Runtime::load(DIR).expect("run `make artifacts` first (artifacts/quickstart missing)")
+}
+
+/// Collect (loss, all gradients) for one schedule on fixed params/data.
+fn run_once(rt: &Runtime, sched: &Schedule) -> (f32, Vec<Vec<Vec<f32>>>, u64) {
+    let mut ex = Executor::new(rt, 77).unwrap(); // fixed seed ⇒ same params
+    let n = ex.n_stages();
+    let mut rng = Rng::new(1234);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let x = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+    ex.set_data_param(n - 1, &target).unwrap();
+    let res = ex.run(sched, &x, None).unwrap();
+    let grads: Vec<Vec<Vec<f32>>> = (0..n).map(|i| ex.grads(i).to_vec()).collect();
+    (res.loss, grads, res.peak_bytes)
+}
+
+fn assert_grads_equal(a: &[Vec<Vec<f32>>], b: &[Vec<Vec<f32>>], what: &str) {
+    assert_eq!(a.len(), b.len());
+    for (i, (ga, gb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ga.len(), gb.len(), "stage {i} grad count ({what})");
+        for (j, (va, vb)) in ga.iter().zip(gb).enumerate() {
+            for (k, (x, y)) in va.iter().zip(vb).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-5 + 1e-4 * x.abs().max(y.abs()),
+                    "{what}: stage {i} grad {j}[{k}]: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_strategies_compute_identical_gradients() {
+    let rt = runtime();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 1 }).unwrap();
+    let reference = store_all_schedule(&chain);
+    let (loss_ref, grads_ref, _) = run_once(&rt, &reference);
+    assert!(loss_ref.is_finite());
+
+    // periodic with several segment counts
+    for k in [2usize, 3] {
+        let sched = periodic_schedule(&chain, k);
+        let (loss, grads, _) = run_once(&rt, &sched);
+        assert!((loss - loss_ref).abs() < 1e-5, "periodic({k}) loss");
+        assert_grads_equal(&grads_ref, &grads, &format!("periodic({k})"));
+    }
+
+    // optimal + revolve under a tight budget (forces recomputation)
+    let tight = chain.store_all_memory() * 2 / 3;
+    for mode in [Mode::Full, Mode::AdRevolve] {
+        if let Some(sched) = solve(&chain, tight, 300, mode) {
+            assert!(sched.recomputation_ops(chain.len()) > 0 || mode == Mode::Full);
+            let (loss, grads, _) = run_once(&rt, &sched);
+            assert!((loss - loss_ref).abs() < 1e-5, "{mode:?} loss");
+            assert_grads_equal(&grads_ref, &grads, &format!("{mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn executor_peak_matches_simulator_prediction() {
+    // The ledger replays the simulator's accounting exactly: the real
+    // executor's peak must equal the simulated peak byte-for-byte.
+    let rt = runtime();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    for sched in [
+        store_all_schedule(&chain),
+        periodic_schedule(&chain, 2),
+        solve(&chain, chain.store_all_memory() * 3 / 4, 300, Mode::Full).unwrap(),
+    ] {
+        let sim = simulate(&chain, &sched).unwrap();
+        let (_, _, peak) = run_once(&rt, &sched);
+        assert_eq!(peak, sim.peak_bytes, "strategy {}", sched.strategy);
+    }
+}
+
+#[test]
+fn memory_limit_is_enforced() {
+    let rt = runtime();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    let sched = store_all_schedule(&chain);
+    let sim = simulate(&chain, &sched).unwrap();
+    let mut ex = Executor::new(&rt, 7).unwrap();
+    let n = ex.n_stages();
+    let mut rng = Rng::new(5);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let x = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    ex.set_data_param(n - 1, &rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem()))
+        .unwrap();
+    // a budget below the store-all peak must abort mid-replay
+    let err = ex.run(&sched, &x, Some(sim.peak_bytes / 2)).unwrap_err();
+    assert!(err.to_string().contains("memory limit exceeded"), "{err}");
+    // and exactly at the peak it must succeed
+    let ok = ex.run(&sched, &x, Some(sim.peak_bytes)).unwrap();
+    assert_eq!(ok.peak_bytes, sim.peak_bytes);
+}
+
+#[test]
+fn training_under_checkpointing_decreases_loss() {
+    let rt = runtime();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    let budget = chain.store_all_memory() * 3 / 4;
+    let sched = solve(&chain, budget, 300, Mode::Full).expect("schedule fits");
+    let data = SyntheticData::generate(&rt, 4, 21).unwrap();
+    let mut trainer = Trainer::new(&rt, sched, 0.1, Some(budget), 42).unwrap();
+    let logs = trainer.train(&data, 40, 100, |_| {}).unwrap();
+    let first = logs[0].loss;
+    let last = chainckpt::train::mean_loss(&logs, 8);
+    assert!(
+        last < 0.8 * first,
+        "loss should drop under checkpointed training: {first} → {last}"
+    );
+    assert!(logs.iter().all(|l| l.peak_bytes <= budget));
+}
+
+#[test]
+fn sgd_without_gradients_is_rejected() {
+    let rt = runtime();
+    let mut ex = Executor::new(&rt, 1).unwrap();
+    assert!(ex.sgd_step(0.1).is_err());
+}

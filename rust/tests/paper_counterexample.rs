@@ -1,0 +1,209 @@
+//! Reproduction of the paper's §4.1 claim (Figure 2): with heterogeneous
+//! activation sizes, **no memory-persistent schedule is optimal** — the
+//! true optimum (found here by exhaustive search over *all* schedules,
+//! non-persistent included) strictly beats the best persistent schedule
+//! returned by the DP. This is exactly why the paper settles for the
+//! optimal *persistent* schedule as a principled heuristic.
+//!
+//! Construction (paper's notation): chain of length `L = n+2`; all
+//! backward sizes `ω_δ^ℓ = 0` and times `u_b^ℓ = 0`; forward times 0
+//! except `u_f^1 = k = n-1` and `u_f^2 = 2`; activation sizes `ω_a^ℓ = 1`
+//! except `ω_a^2 = ω_a^L = 2`; `ω_ā = ω_a`.
+//!
+//! The paper quotes `M = 8` for its (not fully published) Figure 2 edge
+//! sizes; under our byte-exact Table 1 accounting the persistency gap
+//! appears at `M = 4`, where dropping a checkpoint mid-backward saves
+//! exactly one `F^2` recomputation (gap = 2.0, verified for several `n`).
+
+mod common;
+
+use chainckpt::chain::{Chain, Stage};
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{exhaustive_optimal, solve, Mode, Op, Schedule, StrategyKind};
+
+/// The budget at which persistency becomes suboptimal in our accounting.
+const M_GAP: u64 = 4;
+
+/// Build the Figure 2 chain for a given `n` (so `L = n + 2`, `k = n-1`).
+fn fig2_chain(n: usize) -> Chain {
+    let k = (n - 1) as f64;
+    let l = n + 2;
+    let mut stages = Vec::with_capacity(l);
+    for i in 1..=l {
+        let uf = match i {
+            1 => k,
+            2 => 2.0,
+            _ => 0.0,
+        };
+        let wa = if i == 2 || i == l { 2 } else { 1 };
+        stages.push(Stage::new(format!("f{i}"), uf, 0.0, wa, wa).with_delta_size(0));
+    }
+    Chain::new(format!("fig2-n{n}"), stages, 1)
+}
+
+#[test]
+fn chain_matches_paper_parameters() {
+    let n = 6;
+    let c = fig2_chain(n);
+    assert_eq!(c.len(), n + 2);
+    assert_eq!(c.wa(2), 2);
+    assert_eq!(c.wa(n + 2), 2);
+    assert_eq!(c.wa(1), 1);
+    assert_eq!(c.wdelta(3), 0);
+    assert_eq!(c.uf(1), (n - 1) as f64);
+    assert_eq!(c.uf(2), 2.0);
+    assert_eq!(c.ideal_time(), (n - 1) as f64 + 2.0);
+}
+
+#[test]
+fn no_persistent_schedule_is_optimal_under_tight_memory() {
+    // THE theorem of §4.1: exhaustive (non-persistent allowed) strictly
+    // beats the optimal persistent DP at the tight budget.
+    for n in [4usize, 6, 8] {
+        let c = fig2_chain(n);
+        let exact = exhaustive_optimal(&c, M_GAP).expect("feasible");
+        let dp = solve(&c, M_GAP, M_GAP as usize, Mode::Full).expect("feasible");
+        // DP schedules replay cleanly and stay within budget
+        let rep = simulate(&c, &dp).unwrap();
+        assert!(rep.peak_bytes <= M_GAP);
+        assert!(
+            exact < dp.predicted_time - 1e-9,
+            "n={n}: exhaustive {} should strictly beat persistent {}",
+            exact,
+            dp.predicted_time
+        );
+        // the gap is exactly one saved F^2 recomputation
+        assert!(
+            (dp.predicted_time - exact - 2.0).abs() < 1e-9,
+            "n={n}: gap {} (expected 2.0)",
+            dp.predicted_time - exact
+        );
+    }
+}
+
+#[test]
+fn gap_closes_with_one_more_memory_unit() {
+    // At M ≥ 5 the persistent DP matches the true optimum: heterogeneity
+    // only breaks persistency under the tight budget.
+    for n in [4usize, 6, 8] {
+        let c = fig2_chain(n);
+        for m in 5..=8u64 {
+            let exact = exhaustive_optimal(&c, m).unwrap();
+            let dp = solve(&c, m, m as usize, Mode::Full).unwrap();
+            assert!(
+                (exact - dp.predicted_time).abs() < 1e-9,
+                "n={n} M={m}: exhaustive {exact} vs persistent {}",
+                dp.predicted_time
+            );
+        }
+    }
+}
+
+#[test]
+fn hand_built_non_persistent_schedule_is_valid() {
+    // The paper's T0-style move expressed in ops: checkpoint a^1 in the
+    // forward phase, tape ā^2 from it after B^L, then *drop a^1 before
+    // its backward use* (the non-persistent step), recomputing F^1 at the
+    // very end. Costs 2k + 4 = 2n + 2 and peaks at 5 units.
+    for n in [4usize, 6, 8, 12] {
+        let c = fig2_chain(n);
+        let l = (n + 2) as u32;
+        let mut ops = vec![Op::FwdCk(1), Op::FwdCk(2)];
+        for j in 3..l {
+            ops.push(Op::FwdNoSave(j));
+        }
+        ops.push(Op::FwdAll(l));
+        ops.push(Op::Bwd(l));
+        ops.push(Op::FwdAll(2)); // tape ā^2 (cost 2)
+        ops.push(Op::DropA(1)); // ← non-persistent: a^1 dies before B^2 uses it
+        for j in (3..l).rev() {
+            for i in 3..j {
+                if i == 3 {
+                    ops.push(Op::FwdCk(3)); // a^2 read out of ā^2; store a^3
+                } else {
+                    ops.push(Op::FwdNoSave(i));
+                }
+            }
+            ops.push(Op::FwdAll(j));
+            ops.push(Op::Bwd(j));
+        }
+        ops.push(Op::FwdAll(1)); // recompute stage 1 (cost k) for B^2/B^1
+        ops.push(Op::Bwd(2));
+        ops.push(Op::Bwd(1));
+        let sched = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        let rep = simulate(&c, &sched)
+            .unwrap_or_else(|e| panic!("n={n}: invalid: {e}\n{}", sched.compact()));
+        assert_eq!(rep.peak_bytes, 5, "n={n}");
+        let t0 = 2.0 * (n as f64 - 1.0) + 4.0; // 2k + 4 = 2n + 2
+        assert_eq!(rep.makespan, t0, "n={n}: expected T0 = 2n+2");
+    }
+}
+
+#[test]
+fn hand_built_persistent_candidate_t1_is_valid() {
+    // Paper's candidate 1 ("checkpoint a^1, never a^2"): every backward
+    // below L re-runs from a^1, so F^2 executes n+1 times in total:
+    // T1 = k + 2(n+1). A valid persistent schedule — though under our
+    // accounting the DP finds better persistent schedules at M = 5.
+    let n = 6usize;
+    let c = fig2_chain(n);
+    let l = (n + 2) as u32;
+    // tape stage 1 up front (ā^1 ⊇ a^1, one unit): F^1 runs exactly once
+    let mut ops = vec![Op::FwdAll(1), Op::FwdCk(2)];
+    for j in 3..l {
+        ops.push(Op::FwdNoSave(j));
+    }
+    ops.push(Op::FwdAll(l));
+    ops.push(Op::Bwd(l));
+    for j in (2..l).rev() {
+        for i in 2..j {
+            if i == 2 {
+                ops.push(Op::FwdCk(2)); // a^1 read out of ā^1, kept
+            } else {
+                ops.push(Op::FwdNoSave(i));
+            }
+        }
+        ops.push(Op::FwdAll(j));
+        ops.push(Op::Bwd(j));
+    }
+    ops.push(Op::Bwd(1));
+    let sched = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+    let rep = simulate(&c, &sched).unwrap_or_else(|e| panic!("{e}\n{}", sched.compact()));
+    assert_eq!(rep.peak_bytes, 5);
+    let t1 = (n as f64 - 1.0) + 2.0 * (n as f64 + 1.0); // k + 2(n+1) = 3n+1
+    assert_eq!(rep.makespan, t1);
+    // the DP at the same budget must be at least as good
+    let dp = solve(&c, 5, 5, Mode::Full).unwrap();
+    assert!(dp.predicted_time <= t1 + 1e-9);
+}
+
+#[test]
+fn exhaustive_agrees_with_dp_on_generic_small_chains() {
+    // Outside adversarial constructions, persistent == global optimum on
+    // typical chains (ω_δ = ω_a): the §4.1 gap needs the δ-free corner.
+    common::for_random_cases(8, 0x41, |rng| {
+        let mut stages = Vec::new();
+        let n = 2 + rng.below(3) as usize;
+        for i in 0..n {
+            let wa = 4 * (1 + rng.below(6));
+            stages.push(Stage::new(
+                format!("s{i}"),
+                1.0 + rng.below(9) as f64,
+                1.0 + rng.below(9) as f64,
+                wa,
+                wa * (1 + rng.below(3)),
+            ));
+        }
+        stages.push(Stage::new("loss", 0.5, 0.5, 4, 4));
+        let c = Chain::new("rnd", stages, 4 * (1 + rng.below(6)));
+        let hi = c.store_all_memory() + c.wa0;
+        for i in [2u64, 3] {
+            let m = hi * i / 3;
+            let exact = exhaustive_optimal(&c, m);
+            let dp = solve(&c, m, 2000, Mode::Full).map(|s| s.predicted_time);
+            if let (Some(e), Some(d)) = (exact, dp) {
+                assert!(e <= d + 1e-9, "exhaustive {e} vs dp {d} at m={m}");
+            }
+        }
+    });
+}

@@ -1,0 +1,197 @@
+//! Property tests for the optimal DP (Theorem 1): every schedule it emits
+//! must replay cleanly in the simulator, within budget, at exactly the
+//! claimed cost — and must dominate all other strategies.
+
+mod common;
+
+use chainckpt::chain::DEFAULT_SLOTS;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{solve, store_all_schedule, Mode, Op};
+use common::{for_random_cases, random_budget, random_chain};
+
+const SLOTS: usize = 200; // keep the random sweep fast; exactness tested elsewhere
+
+#[test]
+fn dp_schedules_are_valid_and_within_budget() {
+    for_random_cases(60, 0xA11CE, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let Some(sched) = solve(&chain, m, SLOTS, Mode::Full) else { return };
+        let rep = simulate(&chain, &sched)
+            .unwrap_or_else(|e| panic!("DP emitted invalid schedule: {e}\n{}", sched.compact()));
+        assert!(
+            rep.peak_bytes <= m,
+            "peak {} exceeds budget {m} (chain {}, L+1={})",
+            rep.peak_bytes,
+            chain.name,
+            chain.len()
+        );
+    });
+}
+
+#[test]
+fn dp_claimed_cost_equals_simulated_makespan() {
+    for_random_cases(60, 0xB0B, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let Some(sched) = solve(&chain, m, SLOTS, Mode::Full) else { return };
+        let rep = simulate(&chain, &sched).unwrap();
+        let rel = (rep.makespan - sched.predicted_time).abs() / rep.makespan.max(1e-12);
+        assert!(
+            rel < 1e-9,
+            "claimed {} vs simulated {}",
+            sched.predicted_time,
+            rep.makespan
+        );
+    });
+}
+
+#[test]
+fn cost_is_monotone_in_memory() {
+    for_random_cases(25, 0xC0FFEE, |rng| {
+        let chain = random_chain(rng);
+        let lo = chain.min_memory_hint();
+        let hi = chain.store_all_memory() + chain.wa0;
+        let mut last = f64::INFINITY;
+        for i in 0..8 {
+            let m = lo + (hi - lo) * i / 7;
+            if let Some(s) = solve(&chain, m, SLOTS, Mode::Full) {
+                assert!(
+                    s.predicted_time <= last * (1.0 + 1e-9),
+                    "more memory made it slower: {last} -> {} at m={m}",
+                    s.predicted_time
+                );
+                last = s.predicted_time;
+            }
+        }
+        assert!(last.is_finite(), "roomy budget must be feasible");
+    });
+}
+
+#[test]
+fn unbounded_memory_recovers_store_all() {
+    for_random_cases(30, 0xDEAD, |rng| {
+        let chain = random_chain(rng);
+        let m = 4 * (chain.store_all_memory() + chain.wa0);
+        let sched = solve(&chain, m, DEFAULT_SLOTS, Mode::Full).expect("must fit");
+        assert!(
+            (sched.predicted_time - chain.ideal_time()).abs() < 1e-9,
+            "unbounded: {} vs ideal {}",
+            sched.predicted_time,
+            chain.ideal_time()
+        );
+        assert_eq!(sched.recomputation_ops(chain.len()), 0);
+        // must coincide with the store-all schedule's simulated behavior
+        let sa = simulate(&chain, &store_all_schedule(&chain)).unwrap();
+        let rep = simulate(&chain, &sched).unwrap();
+        assert_eq!(rep.makespan, sa.makespan);
+    });
+}
+
+#[test]
+fn optimal_dominates_revolve() {
+    for_random_cases(40, 0xFEED, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let full = solve(&chain, m, SLOTS, Mode::Full);
+        let rev = solve(&chain, m, SLOTS, Mode::AdRevolve);
+        match (&full, &rev) {
+            (Some(f), Some(r)) => assert!(
+                f.predicted_time <= r.predicted_time * (1.0 + 1e-12),
+                "optimal {} > revolve {} at m={m}",
+                f.predicted_time,
+                r.predicted_time
+            ),
+            // revolve's op set is a strict subset: it can never be
+            // feasible where the full model is not
+            (None, Some(_)) => panic!("revolve feasible but full model not, m={m}"),
+            _ => {}
+        }
+    });
+}
+
+#[test]
+fn schedule_structure_invariants() {
+    for_random_cases(40, 0x5EED, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let Some(sched) = solve(&chain, m, SLOTS, Mode::Full) else { return };
+        let n = chain.len() as u32;
+        // each backward exactly once
+        for l in 1..=n {
+            let b = sched.ops.iter().filter(|o| **o == Op::Bwd(l)).count();
+            assert_eq!(b, 1, "B^{l} count");
+        }
+        // Fall^ℓ appears before B^ℓ, with no other Fall^ℓ between the last
+        // Fall^ℓ and B^ℓ consuming it (ā stored exactly when needed)
+        for l in 1..=n {
+            let bwd_pos = sched.ops.iter().position(|o| *o == Op::Bwd(l)).unwrap();
+            let fall_before = sched.ops[..bwd_pos]
+                .iter()
+                .filter(|o| **o == Op::FwdAll(l))
+                .count();
+            assert_eq!(fall_before, 1, "exactly one Fall^{l} before B^{l}");
+        }
+        // backwards run in strictly decreasing stage order
+        let bwd_order: Vec<u32> = sched
+            .ops
+            .iter()
+            .filter_map(|o| match o {
+                Op::Bwd(l) => Some(*l),
+                _ => None,
+            })
+            .collect();
+        let mut sorted = bwd_order.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(bwd_order, sorted, "backward order must be L+1..1");
+    });
+}
+
+#[test]
+fn revolve_schedules_are_valid_too() {
+    for_random_cases(40, 0xACE, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let Some(sched) = solve(&chain, m, SLOTS, Mode::AdRevolve) else { return };
+        let rep = simulate(&chain, &sched)
+            .unwrap_or_else(|e| panic!("revolve invalid: {e}\n{}", sched.compact()));
+        assert!(rep.peak_bytes <= m);
+        let rel = (rep.makespan - sched.predicted_time).abs() / rep.makespan.max(1e-12);
+        assert!(rel < 1e-9);
+    });
+}
+
+#[test]
+fn infeasible_below_min_memory() {
+    for_random_cases(30, 0xF00D, |rng| {
+        let chain = random_chain(rng);
+        // the largest single backward footprint is a hard lower bound
+        let need = (1..=chain.len())
+            .map(|l| chain.wdelta(l) + chain.wabar(l))
+            .max()
+            .unwrap();
+        assert!(
+            solve(&chain, need / 4 + 1, SLOTS, Mode::Full).is_none(),
+            "quarter of the hard minimum must be infeasible"
+        );
+    });
+}
+
+#[test]
+fn finer_discretization_never_worse() {
+    // More slots → less rounding → cost can only improve (or stay equal).
+    for_random_cases(15, 0xD15C, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let coarse = solve(&chain, m, 60, Mode::Full);
+        let fine = solve(&chain, m, 600, Mode::Full);
+        if let (Some(c), Some(f)) = (coarse, fine) {
+            assert!(
+                f.predicted_time <= c.predicted_time * (1.0 + 1e-12),
+                "finer slots got worse: {} vs {}",
+                f.predicted_time,
+                c.predicted_time
+            );
+        }
+    });
+}
