@@ -18,10 +18,12 @@
 use std::time::Instant;
 
 use chainckpt::figures::{figure, optimal_vs_sequential, summary_gain, to_csv};
+use chainckpt::solver::{cache_stats, clear_cache};
 use chainckpt::util::Args;
 
 fn main() {
     let args = Args::from_env();
+    clear_cache();
     let figs: Vec<u32> = if args.has("quick") {
         vec![3, 5]
     } else if args.has("full") {
@@ -70,5 +72,23 @@ fn main() {
         );
         assert!(g > 0.0, "optimal must win on average");
     }
+
+    // the planner contract: each panel's 10-budget sweep costs one table
+    // lookup per (chain, mode) — 2 per panel — and repeated chains across
+    // figures are served from the cache instead of re-running the DP
+    let stats = cache_stats();
+    println!(
+        "planner cache: {} lookups for {} panels ({} DP builds, {} hits, {:.1} MiB resident)",
+        stats.lookups,
+        all.len(),
+        stats.builds,
+        stats.hits,
+        stats.bytes as f64 / (1 << 20) as f64
+    );
+    assert_eq!(
+        stats.lookups,
+        2 * all.len() as u64,
+        "a panel sweep must cost exactly one table lookup per (chain, mode)"
+    );
     println!("→ results/figure*.csv, results/summary.csv");
 }

@@ -1,22 +1,24 @@
 //! Solver benchmark — reproduces the paper's §5.2 cost claims:
 //! "running time below 1 second on most networks; the longest was
-//! ResNet-1001 (chain length 339): below 20 seconds at S = 500".
+//! ResNet-1001 (chain length 339): below 20 seconds at S = 500" — and
+//! measures the Planner's amortization: one DP table serving a whole
+//! budget sweep vs a fresh `solve` per budget.
 //!
 //! Custom harness (the offline build has no criterion): median-of-N
 //! wall-clock per configuration, printed as a table and written to
-//! `results/bench_solver.csv`.
+//! `results/bench_solver.csv` plus machine-readable `BENCH_solver.json`.
 //!
 //! ```sh
 //! cargo bench --bench bench_solver            # full sweep
 //! cargo bench --bench bench_solver -- --quick # CI-sized subset
 //! ```
 
+use std::fmt::Write as _;
 use std::time::Instant;
 
 use chainckpt::chain::{profiles, Chain};
-use chainckpt::solver::{solve, Mode};
+use chainckpt::solver::{cache_stats, clear_cache, solve, Mode, Planner};
 use chainckpt::util::{median, Args};
-
 
 struct Case {
     name: &'static str,
@@ -29,12 +31,79 @@ fn time_solve(chain: &Chain, slots: usize, reps: usize) -> (f64, f64) {
     let mut samples = Vec::new();
     let mut cost = f64::NAN;
     for _ in 0..reps {
+        clear_cache(); // measure the DP fill, not a table-cache hit
         let t0 = Instant::now();
         let s = solve(chain, memory, slots, Mode::Full);
         samples.push(t0.elapsed().as_secs_f64());
         cost = s.map(|s| s.predicted_time).unwrap_or(f64::INFINITY);
     }
     (median(&mut samples), cost)
+}
+
+struct SweepResult {
+    name: &'static str,
+    chain_len: usize,
+    slots: usize,
+    n_budgets: usize,
+    per_budget_s: f64,
+    planner_s: f64,
+    speedup: f64,
+}
+
+/// Budget sweep two ways: a fresh `solve` per budget (the pre-Planner
+/// call pattern) vs one `Planner` built at the top budget answering every
+/// budget by reconstruction. The cache is cleared before each arm so the
+/// baseline pays one DP per budget and the planner arm pays exactly one.
+fn bench_sweep(
+    name: &'static str,
+    chain: &Chain,
+    slots: usize,
+    n_budgets: usize,
+    reps: usize,
+) -> SweepResult {
+    let hi = chain.store_all_memory() + chain.wa0;
+    let lo = chain.min_memory_hint();
+    let budgets: Vec<u64> =
+        (1..=n_budgets as u64).map(|i| lo + (hi - lo) * i / n_budgets as u64).collect();
+
+    let mut per_budget = Vec::new();
+    for _ in 0..reps {
+        clear_cache();
+        let t0 = Instant::now();
+        let feasible = budgets
+            .iter()
+            .filter(|&&m| solve(chain, m, slots, Mode::Full).is_some())
+            .count();
+        per_budget.push(t0.elapsed().as_secs_f64());
+        assert!(feasible > 0, "{name}: sweep produced no feasible schedule");
+    }
+
+    let mut planned = Vec::new();
+    for _ in 0..reps {
+        clear_cache(); // charge the planner arm its single table build
+        let t0 = Instant::now();
+        let planner = Planner::new(chain, hi, slots, Mode::Full);
+        let scheds = planner.sweep(&budgets);
+        planned.push(t0.elapsed().as_secs_f64());
+        assert!(
+            scheds.last().is_some_and(|s| s.is_some()),
+            "{name}: top budget must be feasible"
+        );
+        let stats = cache_stats();
+        assert_eq!(stats.builds, 1, "{name}: a sweep must build exactly one DP table");
+    }
+
+    let per_budget_s = median(&mut per_budget);
+    let planner_s = median(&mut planned);
+    SweepResult {
+        name,
+        chain_len: chain.len(),
+        slots,
+        n_budgets,
+        per_budget_s,
+        planner_s,
+        speedup: per_budget_s / planner_s,
+    }
 }
 
 fn main() {
@@ -65,6 +134,7 @@ fn main() {
 
     println!("{:<22} {:>6} {:>7} {:>12} {:>14}", "case", "L+1", "S", "solve (s)", "cost (ms)");
     let mut csv = String::from("case,chain_len,slots,solve_s,cost_ms\n");
+    let mut json_cases = String::new();
     for c in &cases {
         let (t, cost) = time_solve(&c.chain, c.slots, reps);
         println!(
@@ -76,6 +146,18 @@ fn main() {
             cost
         );
         csv.push_str(&format!("{},{},{},{:.4},{:.3}\n", c.name, c.chain.len(), c.slots, t, cost));
+        if !json_cases.is_empty() {
+            json_cases.push(',');
+        }
+        let _ = write!(
+            json_cases,
+            r#"{{"case":"{}","chain_len":{},"slots":{},"solve_s":{:.4},"cost_ms":{:.3}}}"#,
+            c.name,
+            c.chain.len(),
+            c.slots,
+            t,
+            cost
+        );
         // paper budget checks (generous ×2 headroom for the CI machine)
         if c.chain.len() < 150 {
             assert!(t < 2.0, "{}: small chains must solve in ~1 s (paper §5.2)", c.name);
@@ -83,7 +165,55 @@ fn main() {
             assert!(t < 40.0, "{}: ResNet-1001 must solve in ~20 s (paper §5.2)", c.name);
         }
     }
+
+    // budget sweep: per-budget solve vs one Planner (the PR's acceptance
+    // case is a 20-budget ResNet sweep at ≥ 5×; in practice the speedup
+    // tracks the budget count)
+    let sweeps = if quick {
+        vec![bench_sweep("resnet50-224", &profiles::resnet(50, 224, 16), 500, 20, reps)]
+    } else {
+        vec![
+            bench_sweep("resnet50-224", &profiles::resnet(50, 224, 16), 500, 20, reps),
+            bench_sweep("resnet101-1000", &profiles::resnet(101, 1000, 8), 500, 20, reps),
+        ]
+    };
+    println!(
+        "\n{:<22} {:>8} {:>16} {:>14} {:>9}",
+        "sweep", "budgets", "per-budget (s)", "planner (s)", "speedup"
+    );
+    let mut json_sweeps = String::new();
+    for s in &sweeps {
+        println!(
+            "{:<22} {:>8} {:>16.3} {:>14.3} {:>8.1}x",
+            s.name, s.n_budgets, s.per_budget_s, s.planner_s, s.speedup
+        );
+        csv.push_str(&format!(
+            "sweep-{},{},{},{:.4},{:.4}\n",
+            s.name, s.chain_len, s.slots, s.per_budget_s, s.planner_s
+        ));
+        if !json_sweeps.is_empty() {
+            json_sweeps.push(',');
+        }
+        let _ = write!(
+            json_sweeps,
+            r#"{{"chain":"{}","chain_len":{},"slots":{},"budgets":{},"per_budget_solve_s":{:.4},"planner_sweep_s":{:.4},"speedup":{:.2}}}"#,
+            s.name, s.chain_len, s.slots, s.n_budgets, s.per_budget_s, s.planner_s, s.speedup
+        );
+        assert!(
+            s.speedup >= 5.0,
+            "{}: planner must amortize a {}-budget sweep ≥ 5x (got {:.1}x)",
+            s.name,
+            s.n_budgets,
+            s.speedup
+        );
+    }
+
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_solver.csv", csv).ok();
-    println!("→ results/bench_solver.csv");
+    let json = format!(
+        r#"{{"bench":"bench_solver","quick":{},"cases":[{}],"sweeps":[{}]}}"#,
+        quick, json_cases, json_sweeps
+    );
+    std::fs::write("BENCH_solver.json", &json).ok();
+    println!("→ results/bench_solver.csv, BENCH_solver.json");
 }

@@ -5,6 +5,14 @@
 //! size is expressed as `ceil(bytes / (M/S))` slots. Rounding *up* keeps
 //! the schedule conservative: a schedule feasible in slot space is
 //! feasible in bytes (at the cost of ≤ `1 + 1/S` size overestimation).
+//!
+//! The discretization is *budget-independent* below its top: sizes depend
+//! only on the slot width `M/S`, so one [`DiscreteChain`] (and one DP
+//! table over its `0..=S` slot axis) answers **every** byte budget
+//! `m ≤ M` via [`DiscreteChain::budget_slots`], which rounds the budget
+//! *down* to whole slots (conservative in the same direction as the size
+//! round-up). This is what lets [`crate::solver::Planner`] solve the DP
+//! once per chain and reconstruct schedules for a whole budget sweep.
 
 use super::Chain;
 
@@ -29,6 +37,9 @@ pub struct DiscreteChain {
     pub slots: usize,
     /// Bytes per slot (`M / S`).
     pub slot_bytes: f64,
+    /// The byte budget `M` this chain was discretized against (the top of
+    /// the representable budget range).
+    pub top_bytes: u64,
 }
 
 impl DiscreteChain {
@@ -54,7 +65,26 @@ impl DiscreteChain {
             ub: (1..=l1).map(|l| chain.ub(l)).collect(),
             slots,
             slot_bytes,
+            top_bytes: memory,
         }
+    }
+
+    /// Whole slots available within a byte budget `bytes ≤ top_bytes`:
+    /// `floor(bytes / slot_bytes)`, clamped to the axis. Rounding *down*
+    /// keeps budgets conservative (a schedule feasible in `k` slots peaks
+    /// at ≤ `k · slot_bytes ≤ bytes`); budgets at or above `top_bytes` map
+    /// to the full axis exactly, so a solve at the discretization budget
+    /// is never off by float rounding.
+    pub fn budget_slots(&self, bytes: u64) -> u32 {
+        if bytes >= self.top_bytes {
+            return self.slots as u32;
+        }
+        let mut k = ((bytes as f64 / self.slot_bytes) as u32).min(self.slots as u32);
+        // guard the floor against upward float rounding at slot boundaries
+        while k > 0 && k as f64 * self.slot_bytes > bytes as f64 {
+            k -= 1;
+        }
+        k
     }
 
     /// Number of stages `L+1`.
@@ -139,6 +169,17 @@ mod tests {
         if (slots as usize) <= DEFAULT_SLOTS {
             assert!(bytes <= m);
         }
+    }
+
+    #[test]
+    fn budget_slots_rounds_down_and_clamps() {
+        let d = DiscreteChain::new(&toy(), 1000, 10); // slot = 100 bytes
+        assert_eq!(d.budget_slots(1000), 10); // the exact top maps to the full axis
+        assert_eq!(d.budget_slots(5000), 10); // above-top budgets clamp to it
+        assert_eq!(d.budget_slots(999), 9);
+        assert_eq!(d.budget_slots(100), 1);
+        assert_eq!(d.budget_slots(99), 0);
+        assert_eq!(d.budget_slots(0), 0);
     }
 
     #[test]

@@ -19,8 +19,11 @@ use crate::util::median;
 /// Measured timings for one stage (microseconds).
 #[derive(Debug, Clone)]
 pub struct StageTiming {
+    /// Stage name from the manifest (e.g. `stage_3_attn`).
     pub name: String,
+    /// Median forward duration `u_f^ℓ`, microseconds.
     pub uf_us: f64,
+    /// Median backward duration `u_b^ℓ`, microseconds.
     pub ub_us: f64,
 }
 

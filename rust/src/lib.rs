@@ -11,8 +11,10 @@
 //!   analytic profiles of the paper's benchmark networks (ResNet,
 //!   DenseNet, Inception v3, VGG) and the memory-slot discretization.
 //! * [`solver`] — schedule computation: the paper's optimal persistent
-//!   dynamic program (Theorem 1, Algorithms 1–2) and the three baselines
-//!   it is evaluated against (`store-all` ≡ plain PyTorch, `sequential` ≡
+//!   dynamic program (Theorem 1, Algorithms 1–2), the [`solver::Planner`]
+//!   that solves that DP once per chain and answers every memory budget
+//!   (with a fingerprint-keyed table cache), and the three baselines the
+//!   paper evaluates against (`store-all` ≡ plain PyTorch, `sequential` ≡
 //!   `torch.utils.checkpoint_sequential`, `revolve` ≡ the Automatic
 //!   Differentiation adaptation).
 //! * [`simulator`] — a byte-accurate replay of any operation sequence
@@ -42,5 +44,6 @@ pub mod util;
 pub use chain::{Chain, Stage};
 pub use simulator::{simulate, SimReport};
 pub use solver::{
-    optimal_schedule, periodic_schedule, revolve_schedule, store_all_schedule, Op, Schedule,
+    optimal_schedule, periodic_schedule, revolve_schedule, store_all_schedule, Op, Planner,
+    Schedule,
 };

@@ -20,8 +20,7 @@ use chainckpt::figures;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{
-    optimal_schedule, paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode,
-    Schedule,
+    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, Planner, Schedule,
 };
 use chainckpt::train::{mean_loss, SyntheticData, Trainer};
 use chainckpt::util::{fmt_bytes, Args, FLAG_SET};
@@ -78,10 +77,18 @@ fn cmd_solve(args: &Args) -> Result<()> {
     };
     println!("chain {} (L+1 = {}), budget {}", chain.name, chain.len(), fmt_bytes(memory));
     let t0 = std::time::Instant::now();
-    let Some(sched) = solve(&chain, memory, slots, mode) else {
+    let planner = Planner::new(&chain, memory, slots, mode);
+    println!(
+        "plan time       : {:.2} s (S = {slots}; one DP table answers every budget ≤ {})",
+        t0.elapsed().as_secs_f64(),
+        fmt_bytes(memory)
+    );
+    if let Some((flo, fhi)) = planner.feasible_range() {
+        println!("feasible range  : {} – {}", fmt_bytes(flo), fmt_bytes(fhi));
+    }
+    let Some(sched) = planner.schedule_at(memory) else {
         bail!("no feasible persistent schedule within {}", fmt_bytes(memory));
     };
-    println!("solve time      : {:.2} s (S = {slots})", t0.elapsed().as_secs_f64());
     describe(&chain, &sched, Some(memory), "ms")?;
     if args.has("show-ops") {
         println!("{}", sched.compact());
@@ -163,8 +170,11 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn pick_schedule(args: &Args, chain: &Chain, memory: u64) -> Result<Schedule> {
+    // The DP strategies go through `solve` (a Planner at its own budget):
+    // repeated picks for the same measured chain (e.g. train restarts)
+    // hit the shared table cache.
     match args.str("strategy", "optimal").as_str() {
-        "optimal" => optimal_schedule(chain, memory)
+        "optimal" => solve(chain, memory, DEFAULT_SLOTS, Mode::Full)
             .with_context(|| format!("no optimal schedule fits {}", fmt_bytes(memory))),
         "revolve" => solve(chain, memory, DEFAULT_SLOTS, Mode::AdRevolve)
             .with_context(|| format!("no revolve schedule fits {}", fmt_bytes(memory))),
@@ -263,12 +273,29 @@ fn cmd_compare(args: &Args) -> Result<()> {
     for k in paper_segment_sweep(chain.len() - 1).into_iter().take(points) {
         run_measured("sequential".into(), format!("{k} segs"), &periodic_schedule(&chain, k))?;
     }
-    for i in 1..=points as u64 {
-        let m = lo + (hi - lo) * i / points as u64;
-        if let Some(s) = solve(&chain, m, DEFAULT_SLOTS, Mode::Full) {
+    // One DP table per mode serves the whole budget sweep. The planner
+    // discretizes against the top budget, so a sub-budget point only sees
+    // `S·m/hi` of the grid — double the paper's S=500 to keep low-budget
+    // rows at least as precise as the old per-budget solves were at
+    // mid-sweep (still ≥3× less DP work than per-budget tables).
+    let budgets: Vec<u64> =
+        (1..=points as u64).map(|i| lo + (hi - lo) * i / points as u64).collect();
+    let sweep_slots = 2 * DEFAULT_SLOTS;
+    let t0 = std::time::Instant::now();
+    let opt_planner = Planner::new(&chain, hi, sweep_slots, Mode::Full);
+    let rev_planner = Planner::new(&chain, hi, sweep_slots, Mode::AdRevolve);
+    let opt_scheds = opt_planner.sweep(&budgets);
+    let rev_scheds = rev_planner.sweep(&budgets);
+    println!(
+        "planned {} budgets from 2 DP tables in {:.2} s",
+        budgets.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for ((&m, s_opt), s_rev) in budgets.iter().zip(opt_scheds).zip(rev_scheds) {
+        if let Some(s) = s_opt {
             run_measured("optimal".into(), fmt_bytes(m), &s)?;
         }
-        if let Some(s) = solve(&chain, m, DEFAULT_SLOTS, Mode::AdRevolve) {
+        if let Some(s) = s_rev {
             run_measured("revolve".into(), fmt_bytes(m), &s)?;
         }
     }

@@ -7,16 +7,24 @@
 //! | periodic     | **sequential** (`checkpoint_sequential`) | [`periodic_schedule`] |
 //! | AD optimum   | **revolve**  | [`revolve_schedule`] |
 //! | this paper   | **optimal**  | [`optimal_schedule`] |
+//!
+//! For a *single* budget, [`solve`] (or the [`optimal_schedule`] /
+//! [`revolve_schedule`] conveniences) is the entry point. For a budget
+//! *sweep* over one chain — figures, `compare`, capacity planning — build
+//! one [`Planner`] at the top budget and query it per budget: the DP
+//! table is filled once and shared (see the [`planner`] module docs).
 
 mod exhaustive;
 mod optimal;
 mod periodic;
+pub mod planner;
 mod sequence;
 mod store_all;
 
 pub use exhaustive::exhaustive_optimal;
 pub use optimal::{solve, solve_table, DpTable, Mode};
 pub use periodic::{paper_segment_sweep, periodic_schedule, segment_bounds};
+pub use planner::{cache_stats, clear_cache, Planner, PlannerCacheStats};
 pub use sequence::{Op, Schedule, StrategyKind};
 pub use store_all::store_all_schedule;
 

@@ -17,7 +17,7 @@
 //! exactly the "revolve" comparator of §5.3 (heterogeneous AD optimum,
 //! storing only layer inputs, taping right before each backward).
 
-use super::sequence::{Op, Schedule, StrategyKind};
+use super::sequence::{Op, Schedule};
 use crate::chain::{Chain, DiscreteChain};
 
 /// Decision markers packed into the DP table.
@@ -67,6 +67,21 @@ impl DpTable {
     #[inline]
     pub fn cost(&self, s: usize, t: usize, m: u32) -> f64 {
         self.cost[self.idx(s, t, m)]
+    }
+
+    /// Number of stages `L+1` the table covers.
+    pub fn stages(&self) -> usize {
+        self.n
+    }
+
+    /// Upper bound of the table's slot axis (budgets `0..=slots`).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Approximate heap footprint, used by the planner cache's byte budget.
+    pub fn mem_bytes(&self) -> usize {
+        self.cost.len() * (std::mem::size_of::<f64>() + std::mem::size_of::<u16>())
     }
 
     /// Cost row of one `(s, t)` cell: contiguous over the m axis.
@@ -243,8 +258,17 @@ fn m_all(dc: &DiscreteChain, s: usize, t: usize) -> u32 {
     fwd.max(bwd)
 }
 
-/// Algorithm 2: reconstruct the optimal sequence from the table.
-fn reconstruct(tab: &DpTable, dc: &DiscreteChain, s: usize, t: usize, m: u32, ops: &mut Vec<Op>) {
+/// Algorithm 2: reconstruct the optimal sequence from the table. Valid at
+/// *any* slot budget `m`, not just the one a solve was requested at — the
+/// table covers the whole `(s, t, m)` space (the planner relies on this).
+pub(crate) fn reconstruct(
+    tab: &DpTable,
+    dc: &DiscreteChain,
+    s: usize,
+    t: usize,
+    m: u32,
+    ops: &mut Vec<Op>,
+) {
     match tab.dec(s, t, m) {
         DEC_INFEASIBLE => unreachable!("reconstruct called on infeasible cell"),
         DEC_ALL if s == t => {
@@ -268,24 +292,22 @@ fn reconstruct(tab: &DpTable, dc: &DiscreteChain, s: usize, t: usize, m: u32, op
     }
 }
 
-/// One full solve: discretize, fill the table, reconstruct at the top
-/// budget `M − ω_a^0`. Returns `None` when no persistent schedule fits.
+/// One full solve: discretize against `memory`, fill (or fetch from the
+/// planner cache) the table, reconstruct at the top budget `M − ω_a^0`.
+/// Returns `None` when no persistent schedule fits.
+///
+/// This is now a thin compatibility wrapper over [`super::Planner`]: a
+/// planner built at `memory` answers its own top budget, which is exactly
+/// the historical `solve` semantics (same discretization, same table,
+/// same reconstruction — and repeated solves of the same profile hit the
+/// cache instead of re-running the DP). Note the footprint trade-off:
+/// the table (tens of MB for long chains) may stay resident in the
+/// process-global LRU cache instead of being dropped on return; call
+/// [`super::clear_cache`] to reclaim it. Sweeping many budgets over one
+/// chain should construct a single `Planner` instead of calling this in
+/// a loop.
 pub fn solve(chain: &Chain, memory: u64, slots: usize, mode: Mode) -> Option<Schedule> {
-    let dc = DiscreteChain::new(chain, memory, slots);
-    let m0 = dc.top_budget()?;
-    let tab = solve_table(&dc, mode);
-    let n = dc.len();
-    let cost = tab.cost(1, n, m0);
-    if !cost.is_finite() {
-        return None;
-    }
-    let mut ops = Vec::new();
-    reconstruct(&tab, &dc, 1, n, m0, &mut ops);
-    let strategy = match mode {
-        Mode::Full => StrategyKind::Optimal,
-        Mode::AdRevolve => StrategyKind::Revolve,
-    };
-    Some(Schedule::new(ops, strategy, cost))
+    super::Planner::new(chain, memory, slots, mode).schedule_at(memory)
 }
 
 #[cfg(test)]

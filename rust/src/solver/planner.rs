@@ -1,0 +1,460 @@
+//! Plan once, answer every budget: the `Planner` solves the paper's DP a
+//! single time per `(chain, slots, mode)` and then serves schedules for
+//! **any** memory budget below its top by O(L) reconstruction.
+//!
+//! Theorem 1's table `C_BP(s, t, m)` already contains the optimal cost
+//! for *every* slot budget `m`, not just the one a caller asked about —
+//! the per-budget work in a sweep is only Algorithm 2's reconstruction.
+//! Historically `solve` still re-discretized and re-filled the table per
+//! budget, so the §5.4 figure sweeps and `compare` paid the O(L²·S)
+//! (per-cell O(L)) DP ten-plus times per chain. The fix has two parts:
+//!
+//! 1. **Budget-independent discretization** — slot sizes depend only on
+//!    the slot width `M/S` ([`DiscreteChain`] docs), so discretizing
+//!    against the *top* budget of a sweep makes one table valid for all
+//!    smaller budgets ([`DiscreteChain::budget_slots`] maps bytes → slots
+//!    conservatively).
+//! 2. **A fingerprint-keyed LRU table cache** — the discretized chain's
+//!    content hash keys an `Arc<DpTable>`, so repeated solves of the same
+//!    profile (across `Planner::new` *and* the [`super::solve`]
+//!    compatibility wrapper) are free.
+//!
+//! This is the same "plan once, reuse everywhere" structure that makes
+//! checkpointing planners (Checkmate, Dynamic Tensor Rematerialization)
+//! cheap enough to sit in a training loop.
+//!
+//! # Example
+//!
+//! ```
+//! use chainckpt::chain::profiles;
+//! use chainckpt::solver::{Mode, Planner};
+//!
+//! let chain = profiles::resnet(18, 224, 4);
+//! let top = chain.store_all_memory() + chain.wa0;
+//!
+//! // one DP solve…
+//! let planner = Planner::new(&chain, top, 150, Mode::Full);
+//!
+//! // …answers a whole budget sweep by reconstruction
+//! let budgets: Vec<u64> = (1..=8).map(|i| top * i / 8).collect();
+//! let schedules = planner.sweep(&budgets);
+//! assert!(schedules.last().unwrap().is_some(), "the top budget always fits");
+//!
+//! // less memory never makes the optimal schedule faster
+//! let costs: Vec<f64> = schedules.iter().flatten().map(|s| s.predicted_time).collect();
+//! assert!(costs.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+//!
+//! // the feasibility frontier without re-solving anything
+//! let (lo, hi) = planner.feasible_range().expect("chain fits somewhere");
+//! assert!(lo <= hi);
+//! assert!(planner.schedule_at(lo).is_some());
+//! ```
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+use super::optimal::{reconstruct, solve_table, DpTable, Mode};
+use super::sequence::{Schedule, StrategyKind};
+use crate::chain::{Chain, DiscreteChain};
+
+/// A chain's DP solved once, able to emit the optimal persistent schedule
+/// for any byte budget up to the one it was built with.
+///
+/// Construction runs (or fetches from the cache) the full O(L²·S) table
+/// fill; every query after that is at most O(L) per budget. Budgets above
+/// [`Planner::top_memory`] are clamped to it — the answer is still a
+/// valid schedule, but a larger table might do better, so build the
+/// planner at the largest budget you intend to ask about.
+pub struct Planner {
+    dc: DiscreteChain,
+    table: Arc<DpTable>,
+    mode: Mode,
+}
+
+impl Planner {
+    /// Discretize `chain` against `top_memory` bytes with `slots` slots
+    /// and solve (or fetch) the DP table for `mode`.
+    pub fn new(chain: &Chain, top_memory: u64, slots: usize, mode: Mode) -> Planner {
+        let dc = DiscreteChain::new(chain, top_memory, slots);
+        let table = table_for(&dc, mode);
+        Planner { dc, table, mode }
+    }
+
+    /// The byte budget the discretization was built against (top of the
+    /// representable range).
+    pub fn top_memory(&self) -> u64 {
+        self.dc.top_bytes
+    }
+
+    /// The solver model this planner was built for.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Bytes per memory slot (`top_memory / slots`) — the granularity at
+    /// which budgets are distinguished.
+    pub fn slot_bytes(&self) -> f64 {
+        self.dc.slot_bytes
+    }
+
+    /// The shared DP table (one `Arc` per distinct discretized chain).
+    pub fn table(&self) -> &Arc<DpTable> {
+        &self.table
+    }
+
+    /// The discretized chain the table was filled for.
+    pub fn discrete(&self) -> &DiscreteChain {
+        &self.dc
+    }
+
+    fn strategy(&self) -> StrategyKind {
+        match self.mode {
+            Mode::Full => StrategyKind::Optimal,
+            Mode::AdRevolve => StrategyKind::Revolve,
+        }
+    }
+
+    /// Top-level DP slot budget for a byte budget: whole slots in `memory`
+    /// minus the always-resident chain input `ω_a^0` (Algorithm 1's `m0`).
+    fn dp_budget(&self, memory: u64) -> Option<u32> {
+        self.dc.budget_slots(memory).checked_sub(self.dc.wa_s(0))
+    }
+
+    /// Optimal predicted time at `memory` bytes, without reconstructing
+    /// the schedule. `None` if no persistent schedule fits.
+    pub fn cost_at(&self, memory: u64) -> Option<f64> {
+        let b = self.dp_budget(memory)?;
+        let cost = self.table.cost(1, self.dc.len(), b);
+        cost.is_finite().then_some(cost)
+    }
+
+    /// The optimal persistent schedule within `memory` bytes (Algorithm 2
+    /// reconstruction from the shared table). `None` if infeasible.
+    pub fn schedule_at(&self, memory: u64) -> Option<Schedule> {
+        let b = self.dp_budget(memory)?;
+        let n = self.dc.len();
+        let cost = self.table.cost(1, n, b);
+        if !cost.is_finite() {
+            return None;
+        }
+        let mut ops = Vec::new();
+        reconstruct(&self.table, &self.dc, 1, n, b, &mut ops);
+        Some(Schedule::new(ops, self.strategy(), cost))
+    }
+
+    /// The byte-budget feasibility interval `[min, top_memory]` this
+    /// planner can serve: `min` is the smallest budget whose slot count
+    /// admits a persistent schedule (found by binary search — the DP cost
+    /// is monotone along the slot axis). `None` when even the top budget
+    /// is infeasible.
+    pub fn feasible_range(&self) -> Option<(u64, u64)> {
+        let n = self.dc.len();
+        let wa0 = self.dc.wa_s(0);
+        let bmax = (self.dc.slots as u32).checked_sub(wa0)?;
+        if !self.table.cost(1, n, bmax).is_finite() {
+            return None;
+        }
+        let (mut lo, mut hi) = (0u32, bmax);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.table.cost(1, n, mid).is_finite() {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        // smallest byte budget that rounds down to `lo + wa0` whole slots
+        let k = lo + wa0;
+        let mut bytes = (k as f64 * self.dc.slot_bytes).ceil() as u64;
+        while self.dc.budget_slots(bytes) < k {
+            bytes += 1;
+        }
+        Some((bytes.min(self.dc.top_bytes), self.dc.top_bytes))
+    }
+
+    /// Schedules for a whole budget sweep, reconstructed in parallel from
+    /// the shared table (scoped threads; no rayon in the offline build).
+    /// `out[i]` corresponds to `budgets[i]` and equals
+    /// `self.schedule_at(budgets[i])`.
+    pub fn sweep(&self, budgets: &[u64]) -> Vec<Option<Schedule>> {
+        let workers =
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        if budgets.len() < 2 || workers < 2 {
+            return budgets.iter().map(|&m| self.schedule_at(m)).collect();
+        }
+        let chunk = budgets.len().div_ceil(workers);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = budgets
+                .chunks(chunk)
+                .map(|part| {
+                    scope.spawn(move || {
+                        part.iter().map(|&m| self.schedule_at(m)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprint-keyed LRU cache: discretized-chain content hash → Arc<DpTable>.
+// ---------------------------------------------------------------------------
+
+/// Per-entry size cap. Sized so the figure harness's largest tables
+/// (ResNet-1001 at S = 300, ~174 MB) are retained — repeated panels of
+/// the same chain across figures are where caching saves whole minutes —
+/// while the S = 500 ResNet-1001 worst case (~290 MB) is served but not
+/// kept.
+const CACHE_MAX_ENTRY_BYTES: usize = 192 << 20;
+/// Total cache byte budget (LRU eviction). Big enough for both modes'
+/// tables of one huge chain plus a working set of small ones; only ever
+/// reached by processes that actually solve such chains, and reclaimable
+/// via [`clear_cache`].
+const CACHE_MAX_TOTAL_BYTES: usize = 384 << 20;
+/// Entry-count backstop so pathological floods of tiny chains stay bounded.
+const CACHE_MAX_ENTRIES: usize = 64;
+
+struct CacheEntry {
+    key: u64,
+    bytes: usize,
+    table: Arc<DpTable>,
+}
+
+struct TableCache {
+    /// LRU order: least recently used first.
+    entries: Vec<CacheEntry>,
+    total_bytes: usize,
+    lookups: u64,
+    hits: u64,
+    builds: u64,
+}
+
+static CACHE: Mutex<TableCache> = Mutex::new(TableCache {
+    entries: Vec::new(),
+    total_bytes: 0,
+    lookups: 0,
+    hits: 0,
+    builds: 0,
+});
+
+fn lock_cache() -> std::sync::MutexGuard<'static, TableCache> {
+    // the critical sections below never panic; recover anyway if a
+    // panicking test poisoned the lock
+    CACHE.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Content hash of everything the DP consumes: discretized sizes, exact
+/// time bits, the slot axis, and the solver mode. Two chains with equal
+/// fingerprints produce identical tables (64-bit collisions are treated
+/// as astronomically unlikely, as usual for content-addressed caches).
+fn fingerprint(dc: &DiscreteChain, mode: Mode) -> u64 {
+    let mut h = DefaultHasher::new();
+    dc.slots.hash(&mut h);
+    matches!(mode, Mode::Full).hash(&mut h);
+    dc.wa.hash(&mut h);
+    dc.wd.hash(&mut h);
+    dc.wabar.hash(&mut h);
+    dc.of.hash(&mut h);
+    dc.ob.hash(&mut h);
+    for u in dc.uf.iter().chain(dc.ub.iter()) {
+        u.to_bits().hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Fetch the table for a discretized chain, filling it on a cache miss.
+fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
+    let key = fingerprint(dc, mode);
+    {
+        let mut cache = lock_cache();
+        cache.lookups += 1;
+        if let Some(pos) = cache.entries.iter().position(|e| e.key == key) {
+            cache.hits += 1;
+            let entry = cache.entries.remove(pos);
+            let table = entry.table.clone();
+            cache.entries.push(entry); // most recently used at the back
+            return table;
+        }
+    }
+    // Fill outside the lock: two threads may duplicate a build on a racing
+    // miss, but a long DP fill never blocks lookups for other chains.
+    let table = Arc::new(solve_table(dc, mode));
+    let bytes = table.mem_bytes();
+    let mut cache = lock_cache();
+    cache.builds += 1;
+    if bytes <= CACHE_MAX_ENTRY_BYTES && !cache.entries.iter().any(|e| e.key == key) {
+        cache.entries.push(CacheEntry { key, bytes, table: table.clone() });
+        cache.total_bytes += bytes;
+        while cache.entries.len() > CACHE_MAX_ENTRIES
+            || cache.total_bytes > CACHE_MAX_TOTAL_BYTES
+        {
+            let evicted = cache.entries.remove(0);
+            cache.total_bytes -= evicted.bytes;
+        }
+    }
+    table
+}
+
+/// Counters of the shared planner table cache (monotone since process
+/// start, except `entries`/`bytes` which reflect current residency).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannerCacheStats {
+    /// Table requests (one per `Planner::new` / `solve` call).
+    pub lookups: u64,
+    /// Requests served without running the DP.
+    pub hits: u64,
+    /// DP table fills (`lookups - hits`, modulo racing misses).
+    pub builds: u64,
+    /// Tables currently retained.
+    pub entries: usize,
+    /// Bytes currently retained.
+    pub bytes: usize,
+}
+
+/// Snapshot the planner cache counters (shared process-wide).
+pub fn cache_stats() -> PlannerCacheStats {
+    let cache = lock_cache();
+    PlannerCacheStats {
+        lookups: cache.lookups,
+        hits: cache.hits,
+        builds: cache.builds,
+        entries: cache.entries.len(),
+        bytes: cache.total_bytes,
+    }
+}
+
+/// Drop all retained tables and zero the counters (benchmark hygiene: the
+/// baseline arm of a solve-vs-planner comparison must not hit the cache).
+pub fn clear_cache() {
+    let mut cache = lock_cache();
+    cache.entries.clear();
+    cache.total_bytes = 0;
+    cache.lookups = 0;
+    cache.hits = 0;
+    cache.builds = 0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::solve;
+    use super::*;
+    use crate::chain::Stage;
+
+    fn toy(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        Chain::new("toy", stages, 100)
+    }
+
+    /// Integer slot width so planner and per-budget solves share an exact
+    /// discretization grid (see tests/planner_properties.rs).
+    fn aligned_top(chain: &Chain, slots: usize) -> u64 {
+        (chain.store_all_memory() + chain.wa0).div_ceil(slots as u64) * slots as u64
+    }
+
+    #[test]
+    fn matches_fresh_solve_on_the_slot_grid() {
+        let c = toy(7);
+        const S: usize = 120;
+        let top = aligned_top(&c, S);
+        let slot = top / S as u64;
+        let planner = Planner::new(&c, top, S, Mode::Full);
+        for k in [S / 5, S / 3, S / 2, 3 * S / 4, S] {
+            let m = k as u64 * slot;
+            let fresh = solve(&c, m, k, Mode::Full);
+            let shared = planner.schedule_at(m);
+            match (fresh, shared) {
+                (None, None) => {}
+                (Some(f), Some(p)) => {
+                    assert_eq!(f.predicted_time, p.predicted_time, "k={k}");
+                    assert_eq!(f.ops, p.ops, "k={k}");
+                }
+                (f, p) => panic!(
+                    "k={k}: feasibility disagrees (fresh {:?}, planner {:?})",
+                    f.is_some(),
+                    p.is_some()
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_builds_share_one_table() {
+        let c = toy(9);
+        let top = c.store_all_memory() + c.wa0;
+        let before = cache_stats();
+        let a = Planner::new(&c, top, 137, Mode::Full);
+        let b = Planner::new(&c, top, 137, Mode::Full);
+        // Sharing is the expected fast path. The cache is process-global,
+        // so concurrently-running tests can in principle evict `a`'s entry
+        // between the two builds (needs 64+ insertions in the window);
+        // accept that rare race, but the rebuilt table must then be
+        // interchangeable, and the miss must show up in the counters.
+        if Arc::ptr_eq(a.table(), b.table()) {
+            let after = cache_stats();
+            assert!(after.hits > before.hits, "a shared table must count as a hit");
+        } else {
+            let after = cache_stats();
+            assert!(
+                after.builds >= before.builds + 2,
+                "non-shared rebuild without eviction churn: the cache never hit"
+            );
+            assert_eq!(
+                a.schedule_at(top).map(|s| s.ops),
+                b.schedule_at(top).map(|s| s.ops),
+                "rebuilt table must reconstruct identically"
+            );
+        }
+        // a different mode is always a different table
+        let r = Planner::new(&c, top, 137, Mode::AdRevolve);
+        assert!(!Arc::ptr_eq(a.table(), r.table()));
+    }
+
+    #[test]
+    fn feasible_range_brackets_feasibility() {
+        let c = toy(8);
+        let top = c.store_all_memory() + c.wa0;
+        let planner = Planner::new(&c, top, 200, Mode::Full);
+        let (lo, hi) = planner.feasible_range().expect("roomy top must be feasible");
+        assert!(lo <= hi);
+        assert_eq!(hi, top);
+        assert!(planner.schedule_at(lo).is_some(), "min budget must be feasible");
+        if lo > 0 {
+            assert!(
+                planner.schedule_at(lo - 1).is_none(),
+                "one byte below the min budget must be infeasible"
+            );
+        }
+        assert!(planner.schedule_at(hi).is_some());
+    }
+
+    #[test]
+    fn sweep_equals_pointwise_schedule_at() {
+        let c = toy(10);
+        let top = c.store_all_memory() + c.wa0;
+        let planner = Planner::new(&c, top, 150, Mode::Full);
+        let budgets: Vec<u64> = (0..12).map(|i| top * (i + 1) / 12).collect();
+        let swept = planner.sweep(&budgets);
+        assert_eq!(swept.len(), budgets.len());
+        for (i, (&m, s)) in budgets.iter().zip(&swept).enumerate() {
+            let direct = planner.schedule_at(m);
+            assert_eq!(
+                s.as_ref().map(|x| x.ops.clone()),
+                direct.as_ref().map(|x| x.ops.clone()),
+                "budget #{i}"
+            );
+        }
+    }
+
+    #[test]
+    fn infeasible_when_input_exceeds_budget_slots() {
+        let c = toy(4);
+        let planner = Planner::new(&c, c.store_all_memory() + c.wa0, 100, Mode::Full);
+        assert!(planner.schedule_at(0).is_none());
+        assert!(planner.cost_at(0).is_none());
+    }
+}

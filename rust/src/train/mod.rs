@@ -17,8 +17,11 @@ use crate::util::Rng;
 
 /// A fixed synthetic dataset of `n_batches` (input, target) pairs.
 pub struct SyntheticData {
+    /// Per-batch input literals, shaped like the manifest's input.
     pub inputs: Vec<Literal>,
+    /// Per-batch regression targets `y = tanh(x · R)`, flat f32.
     pub targets: Vec<Vec<f32>>,
+    /// The `(B, T, D)` shape shared by all inputs.
     pub input_shape: Vec<usize>,
 }
 
@@ -71,17 +74,26 @@ impl SyntheticData {
 /// One logged training step.
 #[derive(Debug, Clone)]
 pub struct StepLog {
+    /// 0-based step index.
     pub step: usize,
+    /// Loss captured by the schedule's `Fall^{L+1}` op this step.
     pub loss: f32,
+    /// Wall-clock of the schedule replay, seconds.
     pub step_time_s: f64,
+    /// Peak bytes charged to the executor's memory ledger.
     pub peak_bytes: u64,
 }
 
 /// SGD trainer executing a fixed schedule each iteration.
 pub struct Trainer<'rt> {
+    /// The live executor holding parameters and the value store.
     pub exec: Executor<'rt>,
+    /// The checkpointing schedule replayed every iteration (from
+    /// [`crate::solver::Planner`] or any of the baseline builders).
     pub schedule: Schedule,
+    /// SGD learning rate.
     pub lr: f32,
+    /// Byte budget enforced by the ledger each step (`None` = unlimited).
     pub memory_limit: Option<u64>,
     loss_stage: usize,
 }

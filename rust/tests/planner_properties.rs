@@ -1,0 +1,190 @@
+//! Property tests for the `Planner`: solving the DP once at a sweep's top
+//! budget and reconstructing per budget must be *lossless* — every
+//! schedule it serves is identical (cost and ops) to a fresh per-budget
+//! `solve` on the same discretization grid, stays within its byte budget
+//! under the simulator, and the convenience queries (`sweep`,
+//! `feasible_range`, `cost_at`) agree with `schedule_at`.
+//!
+//! Grid alignment: a planner discretized against `top = S · c` bytes has
+//! integer slot width `c`, so the budget `m = k · c` maps to exactly `k`
+//! slots — and a fresh `solve(chain, m, k, mode)` uses the *same* slot
+//! width and a table that is the shared table's `m ≤ k` prefix. Equality
+//! is therefore exact (bit-for-bit costs, identical op sequences), not
+//! approximate.
+
+mod common;
+
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{solve, Mode, Planner};
+use common::{for_random_cases, random_budget, random_chain};
+
+/// Slot count used by the aligned-grid tests (small keeps the DP fast;
+/// exactness is what matters here).
+const S: usize = 96;
+
+/// Round the chain's roomy top budget up to a multiple of `S` so the slot
+/// width is an exact integer.
+fn aligned_top(chain: &chainckpt::Chain) -> u64 {
+    (chain.store_all_memory() + chain.wa0).div_ceil(S as u64) * S as u64
+}
+
+#[test]
+fn schedule_at_matches_fresh_solve_at_every_sweep_budget() {
+    for (mode, seed) in [(Mode::Full, 0x9A11), (Mode::AdRevolve, 0x9A12)] {
+        for_random_cases(30, seed, |rng| {
+            let chain = random_chain(rng);
+            let top = aligned_top(&chain);
+            let slot = top / S as u64;
+            let planner = Planner::new(&chain, top, S, mode);
+            // every budget of a sweep over the planner's slot grid
+            for k in [S / 8, S / 5, S / 3, S / 2, 2 * S / 3, 7 * S / 8, S] {
+                let m = k as u64 * slot;
+                let fresh = solve(&chain, m, k, mode);
+                let shared = planner.schedule_at(m);
+                match (fresh, shared) {
+                    (None, None) => {}
+                    (Some(f), Some(p)) => {
+                        assert_eq!(
+                            f.predicted_time, p.predicted_time,
+                            "k={k}: shared-table cost must equal a fresh solve exactly"
+                        );
+                        assert_eq!(f.ops, p.ops, "k={k}: reconstruction must be identical");
+                        assert_eq!(
+                            Some(p.predicted_time),
+                            planner.cost_at(m),
+                            "cost_at must agree with schedule_at"
+                        );
+                        let rep = simulate(&chain, &p)
+                            .unwrap_or_else(|e| panic!("k={k}: invalid schedule: {e}"));
+                        assert!(
+                            rep.peak_bytes <= m,
+                            "k={k}: peak {} exceeds budget {m}",
+                            rep.peak_bytes
+                        );
+                        let rel = (rep.makespan - p.predicted_time).abs()
+                            / rep.makespan.max(1e-12);
+                        assert!(rel < 1e-9, "k={k}: claimed cost off by {rel}");
+                    }
+                    (f, p) => panic!(
+                        "k={k}: feasibility disagrees (fresh {:?}, planner {:?})",
+                        f.is_some(),
+                        p.is_some()
+                    ),
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn unaligned_budgets_stay_within_budget_and_monotone() {
+    // Budgets that do not land on the slot grid: the planner rounds them
+    // down to whole slots, so the schedule must still fit in bytes, and
+    // cost must be non-increasing along any ascending budget sweep.
+    for_random_cases(30, 0xB1D6E7, |rng| {
+        let chain = random_chain(rng);
+        let top = chain.store_all_memory() + chain.wa0;
+        let planner = Planner::new(&chain, top, 150, Mode::Full);
+        let budgets: Vec<u64> = (1..=17u64).map(|i| top * i / 17).collect();
+        let mut last = f64::INFINITY;
+        for (&m, sched) in budgets.iter().zip(planner.sweep(&budgets)) {
+            let Some(sched) = sched else { continue };
+            let rep = simulate(&chain, &sched).expect("valid schedule");
+            assert!(rep.peak_bytes <= m, "peak {} > budget {m}", rep.peak_bytes);
+            assert!(
+                sched.predicted_time <= last * (1.0 + 1e-12),
+                "more memory made the plan slower: {last} -> {}",
+                sched.predicted_time
+            );
+            last = sched.predicted_time;
+        }
+        assert!(last.is_finite(), "the top budget must be feasible");
+    });
+}
+
+#[test]
+fn sweep_equals_pointwise_queries() {
+    for_random_cases(20, 0x53EE9, |rng| {
+        let chain = random_chain(rng);
+        let top = chain.store_all_memory() + chain.wa0;
+        let planner = Planner::new(&chain, top, 120, Mode::Full);
+        let budgets: Vec<u64> = (0..9).map(|_| random_budget(rng, &chain).min(top)).collect();
+        let swept = planner.sweep(&budgets);
+        assert_eq!(swept.len(), budgets.len());
+        for (&m, s) in budgets.iter().zip(&swept) {
+            let direct = planner.schedule_at(m);
+            match (s, &direct) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.predicted_time, b.predicted_time);
+                    assert_eq!(a.ops, b.ops);
+                }
+                _ => panic!("sweep and schedule_at disagree at m={m}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn feasible_range_is_tight() {
+    for_random_cases(25, 0xFEA51B, |rng| {
+        let chain = random_chain(rng);
+        let top = chain.store_all_memory() + chain.wa0;
+        let planner = Planner::new(&chain, top, 130, Mode::Full);
+        let (lo, hi) = planner.feasible_range().expect("roomy top must be feasible");
+        assert!(lo <= hi);
+        assert_eq!(hi, top);
+        assert!(planner.schedule_at(lo).is_some(), "min of the range must be feasible");
+        assert!(planner.schedule_at(hi).is_some(), "top of the range must be feasible");
+        if lo > 0 {
+            assert!(
+                planner.schedule_at(lo - 1).is_none(),
+                "one byte below the minimum must be infeasible"
+            );
+        }
+    });
+}
+
+#[test]
+fn solve_wrapper_is_planner_at_own_top() {
+    // `solve` is documented as a thin wrapper: same discretization, same
+    // table, same reconstruction as a planner built at the same budget.
+    for_random_cases(20, 0x501FE, |rng| {
+        let chain = random_chain(rng);
+        let m = random_budget(rng, &chain);
+        let via_solve = solve(&chain, m, 140, Mode::Full);
+        let via_planner = Planner::new(&chain, m, 140, Mode::Full).schedule_at(m);
+        match (via_solve, via_planner) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.predicted_time, b.predicted_time);
+                assert_eq!(a.ops, b.ops);
+            }
+            _ => panic!("solve and planner disagree at m={m}"),
+        }
+    });
+}
+
+#[test]
+fn revolve_planner_is_never_faster_than_full_planner() {
+    // the planner preserves the model hierarchy at every budget of a sweep
+    for_random_cases(15, 0x4E701, |rng| {
+        let chain = random_chain(rng);
+        let top = chain.store_all_memory() + chain.wa0;
+        let full = Planner::new(&chain, top, 110, Mode::Full);
+        let rev = Planner::new(&chain, top, 110, Mode::AdRevolve);
+        for i in 1..=6u64 {
+            let m = top * i / 6;
+            match (full.cost_at(m), rev.cost_at(m)) {
+                (Some(f), Some(r)) => assert!(
+                    f <= r * (1.0 + 1e-12),
+                    "m={m}: full {f} slower than revolve {r}"
+                ),
+                (None, Some(_)) => {
+                    panic!("m={m}: revolve feasible where the full model is not")
+                }
+                _ => {}
+            }
+        }
+    });
+}

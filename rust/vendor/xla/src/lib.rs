@@ -1,0 +1,192 @@
+//! Offline **stub** of the `xla` (PJRT) bindings this workspace compiles
+//! against when the real `xla_extension` toolchain is absent.
+//!
+//! What works: [`Literal`] is a real host-side f32 tensor (construction,
+//! reshape, extraction) — enough for the data-generation and parameter
+//! code paths. What doesn't: anything touching PJRT ([`PjRtClient::compile`],
+//! [`PjRtLoadedExecutable::execute`], [`HloModuleProto::from_text_file`])
+//! returns [`Error`] with an explanatory message, so `Runtime::load` fails
+//! fast and cleanly on machines without compiled artifacts or the real
+//! backend. Swapping this path dependency for the real `xla` crate
+//! re-enables the runtime/executor/train stack unchanged.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: a message explaining which PJRT feature is unavailable.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` with the stub [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT backend unavailable (offline stub `xla` crate — \
+         see rust/vendor/xla; install the real xla_extension bindings to run artifacts)"
+    ))
+}
+
+/// Element types extractable from a [`Literal`] (`f32` only in the stub).
+pub trait NativeType: Copy {
+    /// Convert from the stub's f32 storage.
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// A host-side tensor: flat f32 data plus dimensions (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-0 scalar literal.
+    pub fn scalar(x: f32) -> Literal {
+        Literal { data: vec![x], dims: Vec::new() }
+    }
+
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {:?} ({} elements)",
+                self.data.len(),
+                dims,
+                n
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Extract the flat element data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Number of elements.
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal into its parts. The stub never produces
+    /// tuples (they only come out of PJRT execution), so this always errors.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Stub of a parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse an HLO text file. Always errors in the stub (the artifacts it
+    /// would parse are only useful with a real PJRT backend anyway).
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Stub of an XLA computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stub of a device buffer returned by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Fetch the buffer to host. Always errors in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Stub of a compiled executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments. Always errors in the stub.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Stub of a PJRT client. Construction succeeds (so purely host-side code
+/// keeps working); compilation errors.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create the CPU client (a no-op handle in the stub).
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Compile a computation. Always errors in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(Literal::scalar(7.0).element_count(), 1);
+    }
+
+    #[test]
+    fn pjrt_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        let err = client.compile(&XlaComputation::from_proto(&HloModuleProto)).unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x/y.hlo").is_err());
+        assert!(PjRtLoadedExecutable.execute::<&Literal>(&[]).is_err());
+    }
+}
