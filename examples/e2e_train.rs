@@ -1,21 +1,25 @@
 //! End-to-end validation driver (DESIGN.md §Experiment index, EXPERIMENTS.md
-//! §E2E): train the default transformer chain (≈3.3M params; `--artifacts
-//! artifacts/wide` for the ≈100M-class geometry) for a few hundred SGD
-//! steps on synthetic regression data, executing the *optimal
-//! checkpointing schedule* under a real memory budget, and log the loss
-//! curve. Proves all layers compose: Pallas kernels → JAX stages → HLO
-//! artifacts → PJRT runtime → DP schedule → ledger-enforced execution →
-//! SGD — with Python nowhere on the path.
+//! §E2E): train the default transformer chain (≈3.2M params; `--preset
+//! wide` for the ≈100M-class geometry) for a few hundred SGD steps on
+//! synthetic regression data, executing the *optimal checkpointing
+//! schedule* under a real memory budget, and log the loss curve. Proves
+//! all layers compose: stage kernels → runtime → DP schedule →
+//! ledger-enforced execution → SGD — with Python nowhere on the path.
+//!
+//! Runs on the native backend by default; pass `--backend pjrt
+//! --artifacts artifacts/default` to drive AOT-compiled HLO artifacts
+//! through the identical generic loop.
 //!
 //! ```sh
 //! cargo run --release --example e2e_train -- \
-//!     [--artifacts artifacts/default] [--steps 300] [--memory-frac 0.6]
-//!     [--lr 0.05] [--out results/e2e_loss.csv]
+//!     [--backend native|pjrt] [--preset default] [--artifacts artifacts/default]
+//!     [--steps 300] [--memory-frac 0.6] [--lr 0.05] [--out results/e2e_loss.csv]
 //! ```
 
 use std::io::Write as _;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use chainckpt::backend::Backend;
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
@@ -25,22 +29,37 @@ use chainckpt::util::{fmt_bytes, Args};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let dir = args.str("artifacts", "artifacts/default");
+    match args.str("backend", "native").as_str() {
+        "native" => {
+            let preset = args.str("preset", "default");
+            let rt = Runtime::native_preset(&preset)?;
+            println!("built native preset '{preset}'");
+            run(&rt, &args)
+        }
+        "pjrt" => {
+            let dir = args.str("artifacts", "artifacts/default");
+            let rt = Runtime::load(&dir).context("run `make artifacts` first")?;
+            println!("loaded artifacts from {dir}");
+            run(&rt, &args)
+        }
+        other => bail!("--backend {other}: use native|pjrt"),
+    }
+}
+
+fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let steps = args.usize("steps", 300);
     let frac = args.f64("memory-frac", 0.6);
     let lr = args.f64("lr", 0.05) as f32;
     let out = args.str("out", "results/e2e_loss.csv");
 
-    let rt = Runtime::load(&dir).context("run `make artifacts` first")?;
     println!(
-        "loaded {} ({} stages, {} params, input {:?})",
-        dir,
+        "chain: {} stages, {} params, input {:?}",
         rt.manifest.stages.len(),
         rt.manifest.param_count,
         rt.manifest.input_shape
     );
 
-    let chain = measured_chain(&rt, EstimatorConfig::default())?;
+    let chain = measured_chain(rt, EstimatorConfig::default())?;
     let store_all = chain.store_all_memory();
     let budget = (store_all as f64 * frac) as u64;
     println!(
@@ -65,8 +84,8 @@ fn main() -> Result<()> {
         fmt_bytes(base.peak_bytes)
     );
 
-    let data = SyntheticData::generate(&rt, 16, 7)?;
-    let mut trainer = Trainer::new(&rt, schedule, lr, Some(budget), 42)?;
+    let data = SyntheticData::generate(&rt.manifest, 16, 7)?;
+    let mut trainer = Trainer::new(rt, schedule, lr, Some(budget), 42)?;
     let t0 = std::time::Instant::now();
     let logs = trainer.train(&data, steps, steps.div_euclid(20).max(1), |log| {
         println!(

@@ -1,10 +1,13 @@
-//! Quickstart: the whole system in ~60 lines.
+//! Quickstart: the whole system in ~60 lines — no artifacts needed.
 //!
-//! 1. Load the AOT-compiled chain (`make artifacts` builds it once).
+//! 1. Build the quickstart chain in-process on the native backend (the
+//!    PJRT path over AOT artifacts is the same code, generic over the
+//!    engine — see `--backend pjrt` on the CLI).
 //! 2. Measure per-stage costs (paper §5.1).
 //! 3. Solve for the optimal checkpointing schedule under a memory budget
 //!    (paper §4.2, Theorem 1).
-//! 4. Train a few SGD steps executing that schedule — Python never runs.
+//! 4. Train a few SGD steps executing that schedule — real forward and
+//!    backward math, Python never runs.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -19,8 +22,8 @@ use chainckpt::train::{SyntheticData, Trainer};
 use chainckpt::util::fmt_bytes;
 
 fn main() -> Result<()> {
-    // 1. compiled artifacts → PJRT executables
-    let rt = Runtime::load("artifacts/quickstart")?;
+    // 1. in-process chain → compiled native stages
+    let rt = Runtime::native_preset("quickstart")?;
     println!(
         "chain: {} stages, {} params",
         rt.manifest.stages.len(),
@@ -51,7 +54,7 @@ fn main() -> Result<()> {
     println!("ops: {}", schedule.compact());
 
     // 4. train a few steps under the memory ledger
-    let data = SyntheticData::generate(&rt, 4, 7)?;
+    let data = SyntheticData::generate(&rt.manifest, 4, 7)?;
     let mut trainer = Trainer::new(&rt, schedule, 0.1, Some(budget), 42)?;
     trainer.train(&data, 20, 5, |log| {
         println!(

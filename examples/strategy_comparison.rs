@@ -1,20 +1,22 @@
 //! Measured counterpart of the paper's Figure 3: run all four strategies
-//! on the *real* compiled chain and report wall-clock throughput against
+//! on a *real* executing chain and report wall-clock throughput against
 //! ledger peak memory. (The figure harness `chainckpt figures` uses the
-//! V100 roofline simulator; this example uses actual CPU-PJRT execution.)
+//! V100 roofline simulator; this example uses actual execution — the
+//! native engine by default, CPU-PJRT with `--backend pjrt`.)
 //!
 //! ```sh
 //! cargo run --release --example strategy_comparison -- \
-//!     [--artifacts artifacts/default] [--points 5] [--reps 3] \
-//!     [--out results/measured_fig3.csv]
+//!     [--backend native|pjrt] [--preset default] [--artifacts artifacts/default]
+//!     [--points 5] [--reps 3] [--out results/measured_fig3.csv]
 //! ```
 
 use std::io::Write as _;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
+use chainckpt::backend::{Backend, Tensor};
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::executor::Executor;
-use chainckpt::runtime::{lit_from_vec, Runtime};
+use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{
     paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, Schedule,
@@ -32,25 +34,37 @@ struct Row {
 
 fn main() -> Result<()> {
     let args = Args::from_env();
-    let dir = args.str("artifacts", "artifacts/default");
+    match args.str("backend", "native").as_str() {
+        "native" => {
+            let preset = args.str("preset", "default");
+            run(&Runtime::native_preset(&preset)?, &args)
+        }
+        "pjrt" => {
+            let dir = args.str("artifacts", "artifacts/default");
+            run(&Runtime::load(&dir).context("run `make artifacts` first")?, &args)
+        }
+        other => bail!("--backend {other}: use native|pjrt"),
+    }
+}
+
+fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let points = args.usize("points", 5);
     let reps = args.usize("reps", 3);
     let out = args.str("out", "results/measured_fig3.csv");
 
-    let rt = Runtime::load(&dir).context("run `make artifacts` first")?;
-    let chain = measured_chain(&rt, EstimatorConfig::default())?;
+    let chain = measured_chain(rt, EstimatorConfig::default())?;
     let batch = rt.manifest.input_shape[0] as u64;
     let n = rt.manifest.stages.len();
 
     let mut rng = Rng::new(17);
     let numel: usize = rt.manifest.input_shape.iter().product();
-    let input = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape)?;
+    let input = B::Tensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape)?;
     let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
 
     let mut rows: Vec<Row> = Vec::new();
     let mut measure = |strategy: &'static str, param: String, sched: &Schedule| -> Result<()> {
         let sim = simulate(&chain, sched).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let mut ex = Executor::new(&rt, 1)?;
+        let mut ex = Executor::new(rt, 1)?;
         ex.set_data_param(n - 1, &target)?;
         let mut times = Vec::new();
         for r in 0..=reps {

@@ -1,52 +1,67 @@
-//! Executor benchmark: end-to-end iteration throughput of the real
-//! compiled chain per strategy, plus the L3 replay *overhead* — the time
-//! the coordinator spends outside PJRT compute (value store, ledger,
-//! literal plumbing). DESIGN.md §Perf targets replay overhead < 5 % of
+//! Executor benchmark: end-to-end iteration throughput of a really
+//! executing chain per strategy, plus the L3 replay *overhead* — the time
+//! the coordinator spends outside stage compute (value store, ledger,
+//! tensor plumbing). DESIGN.md §Perf targets replay overhead < 5 % of
 //! step time.
 //!
+//! Runs the native engine by default (a real hot path on any machine);
+//! `--backend pjrt --artifacts DIR` measures the PJRT build instead.
+//!
 //! ```sh
-//! cargo bench --bench bench_executor -- [--artifacts artifacts/quickstart] [--reps 5]
+//! cargo bench --bench bench_executor -- [--preset quickstart] [--reps 5]
 //! ```
 
 use std::time::Instant;
 
+use chainckpt::backend::{Backend, Tensor};
 use chainckpt::estimator::{estimate, measured_chain, EstimatorConfig};
 use chainckpt::executor::Executor;
-use chainckpt::runtime::{lit_from_vec, Runtime};
+use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{periodic_schedule, solve, store_all_schedule, Mode, Schedule};
 use chainckpt::util::{fmt_bytes, median, Args, Rng};
 
 fn main() {
     let args = Args::from_env();
-    let dir = args.str("artifacts", "artifacts/quickstart");
-    let reps = args.usize("reps", 5);
-
-    let rt = match Runtime::load(&dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("skipping executor bench: {e:#} (run `make artifacts`)");
-            return;
+    match args.str("backend", "native").as_str() {
+        "native" => {
+            let preset = args.str("preset", "quickstart");
+            let rt = Runtime::native_preset(&preset).expect("building native preset");
+            bench(&rt, &args);
         }
-    };
+        "pjrt" => {
+            let dir = args.str("artifacts", "artifacts/quickstart");
+            match Runtime::load(&dir) {
+                Ok(rt) => bench(&rt, &args),
+                Err(e) => eprintln!("skipping pjrt executor bench: {e:#} (run `make artifacts`)"),
+            }
+        }
+        other => {
+            eprintln!("--backend {other}: use native|pjrt");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
+    let reps = args.usize("reps", 5);
     let cfg = EstimatorConfig::default();
-    let chain = measured_chain(&rt, cfg).unwrap();
+    let chain = measured_chain(rt, cfg).unwrap();
     let n = rt.manifest.stages.len();
     let batch = rt.manifest.input_shape[0] as u64;
 
     let mut rng = Rng::new(9);
     let numel: usize = rt.manifest.input_shape.iter().product();
-    let input = lit_from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let input = B::Tensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
     let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
 
-    // pure-compute floor: Σ median entry times (what PJRT alone costs)
-    let timings = estimate(&rt, cfg).unwrap();
-    let compute_floor_ms: f64 =
-        timings.iter().map(|t| (t.uf_us + t.ub_us) / 1e3).sum();
+    // pure-compute floor: Σ median entry times (what the stages alone cost)
+    let timings = estimate(rt, cfg).unwrap();
+    let compute_floor_ms: f64 = timings.iter().map(|t| (t.uf_us + t.ub_us) / 1e3).sum();
 
     let run = |name: &str, sched: &Schedule| {
         let sim = simulate(&chain, sched).unwrap();
-        let mut ex = Executor::new(&rt, 1).unwrap();
+        let mut ex = Executor::new(rt, 1).unwrap();
         ex.set_data_param(n - 1, &target).unwrap();
         let mut times = Vec::new();
         for r in 0..=reps {
@@ -86,7 +101,11 @@ fn main() {
         (t, overhead_pct)
     };
 
-    println!("chain {} — compute floor {compute_floor_ms:.2} ms/iter", chain.name);
+    println!(
+        "[{}] chain {} — compute floor {compute_floor_ms:.2} ms/iter",
+        rt.backend.name(),
+        chain.name
+    );
     let (_, ov1) = run("pytorch", &store_all_schedule(&chain));
     run("sequential-2", &periodic_schedule(&chain, 2));
     run("sequential-4", &periodic_schedule(&chain, 4));

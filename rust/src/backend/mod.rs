@@ -1,0 +1,126 @@
+//! Tensor-engine abstraction: the seam between schedule replay and the
+//! backend that actually computes forward/backward math.
+//!
+//! The paper's processing phase is engine-agnostic: it replays an op
+//! sequence (`F∅`/`Fck`/`Fall`/`B`, Table 1) against *some* store of live
+//! tensors. This module captures exactly what that replay needs from an
+//! engine — nothing more — so [`crate::runtime`], [`crate::executor`] and
+//! [`crate::train`] are generic over the backend and never name a concrete
+//! tensor type:
+//!
+//! * [`Tensor`] — a host-visible f32 tensor: shaped construction from and
+//!   extraction to flat `Vec<f32>` (what parameter init, data generation
+//!   and gradient collection need).
+//! * [`StageExecutable`] — one compiled stage signature with the three
+//!   entry points of the manifest contract (`fwd`, `fwd_all`, `bwd`),
+//!   taking positional arguments in manifest order and returning the
+//!   decomposed output tuple.
+//! * [`Backend`] — compiles a manifest signature into a
+//!   [`StageExecutable`]; one value of this type is the engine handle the
+//!   [`crate::runtime::Runtime`] owns.
+//!
+//! Two implementations ship:
+//!
+//! * [`native`] — a pure-Rust f32 engine with hand-written forward and
+//!   backward kernels for the manifest's stage kinds (`dense`,
+//!   `layernorm`, `mlp`, `attn`, `loss`). Runs everywhere, no artifacts
+//!   or external toolchain needed; manifests can be generated in-process
+//!   by [`native::presets`].
+//! * [`pjrt`] — the original XLA/PJRT path over AOT-compiled HLO-text
+//!   artifacts (`python/compile/aot.py`). Everything `xla`-typed lives
+//!   under this module; with the vendored stub crate it fails fast with
+//!   an explanatory error.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::{NativeBackend, NativeTensor};
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+use crate::chain::manifest::Manifest;
+
+/// Entry points every stage signature exposes (the manifest contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Entry {
+    /// `(θ…, a_in) → (a_out,)` — used by both `F∅` and `Fck`.
+    Fwd,
+    /// `(θ…, a_in) → (a_out, ā-extras…)` — `Fall`.
+    FwdAll,
+    /// `(θ…, a_in, ā…, δ_out) → (δ_in, ∂θ…)` — `B`.
+    Bwd,
+}
+
+impl Entry {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Entry::Fwd => "fwd",
+            Entry::FwdAll => "fwd_all",
+            Entry::Bwd => "bwd",
+        }
+    }
+}
+
+/// A host-visible f32 tensor owned by a backend.
+///
+/// The replay loop passes `&T` references and never inspects elements;
+/// the flat-vector conversions exist for the edges of the system
+/// (parameter init, synthetic data, gradient collection, loss readout).
+pub trait Tensor: Clone + std::fmt::Debug + Sized {
+    /// Shaped construction from a flat row-major vector. An empty shape
+    /// means a rank-0 scalar (one element).
+    fn from_vec(data: &[f32], shape: &[usize]) -> Result<Self>;
+
+    /// Rank-0 scalar.
+    fn scalar(x: f32) -> Self;
+
+    /// Zero-filled tensor of the given shape.
+    fn zeros(shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        Self::from_vec(&vec![0.0; n], shape)
+    }
+
+    /// Extract the contents as a flat row-major vector.
+    fn to_vec(&self) -> Result<Vec<f32>>;
+
+    /// Number of elements.
+    fn element_count(&self) -> usize;
+}
+
+/// One compiled stage signature: the three manifest entry points over the
+/// backend's tensor type. Arguments are positional in manifest order; the
+/// returned vector is the decomposed output tuple.
+pub trait StageExecutable<T: Tensor> {
+    /// `(θ…, a_in) → [a_out]`.
+    fn fwd(&self, args: &[&T]) -> Result<Vec<T>>;
+
+    /// `(θ…, a_in) → [a_out, ā-extras…]`.
+    fn fwd_all(&self, args: &[&T]) -> Result<Vec<T>>;
+
+    /// `(θ…, a_in, ā…, δ_out) → [δ_in, ∂θ…]`.
+    fn bwd(&self, args: &[&T]) -> Result<Vec<T>>;
+
+    /// Dispatch by [`Entry`] (estimator / generic callers).
+    fn entry(&self, entry: Entry, args: &[&T]) -> Result<Vec<T>> {
+        match entry {
+            Entry::Fwd => self.fwd(args),
+            Entry::FwdAll => self.fwd_all(args),
+            Entry::Bwd => self.bwd(args),
+        }
+    }
+}
+
+/// A tensor engine: compiles manifest signatures into executables.
+pub trait Backend {
+    type Tensor: Tensor;
+    type Stage: StageExecutable<Self::Tensor>;
+
+    /// Short identifier (`"native"`, `"pjrt"`) for logs and errors.
+    fn name(&self) -> &'static str;
+
+    /// Compile one signature of the manifest. Called once per distinct
+    /// signature by [`crate::runtime::Runtime`] — the paper's "computed
+    /// once before training" phase.
+    fn compile(&self, manifest: &Manifest, sig: &str) -> Result<Self::Stage>;
+}

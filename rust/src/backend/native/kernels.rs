@@ -1,0 +1,297 @@
+//! Hand-written f32 CPU kernels backing the native backend's stages.
+//!
+//! These are the numeric twins of `python/compile/kernels/ref.py`: the
+//! same tanh-approximation GELU, the same ε = 1e-5 layernorm returning
+//! `(x̂, rstd)`, the same numerically-stable softmax — so a manifest
+//! executes to the same values on either backend (up to f32 accumulation
+//! order). Everything operates on flat row-major slices with explicit
+//! dimensions; shapes are the caller's contract.
+//!
+//! The matmul is cache-blocked over the inner (k) dimension: a 64-row
+//! panel of `B` stays hot in L2 while rows of `A`/`C` stream through it.
+//! [`matmul_acc`] is shared by the dense/attention stage kernels *and*
+//! the synthetic-data teacher in [`crate::train`].
+
+/// Panel height of the blocked matmul (rows of `B` kept hot per pass).
+pub const MM_BLOCK: usize = 64;
+
+/// `C = A·B` with `A: (m, k)`, `B: (k, n)`, both row-major.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    matmul_acc(a, b, &mut out, m, k, n);
+    out
+}
+
+/// `C += A·B` — the cache-blocked inner loop. Panels of `MM_BLOCK` rows
+/// of `B` are reused across every row of `A`; the innermost loop is a
+/// unit-stride axpy over a row of `C`, which the compiler vectorizes.
+pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: A is not (m, k)");
+    assert_eq!(b.len(), k * n, "matmul: B is not (k, n)");
+    assert_eq!(out.len(), m * n, "matmul: C is not (m, n)");
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + MM_BLOCK).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                let brow = &b[kk * n..kk * n + n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Row-major transpose: `x: (rows, cols)` → `(cols, rows)`.
+///
+/// The gradient matmuls (`Aᵀ·B`, `A·Bᵀ`) are expressed as an explicit
+/// transpose followed by [`matmul`], so every contraction goes through
+/// the one blocked kernel.
+pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), rows * cols, "transpose: bad shape");
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = x[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Add a broadcast row bias in place: `x: (m, n) += bias: (n,)`.
+pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(bias.len(), n);
+    for r in 0..m {
+        for (v, &b) in x[r * n..(r + 1) * n].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Column sums: `x: (m, n)` → `(n,)` (bias gradients).
+pub fn col_sum(x: &[f32], m: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * n);
+    let mut out = vec![0.0f32; n];
+    for r in 0..m {
+        for (o, &v) in out.iter_mut().zip(&x[r * n..(r + 1) * n]) {
+            *o += v;
+        }
+    }
+    out
+}
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_C: f32 = 0.044_715;
+
+/// tanh-approximation GELU (identical to the Pallas/jnp reference).
+pub fn gelu(z: f32) -> f32 {
+    0.5 * z * (1.0 + (SQRT_2_OVER_PI * (z + GELU_C * z * z * z)).tanh())
+}
+
+/// d gelu / dz for the tanh approximation.
+pub fn gelu_grad(z: f32) -> f32 {
+    let inner = SQRT_2_OVER_PI * (z + GELU_C * z * z * z);
+    let t = inner.tanh();
+    let dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * z * z);
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * dinner
+}
+
+/// Layernorm ε (matches `layernorm_ref`).
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layernorm over the last axis of `x: (m, d)`.
+///
+/// Returns `(x̂, rstd)` — the normalized rows and reciprocal stddev,
+/// exactly the tensors the backward pass consumes (and what `fwd_all`
+/// checkpoints).
+pub fn layernorm(x: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), m * d);
+    let mut xhat = vec![0.0f32; m * d];
+    let mut rstd = vec![0.0f32; m];
+    for r in 0..m {
+        let row = &x[r * d..(r + 1) * d];
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        for (o, &v) in xhat[r * d..(r + 1) * d].iter_mut().zip(row) {
+            *o = (v - mu) * rs;
+        }
+    }
+    (xhat, rstd)
+}
+
+/// Backward of `h = x̂·g + β` given `dh: (m, d)`.
+///
+/// Returns `(dx, dg, dβ)` with the same formulas as the hand-derived
+/// `_ln_bwd` in `python/compile/stages.py`.
+pub fn layernorm_bwd(
+    dh: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    m: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(dh.len(), m * d);
+    assert_eq!(xhat.len(), m * d);
+    assert_eq!(rstd.len(), m);
+    assert_eq!(g.len(), d);
+    let mut dx = vec![0.0f32; m * d];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    for r in 0..m {
+        let dhr = &dh[r * d..(r + 1) * d];
+        let xr = &xhat[r * d..(r + 1) * d];
+        let mut mean1 = 0.0f32;
+        let mut mean2 = 0.0f32;
+        for j in 0..d {
+            let dxhat = dhr[j] * g[j];
+            dg[j] += dhr[j] * xr[j];
+            db[j] += dhr[j];
+            mean1 += dxhat;
+            mean2 += dxhat * xr[j];
+        }
+        mean1 /= d as f32;
+        mean2 /= d as f32;
+        let rs = rstd[r];
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxhat = dhr[j] * g[j];
+            dxr[j] = rs * (dxhat - mean1 - xr[j] * mean2);
+        }
+    }
+    (dx, dg, db)
+}
+
+/// In-place numerically-stable softmax over each row of `s: (rows, cols)`.
+pub fn softmax_rows(s: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(s.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut s[r * cols..(r + 1) * cols];
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Softmax backward over rows: given probs `p` and upstream `dp`, returns
+/// `ds = p ⊙ (dp − Σ_col(dp ⊙ p))` (per row).
+pub fn softmax_rows_bwd(p: &[f32], dp: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(p.len(), rows * cols);
+    assert_eq!(dp.len(), rows * cols);
+    let mut ds = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let pr = &p[r * cols..(r + 1) * cols];
+        let dpr = &dp[r * cols..(r + 1) * cols];
+        let dot: f32 = pr.iter().zip(dpr).map(|(&a, &b)| a * b).sum();
+        let dsr = &mut ds[r * cols..(r + 1) * cols];
+        for j in 0..cols {
+            dsr[j] = pr[j] * (dpr[j] - dot);
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        let mut rng = crate::util::Rng::new(5);
+        // sizes straddling the block boundary
+        for (m, k, n) in [(3, 7, 5), (1, 64, 1), (9, 65, 33), (2, 130, 70)] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let got = matmul(&a, &b, m, k, n);
+            let want = naive_matmul(&a, &b, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let x: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let t = transpose(&x, 3, 4);
+        assert_eq!(t[0], 0.0);
+        assert_eq!(t[1], 4.0); // x[1][0]
+        assert_eq!(transpose(&t, 4, 3), x);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        for z in [-3.0f32, -0.7, 0.0, 0.4, 2.5] {
+            let eps = 1e-3;
+            let fd = (gelu(z + eps) - gelu(z - eps)) / (2.0 * eps);
+            let g = gelu_grad(z);
+            assert!((fd - g).abs() < 1e-3, "z={z}: fd {fd} vs {g}");
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_are_standardized() {
+        let mut rng = crate::util::Rng::new(9);
+        let (m, d) = (4, 32);
+        let x = rng.normal_vec(m * d);
+        let (xhat, rstd) = layernorm(&x, m, d);
+        for r in 0..m {
+            let row = &xhat[r * d..(r + 1) * d];
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            assert!(mu.abs() < 1e-5, "row {r} mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "row {r} var {var}");
+            assert!(rstd[r] > 0.0);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut s = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut s, 2, 3);
+        for r in 0..2 {
+            let sum: f32 = s[r * 3..(r + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(s[r * 3..(r + 1) * 3].iter().all(|&v| v > 0.0));
+        }
+        // monotone in the logits
+        assert!(s[2] > s[1] && s[1] > s[0]);
+    }
+
+    #[test]
+    fn col_sum_and_bias() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0], 2, 2);
+        assert_eq!(x, vec![11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(col_sum(&x, 2, 2), vec![24.0, 46.0]);
+    }
+}

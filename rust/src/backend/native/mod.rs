@@ -1,0 +1,101 @@
+//! Pure-Rust tensor engine: executes manifest chains with hand-written
+//! f32 forward/backward kernels — no PJRT, no Python, no AOT artifacts.
+//!
+//! The engine's unit of compilation is a manifest signature:
+//! [`Backend::compile`] resolves a [`SignatureSpec`] of kind `dense` /
+//! `layernorm` / `mlp` / `attn` / `loss` into a [`NativeStage`] with all shape
+//! parameters baked in; execution is then pure slice arithmetic over
+//! [`NativeTensor`]s (flat row-major `Vec<f32>` + shape). Numerics mirror
+//! `python/compile/kernels/ref.py` (same GELU, layernorm, softmax), so
+//! PJRT artifacts and the native engine are drop-in replacements for one
+//! another per manifest.
+//!
+//! Manifests don't have to come from Python: [`presets`] generates the
+//! same transformer chains as `python/compile/model.py` entirely
+//! in-process, which is what makes the `train` / `estimate` / `compare`
+//! subcommands and the integration tests runnable on a bare container.
+//!
+//! [`SignatureSpec`]: crate::chain::manifest::SignatureSpec
+
+pub mod kernels;
+pub mod presets;
+mod stages;
+
+pub use stages::NativeStage;
+
+use anyhow::{ensure, Context, Result};
+
+use super::{Backend, Tensor};
+use crate::chain::manifest::Manifest;
+
+/// A host tensor: flat row-major f32 data plus its shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NativeTensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl NativeTensor {
+    pub(crate) fn from_parts(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        NativeTensor { data, shape }
+    }
+
+    /// Flat element data (row-major).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Dimensions (empty = rank-0 scalar).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+}
+
+impl Tensor for NativeTensor {
+    fn from_vec(data: &[f32], shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product::<usize>().max(1);
+        ensure!(
+            data.len() == n,
+            "shape {:?} needs {} elems, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(NativeTensor { data: data.to_vec(), shape: shape.to_vec() })
+    }
+
+    fn scalar(x: f32) -> Self {
+        NativeTensor { data: vec![x], shape: Vec::new() }
+    }
+
+    fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+
+    fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// The native engine handle (stateless: all state lives in the compiled
+/// stages and the caller's tensors).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    type Tensor = NativeTensor;
+    type Stage = NativeStage;
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn compile(&self, manifest: &Manifest, sig: &str) -> Result<NativeStage> {
+        let spec = manifest
+            .signatures
+            .get(sig)
+            .with_context(|| format!("native compile: unknown signature '{sig}'"))?;
+        NativeStage::from_spec(sig, spec)
+    }
+}

@@ -1,0 +1,305 @@
+//! In-process manifest generation for the native backend.
+//!
+//! Mirrors `python/compile/model.py` exactly — same presets, same stage
+//! order (`dense(gelu) → [attn, mlp]×blocks → dense(none) → loss`), same
+//! signature naming, same `ā`-extras layout and byte/FLOP accounting — so
+//! a native preset chain and a Python-compiled artifact chain of the same
+//! geometry produce identical [`Manifest`]s up to the `files` table
+//! (empty here: the native backend compiles from the spec, not from HLO).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::chain::manifest::{Manifest, ParamSpec, SignatureSpec, StageRef, TensorSpec};
+
+const BYTES: u64 = 4; // f32
+
+fn nelem(shape: &[usize]) -> u64 {
+    shape.iter().product::<usize>().max(1) as u64
+}
+
+fn param(name: &str, shape: &[usize], init: &str) -> ParamSpec {
+    ParamSpec { name: name.to_string(), shape: shape.to_vec(), init: init.to_string() }
+}
+
+fn extra(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec() }
+}
+
+/// Assemble a [`SignatureSpec`] from its parts, deriving the byte and
+/// gradient counts the way `python/compile/aot.py` does.
+fn sig_spec(
+    kind: &str,
+    activation: Option<&str>,
+    params: Vec<ParamSpec>,
+    in_shape: Vec<usize>,
+    out_shape: Vec<usize>,
+    abar_extras: Vec<TensorSpec>,
+    flops_fwd: u64,
+) -> SignatureSpec {
+    let w_a = BYTES * nelem(&out_shape);
+    let w_abar = w_a + abar_extras.iter().map(|e| BYTES * nelem(&e.shape)).sum::<u64>();
+    let n_grads = params.iter().filter(|p| !p.is_data()).count();
+    SignatureSpec {
+        kind: kind.to_string(),
+        files: HashMap::new(),
+        activation: activation.map(String::from),
+        params,
+        in_shape,
+        out_shape,
+        abar_extras,
+        w_a,
+        w_abar,
+        flops_fwd,
+        flops_bwd: 2 * flops_fwd,
+        n_grads,
+    }
+}
+
+fn dense_sig(b: usize, t: usize, d_in: usize, d_out: usize, act: &str) -> (String, SignatureSpec) {
+    let m = b * t;
+    let extras = if act == "none" {
+        Vec::new()
+    } else {
+        vec![extra("z", &[m, d_out])]
+    };
+    let spec = sig_spec(
+        "dense",
+        Some(act),
+        vec![param("w", &[d_in, d_out], "xavier"), param("b", &[d_out], "zeros")],
+        vec![b, t, d_in],
+        vec![b, t, d_out],
+        extras,
+        (2 * m * d_in * d_out) as u64,
+    );
+    (format!("dense_b{b}t{t}_{d_in}x{d_out}_{act}"), spec)
+}
+
+fn layernorm_sig(b: usize, t: usize, d: usize) -> (String, SignatureSpec) {
+    let m = b * t;
+    let spec = sig_spec(
+        "layernorm",
+        None,
+        vec![param("g", &[d], "ones"), param("beta", &[d], "zeros")],
+        vec![b, t, d],
+        vec![b, t, d],
+        vec![extra("xhat", &[m, d]), extra("rstd", &[m])],
+        (8 * m * d) as u64,
+    );
+    (format!("layernorm_b{b}t{t}_{d}"), spec)
+}
+
+fn mlp_sig(b: usize, t: usize, d: usize, f: usize) -> (String, SignatureSpec) {
+    let m = b * t;
+    let spec = sig_spec(
+        "mlp",
+        None,
+        vec![
+            param("g", &[d], "ones"),
+            param("beta", &[d], "zeros"),
+            param("w1", &[d, f], "xavier"),
+            param("c1", &[f], "zeros"),
+            param("w2", &[f, d], "xavier"),
+            param("c2", &[d], "zeros"),
+        ],
+        vec![b, t, d],
+        vec![b, t, d],
+        vec![
+            extra("xhat", &[m, d]),
+            extra("rstd", &[m]),
+            extra("z1", &[m, f]),
+            extra("u", &[m, f]),
+        ],
+        (4 * m * d * f) as u64,
+    );
+    (format!("mlp_b{b}t{t}_{d}x{f}"), spec)
+}
+
+fn attn_sig(b: usize, t: usize, d: usize, heads: usize) -> (String, SignatureSpec) {
+    let m = b * t;
+    let (bh, dh) = (b * heads, d / heads);
+    let proj = (4 * 2 * m * d * d) as u64;
+    let scores = (2 * 2 * bh * t * t * dh) as u64;
+    let spec = sig_spec(
+        "attn",
+        None,
+        vec![
+            param("g", &[d], "ones"),
+            param("beta", &[d], "zeros"),
+            param("wq", &[d, d], "xavier"),
+            param("wk", &[d, d], "xavier"),
+            param("wv", &[d, d], "xavier"),
+            param("wo", &[d, d], "xavier"),
+        ],
+        vec![b, t, d],
+        vec![b, t, d],
+        vec![
+            extra("xhat", &[m, d]),
+            extra("rstd", &[m]),
+            extra("q", &[bh, t, dh]),
+            extra("k", &[bh, t, dh]),
+            extra("v", &[bh, t, dh]),
+            extra("p", &[bh, t, t]), // the big one: O(T²) attention probs
+            extra("c", &[bh, t, dh]),
+        ],
+        proj + scores,
+    );
+    (format!("attn_b{b}t{t}_{d}h{heads}"), spec)
+}
+
+fn loss_sig(b: usize, t: usize, d: usize) -> (String, SignatureSpec) {
+    let spec = sig_spec(
+        "loss",
+        None,
+        vec![param("target", &[b, t, d], "data")],
+        vec![b, t, d],
+        Vec::new(),
+        Vec::new(),
+        (3 * b * t * d) as u64,
+    );
+    (format!("loss_b{b}t{t}_{d}"), spec)
+}
+
+/// Assemble a manifest from `(sig_name, spec)` pairs in stage order.
+/// Repeated signatures (the transformer trunk) are deduplicated, exactly
+/// like aot.py's signature table.
+fn assemble(preset: &str, stage_sigs: Vec<(String, SignatureSpec)>) -> Result<Manifest> {
+    let mut signatures: HashMap<String, SignatureSpec> = HashMap::new();
+    let mut stages = Vec::with_capacity(stage_sigs.len());
+    for (i, (sig, spec)) in stage_sigs.into_iter().enumerate() {
+        stages.push(StageRef {
+            name: format!("stage_{i}_{}", spec.kind),
+            kind: spec.kind.clone(),
+            sig: sig.clone(),
+        });
+        signatures.entry(sig).or_insert(spec);
+    }
+    let input_shape = signatures[&stages[0].sig].in_shape.clone();
+    let param_count: u64 = stages
+        .iter()
+        .map(|st| {
+            signatures[&st.sig]
+                .params
+                .iter()
+                .filter(|p| !p.is_data())
+                .map(|p| p.nelem() as u64)
+                .sum::<u64>()
+        })
+        .sum();
+    let m = Manifest {
+        preset: preset.to_string(),
+        dtype: "f32".to_string(),
+        input_shape,
+        param_count,
+        stages,
+        signatures,
+        content_hash: format!("native:{preset}"),
+        dir: PathBuf::new(),
+    };
+    m.validate()?;
+    Ok(m)
+}
+
+/// GPT-style transformer chain, the geometry `python/compile/model.py`
+/// builds: `dense(gelu) → [attn, mlp]×blocks → dense(none) → loss`.
+pub fn transformer(
+    preset: &str,
+    batch: usize,
+    seq: usize,
+    d: usize,
+    heads: usize,
+    ffn: usize,
+    blocks: usize,
+) -> Result<Manifest> {
+    if d % heads != 0 {
+        bail!("transformer preset: d = {d} not divisible by {heads} heads");
+    }
+    let mut sigs = vec![dense_sig(batch, seq, d, d, "gelu")];
+    for _ in 0..blocks {
+        sigs.push(attn_sig(batch, seq, d, heads));
+        sigs.push(mlp_sig(batch, seq, d, ffn));
+    }
+    sigs.push(dense_sig(batch, seq, d, d, "none")); // output head
+    sigs.push(loss_sig(batch, seq, d));
+    assemble(preset, sigs)
+}
+
+/// A minimal chain exercising the native-only `layernorm` stage kind:
+/// `dense(none) → layernorm → loss` (used by the integration tests).
+pub fn layernorm_probe(batch: usize, seq: usize, d: usize) -> Result<Manifest> {
+    assemble(
+        "lnprobe",
+        vec![
+            dense_sig(batch, seq, d, d, "none"),
+            layernorm_sig(batch, seq, d),
+            loss_sig(batch, seq, d),
+        ],
+    )
+}
+
+/// Named presets, mirroring `python/compile/model.py::PRESETS`.
+///
+/// * `quickstart` — tiny smoke chain (b2 t16 d64 h4 f128, 1 block).
+/// * `default`    — GPT-style trunk, ~3.2M params (b8 t64 d256 h4 f1024, 4 blocks).
+/// * `wide`       — GPT-2-base geometry (b4 t128 d768 h12 f3072, 6 blocks).
+pub fn preset(name: &str) -> Result<Manifest> {
+    match name {
+        "quickstart" => transformer(name, 2, 16, 64, 4, 128, 1),
+        "default" => transformer(name, 8, 64, 256, 4, 1024, 4),
+        "wide" => transformer(name, 4, 128, 768, 12, 3072, 6),
+        other => bail!("unknown native preset '{other}' (quickstart/default/wide)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_match_python_geometry() {
+        let m = preset("quickstart").unwrap();
+        // dense + (attn + mlp) + dense + loss
+        assert_eq!(m.stages.len(), 5);
+        assert_eq!(m.input_shape, vec![2, 16, 64]);
+        assert_eq!(m.stages.last().unwrap().kind, "loss");
+
+        let d = preset("default").unwrap();
+        assert_eq!(d.stages.len(), 1 + 2 * 4 + 1 + 1);
+        // ~3.2M parameters at d=256 (model.py's comment)
+        assert!((3_000_000..3_500_000).contains(&d.param_count), "{}", d.param_count);
+    }
+
+    #[test]
+    fn signatures_are_shared_across_repeated_blocks() {
+        let m = preset("default").unwrap();
+        // 4 attn stages and 4 mlp stages share one signature each
+        assert_eq!(m.signatures.len(), 5); // dense-gelu, attn, mlp, dense-none, loss
+    }
+
+    #[test]
+    fn abar_accounting_matches_stage_contract() {
+        let m = preset("quickstart").unwrap();
+        for spec in m.signatures.values() {
+            assert!(spec.w_abar >= spec.w_a);
+            let extras: u64 = spec.abar_extras.iter().map(|e| 4 * e.nelem() as u64).sum();
+            assert_eq!(spec.w_abar, spec.w_a + extras);
+        }
+        // the attention signature checkpoints the O(T²) probs
+        let attn = m.signatures.values().find(|s| s.kind == "attn").unwrap();
+        assert!(attn.abar_extras.iter().any(|e| e.name == "p"));
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(preset("nope").is_err());
+    }
+
+    #[test]
+    fn layernorm_probe_builds() {
+        let m = layernorm_probe(2, 4, 16).unwrap();
+        assert_eq!(m.stages.len(), 3);
+        assert_eq!(m.stages[1].kind, "layernorm");
+    }
+}

@@ -1,4 +1,5 @@
 //! Small [`xla::Literal`] helpers: shaped f32 construction / extraction.
+//! (PJRT-only plumbing; generic code goes through [`crate::backend::Tensor`].)
 
 use anyhow::{ensure, Context, Result};
 use xla::Literal;

@@ -1,0 +1,113 @@
+//! XLA/PJRT backend: executes the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`.
+//!
+//! This is the original execution path, now isolated behind the
+//! [`Backend`] trait — the only module tree that names `xla` types.
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids. See python/compile/aot.py.
+//!
+//! With the vendored stub `xla` crate (no real PJRT toolchain), client
+//! construction succeeds but compilation fails fast with an explanatory
+//! error — use [`crate::backend::NativeBackend`] instead on such hosts.
+
+mod literal;
+
+pub use literal::{lit_from_vec, lit_scalar, lit_to_vec, lit_zeros};
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{Backend, Entry, StageExecutable, Tensor};
+use crate::chain::manifest::Manifest;
+
+impl Tensor for Literal {
+    fn from_vec(data: &[f32], shape: &[usize]) -> Result<Self> {
+        lit_from_vec(data, shape)
+    }
+
+    fn scalar(x: f32) -> Self {
+        lit_scalar(x)
+    }
+
+    fn to_vec(&self) -> Result<Vec<f32>> {
+        lit_to_vec(self)
+    }
+
+    fn element_count(&self) -> usize {
+        Literal::element_count(self)
+    }
+}
+
+/// The PJRT engine handle: owns the CPU client executables compile on.
+pub struct PjrtBackend {
+    pub client: PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client })
+    }
+}
+
+/// One compiled signature: a loaded executable per entry point.
+pub struct PjrtStage {
+    sig: String,
+    fwd: PjRtLoadedExecutable,
+    fwd_all: PjRtLoadedExecutable,
+    bwd: PjRtLoadedExecutable,
+}
+
+/// Execute a loaded executable and decompose its tuple output.
+/// (aot.py lowers with `return_tuple=True`: always a tuple root.)
+fn run(exe: &PjRtLoadedExecutable, args: &[&Literal], what: &str) -> Result<Vec<Literal>> {
+    let outs = exe
+        .execute::<&Literal>(args)
+        .with_context(|| format!("executing {what}"))?;
+    let mut result = outs[0][0]
+        .to_literal_sync()
+        .with_context(|| format!("fetching result of {what}"))?;
+    result.decompose_tuple().context("decomposing result tuple")
+}
+
+impl StageExecutable<Literal> for PjrtStage {
+    fn fwd(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        run(&self.fwd, args, &format!("{}/fwd", self.sig))
+    }
+
+    fn fwd_all(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        run(&self.fwd_all, args, &format!("{}/fwd_all", self.sig))
+    }
+
+    fn bwd(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        run(&self.bwd, args, &format!("{}/bwd", self.sig))
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Tensor = Literal;
+    type Stage = PjrtStage;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, manifest: &Manifest, sig: &str) -> Result<PjrtStage> {
+        let compile_entry = |entry: Entry| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.hlo_path(sig, entry.name())?;
+            let proto = HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {sig}/{}", entry.name()))
+        };
+        Ok(PjrtStage {
+            sig: sig.to_string(),
+            fwd: compile_entry(Entry::Fwd)?,
+            fwd_all: compile_entry(Entry::FwdAll)?,
+            bwd: compile_entry(Entry::Bwd)?,
+        })
+    }
+}

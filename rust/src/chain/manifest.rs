@@ -46,6 +46,11 @@ pub struct SignatureSpec {
     pub kind: String,
     /// entry point → HLO text filename: `fwd`, `fwd_all`, `bwd`.
     pub files: HashMap<String, String>,
+    /// Activation of a `dense` signature (`gelu` / `none`), when the
+    /// manifest declares it explicitly. Older artifact manifests omit it;
+    /// the native backend then falls back to the aot.py naming convention
+    /// plus the checkpoint layout.
+    pub activation: Option<String>,
     pub params: Vec<ParamSpec>,
     pub in_shape: Vec<usize>,
     pub out_shape: Vec<usize>,
@@ -148,6 +153,10 @@ impl Manifest {
                 SignatureSpec {
                     kind: str_field(s, "kind")?,
                     files,
+                    activation: s
+                        .get("activation")
+                        .and_then(|v| v.as_str())
+                        .map(|v| v.to_string()),
                     params,
                     in_shape: shape_field(s, "in_shape")?,
                     out_shape: shape_field(s, "out_shape")?,
@@ -207,8 +216,13 @@ impl Manifest {
         }
         for (name, s) in &self.signatures {
             ensure!(s.w_abar >= s.w_a, "signature {name}: ω_ā < ω_a");
-            for entry in ["fwd", "fwd_all", "bwd"] {
-                ensure!(s.files.contains_key(entry), "signature {name}: missing {entry}");
+            // An empty file table is a backend-agnostic manifest (e.g. one
+            // generated in-process for the native backend); a *partial*
+            // table is always a broken artifact set.
+            if !s.files.is_empty() {
+                for entry in ["fwd", "fwd_all", "bwd"] {
+                    ensure!(s.files.contains_key(entry), "signature {name}: missing {entry}");
+                }
             }
         }
         Ok(())
@@ -223,9 +237,21 @@ impl Manifest {
         4 * self.input_shape.iter().product::<usize>() as u64
     }
 
-    /// Path of one HLO artifact.
-    pub fn hlo_path(&self, sig: &str, entry: &str) -> PathBuf {
-        self.dir.join(&self.signatures[sig].files[entry])
+    /// Path of one HLO artifact. Errors (instead of panicking) when the
+    /// signature is unknown or has no file for `entry` — e.g. an
+    /// in-process manifest fed to the PJRT backend.
+    pub fn hlo_path(&self, sig: &str, entry: &str) -> Result<PathBuf> {
+        let spec = self
+            .signatures
+            .get(sig)
+            .with_context(|| format!("manifest: unknown signature '{sig}'"))?;
+        let file = spec.files.get(entry).with_context(|| {
+            format!(
+                "manifest: signature '{sig}' has no HLO file for entry '{entry}' \
+                 (in-process manifests carry no artifacts — use the native backend)"
+            )
+        })?;
+        Ok(self.dir.join(file))
     }
 
     /// Build the solver's [`Chain`] from manifest sizes and *measured*
@@ -295,7 +321,9 @@ mod tests {
         let m = Manifest::parse(manifest_json(), PathBuf::from("/tmp")).unwrap();
         assert_eq!(m.input_bytes(), 2 * 4 * 8 * 4);
         assert!(m.sig_of(1).params[0].is_data());
-        assert_eq!(m.hlo_path("d", "fwd"), PathBuf::from("/tmp/d_fwd.hlo.txt"));
+        assert_eq!(m.hlo_path("d", "fwd").unwrap(), PathBuf::from("/tmp/d_fwd.hlo.txt"));
+        assert!(m.hlo_path("nope", "fwd").is_err());
+        assert!(m.hlo_path("d", "nope").is_err());
     }
 
     #[test]

@@ -7,13 +7,14 @@
 //! measured vectors plus the manifest's byte counts give the solver's
 //! [`Chain`]. The assumption (also the paper's): stage compute does not
 //! depend on tensor *values*, so zero tensors time identically to real
-//! activations.
+//! activations. Works on any [`Backend`] — the native engine is timed
+//! the same way the PJRT executables are.
 
 use anyhow::{Context, Result};
-use xla::Literal;
 
+use crate::backend::{Backend, Tensor};
 use crate::chain::Chain;
-use crate::runtime::{lit_scalar, lit_zeros, Entry, Runtime};
+use crate::runtime::{Entry, Runtime};
 use crate::util::median;
 
 /// Measured timings for one stage (microseconds).
@@ -44,37 +45,36 @@ impl Default for EstimatorConfig {
 
 /// Time every stage of the runtime's chain; returns per-stage timings in
 /// stage order.
-pub fn estimate(rt: &Runtime, cfg: EstimatorConfig) -> Result<Vec<StageTiming>> {
+pub fn estimate<B: Backend>(rt: &Runtime<B>, cfg: EstimatorConfig) -> Result<Vec<StageTiming>> {
     let manifest = &rt.manifest;
     let mut out = Vec::with_capacity(manifest.stages.len());
     for (i, st) in manifest.stages.iter().enumerate() {
         let sig = manifest.sig_of(i);
         // dummy parameters & input (values don't affect timing)
-        let params: Vec<Literal> = sig
+        let params: Vec<B::Tensor> = sig
             .params
             .iter()
-            .map(|p| lit_zeros(&p.shape))
+            .map(|p| B::Tensor::zeros(&p.shape))
             .collect::<Result<Vec<_>>>()?;
-        let a_in = lit_zeros(&sig.in_shape)?;
+        let a_in = B::Tensor::zeros(&sig.in_shape)?;
         let delta_out = if sig.out_shape.is_empty() {
-            lit_scalar(1.0f32)
+            B::Tensor::scalar(1.0)
         } else {
-            lit_zeros(&sig.out_shape)?
+            B::Tensor::zeros(&sig.out_shape)?
         };
 
-        let fwd_args: Vec<&Literal> =
-            params.iter().chain(std::iter::once(&a_in)).collect();
+        let fwd_args: Vec<&B::Tensor> = params.iter().chain(std::iter::once(&a_in)).collect();
 
         // materialize ā once for the backward's inputs
         let abar = rt
             .execute(&st.sig, Entry::FwdAll, &fwd_args)
             .with_context(|| format!("estimating {}", st.name))?;
-        let mut bwd_args: Vec<&Literal> = params.iter().collect();
+        let mut bwd_args: Vec<&B::Tensor> = params.iter().collect();
         bwd_args.push(&a_in);
         bwd_args.extend(abar.iter());
         bwd_args.push(&delta_out);
 
-        let time_entry = |entry: Entry, args: &[&Literal]| -> Result<f64> {
+        let time_entry = |entry: Entry, args: &[&B::Tensor]| -> Result<f64> {
             for _ in 0..cfg.warmup {
                 rt.execute(&st.sig, entry, args)?;
             }
@@ -97,12 +97,21 @@ pub fn estimate(rt: &Runtime, cfg: EstimatorConfig) -> Result<Vec<StageTiming>> 
     Ok(out)
 }
 
-/// Convenience: estimate and assemble the solver's [`Chain`].
-pub fn measured_chain(rt: &Runtime, cfg: EstimatorConfig) -> Result<Chain> {
-    let timings = estimate(rt, cfg)?;
+/// Assemble the solver's [`Chain`] from already-measured timings (byte
+/// counts from the manifest, durations from the estimator).
+pub fn chain_from_timings(
+    manifest: &crate::chain::manifest::Manifest,
+    timings: &[StageTiming],
+) -> Chain {
     let uf: Vec<f64> = timings.iter().map(|t| t.uf_us).collect();
     let ub: Vec<f64> = timings.iter().map(|t| t.ub_us).collect();
-    Ok(rt.manifest.to_chain(&uf, &ub))
+    manifest.to_chain(&uf, &ub)
+}
+
+/// Convenience: estimate and assemble the solver's [`Chain`].
+pub fn measured_chain<B: Backend>(rt: &Runtime<B>, cfg: EstimatorConfig) -> Result<Chain> {
+    let timings = estimate(rt, cfg)?;
+    Ok(chain_from_timings(&rt.manifest, &timings))
 }
 
 /// Render timings as an aligned table for the CLI.

@@ -1,25 +1,30 @@
-//! Real schedule execution over the PJRT runtime.
+//! Real schedule execution over any tensor backend.
 //!
 //! The executor replays a [`Schedule`] with *exactly* the simulator's
 //! Table 1 semantics, but against live tensors: it holds the value store
-//! (`a^ℓ` / `ā^ℓ` / `δ^ℓ` literals), charges every allocation to a logical
+//! (`a^ℓ` / `ā^ℓ` / `δ^ℓ` tensors), charges every allocation to a logical
 //! [`MemState`] ledger (enforcing the byte budget the schedule was solved
-//! for — the CPU host has no GPU-style OOM to do it for us), collects the
+//! for — a CPU host has no GPU-style OOM to do it for us), collects the
 //! per-stage gradients produced by the `B^ℓ` ops and captures the loss.
 //!
 //! One [`Executor::run`] call = one training iteration of the paper's
-//! processing phase. The replay loop passes `&Literal` references
-//! throughout — no tensor copies besides what PJRT itself does.
+//! processing phase. The replay loop is generic over [`Backend`] and
+//! passes `&B::Tensor` references throughout — no tensor copies besides
+//! what the engine itself does; which engine (pure-Rust [`native`],
+//! PJRT [`pjrt`]) is a type parameter resolved at compile time.
+//!
+//! [`native`]: crate::backend::native
+//! [`pjrt`]: crate::backend::pjrt
 
 mod params;
 
 pub use params::StageParams;
 
 use anyhow::{bail, ensure, Context, Result};
-use xla::{Literal, PjRtLoadedExecutable};
 
+use crate::backend::{Backend, StageExecutable, Tensor};
 use crate::chain::Chain;
-use crate::runtime::{lit_scalar, lit_to_vec, Entry, Runtime};
+use crate::runtime::Runtime;
 use crate::simulator::MemState;
 use crate::solver::{Op, Schedule};
 use crate::util::Rng;
@@ -36,43 +41,28 @@ pub struct StepResult {
     pub ops: usize,
 }
 
-pub struct Executor<'rt> {
-    rt: &'rt Runtime,
-    /// Pre-resolved executables per stage `[fwd, fwd_all, bwd]` — the hot
-    /// loop never touches the string-keyed registry.
-    exes: Vec<[&'rt PjRtLoadedExecutable; 3]>,
+pub struct Executor<'rt, B: Backend> {
+    rt: &'rt Runtime<B>,
+    /// Pre-resolved executable per stage — the hot loop never touches the
+    /// string-keyed registry.
+    exes: Vec<&'rt B::Stage>,
     /// Per-stage parameters (stage order; independent even when stages
     /// share a signature).
-    pub params: Vec<StageParams>,
+    pub params: Vec<StageParams<B::Tensor>>,
     /// Size model used by the ledger (timings unused here).
     pub chain_sizes: Chain,
     /// Gradients from the last iteration, per stage (trainable order).
     grads: Vec<Vec<Vec<f32>>>,
     // value store, 1-based stage indexing like the simulator
-    a: Vec<Option<Literal>>,
-    abar: Vec<Option<Vec<Literal>>>,
-    delta: Vec<Option<Literal>>,
-}
-
-/// Execute a pre-resolved entry point and decompose its tuple output.
-fn exec(exe: &PjRtLoadedExecutable, args: &[&Literal], what: &str) -> Result<Vec<Literal>> {
-    let outs = exe
-        .execute::<&Literal>(args)
-        .with_context(|| format!("executing {what}"))?;
-    let mut result = outs[0][0]
-        .to_literal_sync()
-        .with_context(|| format!("fetching result of {what}"))?;
-    result.decompose_tuple().context("decomposing result tuple")
+    a: Vec<Option<B::Tensor>>,
+    abar: Vec<Option<Vec<B::Tensor>>>,
+    delta: Vec<Option<B::Tensor>>,
 }
 
 /// Borrow `a^ℓ`: standalone tensor preferred, else the head of `ā^ℓ`.
-fn read_a<'s>(
-    a: &'s [Option<Literal>],
-    abar: &'s [Option<Vec<Literal>>],
-    l: usize,
-) -> Option<&'s Literal> {
-    if let Some(lit) = a[l].as_ref() {
-        return Some(lit);
+fn read_a<'s, T>(a: &'s [Option<T>], abar: &'s [Option<Vec<T>>], l: usize) -> Option<&'s T> {
+    if let Some(t) = a[l].as_ref() {
+        return Some(t);
     }
     if l >= 1 {
         if let Some(vals) = abar[l - 1].as_ref() {
@@ -82,8 +72,8 @@ fn read_a<'s>(
     None
 }
 
-impl<'rt> Executor<'rt> {
-    pub fn new(rt: &'rt Runtime, seed: u64) -> Result<Self> {
+impl<'rt, B: Backend> Executor<'rt, B> {
+    pub fn new(rt: &'rt Runtime<B>, seed: u64) -> Result<Self> {
         let mut rng = Rng::new(seed);
         let mut params = Vec::new();
         for (i, _st) in rt.manifest.stages.iter().enumerate() {
@@ -91,16 +81,10 @@ impl<'rt> Executor<'rt> {
             params.push(StageParams::init(rt.manifest.sig_of(i), &mut stream)?);
         }
         let n = rt.manifest.stages.len();
-        let exes = (0..n)
-            .map(|i| {
-                let sig = &rt.manifest.stages[i].sig;
-                [
-                    rt.executable(sig, Entry::Fwd),
-                    rt.executable(sig, Entry::FwdAll),
-                    rt.executable(sig, Entry::Bwd),
-                ]
-            })
-            .collect();
+        let mut exes = Vec::with_capacity(n);
+        for i in 0..n {
+            exes.push(rt.executable(&rt.manifest.stages[i].sig)?);
+        }
         // ledger sizes from the manifest; timings are irrelevant here
         let uf = vec![0.0; n];
         let chain_sizes = rt.manifest.to_chain(&uf, &uf);
@@ -133,7 +117,7 @@ impl<'rt> Executor<'rt> {
     }
 
     /// Gradients of the last iteration for stage `i` (0-based), in the
-    /// bwd artifact's output order (trainable params only).
+    /// bwd entry's output order (trainable params only).
     pub fn grads(&self, stage: usize) -> &[Vec<f32>] {
         &self.grads[stage]
     }
@@ -160,7 +144,7 @@ impl<'rt> Executor<'rt> {
     pub fn run(
         &mut self,
         schedule: &Schedule,
-        input: &Literal,
+        input: &B::Tensor,
         memory_limit: Option<u64>,
     ) -> Result<StepResult> {
         let n = self.n_stages();
@@ -174,7 +158,7 @@ impl<'rt> Executor<'rt> {
             g.clear();
         }
         self.a[0] = Some(input.clone());
-        self.delta[n] = Some(lit_scalar(1.0f32));
+        self.delta[n] = Some(B::Tensor::scalar(1.0));
         let mut ledger = MemState::initial(&self.chain_sizes);
         let mut loss = f32::NAN;
 
@@ -185,10 +169,12 @@ impl<'rt> Executor<'rt> {
                     let mut out = {
                         let a_in = read_a(&self.a, &self.abar, l - 1)
                             .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
-                        let mut args: Vec<&Literal> =
-                            self.params[l - 1].literals.iter().collect();
+                        let mut args: Vec<&B::Tensor> =
+                            self.params[l - 1].tensors.iter().collect();
                         args.push(a_in);
-                        exec(self.exes[l - 1][0], &args, "fwd")?
+                        self.exes[l - 1]
+                            .fwd(&args)
+                            .with_context(|| format!("op #{oi} {op}"))?
                     };
                     ledger.touch_peak(self.chain_sizes.wa(l) + self.chain_sizes.of(l));
                     ensure!(self.a[l].is_none(), "op #{oi} {op}: a^{l} already stored");
@@ -205,16 +191,18 @@ impl<'rt> Executor<'rt> {
                     let out = {
                         let a_in = read_a(&self.a, &self.abar, l - 1)
                             .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
-                        let mut args: Vec<&Literal> =
-                            self.params[l - 1].literals.iter().collect();
+                        let mut args: Vec<&B::Tensor> =
+                            self.params[l - 1].tensors.iter().collect();
                         args.push(a_in);
-                        exec(self.exes[l - 1][1], &args, "fwd_all")?
+                        self.exes[l - 1]
+                            .fwd_all(&args)
+                            .with_context(|| format!("op #{oi} {op}"))?
                     };
                     ledger.touch_peak(self.chain_sizes.wabar(l) + self.chain_sizes.of(l));
                     ensure!(self.abar[l - 1].is_none(), "op #{oi} {op}: ā^{l} already stored");
                     if l == n {
                         // the loss stage's a_out is the loss scalar
-                        loss = lit_to_vec(&out[0])?[0];
+                        loss = out[0].to_vec()?[0];
                     }
                     self.abar[l - 1] = Some(out);
                     ledger.store_abar(l).map_err(anyhow::Error::msg)?;
@@ -231,12 +219,14 @@ impl<'rt> Executor<'rt> {
                     let mut out = {
                         let a_in = read_a(&self.a, &self.abar, l - 1)
                             .with_context(|| format!("op #{oi} {op}: a^{} missing", l - 1))?;
-                        let mut args: Vec<&Literal> =
-                            self.params[l - 1].literals.iter().collect();
+                        let mut args: Vec<&B::Tensor> =
+                            self.params[l - 1].tensors.iter().collect();
                         args.push(a_in);
                         args.extend(abar.iter());
                         args.push(&delta_out);
-                        exec(self.exes[l - 1][2], &args, "bwd")?
+                        self.exes[l - 1]
+                            .bwd(&args)
+                            .with_context(|| format!("op #{oi} {op}"))?
                     };
                     // ledger: δ^{ℓ-1} replaces a^{ℓ-1} (see simulator::Bwd)
                     ledger.touch_peak(self.chain_sizes.ob(l));
@@ -248,7 +238,7 @@ impl<'rt> Executor<'rt> {
                     let delta_in = out.remove(0);
                     self.grads[l - 1] = out
                         .iter()
-                        .map(lit_to_vec)
+                        .map(Tensor::to_vec)
                         .collect::<Result<Vec<_>>>()
                         .with_context(|| format!("op #{oi} {op}: extracting grads"))?;
                     self.delta[l - 1] = Some(delta_in);
@@ -292,6 +282,6 @@ impl<'rt> Executor<'rt> {
 
     /// `δ^0` from the last iteration (gradient w.r.t. the chain input).
     pub fn input_gradient(&self) -> Option<Vec<f32>> {
-        self.delta[0].as_ref().and_then(|l| lit_to_vec(l).ok())
+        self.delta[0].as_ref().and_then(|t| t.to_vec().ok())
     }
 }

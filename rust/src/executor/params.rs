@@ -1,33 +1,33 @@
-//! Per-stage parameter storage: master f32 copies + cached Literals.
+//! Per-stage parameter storage: master f32 copies + cached device tensors.
 //!
 //! Parameters are initialized Rust-side from the manifest's init specs
 //! (`xavier`/`zeros`/`ones`), so Python stays out of the runtime path.
 //! `data` params (the loss stage's target) are per-batch inputs set by the
-//! trainer before each iteration. The Literal cache means the hot loop
+//! trainer before each iteration. The tensor cache means the hot loop
 //! never re-encodes parameters; it is invalidated by [`StageParams::sgd_step`].
 
 use anyhow::{ensure, Result};
-use xla::Literal;
 
+use crate::backend::Tensor;
 use crate::chain::manifest::SignatureSpec;
-use crate::runtime::lit_from_vec;
 use crate::util::Rng;
 
-pub struct StageParams {
-    /// Master copies, one per manifest param (data params stay empty).
+pub struct StageParams<T: Tensor> {
+    /// Master copies, one per manifest param (data params stay zeroed
+    /// until [`StageParams::set_data`]).
     pub values: Vec<Vec<f32>>,
-    /// Cached literals fed to every execute call (manifest order).
-    pub literals: Vec<Literal>,
+    /// Cached backend tensors fed to every execute call (manifest order).
+    pub tensors: Vec<T>,
     /// Indices of trainable (non-data) params, in gradient order.
     pub trainable: Vec<usize>,
     shapes: Vec<Vec<usize>>,
 }
 
-impl StageParams {
+impl<T: Tensor> StageParams<T> {
     /// Initialize from the signature's specs with a per-stage RNG stream.
     pub fn init(sig: &SignatureSpec, rng: &mut Rng) -> Result<Self> {
         let mut values = Vec::new();
-        let mut literals = Vec::new();
+        let mut tensors = Vec::new();
         let mut trainable = Vec::new();
         let mut shapes = Vec::new();
         for (i, p) in sig.params.iter().enumerate() {
@@ -43,7 +43,7 @@ impl StageParams {
                 "data" => vec![0.0; n], // placeholder until set_data
                 other => anyhow::bail!("unknown init '{other}' for param {}", p.name),
             };
-            literals.push(lit_from_vec(&v, &p.shape)?);
+            tensors.push(T::from_vec(&v, &p.shape)?);
             if !p.is_data() {
                 trainable.push(i);
             }
@@ -51,7 +51,7 @@ impl StageParams {
             values.push(v);
         }
         ensure!(trainable.len() == sig.n_grads, "n_grads mismatch vs manifest");
-        Ok(StageParams { values, literals, trainable, shapes })
+        Ok(StageParams { values, tensors, trainable, shapes })
     }
 
     /// Replace a `data` param (e.g. the loss target) for this iteration.
@@ -63,7 +63,7 @@ impl StageParams {
             self.values[index].len()
         );
         self.values[index].copy_from_slice(data);
-        self.literals[index] = lit_from_vec(data, &self.shapes[index])?;
+        self.tensors[index] = T::from_vec(data, &self.shapes[index])?;
         Ok(())
     }
 
@@ -78,7 +78,7 @@ impl StageParams {
             for (w, gi) in p.iter_mut().zip(g) {
                 *w -= lr * gi;
             }
-            self.literals[pi] = lit_from_vec(p, &self.shapes[pi])?;
+            self.tensors[pi] = T::from_vec(p, &self.shapes[pi])?;
         }
         Ok(())
     }

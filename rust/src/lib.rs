@@ -20,10 +20,15 @@
 //! * [`simulator`] — a byte-accurate replay of any operation sequence
 //!   (Table 1 semantics): validity, peak memory, makespan. Ground truth
 //!   for every property test and for figure generation.
-//! * [`runtime`] — PJRT bridge: loads the AOT-compiled HLO-text artifacts
-//!   produced by `python/compile/aot.py` and executes them on the CPU
-//!   client. Python never runs at this point.
-//! * [`executor`] — runs a schedule against the real compiled stages with
+//! * [`backend`] — the tensor-engine seam: `Backend` / `Tensor` /
+//!   `StageExecutable` traits with two implementations:
+//!   [`backend::native`], a pure-Rust f32 engine with hand-written
+//!   forward/backward kernels (runs anywhere, generates its chains
+//!   in-process), and [`backend::pjrt`], the XLA path over AOT-compiled
+//!   HLO-text artifacts from `python/compile/aot.py`.
+//! * [`runtime`] — backend-generic registry: compiles every manifest
+//!   signature once and serves executables to the replay loop.
+//! * [`executor`] — runs a schedule against real compiled stages with
 //!   a logical memory ledger, collecting gradients and the loss.
 //! * [`estimator`] — the paper's §5.1 parameter-estimation phase: measures
 //!   `u_f`, `u_b` per stage from the real executables.
@@ -31,6 +36,7 @@
 //! * [`figures`] — regenerates every figure/table of the paper's §5.4
 //!   evaluation as CSV series.
 
+pub mod backend;
 pub mod chain;
 pub mod estimator;
 pub mod executor;

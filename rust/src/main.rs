@@ -3,10 +3,15 @@
 //! Subcommands:
 //!   solve     compute a schedule for a profile chain and a memory budget
 //!   simulate  replay all four strategies on a profile chain
-//!   estimate  measure per-stage timings of compiled artifacts (§5.1)
-//!   train     run SGD with a checkpointing schedule over real artifacts
+//!   estimate  measure per-stage timings of compiled stages (§5.1)
+//!   train     run SGD with a checkpointing schedule over real stages
 //!   compare   measured throughput-vs-memory of all strategies (real run)
 //!   figures   regenerate the paper's Figures 3–13 + summary as CSV
+//!
+//! The execution subcommands (`estimate`/`train`/`compare`) take
+//! `--backend native|pjrt`: `native` (the default) runs the pure-Rust
+//! engine on an in-process preset chain (`--preset quickstart|default|
+//! wide`); `pjrt` loads AOT artifacts from `--artifacts <dir>`.
 //!
 //! Run `chainckpt help` for flags.
 
@@ -14,8 +19,11 @@ use std::io::Write as _;
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
+use chainckpt::backend::Backend;
 use chainckpt::chain::{profiles, Chain, DEFAULT_SLOTS};
-use chainckpt::estimator::{estimate, format_table, measured_chain, EstimatorConfig};
+use chainckpt::estimator::{
+    chain_from_timings, estimate, format_table, measured_chain, EstimatorConfig,
+};
 use chainckpt::figures;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
@@ -32,12 +40,18 @@ USAGE:
   chainckpt solve    --family resnet --depth 101 --image 1000 --batch 8 --memory 4G
                      [--slots 500] [--strategy optimal|revolve] [--show-ops]
   chainckpt simulate --family resnet --depth 101 --image 1000 --batch 8
-  chainckpt estimate [--artifacts artifacts/default]
-  chainckpt train    [--artifacts artifacts/default] [--memory 8M] [--steps 100]
-                     [--lr 0.05] [--strategy optimal|sequential|revolve|pytorch]
+  chainckpt estimate [--backend native|pjrt] [--preset default] [--artifacts DIR]
+  chainckpt train    [--backend native|pjrt] [--preset default] [--artifacts DIR]
+                     [--memory 8M | --memory-frac 0.75] [--steps 100] [--lr 0.05]
+                     [--strategy optimal|sequential|revolve|pytorch]
                      [--segments 4] [--batches 8] [--log-every 10] [--out loss.csv]
-  chainckpt compare  [--artifacts artifacts/default] [--points 6] [--out compare.csv]
+  chainckpt compare  [--backend native|pjrt] [--preset default] [--artifacts DIR]
+                     [--points 6] [--out compare.csv]
   chainckpt figures  [--fig 3|all] [--out results]
+
+Backends: --backend native (pure-Rust engine, chains generated in-process
+from --preset quickstart|default|wide — the default) or --backend pjrt
+(AOT HLO artifacts from --artifacts, requires the real xla bindings).
 
 Profile flags: --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
 Sizes accept K/M/G suffixes (1024-based).
@@ -137,29 +151,62 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn load_runtime(args: &Args) -> Result<Runtime> {
-    let dir = args.str("artifacts", "artifacts/default");
-    println!("loading artifacts from {dir} …");
-    let rt = Runtime::load(&dir).with_context(|| {
-        format!("loading {dir} (run `make artifacts` first?)")
-    })?;
+// ---------------------------------------------------------------------------
+// Backend selection for the execution subcommands
+// ---------------------------------------------------------------------------
+
+fn announce<B: Backend>(rt: &Runtime<B>) {
     println!(
-        "compiled {} executables for {} stages ({} params)",
+        "[{}] compiled {} signatures for {} stages ({} params)",
+        rt.backend.name(),
         rt.executable_count(),
         rt.manifest.stages.len(),
         rt.manifest.param_count
     );
+}
+
+fn load_native(args: &Args) -> Result<Runtime<chainckpt::backend::NativeBackend>> {
+    let preset = args.str("preset", "default");
+    println!("building native preset '{preset}' …");
+    let rt = Runtime::native_preset(&preset)?;
+    announce(&rt);
     Ok(rt)
 }
 
+fn load_pjrt(args: &Args) -> Result<Runtime<chainckpt::backend::PjrtBackend>> {
+    let dir = args.str("artifacts", "artifacts/default");
+    println!("loading artifacts from {dir} …");
+    let rt = Runtime::load(&dir)
+        .with_context(|| format!("loading {dir} (run `make artifacts` first?)"))?;
+    announce(&rt);
+    Ok(rt)
+}
+
+/// Run `f` on the runtime of the selected backend (monomorphized per
+/// engine — no trait objects on the hot path).
+macro_rules! with_backend {
+    ($args:expr, $f:ident) => {
+        match $args.str("backend", "native").as_str() {
+            "native" => $f(&load_native($args)?, $args),
+            "pjrt" => $f(&load_pjrt($args)?, $args),
+            other => bail!("--backend {other}: use native|pjrt"),
+        }
+    };
+}
+
 fn cmd_estimate(args: &Args) -> Result<()> {
-    let rt = load_runtime(args)?;
+    with_backend!(args, estimate_on)
+}
+
+fn estimate_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let cfg = EstimatorConfig {
         reps: args.usize("reps", 5),
         warmup: args.usize("warmup", 2),
     };
-    let timings = estimate(&rt, cfg)?;
-    let chain = measured_chain(&rt, cfg)?;
+    let timings = estimate(rt, cfg)?;
+    // assemble from the timings already in hand (measured_chain would
+    // re-run the whole timing loop)
+    let chain = chain_from_timings(&rt.manifest, &timings);
     print!("{}", format_table(&timings, &chain));
     println!(
         "ideal iteration: {:.1} µs; store-all memory: {}",
@@ -185,11 +232,18 @@ fn pick_schedule(args: &Args, chain: &Chain, memory: u64) -> Result<Schedule> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let rt = load_runtime(args)?;
+    with_backend!(args, train_on)
+}
+
+fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let cfg = EstimatorConfig::default();
-    let chain = measured_chain(&rt, cfg)?;
+    let chain = measured_chain(rt, cfg)?;
     let store_all_mem = chain.store_all_memory();
-    let memory = args.u64("memory", store_all_mem / 2);
+    // default budget: 75% of store-all (short chains — quickstart is 5
+    // stages — have no feasible persistent schedule much below that;
+    // --memory or --memory-frac override)
+    let frac = args.f64("memory-frac", 0.75);
+    let memory = args.u64("memory", (store_all_mem as f64 * frac) as u64);
     println!(
         "measured chain: ideal {:.1} µs/iter, store-all {}, budget {}",
         chain.ideal_time(),
@@ -203,8 +257,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let lr = args.f64("lr", 0.05) as f32;
     let n_batches = args.usize("batches", 8);
     let log_every = args.usize("log-every", 10);
-    let data = SyntheticData::generate(&rt, n_batches, 7)?;
-    let mut trainer = Trainer::new(&rt, sched, lr, Some(memory), 42)?;
+    let data = SyntheticData::generate(&rt.manifest, n_batches, 7)?;
+    let mut trainer = Trainer::new(rt, sched, lr, Some(memory), 42)?;
     let logs = trainer.train(&data, steps, log_every, |log| {
         println!(
             "step {:>5}  loss {:.6}  {:.1} ms/step  peak {}",
@@ -214,10 +268,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             fmt_bytes(log.peak_bytes)
         );
     })?;
+    let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
+    let last = mean_loss(&logs, 10);
+    println!("final loss (mean of last 10): {last:.6} (from {first:.6})");
+    let peak = logs.iter().map(|l| l.peak_bytes).max().unwrap_or(0);
     println!(
-        "final loss (mean of last 10): {:.6} (from {:.6})",
-        mean_loss(&logs, 10),
-        logs.first().map(|l| l.loss).unwrap_or(f32::NAN)
+        "peak memory {} within budget {} (ledger-enforced); loss decreased: {}",
+        fmt_bytes(peak),
+        fmt_bytes(memory),
+        last < first
     );
     if let Some(out) = args.opt_str("out") {
         let mut f = std::fs::File::create(out)?;
@@ -231,19 +290,22 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    let rt = load_runtime(args)?;
+    with_backend!(args, compare_on)
+}
+
+fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let cfg = EstimatorConfig::default();
-    let chain = measured_chain(&rt, cfg)?;
+    let chain = measured_chain(rt, cfg)?;
     let points = args.usize("points", 6);
     let reps = args.usize("reps", 3);
     let batch = rt.manifest.input_shape[0] as u64;
-    let data = SyntheticData::generate(&rt, 2, 7)?;
+    let data = SyntheticData::<B::Tensor>::generate(&rt.manifest, 2, 7)?;
     let hi = chain.store_all_memory();
     let lo = chain.min_memory_hint();
     let mut rows: Vec<(String, String, u64, f64)> = Vec::new();
 
     let mut run_measured = |name: String, param: String, sched: &Schedule| -> Result<()> {
-        let mut ex = chainckpt::executor::Executor::new(&rt, 1)?;
+        let mut ex = chainckpt::executor::Executor::new(rt, 1)?;
         let loss_stage = rt.manifest.stages.len() - 1;
         ex.set_data_param(loss_stage, &data.targets[0])?;
         // warmup + timed medians

@@ -1,102 +1,99 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them.
+//! Backend-generic runtime: compiles a manifest's signatures once and
+//! serves executables to the replay loop.
 //!
-//! One [`Runtime`] owns the PJRT CPU client plus one compiled executable
-//! per `(signature, entry)` pair. Signatures are shared between same-shape
-//! stages (the manifest deduplicates), so compilation cost is paid once
-//! per distinct shape — the paper's "computed once before training" phase.
+//! One [`Runtime`] owns a [`Backend`] handle plus one compiled
+//! [`StageExecutable`] per distinct signature. Signatures are shared
+//! between same-shape stages (the manifest deduplicates), so compilation
+//! cost is paid once per distinct shape — the paper's "computed once
+//! before training" phase.
 //!
-//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
-//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids. See python/compile/aot.py.
-
-mod literal;
-
-pub use literal::{lit_from_vec, lit_scalar, lit_to_vec, lit_zeros};
+//! The runtime is generic over the engine:
+//!
+//! * [`Runtime::native`] / [`Runtime::native_preset`] — the pure-Rust
+//!   engine; manifests may be generated in-process, no artifacts needed.
+//! * [`Runtime::load`] / [`Runtime::from_manifest`] — the PJRT path over
+//!   AOT HLO-text artifacts (see [`crate::backend::pjrt`]).
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use anyhow::{Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+use crate::backend::{Backend, NativeBackend, PjrtBackend, StageExecutable};
 use crate::chain::manifest::Manifest;
 
-/// Entry points every stage signature exposes.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Entry {
-    /// `(θ…, a_in) → (a_out,)` — used by both `F∅` and `Fck`.
-    Fwd,
-    /// `(θ…, a_in) → (a_out, ā-extras…)` — `Fall`.
-    FwdAll,
-    /// `(θ…, a_in, ā…, δ_out) → (δ_in, ∂θ…)` — `B`.
-    Bwd,
-}
+pub use crate::backend::Entry;
 
-impl Entry {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Entry::Fwd => "fwd",
-            Entry::FwdAll => "fwd_all",
-            Entry::Bwd => "bwd",
-        }
-    }
-}
-
-/// Compiled artifact registry bound to a PJRT client.
-pub struct Runtime {
-    pub client: PjRtClient,
+/// Compiled signature registry bound to a tensor engine.
+pub struct Runtime<B: Backend> {
+    pub backend: B,
     pub manifest: Manifest,
-    exes: HashMap<(String, Entry), PjRtLoadedExecutable>,
+    exes: HashMap<String, B::Stage>,
 }
 
-impl Runtime {
-    /// Load a manifest directory, compiling every `(signature, entry)`.
+impl Runtime<PjrtBackend> {
+    /// Load a manifest directory and compile its HLO artifacts with PJRT.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(&dir)?;
         Self::from_manifest(manifest)
     }
 
+    /// Compile an already-parsed manifest with PJRT.
     pub fn from_manifest(manifest: Manifest) -> Result<Self> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::with_backend(PjrtBackend::new()?, manifest)
+    }
+}
+
+impl Runtime<NativeBackend> {
+    /// Compile a manifest with the pure-Rust engine.
+    pub fn native(manifest: Manifest) -> Result<Self> {
+        Self::with_backend(NativeBackend, manifest)
+    }
+
+    /// Build a named in-process preset chain (`quickstart` / `default` /
+    /// `wide`, mirroring `python/compile/model.py`) on the native engine.
+    pub fn native_preset(preset: &str) -> Result<Self> {
+        Self::native(crate::backend::native::presets::preset(preset)?)
+    }
+}
+
+impl<B: Backend> Runtime<B> {
+    /// Compile every distinct signature of `manifest` on `backend`.
+    pub fn with_backend(backend: B, manifest: Manifest) -> Result<Self> {
         let mut exes = HashMap::new();
         for sig in manifest.signatures.keys() {
-            for entry in [Entry::Fwd, Entry::FwdAll, Entry::Bwd] {
-                let path = manifest.hlo_path(sig, entry.name());
-                let proto = HloModuleProto::from_text_file(&path)
-                    .with_context(|| format!("parsing {}", path.display()))?;
-                let comp = XlaComputation::from_proto(&proto);
-                let exe = client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {sig}/{}", entry.name()))?;
-                exes.insert((sig.clone(), entry), exe);
-            }
+            let exe = backend
+                .compile(&manifest, sig)
+                .with_context(|| format!("compiling signature {sig} on {}", backend.name()))?;
+            exes.insert(sig.clone(), exe);
         }
-        Ok(Runtime { client, manifest, exes })
+        Ok(Runtime { backend, manifest, exes })
     }
 
-    pub fn executable(&self, sig: &str, entry: Entry) -> &PjRtLoadedExecutable {
-        &self.exes[&(sig.to_string(), entry)]
+    /// The compiled executable of one signature. Errors (with the known
+    /// signature set for context) instead of panicking on a bad name.
+    pub fn executable(&self, sig: &str) -> Result<&B::Stage> {
+        self.exes.get(sig).with_context(|| {
+            let mut known: Vec<&str> = self.exes.keys().map(String::as_str).collect();
+            known.sort_unstable();
+            format!(
+                "unknown executable signature '{sig}' on {} backend (compiled: {})",
+                self.backend.name(),
+                known.join(", ")
+            )
+        })
     }
 
-    /// Execute one entry point. `args` in manifest order; the tuple output
-    /// is decomposed into positional [`Literal`]s.
-    pub fn execute(&self, sig: &str, entry: Entry, args: &[&Literal]) -> Result<Vec<Literal>> {
-        let exe = self
-            .exes
-            .get(&(sig.to_string(), entry))
-            .with_context(|| format!("unknown executable {sig}/{}", entry.name()))?;
-        let outs = exe
-            .execute::<&Literal>(args)
-            .with_context(|| format!("executing {sig}/{}", entry.name()))?;
-        let mut result = outs[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {sig}/{}", entry.name()))?;
-        // aot.py lowers with return_tuple=True: always a tuple root.
-        let parts = result.decompose_tuple().context("decomposing result tuple")?;
-        Ok(parts)
+    /// Execute one entry point of a signature. `args` in manifest order;
+    /// the output tuple is returned decomposed into positional tensors.
+    pub fn execute(&self, sig: &str, entry: Entry, args: &[&B::Tensor]) -> Result<Vec<B::Tensor>> {
+        self.executable(sig)?
+            .entry(entry, args)
+            .with_context(|| format!("executing {sig}/{}", entry.name()))
     }
 
-    /// Number of compiled executables (3 × distinct signatures).
+    /// Number of compiled executables (one per distinct signature; each
+    /// carries all three entry points).
     pub fn executable_count(&self) -> usize {
         self.exes.len()
     }
