@@ -54,7 +54,7 @@ fn main() {
     // headline summary table (paper: +17.2 % average)
     let mut csv = String::from("chain,batch,gain_pct,seq_img_s,opt_img_s\n");
     for p in &all {
-        if let Some((g, seq, opt)) = optimal_vs_sequential(p) {
+        if let Ok((g, seq, opt)) = optimal_vs_sequential(p) {
             csv.push_str(&format!(
                 "{},{},{:.2},{:.3},{:.3}\n",
                 p.chain_name, p.batch, 100.0 * g, seq, opt

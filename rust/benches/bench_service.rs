@@ -1,0 +1,171 @@
+//! Planning-service loopback load benchmark: N client threads × M
+//! requests against an in-process `serve` daemon on an ephemeral port,
+//! measuring end-to-end request latency (p50/p99), throughput, and the
+//! planner table-cache hit rate that makes warm traffic cheap.
+//!
+//! Custom harness (no criterion offline), same contract as the other
+//! benches: human-readable table on stdout, machine-readable
+//! `BENCH_service.json` (emitted with the crate's own JSON writer) plus
+//! `results/bench_service.csv`.
+//!
+//! ```sh
+//! cargo bench --bench bench_service            # full load
+//! cargo bench --bench bench_service -- --quick # CI-sized subset
+//! ```
+
+use std::time::{Duration, Instant};
+
+use chainckpt::service::http::Client;
+use chainckpt::service::{serve, ServiceConfig};
+use chainckpt::solver::clear_cache;
+use chainckpt::util::json::{obj, Value};
+use chainckpt::util::Args;
+
+/// One client worker: `reqs` solve requests on a keep-alive connection,
+/// returning per-request latencies in microseconds.
+fn client_worker(addr: std::net::SocketAddr, reqs: usize, body: &str) -> Vec<u64> {
+    let mut client = Client::connect(addr).expect("connect to the loopback daemon");
+    let mut latencies = Vec::with_capacity(reqs);
+    for i in 0..reqs {
+        let t0 = Instant::now();
+        let (status, resp) =
+            client.request("POST", "/solve", Some(body)).expect("solve round-trip");
+        latencies.push(t0.elapsed().as_micros() as u64);
+        assert_eq!(status, 200, "request {i}: {resp}");
+        assert!(resp.contains("\"feasible\":true"), "request {i}: {resp}");
+    }
+    latencies
+}
+
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+fn main() {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    let threads: usize = if quick { 4 } else { 8 };
+    let reqs_per_thread: usize = if quick { 50 } else { 200 };
+
+    // a mid-size profile: big enough that a cache miss is visible, small
+    // enough that the cold fill stays in milliseconds; budget = half of
+    // store-all, feasible for every ResNet (cf. the solver property tests)
+    let chain = chainckpt::chain::profiles::resnet(50, 224, 16);
+    let body = format!(
+        r#"{{"chain": {{"profile": {{"family": "resnet", "depth": 50,
+           "image": 224, "batch": 16}}}}, "memory": {}, "slots": 300}}"#,
+        chain.store_all_memory() / 2
+    );
+    let body = body.as_str(); // scoped threads below borrow it
+
+    clear_cache(); // charge the benchmark its own cold build
+    let server = serve(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: threads,
+        read_timeout: Duration::from_secs(10),
+        ..ServiceConfig::default()
+    })
+    .expect("bind the loopback daemon");
+    let addr = server.addr();
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<u64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| scope.spawn(move || client_worker(addr, reqs_per_thread, body)))
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    // cache + request counters over the real wire, like a client would
+    let mut probe = Client::connect(addr).unwrap();
+    let (status, stats_body) = probe.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let stats = Value::parse(&stats_body).expect("stats JSON");
+    let cache = stats.get("planner_cache").expect("planner_cache in /stats");
+    let (lookups, hits, builds) = (
+        cache.get("lookups").unwrap().as_u64().unwrap(),
+        cache.get("hits").unwrap().as_u64().unwrap(),
+        cache.get("builds").unwrap().as_u64().unwrap(),
+    );
+    drop(probe);
+
+    let total_reqs = threads * reqs_per_thread;
+    latencies.sort_unstable();
+    let (p50, p90, p99) = (
+        percentile(&latencies, 0.50),
+        percentile(&latencies, 0.90),
+        percentile(&latencies, 0.99),
+    );
+    let req_per_s = total_reqs as f64 / elapsed;
+    let hit_rate = hits as f64 / lookups as f64;
+
+    println!(
+        "{:<26} {:>8} {:>10} {:>10} {:>10} {:>10}",
+        "load", "req/s", "p50 (µs)", "p90 (µs)", "p99 (µs)", "hit rate"
+    );
+    println!(
+        "{:<26} {:>8.0} {:>10} {:>10} {:>10} {:>9.1}%",
+        format!("{threads}x{reqs_per_thread} solve"),
+        req_per_s,
+        p50,
+        p90,
+        p99,
+        100.0 * hit_rate
+    );
+    println!(
+        "cache: {lookups} lookups, {hits} hits, {builds} builds ({} total requests in {:.2} s)",
+        total_reqs, elapsed
+    );
+
+    // warm traffic for one chain must be served from the shared table:
+    // one cold DP fill (give a little slack for a cold/warm boundary
+    // race where the discretization differs — there is exactly one
+    // (chain, budget, slots) here, so in practice builds == 1)
+    assert!(
+        builds <= 2,
+        "{builds} DP builds for one repeated (chain, budget): the cache is not working"
+    );
+    assert!(
+        hit_rate > 0.9,
+        "hit rate {hit_rate:.3} too low for single-chain traffic"
+    );
+    assert!(p50 > 0, "sub-microsecond p50 means the clock did not advance");
+
+    let json = obj([
+        ("bench", Value::from("bench_service")),
+        ("quick", Value::from(quick)),
+        ("threads", Value::from(threads)),
+        ("requests_per_thread", Value::from(reqs_per_thread)),
+        ("total_requests", Value::from(total_reqs)),
+        ("elapsed_s", Value::from(elapsed)),
+        ("req_per_s", Value::from(req_per_s)),
+        (
+            "latency_us",
+            obj([
+                ("p50", Value::from(p50)),
+                ("p90", Value::from(p90)),
+                ("p99", Value::from(p99)),
+            ]),
+        ),
+        (
+            "cache",
+            obj([
+                ("lookups", Value::from(lookups)),
+                ("hits", Value::from(hits)),
+                ("builds", Value::from(builds)),
+                ("hit_rate", Value::from(hit_rate)),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("results").ok();
+    let csv = format!(
+        "threads,reqs_per_thread,req_per_s,p50_us,p90_us,p99_us,hit_rate\n{},{},{:.1},{},{},{},{:.4}\n",
+        threads, reqs_per_thread, req_per_s, p50, p90, p99, hit_rate
+    );
+    std::fs::write("results/bench_service.csv", csv).ok();
+    std::fs::write("BENCH_service.json", json.to_json_string()).ok();
+    println!("→ results/bench_service.csv, BENCH_service.json");
+
+    server.stop();
+}

@@ -239,6 +239,9 @@ pub fn layernorm_probe(batch: usize, seq: usize, d: usize) -> Result<Manifest> {
     )
 }
 
+/// Every named preset [`preset`] accepts (service discovery, CLI docs).
+pub const NAMES: &[&str] = &["quickstart", "default", "wide"];
+
 /// Named presets, mirroring `python/compile/model.py::PRESETS`.
 ///
 /// * `quickstart` — tiny smoke chain (b2 t16 d64 h4 f128, 1 block).
@@ -249,7 +252,7 @@ pub fn preset(name: &str) -> Result<Manifest> {
         "quickstart" => transformer(name, 2, 16, 64, 4, 128, 1),
         "default" => transformer(name, 8, 64, 256, 4, 1024, 4),
         "wide" => transformer(name, 4, 128, 768, 12, 3072, 6),
-        other => bail!("unknown native preset '{other}' (quickstart/default/wide)"),
+        other => bail!("unknown native preset '{other}' ({})", NAMES.join("/")),
     }
 }
 
@@ -294,6 +297,9 @@ mod tests {
     #[test]
     fn unknown_preset_rejected() {
         assert!(preset("nope").is_err());
+        for name in NAMES {
+            assert!(preset(name).is_ok(), "{name}");
+        }
     }
 
     #[test]

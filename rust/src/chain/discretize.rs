@@ -43,6 +43,14 @@ pub struct DiscreteChain {
 }
 
 impl DiscreteChain {
+    /// Size cap in slots. Pathological ratios (a multi-GiB stage against a
+    /// one-byte budget — reachable through the planning service's inline
+    /// chains) saturate here instead of wrapping the `u32`: the DP adds up
+    /// to four sizes at once, so the cap leaves headroom below `u32::MAX`,
+    /// and anything this far above a real slot axis (≤ thousands) is
+    /// equally infeasible.
+    const SLOT_CAP: u32 = u32::MAX / 8;
+
     /// Discretize `chain` against a byte budget `memory` with `slots` slots.
     pub fn new(chain: &Chain, memory: u64, slots: usize) -> Self {
         assert!(slots > 0 && memory > 0);
@@ -51,7 +59,12 @@ impl DiscreteChain {
             if bytes == 0 {
                 0
             } else {
-                ((bytes as f64 / slot_bytes).ceil() as u64).max(1) as u32
+                let slots = (bytes as f64 / slot_bytes).ceil().max(1.0);
+                if slots >= Self::SLOT_CAP as f64 {
+                    Self::SLOT_CAP
+                } else {
+                    slots as u32
+                }
             }
         };
         let l1 = chain.len();
@@ -180,6 +193,20 @@ mod tests {
         assert_eq!(d.budget_slots(100), 1);
         assert_eq!(d.budget_slots(99), 0);
         assert_eq!(d.budget_slots(0), 0);
+    }
+
+    #[test]
+    fn pathological_ratios_saturate_instead_of_wrapping() {
+        // a stage vastly larger than the whole budget must stay huge in
+        // slot space (u32 wrap would make it look tiny → "feasible")
+        let huge = Chain::new(
+            "huge",
+            vec![Stage::new("s1", 1.0, 1.0, 8_589_935_000, 8_589_935_000)],
+            1,
+        );
+        let d = DiscreteChain::new(&huge, 1, 10); // slot_bytes = 0.1
+        assert_eq!(d.wa_s(1), DiscreteChain::SLOT_CAP);
+        assert_eq!(d.wabar_s(1), DiscreteChain::SLOT_CAP);
     }
 
     #[test]

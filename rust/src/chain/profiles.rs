@@ -352,7 +352,37 @@ pub fn vgg19(image: u64, batch: u64) -> Chain {
     Chain::new(format!("vgg19-i{image}-b{batch}"), b.stages, input_bytes)
 }
 
-/// Look up a profile by family name (CLI surface).
+/// Every profile family this module can generate (service discovery and
+/// CLI validation).
+pub const FAMILIES: &[&str] = &["resnet", "densenet", "inception", "vgg"];
+
+/// The depths a family supports. Depth-less families (`inception`, `vgg`)
+/// report `[0]` — any depth argument is ignored for them.
+pub fn supported_depths(family: &str) -> &'static [u32] {
+    match family {
+        "resnet" => &[18, 34, 50, 101, 152, 200, 1001],
+        "densenet" => &[121, 161, 169, 201],
+        "inception" | "vgg" => &[0],
+        _ => &[],
+    }
+}
+
+/// Non-panicking profile lookup: `None` for an unknown family or an
+/// unsupported depth (the planning service turns this into a structured
+/// 4xx instead of a worker panic). Depth is ignored for `inception`/`vgg`.
+pub fn try_by_name(family: &str, depth: u32, image: u64, batch: u64) -> Option<Chain> {
+    match family {
+        "resnet" | "densenet" if !supported_depths(family).contains(&depth) => None,
+        "resnet" => Some(resnet(depth, image, batch)),
+        "densenet" => Some(densenet(depth, image, batch)),
+        "inception" => Some(inception_v3(image, batch)),
+        "vgg" => Some(vgg19(image, batch)),
+        _ => None,
+    }
+}
+
+/// Look up a profile by family name (CLI surface; panics on unknown
+/// input — use [`try_by_name`] where the caller must survive bad names).
 pub fn by_name(family: &str, depth: u32, image: u64, batch: u64) -> Chain {
     match family {
         "resnet" => resnet(depth, image, batch),
@@ -428,6 +458,21 @@ mod tests {
         assert!((0.8..12.0).contains(&gib), "store-all = {gib:.2} GiB");
         // and a V100-ish forward+backward should take tens–hundreds of ms
         assert!((10.0..5000.0).contains(&c.ideal_time()), "{}", c.ideal_time());
+    }
+
+    #[test]
+    fn try_by_name_rejects_instead_of_panicking() {
+        assert!(try_by_name("resnet", 50, 224, 4).is_some());
+        assert!(try_by_name("resnet", 51, 224, 4).is_none());
+        assert!(try_by_name("densenet", 169, 224, 4).is_some());
+        assert!(try_by_name("densenet", 50, 224, 4).is_none());
+        assert!(try_by_name("alexnet", 8, 224, 4).is_none());
+        // depth ignored for the depth-less families
+        assert!(try_by_name("vgg", 999, 224, 4).is_some());
+        assert!(try_by_name("inception", 0, 299, 4).is_some());
+        for f in FAMILIES {
+            assert!(!supported_depths(f).is_empty(), "{f}");
+        }
     }
 
     #[test]

@@ -20,11 +20,14 @@
 
 use std::fmt::Write as _;
 
+use anyhow::{Context, Result};
+
 use crate::chain::{profiles, Chain};
 use crate::simulator::simulate;
 use crate::solver::{
     paper_segment_sweep, periodic_schedule, store_all_schedule, Mode, Planner, StrategyKind,
 };
+use crate::util::fmt_bytes;
 
 /// Memory of the paper's evaluation GPU (V100 16 GB, minus framework
 /// overhead — the paper reports 15.75 GB usable).
@@ -269,21 +272,42 @@ pub fn to_csv(panels: &[Panel]) -> String {
 
 /// The paper's §5.4 headline: ratio of `optimal` throughput to the *best*
 /// `sequential` throughput, with optimal restricted to at most the memory
-/// the best sequential point used. Returns (gain, best_seq, matched_opt)
-/// or None if either curve is missing.
-pub fn optimal_vs_sequential(panel: &Panel) -> Option<(f64, f64, f64)> {
+/// the best sequential point used. Returns `(gain, best_seq, matched_opt)`;
+/// when a curve is missing (every point of a strategy was infeasible on
+/// the device) the error names the panel and the budget that failed, so a
+/// sweep over many panels can report *which* configuration fell off the
+/// figure instead of panicking.
+pub fn optimal_vs_sequential(panel: &Panel) -> Result<(f64, f64, f64)> {
     let best_seq = panel
         .points
         .iter()
         .filter(|p| p.strategy == StrategyKind::Periodic)
-        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        .with_context(|| {
+            format!(
+                "panel {} (batch {}): no feasible sequential point — every segment count \
+                 exceeded the device memory ({})",
+                panel.chain_name,
+                panel.batch,
+                fmt_bytes(DEVICE_MEMORY)
+            )
+        })?;
     let opt = panel
         .points
         .iter()
         .filter(|p| p.strategy == StrategyKind::Optimal)
         .filter(|p| p.peak_bytes <= best_seq.peak_bytes)
-        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
-    Some((
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        .with_context(|| {
+            format!(
+                "panel {} (batch {}): no optimal point within the best sequential peak \
+                 ({}) — every optimal budget at or below it was infeasible",
+                panel.chain_name,
+                panel.batch,
+                fmt_bytes(best_seq.peak_bytes)
+            )
+        })?;
+    Ok((
         opt.throughput / best_seq.throughput - 1.0,
         best_seq.throughput,
         opt.throughput,
@@ -291,8 +315,11 @@ pub fn optimal_vs_sequential(panel: &Panel) -> Option<(f64, f64, f64)> {
 }
 
 /// Summary over a set of panels: average percentage gain (paper: 17.2 %).
+/// Panels with a missing curve are skipped (their per-panel reason is
+/// available via [`optimal_vs_sequential`]); `None` if no panel compares.
 pub fn summary_gain(panels: &[Panel]) -> Option<f64> {
-    let gains: Vec<f64> = panels.iter().filter_map(optimal_vs_sequential).map(|g| g.0).collect();
+    let gains: Vec<f64> =
+        panels.iter().filter_map(|p| optimal_vs_sequential(p).ok()).map(|g| g.0).collect();
     if gains.is_empty() {
         return None;
     }
@@ -332,7 +359,7 @@ mod tests {
     fn optimal_dominates_sequential_on_small_panel() {
         let chain = profiles::resnet(34, 224, 16);
         let p = panel(&chain, 16, DEVICE_MEMORY);
-        let (gain, _, _) = optimal_vs_sequential(&p).expect("both curves present");
+        let (gain, _, _) = optimal_vs_sequential(&p).unwrap_or_else(|e| panic!("{e:#}"));
         assert!(gain >= -1e-9, "optimal must not lose at equal memory: gain={gain}");
     }
 

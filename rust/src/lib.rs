@@ -35,6 +35,10 @@
 //! * [`train`] — SGD training driver (synthetic data, loss logging).
 //! * [`figures`] — regenerates every figure/table of the paper's §5.4
 //!   evaluation as CSV series.
+//! * [`service`] — the planning daemon: a std-only HTTP/1.1 JSON server
+//!   (`chainckpt serve`) answering `/solve`, `/sweep`, `/simulate`,
+//!   `/chains`, `/stats` from a bounded thread pool, with the planner's
+//!   fingerprint-keyed table cache shared across all connections.
 
 pub mod backend;
 pub mod chain;
@@ -42,6 +46,7 @@ pub mod estimator;
 pub mod executor;
 pub mod figures;
 pub mod runtime;
+pub mod service;
 pub mod simulator;
 pub mod solver;
 pub mod train;

@@ -7,6 +7,7 @@
 //!   train     run SGD with a checkpointing schedule over real stages
 //!   compare   measured throughput-vs-memory of all strategies (real run)
 //!   figures   regenerate the paper's Figures 3–13 + summary as CSV
+//!   serve     run the HTTP planning daemon (schedules as a service)
 //!
 //! The execution subcommands (`estimate`/`train`/`compare`) take
 //! `--backend native|pjrt`: `native` (the default) runs the pure-Rust
@@ -41,6 +42,7 @@ USAGE:
                      [--slots 500] [--strategy optimal|revolve] [--show-ops]
   chainckpt simulate --family resnet --depth 101 --image 1000 --batch 8
   chainckpt estimate [--backend native|pjrt] [--preset default] [--artifacts DIR]
+                     [--reps 5] [--warmup 2]
   chainckpt train    [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--memory 8M | --memory-frac 0.75] [--steps 100] [--lr 0.05]
                      [--strategy optimal|sequential|revolve|pytorch]
@@ -48,6 +50,12 @@ USAGE:
   chainckpt compare  [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--points 6] [--out compare.csv]
   chainckpt figures  [--fig 3|all] [--out results]
+  chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
+                     [--slots 500] [--queue 64]
+
+The planning service answers POST /solve, /sweep, /simulate and
+GET /chains, /stats, /healthz with JSON; repeated requests for a chain
+hit the planner's shared DP-table cache. --port 0 picks a free port.
 
 Backends: --backend native (pure-Rust engine, chains generated in-process
 from --preset quickstart|default|wide — the default) or --backend pjrt
@@ -140,13 +148,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             pt.throughput
         );
     }
-    if let Some((gain, seq, opt)) = figures::optimal_vs_sequential(&p) {
-        println!(
+    match figures::optimal_vs_sequential(&p) {
+        Ok((gain, seq, opt)) => println!(
             "optimal vs best sequential: {:.2} vs {:.2} im/s → +{:.1} %",
             opt,
             seq,
             100.0 * gain
-        );
+        ),
+        Err(e) => println!("optimal vs best sequential: n/a ({e:#})"),
     }
     Ok(())
 }
@@ -199,10 +208,15 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn estimate_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
+    let defaults = EstimatorConfig::default();
     let cfg = EstimatorConfig {
-        reps: args.usize("reps", 5),
-        warmup: args.usize("warmup", 2),
+        reps: args.usize("reps", defaults.reps),
+        warmup: args.usize("warmup", defaults.warmup),
     };
+    println!(
+        "estimator config: reps = {} (median taken), warmup = {} (untimed)",
+        cfg.reps, cfg.warmup
+    );
     let timings = estimate(rt, cfg)?;
     // assemble from the timings already in hand (measured_chain would
     // re-run the whole timing loop)
@@ -407,7 +421,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
         let path = out_dir.join("summary.csv");
         let mut s = String::from("chain,batch,gain_pct,seq_img_s,opt_img_s\n");
         for p in &all_panels {
-            if let Some((gain, seq, opt)) = figures::optimal_vs_sequential(p) {
+            if let Ok((gain, seq, opt)) = figures::optimal_vs_sequential(p) {
                 s.push_str(&format!(
                     "{},{},{:.2},{:.3},{:.3}\n",
                     p.chain_name,
@@ -424,6 +438,22 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = chainckpt::service::ServiceConfig {
+        addr: format!("{}:{}", args.str("addr", "127.0.0.1"), args.u64("port", 8080)),
+        workers: args.usize("threads", 0), // 0 = one per core
+        queue_depth: args.usize("queue", 64),
+        slots: args.usize("slots", DEFAULT_SLOTS),
+        ..Default::default()
+    };
+    let server = chainckpt::service::serve(cfg)?;
+    println!("planning service listening on http://{}", server.addr());
+    println!("endpoints: POST /solve /sweep /simulate · GET /chains /stats /healthz");
+    println!("try: curl -s http://{}/chains", server.addr());
+    server.join();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
@@ -434,6 +464,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
         "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())

@@ -1,0 +1,482 @@
+//! Minimal HTTP/1.1 framing over `std::net` (substrate module — the
+//! offline build has no hyper/axum, and the planning service needs only
+//! request/response framing, keep-alive, and Content-Length bodies).
+//!
+//! One [`Request`] / [`Response`] pair per round-trip; connections are
+//! HTTP/1.1 persistent by default (`Connection: close` opts out). The
+//! module also ships a tiny blocking [`Client`] so the integration tests
+//! and the loopback benchmark exercise the real wire format instead of
+//! calling handlers directly.
+
+use std::collections::BTreeMap;
+use std::fmt::Display;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Value};
+
+/// Cap on the request line + headers (a planning request's framing is a
+/// few hundred bytes; anything bigger is abuse).
+pub const MAX_HEAD_BYTES: usize = 16 << 10;
+/// Cap on a request body (an inline 2048-stage chain profile is ~200 KB;
+/// 8 MiB leaves two orders of magnitude of headroom).
+pub const MAX_BODY_BYTES: usize = 8 << 20;
+/// Wall-clock bound on reading one request (head + body). The socket's
+/// per-read idle timeout cannot stop a byte-at-a-time trickler — each
+/// tiny read resets it — so [`read_request`] also checks this total
+/// deadline between reads.
+pub const MAX_REQUEST_TIME: Duration = Duration::from_secs(60);
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (may be empty; no endpoint requires one today).
+    pub query: String,
+    /// Header names lowercased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// HTTP/1.1 default is persistent; `Connection: close` opts out.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Why [`read_request`] could not produce a request.
+#[derive(Debug)]
+pub enum RecvError {
+    /// Clean EOF (or idle-timeout) before the first byte of a request —
+    /// the normal end of a keep-alive connection. Not an error to report.
+    Closed,
+    /// Syntactically invalid framing: respond 400 and close.
+    Malformed(String),
+    /// Head or body over the caps: respond 413 and close.
+    TooLarge(String),
+}
+
+fn malformed(msg: impl Into<String>) -> RecvError {
+    RecvError::Malformed(msg.into())
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes (terminator
+/// included), never buffering more than that — `BufRead::read_line`
+/// would grow its String without bound on a newline-free flood, which is
+/// how [`MAX_HEAD_BYTES`] could otherwise be bypassed. `Ok(None)` means
+/// clean EOF (or idle timeout) before the first byte.
+fn read_line_capped(
+    reader: &mut BufReader<TcpStream>,
+    cap: usize,
+    deadline: Instant,
+) -> Result<Option<String>, RecvError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        if Instant::now() >= deadline {
+            return Err(malformed("request read deadline exceeded"));
+        }
+        let (take, done) = {
+            let available = match reader.fill_buf() {
+                Ok(b) => b,
+                // timeout / reset: only clean if nothing was read yet
+                Err(_) if line.is_empty() => return Ok(None),
+                Err(e) => return Err(malformed(format!("mid-line read error: {e}"))),
+            };
+            if available.is_empty() {
+                // EOF
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(malformed("eof mid-line"));
+            }
+            let (take, done) = match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => (pos + 1, true),
+                None => (available.len(), false),
+            };
+            if line.len() + take > cap {
+                return Err(RecvError::TooLarge(format!(
+                    "request head exceeds {MAX_HEAD_BYTES} bytes"
+                )));
+            }
+            line.extend_from_slice(&available[..take]);
+            (take, done)
+        };
+        reader.consume(take);
+        if done {
+            return String::from_utf8(line)
+                .map(Some)
+                .map_err(|_| malformed("request head is not UTF-8"));
+        }
+    }
+}
+
+/// Read one request from a buffered connection. Blocks until a full
+/// request arrives, the peer closes, the stream's idle read timeout
+/// fires, or the [`MAX_REQUEST_TIME`] deadline passes mid-request.
+pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request, RecvError> {
+    // the deadline clock starts at the first read *attempt*; an idle
+    // keep-alive connection (blocked before its next request) is governed
+    // by the socket timeout alone and ends as a clean `Closed`
+    let deadline = Instant::now() + MAX_REQUEST_TIME;
+    let mut head_budget = MAX_HEAD_BYTES;
+    let Some(line) = read_line_capped(reader, head_budget, deadline)? else {
+        // idle keep-alive end (EOF/timeout) before a request started
+        return Err(RecvError::Closed);
+    };
+    head_budget -= line.len().min(head_budget);
+    let request_line = line.trim_end_matches(['\r', '\n']).to_string();
+
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("bad request line '{request_line}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let Some(hline) = read_line_capped(reader, head_budget, deadline)? else {
+            return Err(malformed("eof inside headers"));
+        };
+        head_budget -= hline.len().min(head_budget);
+        let hline = hline.trim_end_matches(['\r', '\n']);
+        if hline.is_empty() {
+            break;
+        }
+        let Some((name, value)) = hline.split_once(':') else {
+            return Err(malformed(format!("bad header line '{hline}'")));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+
+    // chunked framing is not implemented; without this rejection the
+    // chunk stream would be misparsed as pipelined requests
+    if headers.contains_key("transfer-encoding") {
+        return Err(malformed(
+            "Transfer-Encoding is not supported; send a Content-Length body",
+        ));
+    }
+    let content_length = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| malformed(format!("bad Content-Length '{v}'")))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(RecvError::TooLarge(format!(
+            "body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        )));
+    }
+    // standards-following clients (curl for bodies over ~1 KB) wait for
+    // the interim 100 before sending the payload
+    if content_length > 0
+        && headers
+            .get("expect")
+            .is_some_and(|v| v.to_ascii_lowercase().contains("100-continue"))
+    {
+        let _ = reader.get_mut().write_all(b"HTTP/1.1 100 Continue\r\n\r\n");
+        let _ = reader.get_mut().flush();
+    }
+    // chunked body reads so the total deadline is checked between
+    // syscalls (read_exact could trickle forever one byte at a time)
+    let mut body = vec![0u8; content_length];
+    let mut filled = 0usize;
+    while filled < content_length {
+        if Instant::now() >= deadline {
+            return Err(malformed("request read deadline exceeded mid-body"));
+        }
+        match reader.read(&mut body[filled..]) {
+            Ok(0) => return Err(malformed("eof mid-body")),
+            Ok(n) => filled += n,
+            Err(e) => {
+                return Err(malformed(format!("reading {content_length}-byte body: {e}")))
+            }
+        }
+    }
+
+    Ok(Request { method, path, query, headers, body })
+}
+
+/// One response, always written with an explicit `Content-Length`.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+    pub content_type: &'static str,
+}
+
+impl Response {
+    /// A `200 OK` (or other status) JSON payload.
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, body, content_type: "application/json" }
+    }
+
+    /// The service's structured error envelope:
+    /// `{"error": {"code": <status>, "message": "..."}}`.
+    pub fn error(status: u16, message: impl Display) -> Response {
+        let payload = obj([(
+            "error",
+            obj([
+                ("code", Value::from(status as u64)),
+                ("message", Value::from(message.to_string())),
+            ]),
+        )]);
+        Response::json(status, payload.to_json_string())
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        w.write_all(head.as_bytes())?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+/// Reason phrases for the statuses the service emits.
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking client (tests, benches, ad-hoc probing)
+// ---------------------------------------------------------------------------
+
+/// A persistent (keep-alive) connection to the planning service. Each
+/// [`Client::request`] is one synchronous round-trip on the same socket.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream) })
+    }
+
+    /// Send one request, return `(status, body)`. `body = None` sends no
+    /// payload (GET); `Some(json)` sends it as `application/json`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<(u16, String)> {
+        let payload = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: chainckpt\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\n\r\n",
+            payload.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(payload.as_bytes())?;
+        stream.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> io::Result<(u16, String)> {
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let mut status_line = String::new();
+        if self.reader.read_line(&mut status_line)? == 0 {
+            return Err(bad("connection closed before a status line".into()));
+        }
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad(format!("bad status line '{}'", status_line.trim())))?;
+        let mut content_length = 0usize;
+        loop {
+            let mut hline = String::new();
+            if self.reader.read_line(&mut hline)? == 0 {
+                return Err(bad("connection closed inside response headers".into()));
+            }
+            let hline = hline.trim_end_matches(['\r', '\n']);
+            if hline.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = hline.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad(format!("bad Content-Length '{value}'")))?;
+                }
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body)?;
+        String::from_utf8(body)
+            .map(|b| (status, b))
+            .map_err(|_| bad("response body is not UTF-8".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Frame one canned request through a real socket pair.
+    fn roundtrip(raw: &str) -> Result<Request, RecvError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(raw.as_bytes()).unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let req = read_request(&mut reader);
+        writer.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = roundtrip(
+            "POST /solve?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/solve");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body, b"{\"a\":1}");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let req =
+            roundtrip("GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive());
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_request_line_rejected() {
+        assert!(matches!(roundtrip("NONSENSE\r\n\r\n"), Err(RecvError::Malformed(_))));
+        assert!(matches!(
+            roundtrip("GET /x SMTP/1.0\r\n\r\n"),
+            Err(RecvError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn chunked_transfer_encoding_rejected() {
+        // unimplemented framing must be refused, not misparsed as a
+        // zero-length body followed by garbage pipelined requests
+        let res = roundtrip(
+            "POST /solve HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n3\r\nabc\r\n0\r\n\r\n",
+        );
+        match res {
+            Err(RecvError::Malformed(msg)) => assert!(msg.contains("Transfer-Encoding")),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_body_rejected_without_reading_it() {
+        let raw = format!(
+            "POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        assert!(matches!(roundtrip(&raw), Err(RecvError::TooLarge(_))));
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_malformed() {
+        assert!(matches!(roundtrip(""), Err(RecvError::Closed)));
+    }
+
+    #[test]
+    fn newline_free_head_flood_is_capped_not_buffered() {
+        // a request line with no '\n' must hit the head cap, not grow an
+        // unbounded line buffer (the write side may see a reset once the
+        // server bails — ignore its errors)
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let chunk = [b'A'; 4096];
+            for _ in 0..64 {
+                if s.write_all(&chunk).is_err() {
+                    break; // server already rejected and closed
+                }
+            }
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let res = read_request(&mut reader);
+        assert!(matches!(res, Err(RecvError::TooLarge(_))), "{res:?}");
+        drop(reader);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn expect_100_continue_gets_the_interim_response() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(
+                b"POST /solve HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n",
+            )
+            .unwrap();
+            // wait for the interim response before sending the body
+            let mut interim = [0u8; 25]; // "HTTP/1.1 100 Continue\r\n\r\n"
+            s.read_exact(&mut interim).unwrap();
+            assert!(interim.starts_with(b"HTTP/1.1 100"));
+            s.write_all(b"{}").unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream);
+        let req = read_request(&mut reader).unwrap();
+        assert_eq!(req.body, b"{}");
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn error_response_is_structured_json() {
+        let resp = Response::error(404, "no route GET /nope");
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().as_u64(), Some(404));
+        assert_eq!(
+            v.get("error").unwrap().get("message").unwrap().as_str(),
+            Some("no route GET /nope")
+        );
+    }
+}

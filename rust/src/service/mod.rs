@@ -1,0 +1,303 @@
+//! The planning service: a concurrent daemon serving optimal
+//! checkpointing schedules over HTTP/1.1 + JSON (std-only, like every
+//! substrate in this crate — no tokio, no hyper, no serde).
+//!
+//! The paper's tool answers one `(chain, budget)` query per offline run;
+//! [`crate::solver::Planner`] already amortizes one DP table across every
+//! budget of a chain. This module is where that amortization meets
+//! *traffic*: a [`TcpListener`] accept loop feeds a bounded
+//! [`pool::ThreadPool`], each request routes through [`routes`], and every
+//! planning request for a chain the service has seen before — from any
+//! connection, any thread — is a fingerprint-keyed table lookup instead
+//! of an O(L²·S) DP fill. Single-flight building (see
+//! `solver::planner::table_for`) means even a thundering herd for a cold
+//! chain runs the DP exactly once.
+//!
+//! ```sh
+//! chainckpt serve --port 8080 &
+//! curl -s localhost:8080/solve -d '{
+//!   "chain": {"profile": {"family": "resnet", "depth": 101,
+//!             "image": 1000, "batch": 8}},
+//!   "memory": "4G"}'
+//! ```
+//!
+//! Start in-process with [`serve`]; the returned [`Server`] carries the
+//! bound address (ephemeral ports supported: `--port 0`) and stops the
+//! daemon on drop — the integration tests and the loopback benchmark run
+//! the real wire protocol this way.
+
+pub mod http;
+pub mod pool;
+pub mod routes;
+pub mod wire;
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::chain::DEFAULT_SLOTS;
+
+/// Tunables of one daemon instance.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks an ephemeral port).
+    pub addr: String,
+    /// Worker threads; `0` = one per available core.
+    pub workers: usize,
+    /// Connections queued beyond busy workers before the accept loop
+    /// blocks (kernel backlog then holds the rest).
+    pub queue_depth: usize,
+    /// Default DP discretization for requests that don't pass `"slots"`.
+    pub slots: usize,
+    /// Per-read idle timeout: a connection with no next request after
+    /// this long is closed. (A single request's head+body read is
+    /// additionally wall-clock-bounded by [`http::MAX_REQUEST_TIME`], so
+    /// a byte-at-a-time trickler cannot pin a worker indefinitely.)
+    pub read_timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 0,
+            queue_depth: 64,
+            slots: DEFAULT_SLOTS,
+            read_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared by every worker: request-independent config + counters.
+pub struct ServiceState {
+    /// Default slot count for planning requests.
+    pub slots: usize,
+    /// Request counters and latency reservoir (`GET /stats`).
+    pub stats: routes::Stats,
+    /// Daemon start time (`uptime_s` in `/stats`).
+    pub started: Instant,
+}
+
+/// Socket clones of every live connection, so shutdown can unblock
+/// workers parked in a keep-alive read instead of waiting out the idle
+/// timeout.
+#[derive(Default)]
+struct ConnRegistry {
+    conns: Mutex<Vec<(u64, TcpStream)>>,
+    next_id: AtomicU64,
+}
+
+impl ConnRegistry {
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<(u64, TcpStream)>> {
+        self.conns.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn register(&self, stream: &TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        if let Ok(clone) = stream.try_clone() {
+            self.lock().push((id, clone));
+        }
+        id
+    }
+
+    fn deregister(&self, id: u64) {
+        self.lock().retain(|(i, _)| *i != id);
+    }
+
+    fn shutdown_all(&self) {
+        for (_, stream) in self.lock().iter() {
+            // Read only: wakes workers parked on a keep-alive read while
+            // letting a worker mid-request still write its response
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+    }
+}
+
+/// A running daemon. Dropping it (or calling [`Server::stop`]) shuts the
+/// accept loop down and joins every worker.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    state: Arc<ServiceState>,
+    registry: Arc<ConnRegistry>,
+}
+
+/// Bind and start serving in background threads; returns once the
+/// listener is live (requests can be sent immediately).
+pub fn serve(cfg: ServiceConfig) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding planning service to {}", cfg.addr))?;
+    let addr = listener.local_addr().context("reading bound address")?;
+    let state = Arc::new(ServiceState {
+        slots: cfg.slots,
+        stats: routes::Stats::default(),
+        started: Instant::now(),
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let registry = Arc::new(ConnRegistry::default());
+
+    let accept = {
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        let registry = Arc::clone(&registry);
+        let workers = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        } else {
+            cfg.workers
+        };
+        let queue_depth = cfg.queue_depth;
+        let read_timeout = cfg.read_timeout;
+        std::thread::Builder::new()
+            .name("chainckpt-accept".to_string())
+            .spawn(move || {
+                // the pool lives (and dies) with the accept loop: dropping
+                // it at the end drains queued connections and joins workers
+                let pool = pool::ThreadPool::new("chainckpt-http", workers, queue_depth);
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else {
+                        // e.g. EMFILE under fd exhaustion: back off instead
+                        // of spinning the accept thread at 100% CPU
+                        std::thread::sleep(Duration::from_millis(50));
+                        continue;
+                    };
+                    let state = Arc::clone(&state);
+                    let stop = Arc::clone(&stop);
+                    let registry = Arc::clone(&registry);
+                    pool.execute(move || {
+                        let id = registry.register(&stream);
+                        handle_connection(stream, &state, read_timeout, &stop);
+                        registry.deregister(id);
+                    });
+                }
+            })
+            .context("spawning the accept thread")?
+    };
+
+    Ok(Server { addr, stop, accept: Some(accept), state, registry })
+}
+
+impl Server {
+    /// The bound address (resolves `--port 0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared daemon state (stats introspection in tests/benches).
+    pub fn state(&self) -> &ServiceState {
+        &self.state
+    }
+
+    /// Block the calling thread for the daemon's lifetime (the `serve`
+    /// subcommand's foreground mode).
+    pub fn join(mut self) {
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+
+    /// Stop accepting, drain in-flight requests, join every thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock workers parked on keep-alive reads (no waiting out the
+        // idle timeout), then the accept loop with a throwaway connection
+        self.registry.shutdown_all();
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one connection: HTTP/1.1 keep-alive loop until the peer closes,
+/// errs, times out idle, asks for `Connection: close`, or the daemon
+/// shuts down (which also force-closes the socket via the registry).
+fn handle_connection(
+    stream: TcpStream,
+    state: &ServiceState,
+    read_timeout: Duration,
+    stop: &AtomicBool,
+) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(read_timeout));
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return; // draining: close instead of starting another read
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(req) => req,
+            Err(http::RecvError::Closed) => return,
+            Err(http::RecvError::Malformed(msg)) => {
+                let resp = http::Response::error(400, format!("malformed request: {msg}"));
+                let _ = resp.write_to(reader.get_mut(), false);
+                return;
+            }
+            Err(http::RecvError::TooLarge(msg)) => {
+                let resp = http::Response::error(413, msg);
+                let _ = resp.write_to(reader.get_mut(), false);
+                return;
+            }
+        };
+        let keep_alive = req.keep_alive();
+        let resp = routes::handle(&req, state);
+        if resp.write_to(reader.get_mut(), keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    /// End-to-end smoke entirely in unit-test scope: bind an ephemeral
+    /// port, one request, clean shutdown. (The full protocol matrix lives
+    /// in `tests/service_integration.rs`.)
+    #[test]
+    fn serve_healthz_and_shutdown() {
+        let server = serve(ServiceConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            ..ServiceConfig::default()
+        })
+        .expect("bind ephemeral port");
+        let mut client = http::Client::connect(server.addr()).unwrap();
+        let (status, body) = client.request("GET", "/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        let v = Value::parse(&body).unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(server.state().stats.total(), 1);
+        // stop with the keep-alive connection still open: the registry
+        // force-closes the socket, so this returns promptly instead of
+        // waiting out the 30 s idle read timeout
+        let t0 = std::time::Instant::now();
+        server.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "shutdown must not wait for the idle keep-alive timeout"
+        );
+        drop(client);
+    }
+}

@@ -1,0 +1,144 @@
+//! Bounded worker pool for the planning service (substrate module — no
+//! tokio/rayon offline; plain `std::thread` + `mpsc::sync_channel`, the
+//! same no-dependency threading discipline as `solver::planner::sweep`).
+//!
+//! The queue is *bounded*: when every worker is busy and the backlog is
+//! full, [`ThreadPool::execute`] blocks the submitting thread (the accept
+//! loop), which is exactly the backpressure a loopback daemon wants —
+//! the kernel's listen backlog holds new connections instead of this
+//! process buffering unbounded closures.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    /// `None` once the pool is shutting down (drop closes the channel).
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` threads consuming from a queue of `queue_depth`
+    /// pending jobs. Worker counts are clamped to ≥ 1.
+    pub fn new(name: &str, workers: usize, queue_depth: usize) -> ThreadPool {
+        let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawning a pool worker thread")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; blocks while the queue is full (bounded backpressure).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            // send only fails if every worker died, which `worker_loop`
+            // prevents by catching job panics; drop the job in that case
+            let _ = tx.send(Box::new(job));
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // Hold the lock only to *receive* — the Rust-book pattern: one
+        // idle worker parks in recv, the rest park on the mutex, and a
+        // running job holds neither.
+        let job = {
+            let rx = rx.lock().unwrap_or_else(|p| p.into_inner());
+            rx.recv()
+        };
+        match job {
+            Ok(job) => {
+                // A panicking handler must not shrink the pool: catch it,
+                // log it, keep serving (the connection just closes).
+                if let Err(panic) = catch_unwind(AssertUnwindSafe(job)) {
+                    let msg = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    eprintln!("[service] worker job panicked: {msg}");
+                }
+            }
+            Err(_) => break, // channel closed: pool is shutting down
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx = None; // close the channel; workers drain the queue, then exit
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn runs_all_jobs_across_workers() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new("t", 4, 2);
+            assert_eq!(pool.workers(), 4);
+            for _ in 0..64 {
+                let counter = Arc::clone(&counter);
+                pool.execute(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // drop joins the workers after the queue drains
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_kill_the_pool() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new("t", 1, 4);
+            pool.execute(|| panic!("boom"));
+            // give the lone worker time to survive the panic
+            std::thread::sleep(Duration::from_millis(20));
+            let counter = Arc::clone(&counter);
+            pool.execute(move || {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let pool = ThreadPool::new("t", 0, 0);
+        assert_eq!(pool.workers(), 1);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool);
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,444 @@
+//! Request routing and endpoint handlers of the planning service.
+//!
+//! | route            | what it answers                                     |
+//! |------------------|-----------------------------------------------------|
+//! | `POST /solve`    | chain + budget → optimal schedule + predicted cost  |
+//! | `POST /sweep`    | chain + budget list → per-budget costs, one DP table|
+//! | `POST /simulate` | chain + op sequence → simulator peak/cost verdict   |
+//! | `GET  /chains`   | built-in profiles and native presets, by name       |
+//! | `GET  /stats`    | request counters, latency percentiles, cache stats  |
+//! | `GET  /healthz`  | liveness probe                                      |
+//!
+//! Error contract: malformed JSON → `400`, semantically invalid input →
+//! `422`, unknown route → `404`, wrong method on a known path → `405` —
+//! all with the structured `{"error": {...}}` envelope and **without**
+//! dropping the connection.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::http::{Request, Response};
+use super::wire;
+use super::ServiceState;
+use crate::backend::native::presets;
+use crate::chain::profiles;
+use crate::simulator::simulate;
+use crate::solver::{cache_stats, Planner, Schedule, StrategyKind};
+use crate::util::json::{obj, Value};
+
+/// Dispatch one request, recording per-route counters and latency.
+pub fn handle(req: &Request, state: &ServiceState) -> Response {
+    let t0 = Instant::now();
+    let (route, resp) = dispatch(req, state);
+    state.stats.record(route, resp.status, t0.elapsed().as_micros() as u64);
+    resp
+}
+
+/// The single route table — `(method, path, label)`. Dispatch, the 405
+/// known-path check, and the `/stats` counter keys all derive from it.
+const ROUTES: &[(&str, &str, &str)] = &[
+    ("POST", "/solve", "solve"),
+    ("POST", "/sweep", "sweep"),
+    ("POST", "/simulate", "simulate"),
+    ("GET", "/chains", "chains"),
+    ("GET", "/stats", "stats"),
+    ("GET", "/healthz", "healthz"),
+];
+
+fn dispatch(req: &Request, state: &ServiceState) -> (&'static str, Response) {
+    let (m, p) = (req.method.as_str(), req.path.as_str());
+    let Some(&(_, _, label)) = ROUTES.iter().find(|(rm, rp, _)| *rm == m && *rp == p) else {
+        if let Some(&(want, _, _)) = ROUTES.iter().find(|(_, rp, _)| *rp == p) {
+            return (
+                "method_not_allowed",
+                Response::error(405, format!("{p} expects {want}, got {m}")),
+            );
+        }
+        return ("not_found", Response::error(404, format!("no route {m} {p}")));
+    };
+    let resp = match label {
+        "solve" => with_json_body(req, |body| solve(body, state)),
+        "sweep" => with_json_body(req, |body| sweep(body, state)),
+        "simulate" => with_json_body(req, |body| simulate_ops(body)),
+        "chains" => ok(chains()),
+        "stats" => ok(stats(state)),
+        "healthz" => ok(obj([("ok", Value::Bool(true))])),
+        other => Response::error(500, format!("route '{other}' has no handler")),
+    };
+    (label, resp)
+}
+
+fn ok(v: Value) -> Response {
+    Response::json(200, v.to_json_string())
+}
+
+/// Context prefix marking a *server-side* invariant failure. The vendored
+/// anyhow has no downcasting, so handlers tag such errors by message:
+/// `with_json_body` maps them to `500` (page the operator) instead of the
+/// `422` (blame the request) that every validation error gets.
+const INTERNAL: &str = "internal error";
+
+/// Parse the body as JSON (`400` on syntax errors), run the handler
+/// (`422` on validation errors — `500` for [`INTERNAL`]-tagged ones —
+/// with the full anyhow context chain).
+fn with_json_body(req: &Request, handler: impl FnOnce(&Value) -> Result<Value>) -> Response {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) if !t.trim().is_empty() => t,
+        Ok(_) => return Response::error(400, "empty body: expected a JSON object"),
+        Err(_) => return Response::error(400, "body is not valid UTF-8"),
+    };
+    let body = match Value::parse(text) {
+        Ok(v) => v,
+        Err(e) => return Response::error(400, format!("invalid JSON: {e}")),
+    };
+    match handler(&body) {
+        Ok(v) => ok(v),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status = if msg.starts_with(INTERNAL) { 500 } else { 422 };
+            Response::error(status, msg)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// POST /solve
+// ---------------------------------------------------------------------------
+
+fn solve(body: &Value, state: &ServiceState) -> Result<Value> {
+    let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
+    let memory = wire::parse_bytes(body.get("memory").context("missing 'memory'")?, "memory")?;
+    let slots = wire::parse_slots(body, state.slots)?;
+    let mode = wire::parse_mode(body)?;
+
+    // Exactly `cmd_solve`'s call pattern: a planner at the requested
+    // budget, answering that budget. Same chain + budget + slots across
+    // connections share one cached DP table.
+    let planner = Planner::new(&chain, memory, slots, mode);
+    let mut out = BTreeMap::new();
+    out.insert("chain".to_string(), Value::from(chain.name.clone()));
+    out.insert("chain_len".to_string(), Value::from(chain.len()));
+    out.insert("budget".to_string(), Value::from(memory));
+    out.insert("slots".to_string(), Value::from(slots));
+    if let Some((lo, hi)) = planner.feasible_range() {
+        out.insert(
+            "feasible_range".to_string(),
+            obj([("min", Value::from(lo)), ("max", Value::from(hi))]),
+        );
+    }
+    match planner.schedule_at(memory) {
+        None => {
+            out.insert("feasible".to_string(), Value::Bool(false));
+        }
+        Some(sched) => {
+            out.insert("feasible".to_string(), Value::Bool(true));
+            // the simulator independently verifies what we hand out; a
+            // failure here is a solver bug, not a bad request
+            let rep = simulate(&chain, &sched).map_err(|e| {
+                anyhow::anyhow!("{INTERNAL}: solver produced an invalid schedule: {e}")
+            })?;
+            out.insert("schedule".to_string(), wire::schedule_to_json(&sched));
+            out.insert("simulated".to_string(), wire::report_to_json(&rep));
+            out.insert("ideal_time".to_string(), Value::from(chain.ideal_time()));
+        }
+    }
+    Ok(Value::Obj(out))
+}
+
+// ---------------------------------------------------------------------------
+// POST /sweep
+// ---------------------------------------------------------------------------
+
+fn sweep(body: &Value, state: &ServiceState) -> Result<Value> {
+    let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
+    let budgets = wire::parse_budgets(body)?;
+    let slots = wire::parse_slots(body, state.slots)?;
+    let mode = wire::parse_mode(body)?;
+    let include_ops = matches!(body.get("include_ops"), Some(Value::Bool(true)));
+
+    // one planner at the sweep's top budget = one shared DP table for
+    // every point (the acceptance criterion this endpoint exists for).
+    // Reconstruction is serial on purpose: `Planner::sweep`'s scoped
+    // threads would oversubscribe the CPU when several pool workers run
+    // sweeps at once, and each point is only O(L) anyway (≤ MAX_BUDGETS).
+    let top = *budgets.iter().max().expect("budgets validated non-empty");
+    let planner = Planner::new(&chain, top, slots, mode);
+    let schedules: Vec<_> = budgets.iter().map(|&m| planner.schedule_at(m)).collect();
+
+    let points: Vec<Value> = budgets
+        .iter()
+        .zip(&schedules)
+        .map(|(&m, sched)| {
+            let mut pt = BTreeMap::new();
+            pt.insert("budget".to_string(), Value::from(m));
+            match sched {
+                None => {
+                    pt.insert("feasible".to_string(), Value::Bool(false));
+                }
+                Some(s) => {
+                    pt.insert("feasible".to_string(), Value::Bool(true));
+                    pt.insert("predicted_time".to_string(), Value::from(s.predicted_time));
+                    pt.insert("op_count".to_string(), Value::from(s.ops.len()));
+                    if include_ops {
+                        pt.insert(
+                            "ops".to_string(),
+                            Value::Arr(
+                                s.ops.iter().map(|op| Value::from(op.to_string())).collect(),
+                            ),
+                        );
+                    }
+                }
+            }
+            Value::Obj(pt)
+        })
+        .collect();
+
+    let mut out = BTreeMap::new();
+    out.insert("chain".to_string(), Value::from(chain.name.clone()));
+    out.insert("chain_len".to_string(), Value::from(chain.len()));
+    out.insert("slots".to_string(), Value::from(slots));
+    out.insert("top_budget".to_string(), Value::from(top));
+    out.insert(
+        "feasible_range".to_string(),
+        match planner.feasible_range() {
+            Some((lo, hi)) => obj([("min", Value::from(lo)), ("max", Value::from(hi))]),
+            None => Value::Null,
+        },
+    );
+    out.insert("points".to_string(), Value::Arr(points));
+    Ok(Value::Obj(out))
+}
+
+// ---------------------------------------------------------------------------
+// POST /simulate
+// ---------------------------------------------------------------------------
+
+fn simulate_ops(body: &Value) -> Result<Value> {
+    let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
+    let ops = wire::parse_ops(body)?;
+    let budget = match body.get("memory") {
+        None => None,
+        Some(v) => Some(wire::parse_bytes(v, "memory")?),
+    };
+    let sched = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+
+    let mut out = BTreeMap::new();
+    out.insert("chain".to_string(), Value::from(chain.name.clone()));
+    match simulate(&chain, &sched) {
+        Ok(rep) => {
+            out.insert("valid".to_string(), Value::Bool(true));
+            out.insert("simulated".to_string(), wire::report_to_json(&rep));
+            if let Some(m) = budget {
+                out.insert("budget".to_string(), Value::from(m));
+                out.insert("within_budget".to_string(), Value::Bool(rep.peak_bytes <= m));
+            }
+        }
+        Err(e) => {
+            // an invalid op sequence is a *finding*, not a request error
+            out.insert("valid".to_string(), Value::Bool(false));
+            out.insert("error".to_string(), Value::from(e.to_string()));
+        }
+    }
+    Ok(Value::Obj(out))
+}
+
+// ---------------------------------------------------------------------------
+// GET /chains
+// ---------------------------------------------------------------------------
+
+fn chains() -> Value {
+    let families: Vec<Value> = profiles::FAMILIES
+        .iter()
+        .map(|f| {
+            let depths: Vec<Value> = profiles::supported_depths(f)
+                .iter()
+                .map(|&d| Value::from(d as u64))
+                .collect();
+            obj([
+                ("family", Value::from(*f)),
+                ("depths", Value::Arr(depths)),
+                (
+                    "spec",
+                    Value::from(r#"{"profile": {"family": …, "depth": …, "image": …, "batch": …}}"#),
+                ),
+            ])
+        })
+        .collect();
+
+    let preset_list: Vec<Value> = presets::NAMES
+        .iter()
+        .filter_map(|&name| {
+            let manifest = presets::preset(name).ok()?;
+            let chain = manifest.to_chain_analytic(wire::PRESET_FLOPS_PER_US);
+            Some(obj([
+                ("name", Value::from(name)),
+                ("stages", Value::from(manifest.stages.len())),
+                ("param_count", Value::from(manifest.param_count)),
+                ("store_all_bytes", Value::from(chain.store_all_memory())),
+                ("spec", Value::from(r#"{"preset": …}"#)),
+            ]))
+        })
+        .collect();
+
+    obj([
+        ("profiles", Value::Arr(families)),
+        ("presets", Value::Arr(preset_list)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// GET /stats
+// ---------------------------------------------------------------------------
+
+fn stats(state: &ServiceState) -> Value {
+    let cache = cache_stats();
+    let planner_cache = obj([
+        ("lookups", Value::from(cache.lookups)),
+        ("hits", Value::from(cache.hits)),
+        ("builds", Value::from(cache.builds)),
+        ("evictions", Value::from(cache.evictions)),
+        ("coalesced", Value::from(cache.coalesced)),
+        ("entries", Value::from(cache.entries)),
+        ("bytes", Value::from(cache.bytes)),
+    ]);
+    let mut out = state.stats.snapshot();
+    if let Value::Obj(map) = &mut out {
+        map.insert("planner_cache".to_string(), planner_cache);
+        map.insert(
+            "uptime_s".to_string(),
+            Value::from(state.started.elapsed().as_secs_f64()),
+        );
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Stats registry
+// ---------------------------------------------------------------------------
+
+/// How many of the most recent request latencies the percentile window
+/// keeps (a ring buffer — bounded memory under sustained traffic).
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct StatsInner {
+    by_route: BTreeMap<&'static str, u64>,
+    status_2xx: u64,
+    status_4xx: u64,
+    status_5xx: u64,
+    total: u64,
+    latencies_us: Vec<u64>,
+    next_slot: usize,
+}
+
+/// Thread-safe request counters + latency reservoir for `GET /stats`.
+#[derive(Default)]
+pub struct Stats {
+    inner: Mutex<StatsInner>,
+}
+
+impl Stats {
+    pub fn record(&self, route: &'static str, status: u16, elapsed_us: u64) {
+        let mut s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        *s.by_route.entry(route).or_insert(0) += 1;
+        match status {
+            200..=299 => s.status_2xx += 1,
+            400..=499 => s.status_4xx += 1,
+            _ => s.status_5xx += 1,
+        }
+        s.total += 1;
+        if s.latencies_us.len() < LATENCY_WINDOW {
+            s.latencies_us.push(elapsed_us);
+        } else {
+            let slot = s.next_slot;
+            s.latencies_us[slot] = elapsed_us;
+            s.next_slot = (slot + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    /// Requests handled so far (all routes).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).total
+    }
+
+    pub fn snapshot(&self) -> Value {
+        let s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let requests: BTreeMap<String, Value> = s
+            .by_route
+            .iter()
+            .map(|(k, v)| (k.to_string(), Value::from(*v)))
+            .collect();
+        let mut sorted = s.latencies_us.clone();
+        sorted.sort_unstable();
+        let pct = |q: f64| -> Value {
+            if sorted.is_empty() {
+                return Value::Null;
+            }
+            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+            Value::from(sorted[idx])
+        };
+        obj([
+            ("requests", Value::Obj(requests)),
+            ("total", Value::from(s.total)),
+            (
+                "responses",
+                obj([
+                    ("2xx", Value::from(s.status_2xx)),
+                    ("4xx", Value::from(s.status_4xx)),
+                    ("5xx", Value::from(s.status_5xx)),
+                ]),
+            ),
+            (
+                "latency_us",
+                obj([
+                    ("window", Value::from(sorted.len())),
+                    ("p50", pct(0.50)),
+                    ("p90", pct(0.90)),
+                    ("p99", pct(0.99)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_and_counters() {
+        let stats = Stats::default();
+        for i in 0..100u64 {
+            stats.record("solve", 200, i + 1); // 1..=100 µs
+        }
+        stats.record("not_found", 404, 5);
+        let v = stats.snapshot();
+        assert_eq!(v.get("total").unwrap().as_u64(), Some(101));
+        assert_eq!(
+            v.get("requests").unwrap().get("solve").unwrap().as_u64(),
+            Some(100)
+        );
+        assert_eq!(
+            v.get("responses").unwrap().get("4xx").unwrap().as_u64(),
+            Some(1)
+        );
+        let p50 = v.get("latency_us").unwrap().get("p50").unwrap().as_u64().unwrap();
+        assert!((40..=60).contains(&p50), "p50 = {p50}");
+        let p99 = v.get("latency_us").unwrap().get("p99").unwrap().as_u64().unwrap();
+        assert!(p99 >= 95, "p99 = {p99}");
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let stats = Stats::default();
+        for i in 0..(LATENCY_WINDOW as u64 + 500) {
+            stats.record("solve", 200, i);
+        }
+        let s = stats.inner.lock().unwrap();
+        assert_eq!(s.latencies_us.len(), LATENCY_WINDOW);
+        assert_eq!(s.total, LATENCY_WINDOW as u64 + 500);
+    }
+}

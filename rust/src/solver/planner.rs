@@ -52,7 +52,7 @@
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 use super::optimal::{reconstruct, solve_table, DpTable, Mode};
 use super::sequence::{Schedule, StrategyKind};
@@ -225,19 +225,36 @@ struct CacheEntry {
 struct TableCache {
     /// LRU order: least recently used first.
     entries: Vec<CacheEntry>,
+    /// Fingerprints whose DP fill is currently running on some thread
+    /// (single-flight: racing requests for the same chain wait instead of
+    /// duplicating the O(L²·S) build — under the planning service many
+    /// connections ask for the same chain at once).
+    inflight: Vec<u64>,
+    /// Tables completed while too large for the LRU, handed to coalesced
+    /// waiters. Weak: lives only as long as some caller holds the Arc.
+    handoff: Vec<(u64, Weak<DpTable>)>,
     total_bytes: usize,
     lookups: u64,
     hits: u64,
     builds: u64,
+    evictions: u64,
+    coalesced: u64,
 }
 
 static CACHE: Mutex<TableCache> = Mutex::new(TableCache {
     entries: Vec::new(),
+    inflight: Vec::new(),
+    handoff: Vec::new(),
     total_bytes: 0,
     lookups: 0,
     hits: 0,
     builds: 0,
+    evictions: 0,
+    coalesced: 0,
 });
+
+/// Wakes waiters parked in [`table_for`] when an in-flight build finishes.
+static CACHE_CV: Condvar = Condvar::new();
 
 fn lock_cache() -> std::sync::MutexGuard<'static, TableCache> {
     // the critical sections below never panic; recover anyway if a
@@ -264,36 +281,79 @@ fn fingerprint(dc: &DiscreteChain, mode: Mode) -> u64 {
     h.finish()
 }
 
+/// Removes the in-flight marker (even if the build panicked) and wakes
+/// every waiter so they can re-check the cache.
+struct InflightGuard {
+    key: u64,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let mut cache = lock_cache();
+        cache.inflight.retain(|k| *k != self.key);
+        drop(cache);
+        CACHE_CV.notify_all();
+    }
+}
+
 /// Fetch the table for a discretized chain, filling it on a cache miss.
+///
+/// Builds are **single-flight** per fingerprint: a racing miss parks on a
+/// condvar until the thread that got there first finishes its fill, then
+/// takes the shared `Arc` (from the LRU, or from a weak handoff slot when
+/// the table was too large to retain). The fill itself runs outside the
+/// cache lock, so a long DP never blocks lookups for *other* chains.
 fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
     let key = fingerprint(dc, mode);
     {
         let mut cache = lock_cache();
         cache.lookups += 1;
-        if let Some(pos) = cache.entries.iter().position(|e| e.key == key) {
-            cache.hits += 1;
-            let entry = cache.entries.remove(pos);
-            let table = entry.table.clone();
-            cache.entries.push(entry); // most recently used at the back
-            return table;
+        loop {
+            if let Some(pos) = cache.entries.iter().position(|e| e.key == key) {
+                cache.hits += 1;
+                let entry = cache.entries.remove(pos);
+                let table = entry.table.clone();
+                cache.entries.push(entry); // most recently used at the back
+                return table;
+            }
+            if let Some(table) =
+                cache.handoff.iter().find(|(k, _)| *k == key).and_then(|(_, w)| w.upgrade())
+            {
+                cache.hits += 1;
+                return table;
+            }
+            if cache.inflight.contains(&key) {
+                cache.coalesced += 1;
+                cache = CACHE_CV.wait(cache).unwrap_or_else(|p| p.into_inner());
+                continue; // re-check: the builder has inserted (or failed)
+            }
+            cache.inflight.push(key);
+            break;
         }
     }
-    // Fill outside the lock: two threads may duplicate a build on a racing
-    // miss, but a long DP fill never blocks lookups for other chains.
+    let _guard = InflightGuard { key };
     let table = Arc::new(solve_table(dc, mode));
     let bytes = table.mem_bytes();
-    let mut cache = lock_cache();
-    cache.builds += 1;
-    if bytes <= CACHE_MAX_ENTRY_BYTES && !cache.entries.iter().any(|e| e.key == key) {
-        cache.entries.push(CacheEntry { key, bytes, table: table.clone() });
-        cache.total_bytes += bytes;
-        while cache.entries.len() > CACHE_MAX_ENTRIES
-            || cache.total_bytes > CACHE_MAX_TOTAL_BYTES
-        {
-            let evicted = cache.entries.remove(0);
-            cache.total_bytes -= evicted.bytes;
+    {
+        let mut cache = lock_cache();
+        cache.builds += 1;
+        cache.handoff.retain(|(_, w)| w.strong_count() > 0);
+        if bytes <= CACHE_MAX_ENTRY_BYTES && !cache.entries.iter().any(|e| e.key == key) {
+            cache.entries.push(CacheEntry { key, bytes, table: table.clone() });
+            cache.total_bytes += bytes;
+            while cache.entries.len() > CACHE_MAX_ENTRIES
+                || cache.total_bytes > CACHE_MAX_TOTAL_BYTES
+            {
+                let evicted = cache.entries.remove(0);
+                cache.total_bytes -= evicted.bytes;
+                cache.evictions += 1;
+            }
+        } else {
+            // too big for the LRU: still hand it to coalesced waiters
+            cache.handoff.push((key, Arc::downgrade(&table)));
         }
     }
+    // _guard drops here: clears the in-flight marker, wakes waiters
     table
 }
 
@@ -303,10 +363,17 @@ fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
 pub struct PlannerCacheStats {
     /// Table requests (one per `Planner::new` / `solve` call).
     pub lookups: u64,
-    /// Requests served without running the DP.
+    /// Requests served without running the DP (LRU hits and coalesced
+    /// waiters handed a just-built table).
     pub hits: u64,
-    /// DP table fills (`lookups - hits`, modulo racing misses).
+    /// DP table fills (`lookups - hits`: builds are single-flight per
+    /// fingerprint, so racing misses no longer duplicate work).
     pub builds: u64,
+    /// LRU entries dropped to respect the byte/count caps.
+    pub evictions: u64,
+    /// Wait episodes: times a request parked behind an in-flight build of
+    /// the same table instead of starting its own.
+    pub coalesced: u64,
     /// Tables currently retained.
     pub entries: usize,
     /// Bytes currently retained.
@@ -320,6 +387,8 @@ pub fn cache_stats() -> PlannerCacheStats {
         lookups: cache.lookups,
         hits: cache.hits,
         builds: cache.builds,
+        evictions: cache.evictions,
+        coalesced: cache.coalesced,
         entries: cache.entries.len(),
         bytes: cache.total_bytes,
     }
@@ -327,13 +396,18 @@ pub fn cache_stats() -> PlannerCacheStats {
 
 /// Drop all retained tables and zero the counters (benchmark hygiene: the
 /// baseline arm of a solve-vs-planner comparison must not hit the cache).
+/// In-flight markers are left alone — a concurrent build still completes
+/// and clears itself.
 pub fn clear_cache() {
     let mut cache = lock_cache();
     cache.entries.clear();
+    cache.handoff.clear();
     cache.total_bytes = 0;
     cache.lookups = 0;
     cache.hits = 0;
     cache.builds = 0;
+    cache.evictions = 0;
+    cache.coalesced = 0;
 }
 
 #[cfg(test)]

@@ -1,7 +1,9 @@
-//! Minimal JSON parser (substrate module — the build is offline, so no
-//! serde). Supports the full JSON grammar the AOT manifest uses: objects,
-//! arrays, strings with escapes, numbers, booleans, null. Also provides a
-//! small writer used by the figure harness for machine-readable output.
+//! Minimal JSON parser *and writer* (substrate module — the build is
+//! offline, so no serde). The parser supports the full JSON grammar the
+//! AOT manifest uses: objects, arrays, strings with escapes, numbers,
+//! booleans, null. [`Value::to_json_string`] is the compact inverse used
+//! by the planning service's wire types and the bench emitters; every
+//! finite value round-trips exactly through parse ∘ serialize.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -88,6 +90,128 @@ impl Value {
     pub fn shape(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    // --- serialization -----------------------------------------------------
+
+    /// Compact JSON serialization (no whitespace). Strings are escaped with
+    /// [`escape`]; numbers use Rust's shortest round-trip formatting, so
+    /// `Value::parse(&v.to_json_string())` reproduces `v` exactly for any
+    /// value whose numbers are finite. Non-finite numbers (JSON has no
+    /// NaN/±inf) serialize as `null`.
+    pub fn to_json_string(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(n) => write_f64(*n, out),
+            Value::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Value::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Write one number the way JSON can express it. Rust's `{}` for `f64`
+/// prints the shortest decimal that parses back to the same bits (and
+/// never uses exponent notation), so the output both round-trips through
+/// [`Value::parse`] and is valid JSON. Integral values print without a
+/// fraction (`3`, not `3.0`) — equally round-trip-exact.
+fn write_f64(n: f64, out: &mut String) {
+    use std::fmt::Write as _;
+    if n.is_finite() {
+        let _ = write!(out, "{n}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+// --- builder conveniences (service wire types, bench emitters) -------------
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Value {
+        Value::Num(n)
+    }
+}
+
+/// Lossless for values below 2^53 (every byte count and counter this
+/// crate emits); larger values round like any f64.
+impl From<u64> for Value {
+    fn from(n: u64) -> Value {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Value {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(items: Vec<Value>) -> Value {
+        Value::Arr(items)
+    }
+}
+
+impl From<BTreeMap<String, Value>> for Value {
+    fn from(map: BTreeMap<String, Value>) -> Value {
+        Value::Obj(map)
+    }
+}
+
+/// Assemble a [`Value::Obj`] from `(key, value)` pairs:
+/// `obj([("a", 1u64.into()), ("b", "x".into())])`.
+pub fn obj<const N: usize>(pairs: [(&str, Value); N]) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 struct Parser<'a> {
@@ -331,5 +455,62 @@ mod tests {
         let s = "a\"b\\c\nd\te";
         let json = format!("\"{}\"", escape(s));
         assert_eq!(Value::parse(&json).unwrap().as_str(), Some(s));
+    }
+
+    #[test]
+    fn writer_is_compact_and_deterministic() {
+        let v = obj([
+            ("b", Value::Arr(vec![1u64.into(), true.into(), Value::Null])),
+            ("a", "x\"y".into()),
+        ]);
+        // objects are BTreeMaps: keys serialize sorted, no whitespace
+        assert_eq!(v.to_json_string(), r#"{"a":"x\"y","b":[1,true,null]}"#);
+    }
+
+    #[test]
+    fn writer_round_trips_through_parser() {
+        let docs = [
+            r#"{"preset": "x", "input_shape": [2, 4, 8], "n": 41536,
+                "nested": {"a": [1.5, -2e3, true, null]}, "s": "a\"b\\c\nd"}"#,
+            r#"[0.1, 1e-300, 123456789012345.0, -0.0078125, 3, -3]"#,
+            r#"{"unicode": "ā^ℓ é", "empty_obj": {}, "empty_arr": []}"#,
+        ];
+        for doc in docs {
+            let v = Value::parse(doc).unwrap();
+            let reparsed = Value::parse(&v.to_json_string()).unwrap();
+            assert_eq!(v, reparsed, "{doc}");
+        }
+    }
+
+    #[test]
+    fn writer_f64_round_trips_exact_bits() {
+        for n in [
+            0.1_f64,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -12345.6789,
+            2.0_f64.powi(53) + 2.0,
+            17.2e-2,
+        ] {
+            let s = Value::Num(n).to_json_string();
+            let back = Value::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(n.to_bits(), back.to_bits(), "{n} → {s} → {back}");
+        }
+    }
+
+    #[test]
+    fn writer_maps_non_finite_to_null() {
+        assert_eq!(Value::Num(f64::NAN).to_json_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_json_string(), "null");
+        assert_eq!(Value::Num(f64::NEG_INFINITY).to_json_string(), "null");
+    }
+
+    #[test]
+    fn writer_escapes_control_chars_and_keys() {
+        let v = obj([("k\n", Value::Str("\u{1}".into()))]);
+        let s = v.to_json_string();
+        assert_eq!(s, "{\"k\\n\":\"\\u0001\"}");
+        assert_eq!(Value::parse(&s).unwrap(), v);
     }
 }

@@ -1,0 +1,106 @@
+//! Planner table-cache concurrency: racing `Planner::new` calls for the
+//! same chain must coalesce into **one** DP build (the single-flight
+//! window in `solver/planner.rs::table_for`), and every thread must
+//! reconstruct the identical schedule from the shared table.
+//!
+//! This file is its own test binary on purpose: the planner cache and its
+//! counters are process-global, so sharing a binary with other
+//! planner-using tests would make the counter assertions racy.
+
+use std::sync::{Arc, Barrier};
+
+use chainckpt::chain::{Chain, Stage};
+use chainckpt::solver::{cache_stats, clear_cache, Mode, Op, Planner};
+
+/// A chain distinctive enough that its fingerprint cannot collide with
+/// anything else this binary builds.
+fn storm_chain() -> Chain {
+    let mut stages: Vec<Stage> = (1..=24)
+        .map(|i| {
+            Stage::new(
+                format!("storm{i}"),
+                1.0 + 0.37 * i as f64,
+                2.0 + 0.19 * i as f64,
+                1_000 + 13 * i as u64,
+                2_500 + 41 * i as u64,
+            )
+        })
+        .collect();
+    stages.push(Stage::new("loss", 0.1, 0.1, 8, 8));
+    Chain::new("storm", stages, 4_000)
+}
+
+#[test]
+fn racing_planner_builds_coalesce_into_one_table() {
+    clear_cache();
+    let chain = storm_chain();
+    let top = chain.store_all_memory() + chain.wa0;
+    let query = top / 2;
+    const THREADS: usize = 16;
+    const SLOTS: usize = 180;
+
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let results: Vec<(bool, Option<Vec<Op>>, Option<f64>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let barrier = Arc::clone(&barrier);
+                let chain = &chain;
+                scope.spawn(move || {
+                    barrier.wait(); // maximize the racing-miss window
+                    let planner = Planner::new(chain, top, SLOTS, Mode::Full);
+                    let sched = planner.schedule_at(query);
+                    (
+                        planner.schedule_at(top).is_some(),
+                        sched.as_ref().map(|s| s.ops.clone()),
+                        sched.map(|s| s.predicted_time),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("storm thread panicked")).collect()
+    });
+
+    // every thread answered, and answered identically
+    let (top_ok, ops, cost) = results[0].clone();
+    assert!(top_ok, "the top budget must be feasible");
+    assert!(ops.is_some(), "half of store-all must be feasible for this chain");
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r, &results[0], "thread {i} reconstructed a different schedule");
+    }
+    assert!(cost.expect("feasible query has a cost").is_finite());
+
+    // the single-flight window: 16 racing misses, exactly one table fill
+    let stats = cache_stats();
+    assert_eq!(stats.lookups, THREADS as u64, "one lookup per Planner::new");
+    assert_eq!(
+        stats.builds, 1,
+        "racing misses for one fingerprint must coalesce into a single DP build"
+    );
+    assert_eq!(stats.hits, THREADS as u64 - 1, "all other requests are cache hits");
+    assert_eq!(stats.entries, 1);
+
+    // a different mode is a different fingerprint: a second storm across
+    // two modes adds exactly two more builds (one per mode), never more
+    let results2: Vec<u64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|i| {
+                let chain = &chain;
+                scope.spawn(move || {
+                    let mode = if i % 2 == 0 { Mode::Full } else { Mode::AdRevolve };
+                    // fresh discretization width → fresh fingerprints
+                    let planner = Planner::new(chain, top, SLOTS + 1, mode);
+                    planner.schedule_at(query).map(|s| s.ops.len() as u64).unwrap_or(0)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("mode-storm thread panicked")).collect()
+    });
+    assert!(results2.iter().all(|&n| n > 0));
+    let stats2 = cache_stats();
+    assert_eq!(
+        stats2.builds, 3,
+        "two new (chain, slots, mode) fingerprints → exactly two more builds"
+    );
+    assert_eq!(stats2.lookups, 2 * THREADS as u64);
+    assert_eq!(stats2.hits, stats2.lookups - 3);
+}
