@@ -19,11 +19,12 @@
 use std::io::Write as _;
 
 use anyhow::{bail, Context, Result};
+use chainckpt::api::{ChainSpec, MemBytes, PlanRequest};
 use chainckpt::backend::Backend;
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
-use chainckpt::solver::{optimal_schedule, store_all_schedule};
+use chainckpt::solver::store_all_schedule;
 use chainckpt::train::{mean_loss, SyntheticData, Trainer};
 use chainckpt::util::{fmt_bytes, Args};
 
@@ -70,9 +71,12 @@ fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
         100.0 * frac
     );
 
-    let schedule = optimal_schedule(&chain, budget)
-        .with_context(|| format!("no schedule fits {}", fmt_bytes(budget)))?;
-    let sim = simulate(&chain, &schedule).map_err(|e| anyhow::anyhow!("{e}"))?;
+    // the facade pipeline: measured chain → plan → verified schedule
+    let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(budget))
+        .plan()
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let schedule = plan.schedule().map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let sim = plan.verify(&schedule).map_err(|e| anyhow::anyhow!("{e:#}"))?;
     let base = simulate(&chain, &store_all_schedule(&chain)).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!(
         "optimal schedule: {} ops (+{} recomputed fwds), predicted {:.1} ms/iter \

@@ -11,11 +11,11 @@
 //! cargo run --release --example memory_wall -- [--image 224] [--depth 1001]
 //! ```
 
-use anyhow::Result;
+use chainckpt::api::{ChainSpec, MemBytes, PlanRequest, Result, SlotCount};
 use chainckpt::chain::profiles;
 use chainckpt::figures::DEVICE_MEMORY;
 use chainckpt::simulator::simulate;
-use chainckpt::solver::{paper_segment_sweep, periodic_schedule, solve, Mode};
+use chainckpt::solver::{paper_segment_sweep, periodic_schedule};
 use chainckpt::util::{fmt_bytes, Args};
 
 fn main() -> Result<()> {
@@ -47,8 +47,12 @@ fn main() -> Result<()> {
                 }
             }
         }
-        // optimal at the full device memory
-        let optimal = solve(&chain, DEVICE_MEMORY, 150, Mode::Full)
+        // optimal at the full device memory (one facade plan per chain)
+        let device = MemBytes::new(DEVICE_MEMORY);
+        let optimal = PlanRequest::new(ChainSpec::inline(chain.clone()), device)
+            .slots(SlotCount::new(150))
+            .plan()?
+            .schedule_at(device)
             .map(|s| bs as f64 / (s.predicted_time * 1e-3));
 
         let fmt_opt = |v: Option<f64>| {

@@ -14,10 +14,9 @@
 //! ```
 
 use anyhow::Result;
+use chainckpt::api::{ChainSpec, MemBytes, PlanRequest};
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::runtime::Runtime;
-use chainckpt::simulator::simulate;
-use chainckpt::solver::optimal_schedule;
 use chainckpt::train::{SyntheticData, Trainer};
 use chainckpt::util::fmt_bytes;
 
@@ -38,14 +37,16 @@ fn main() -> Result<()> {
         fmt_bytes(chain.store_all_memory())
     );
 
-    // 3. optimal persistent schedule for 70% of the store-all footprint
-    let budget = chain.store_all_memory() * 7 / 10;
-    let schedule = optimal_schedule(&chain, budget)
-        .expect("no schedule fits this budget");
-    let sim = simulate(&chain, &schedule)?;
+    // 3. optimal persistent schedule for 70% of the store-all footprint,
+    //    via the facade: spec → plan → simulator-verified schedule
+    let budget = MemBytes::new(chain.store_all_memory() * 7 / 10);
+    let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), budget)
+        .plan()
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let schedule = plan.schedule().map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    let sim = plan.verify(&schedule).map_err(|e| anyhow::anyhow!("{e:#}"))?;
     println!(
-        "schedule @ {}: {} ops, {} recomputed forwards, predicted {:.0} µs (+{:.1}% vs ideal)",
-        fmt_bytes(budget),
+        "schedule @ {budget}: {} ops, {} recomputed forwards, predicted {:.0} µs (+{:.1}% vs ideal)",
         sim.ops,
         sim.recomputed_forwards,
         sim.makespan,
@@ -55,7 +56,7 @@ fn main() -> Result<()> {
 
     // 4. train a few steps under the memory ledger
     let data = SyntheticData::generate(&rt.manifest, 4, 7)?;
-    let mut trainer = Trainer::new(&rt, schedule, 0.1, Some(budget), 42)?;
+    let mut trainer = Trainer::new(&rt, schedule, 0.1, Some(budget.get()), 42)?;
     trainer.train(&data, 20, 5, |log| {
         println!(
             "step {:>3}  loss {:.5}  peak {}",

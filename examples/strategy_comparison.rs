@@ -4,6 +4,11 @@
 //! V100 roofline simulator; this example uses actual execution — the
 //! native engine by default, CPU-PJRT with `--backend pjrt`.)
 //!
+//! The DP strategies come from one `api::Plan` per mode (one DP table
+//! serving the whole budget sweep) and every row is measured with
+//! `api::execute_schedule` — the same facade pipeline the CLI `compare`
+//! subcommand uses.
+//!
 //! ```sh
 //! cargo run --release --example strategy_comparison -- \
 //!     [--backend native|pjrt] [--preset default] [--artifacts artifacts/default]
@@ -12,16 +17,17 @@
 
 use std::io::Write as _;
 
-use anyhow::{bail, Context, Result};
-use chainckpt::backend::{Backend, Tensor};
+use chainckpt::api::{
+    execute_schedule, ChainSpec, Context as _, Error, ErrorKind, ExecuteOptions, MemBytes,
+    Mode, PlanRequest, Result, Schedule, SlotCount,
+};
+use chainckpt::backend::Backend;
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
-use chainckpt::executor::Executor;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
-use chainckpt::solver::{
-    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, Schedule,
-};
-use chainckpt::util::{fmt_bytes, median, Args, Rng};
+use chainckpt::solver::{paper_segment_sweep, periodic_schedule, store_all_schedule};
+use chainckpt::train::SyntheticData;
+use chainckpt::util::{fmt_bytes, Args};
 
 struct Row {
     strategy: &'static str,
@@ -37,13 +43,18 @@ fn main() -> Result<()> {
     match args.str("backend", "native").as_str() {
         "native" => {
             let preset = args.str("preset", "default");
-            run(&Runtime::native_preset(&preset)?, &args)
+            run(&Runtime::native_preset(&preset).kind(ErrorKind::Backend)?, &args)
         }
         "pjrt" => {
             let dir = args.str("artifacts", "artifacts/default");
-            run(&Runtime::load(&dir).context("run `make artifacts` first")?, &args)
+            run(
+                &Runtime::load(&dir)
+                    .context("run `make artifacts` first")
+                    .kind(ErrorKind::Backend)?,
+                &args,
+            )
         }
-        other => bail!("--backend {other}: use native|pjrt"),
+        other => Err(Error::invalid(format!("--backend {other}: use native|pjrt"))),
     }
 }
 
@@ -52,41 +63,29 @@ fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let reps = args.usize("reps", 3);
     let out = args.str("out", "results/measured_fig3.csv");
 
-    let chain = measured_chain(rt, EstimatorConfig::default())?;
+    let chain = measured_chain(rt, EstimatorConfig::default()).kind(ErrorKind::Backend)?;
     let batch = rt.manifest.input_shape[0] as u64;
-    let n = rt.manifest.stages.len();
-
-    let mut rng = Rng::new(17);
-    let numel: usize = rt.manifest.input_shape.iter().product();
-    let input = B::Tensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape)?;
-    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+    let data = SyntheticData::generate(&rt.manifest, 1, 17).kind(ErrorKind::Backend)?;
+    let opts = ExecuteOptions { reps, seed: 1, memory_limit: None };
 
     let mut rows: Vec<Row> = Vec::new();
     let mut measure = |strategy: &'static str, param: String, sched: &Schedule| -> Result<()> {
-        let sim = simulate(&chain, sched).map_err(|e| anyhow::anyhow!("{e}"))?;
-        let mut ex = Executor::new(rt, 1)?;
-        ex.set_data_param(n - 1, &target)?;
-        let mut times = Vec::new();
-        for r in 0..=reps {
-            let res = ex.run(sched, &input, None)?;
-            if r > 0 {
-                times.push(res.elapsed_s);
-            }
-        }
-        let t = median(&mut times);
+        let sim = simulate(&chain, sched)
+            .map_err(|e| Error::internal(format!("invalid schedule: {e}")))?;
+        let rep = execute_schedule(rt, sched, &data, &opts)?;
         println!(
             "{strategy:<12} {param:>12}  peak {:>12}  {:>8.1} ms/iter  {:>7.2} seq/s",
             fmt_bytes(sim.peak_bytes),
-            t * 1e3,
-            batch as f64 / t
+            rep.elapsed_s * 1e3,
+            rep.throughput
         );
         rows.push(Row {
             strategy,
             param,
             peak: sim.peak_bytes,
             predicted_us: sim.makespan,
-            measured_ms: t * 1e3,
-            throughput: batch as f64 / t,
+            measured_ms: rep.elapsed_s * 1e3,
+            throughput: rep.throughput,
         });
         Ok(())
     };
@@ -98,13 +97,20 @@ fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     }
     let lo = chain.min_memory_hint();
     let hi = chain.store_all_memory();
-    for i in 1..=points as u64 {
-        let m = lo + (hi - lo) * i / points as u64;
-        if let Some(s) = solve(&chain, m, 300, Mode::Full) {
-            measure("optimal", fmt_bytes(m), &s)?;
-        }
-        if let Some(s) = solve(&chain, m, 300, Mode::AdRevolve) {
-            measure("revolve", fmt_bytes(m), &s)?;
+    let budgets: Vec<MemBytes> =
+        (1..=points as u64).map(|i| MemBytes::new(lo + (hi - lo) * i / points as u64)).collect();
+    for (label, mode) in [("optimal", Mode::Full), ("revolve", Mode::AdRevolve)] {
+        // one shared table discretizes against `hi`, so a low-budget
+        // point only sees ~S·m/hi of the grid — double the old
+        // per-budget S=300 to keep those rows at least as precise
+        let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(hi))
+            .slots(SlotCount::new(600))
+            .mode(mode)
+            .plan()?;
+        for (&m, sched) in budgets.iter().zip(plan.sweep(&budgets)) {
+            if let Some(s) = sched {
+                measure(label, fmt_bytes(m.get()), &s)?;
+            }
         }
     }
 

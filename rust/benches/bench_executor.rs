@@ -4,6 +4,11 @@
 //! tensor plumbing). DESIGN.md §Perf targets replay overhead < 5 % of
 //! step time.
 //!
+//! Every row is one `api::execute_schedule` measurement (fresh executor,
+//! warmup + timed median) — the same execution path `chainckpt compare`
+//! and `Plan::execute` use — and the DP rows come from one `api::Plan`
+//! per mode.
+//!
 //! Runs the native engine by default (a real hot path on any machine);
 //! `--backend pjrt --artifacts DIR` measures the PJRT build instead.
 //!
@@ -11,15 +16,15 @@
 //! cargo bench --bench bench_executor -- [--preset quickstart] [--reps 5]
 //! ```
 
-use std::time::Instant;
-
-use chainckpt::backend::{Backend, Tensor};
+use chainckpt::api::{
+    execute_schedule, ChainSpec, ExecuteOptions, MemBytes, Mode, PlanRequest, SlotCount,
+};
+use chainckpt::backend::Backend;
 use chainckpt::estimator::{estimate, measured_chain, EstimatorConfig};
-use chainckpt::executor::Executor;
 use chainckpt::runtime::Runtime;
-use chainckpt::simulator::simulate;
-use chainckpt::solver::{periodic_schedule, solve, store_all_schedule, Mode, Schedule};
-use chainckpt::util::{fmt_bytes, median, Args, Rng};
+use chainckpt::solver::{periodic_schedule, store_all_schedule, Schedule};
+use chainckpt::train::SyntheticData;
+use chainckpt::util::{fmt_bytes, Args};
 
 fn main() {
     let args = Args::from_env();
@@ -47,31 +52,17 @@ fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
     let reps = args.usize("reps", 5);
     let cfg = EstimatorConfig::default();
     let chain = measured_chain(rt, cfg).unwrap();
-    let n = rt.manifest.stages.len();
     let batch = rt.manifest.input_shape[0] as u64;
-
-    let mut rng = Rng::new(9);
-    let numel: usize = rt.manifest.input_shape.iter().product();
-    let input = B::Tensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
-    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+    let data = SyntheticData::generate(&rt.manifest, 1, 9).expect("synthetic batch");
+    let opts = ExecuteOptions { reps, ..ExecuteOptions::default() };
 
     // pure-compute floor: Σ median entry times (what the stages alone cost)
     let timings = estimate(rt, cfg).unwrap();
     let compute_floor_ms: f64 = timings.iter().map(|t| (t.uf_us + t.ub_us) / 1e3).sum();
 
     let run = |name: &str, sched: &Schedule| {
-        let sim = simulate(&chain, sched).unwrap();
-        let mut ex = Executor::new(rt, 1).unwrap();
-        ex.set_data_param(n - 1, &target).unwrap();
-        let mut times = Vec::new();
-        for r in 0..=reps {
-            let t0 = Instant::now();
-            ex.run(sched, &input, None).unwrap();
-            if r > 0 {
-                times.push(t0.elapsed().as_secs_f64() * 1e3);
-            }
-        }
-        let t = median(&mut times);
+        let rep = execute_schedule(rt, sched, &data, &opts).unwrap();
+        let t = rep.elapsed_s * 1e3;
         // overhead proxy: measured minus the per-op compute floor scaled
         // by the actual op multiset of this schedule
         let sched_floor: f64 = sched
@@ -92,8 +83,8 @@ fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
         let overhead_pct = 100.0 * (t - sched_floor).max(0.0) / t;
         println!(
             "{name:<14} {:>4} ops  peak {:>12}  {:>8.2} ms/iter  {:>7.2} seq/s  L3 overhead ~{:>4.1}%",
-            sched.ops.len(),
-            fmt_bytes(sim.peak_bytes),
+            rep.ops,
+            fmt_bytes(rep.peak.get()),
             t,
             batch as f64 * 1e3 / t,
             overhead_pct
@@ -109,12 +100,16 @@ fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
     let (_, ov1) = run("pytorch", &store_all_schedule(&chain));
     run("sequential-2", &periodic_schedule(&chain, 2));
     run("sequential-4", &periodic_schedule(&chain, 4));
-    let tight = chain.store_all_memory() * 3 / 4;
-    if let Some(s) = solve(&chain, tight, 300, Mode::Full) {
-        run("optimal-75%", &s);
-    }
-    if let Some(s) = solve(&chain, tight, 300, Mode::AdRevolve) {
-        run("revolve-75%", &s);
+    let tight = MemBytes::new(chain.store_all_memory() * 3 / 4);
+    for (label, mode) in [("optimal-75%", Mode::Full), ("revolve-75%", Mode::AdRevolve)] {
+        let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), tight)
+            .slots(SlotCount::new(300))
+            .mode(mode)
+            .plan()
+            .expect("inline chain spec resolves");
+        if let Some(s) = plan.schedule_at(tight) {
+            run(label, &s);
+        }
     }
     println!(
         "\nDESIGN.md §Perf target: L3 replay overhead < 5 % of step time (store-all: {ov1:.1} %)"

@@ -1,0 +1,363 @@
+//! Structured errors of the public facade.
+//!
+//! Every fallible facade call returns [`Error`], which carries an
+//! [`ErrorKind`] next to an anyhow-style context chain. The kind is what
+//! the two user-facing surfaces key their behavior on, each through one
+//! table instead of string matching:
+//!
+//! * the planning service maps it to an HTTP status
+//!   ([`ErrorKind::http_status`]) — previously `routes.rs` tagged
+//!   server-side failures by message *prefix* because the vendored
+//!   anyhow has no downcasting;
+//! * the CLI maps it to a process exit code ([`ErrorKind::exit_code`]):
+//!   usage error = 2, infeasible budget = 3, backend/internal = 1.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, api::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// What went wrong, at the granularity callers dispatch on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    /// The chain spec / request is syntactically or semantically invalid
+    /// (bad field, out-of-range value, unparsable size string).
+    InvalidSpec,
+    /// The chain is valid but no persistent schedule fits the budget.
+    InfeasibleBudget,
+    /// The spec names a profile family, depth, or preset that does not
+    /// exist in the catalog.
+    UnknownChain,
+    /// The tensor backend failed (compilation, execution, missing
+    /// artifacts / real `xla` bindings).
+    Backend,
+    /// An internal invariant broke — a bug in this crate, not in the
+    /// request. Page the operator, don't blame the client.
+    Internal,
+}
+
+impl ErrorKind {
+    /// The single `ErrorKind → HTTP status` table of the planning
+    /// service. Spec-shaped problems blame the request (`422`); backend
+    /// and invariant failures blame the server (`500`).
+    pub fn http_status(self) -> u16 {
+        match self {
+            ErrorKind::InvalidSpec | ErrorKind::UnknownChain | ErrorKind::InfeasibleBudget => 422,
+            ErrorKind::Backend | ErrorKind::Internal => 500,
+        }
+    }
+
+    /// The single `ErrorKind → CLI exit code` table (documented in the
+    /// binary's USAGE): usage/spec errors exit 2, an infeasible budget
+    /// exits 3, backend/internal failures exit 1.
+    pub fn exit_code(self) -> i32 {
+        match self {
+            ErrorKind::InvalidSpec | ErrorKind::UnknownChain => 2,
+            ErrorKind::InfeasibleBudget => 3,
+            ErrorKind::Backend | ErrorKind::Internal => 1,
+        }
+    }
+
+    /// Stable snake_case name, used as the `"kind"` field of the
+    /// service's `{"error": {...}}` envelope.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::InvalidSpec => "invalid_spec",
+            ErrorKind::InfeasibleBudget => "infeasible_budget",
+            ErrorKind::UnknownChain => "unknown_chain",
+            ErrorKind::Backend => "backend",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
+
+impl Display for ErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A kind-tagged error with a context chain, outermost message first.
+///
+/// Formatting mirrors anyhow: `{}` shows the outermost message, `{:#}`
+/// the whole chain joined by `": "`, `{:?}` a `Caused by:` list.
+pub struct Error {
+    kind: ErrorKind,
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a kind and a displayable message.
+    pub fn new(kind: ErrorKind, msg: impl Display) -> Error {
+        Error { kind, chain: vec![msg.to_string()] }
+    }
+
+    /// Shorthand for [`ErrorKind::InvalidSpec`].
+    pub fn invalid(msg: impl Display) -> Error {
+        Error::new(ErrorKind::InvalidSpec, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::InfeasibleBudget`].
+    pub fn infeasible(msg: impl Display) -> Error {
+        Error::new(ErrorKind::InfeasibleBudget, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::UnknownChain`].
+    pub fn unknown_chain(msg: impl Display) -> Error {
+        Error::new(ErrorKind::UnknownChain, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::Backend`].
+    pub fn backend(msg: impl Display) -> Error {
+        Error::new(ErrorKind::Backend, msg)
+    }
+
+    /// Shorthand for [`ErrorKind::Internal`].
+    pub fn internal(msg: impl Display) -> Error {
+        Error::new(ErrorKind::Internal, msg)
+    }
+
+    /// The kind this error is tagged with.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+
+    /// Retag the error (e.g. a generic conversion that defaulted to
+    /// [`ErrorKind::Internal`] but is really a backend failure).
+    pub fn with_kind(mut self, kind: ErrorKind) -> Error {
+        self.kind = kind;
+        self
+    }
+
+    /// Wrap with an outer context message, keeping the kind.
+    pub fn context(mut self, context: impl Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.kind, self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn from_std_error(err: &(dyn std::error::Error + 'static)) -> Error {
+    let mut chain = vec![err.to_string()];
+    let mut source = err.source();
+    while let Some(cause) = source {
+        chain.push(cause.to_string());
+        source = cause.source();
+    }
+    Error { kind: ErrorKind::Internal, chain }
+}
+
+/// The error types that convert into [`Error`] with `?` (all tagged
+/// [`ErrorKind::Internal`]; retag with [`Error::with_kind`] /
+/// [`Context::kind`] where a more specific kind applies). An explicit
+/// list rather than a blanket impl: a blanket over
+/// `E: std::error::Error` would conflict with the `anyhow::Error`
+/// conversion under coherence (anyhow's error deliberately is not a std
+/// error, but the compiler cannot rely on that for a foreign type).
+macro_rules! convert_std_error {
+    ($($ty:ty),* $(,)?) => {$(
+        impl From<$ty> for Error {
+            fn from(err: $ty) -> Error {
+                from_std_error(&err)
+            }
+        }
+        impl private::IntoApiError for $ty {
+            fn into_api_error(self) -> Error {
+                Error::from(self)
+            }
+        }
+    )*};
+}
+
+convert_std_error!(
+    std::io::Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::str::Utf8Error,
+    crate::util::json::ParseError,
+);
+
+/// Lossless adoption of an anyhow context chain, tagged
+/// [`ErrorKind::Internal`] (retag at the call site where appropriate).
+impl From<anyhow::Error> for Error {
+    fn from(err: anyhow::Error) -> Error {
+        Error { kind: ErrorKind::Internal, chain: err.chain().map(String::from).collect() }
+    }
+}
+
+mod private {
+    /// Sealed conversion, mirroring the vendored anyhow's `IntoError`:
+    /// implemented for the std errors listed above, `anyhow::Error`, and
+    /// [`crate::api::Error`] itself, so [`super::Context`] works on all
+    /// three `Result` flavors.
+    pub trait IntoApiError {
+        fn into_api_error(self) -> super::Error;
+    }
+
+    impl IntoApiError for anyhow::Error {
+        fn into_api_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoApiError for super::Error {
+        fn into_api_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// `.context(...)` / `.with_context(...)` / `.kind(...)` on fallible
+/// values, converting into [`Error`] as needed.
+///
+/// On `Option`, a missing value is treated as [`ErrorKind::InvalidSpec`]
+/// (the overwhelmingly common case: a required request field is absent);
+/// chain `.kind(...)` to retag.
+pub trait Context<T>: Sized {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: Display>(self, context: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+
+    /// Convert and (re)tag the error with `kind`.
+    fn kind(self, kind: ErrorKind) -> Result<T>;
+}
+
+impl<T, E: private::IntoApiError> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_api_error().context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into_api_error().context(f()))
+    }
+
+    fn kind(self, kind: ErrorKind) -> Result<T> {
+        self.map_err(|e| e.into_api_error().with_kind(kind))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::invalid(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::invalid(f()))
+    }
+
+    fn kind(self, kind: ErrorKind) -> Result<T> {
+        self.ok_or_else(|| Error::new(kind, "required value missing"))
+    }
+}
+
+/// Return early with an [`Error`] of the given kind (module-internal
+/// counterpart of `anyhow::bail!`): `fail!(InvalidSpec, "bad {x}")`.
+macro_rules! fail {
+    ($kind:ident, $($arg:tt)*) => {
+        return Err($crate::api::Error::new(
+            $crate::api::ErrorKind::$kind,
+            format!($($arg)*),
+        ))
+    };
+}
+pub(crate) use fail;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_tables_are_total_and_distinct() {
+        let kinds = [
+            ErrorKind::InvalidSpec,
+            ErrorKind::InfeasibleBudget,
+            ErrorKind::UnknownChain,
+            ErrorKind::Backend,
+            ErrorKind::Internal,
+        ];
+        for k in kinds {
+            assert!(matches!(k.http_status(), 422 | 500), "{k}");
+            assert!(matches!(k.exit_code(), 1 | 2 | 3), "{k}");
+            assert!(!k.as_str().is_empty());
+        }
+        // the satellite contract: usage 2, infeasible 3, backend/internal 1
+        assert_eq!(ErrorKind::InvalidSpec.exit_code(), 2);
+        assert_eq!(ErrorKind::UnknownChain.exit_code(), 2);
+        assert_eq!(ErrorKind::InfeasibleBudget.exit_code(), 3);
+        assert_eq!(ErrorKind::Backend.exit_code(), 1);
+        assert_eq!(ErrorKind::Internal.exit_code(), 1);
+        // the service contract: spec errors 422, server errors 500
+        assert_eq!(ErrorKind::InvalidSpec.http_status(), 422);
+        assert_eq!(ErrorKind::UnknownChain.http_status(), 422);
+        assert_eq!(ErrorKind::Internal.http_status(), 500);
+    }
+
+    #[test]
+    fn context_preserves_kind_and_chain() {
+        let e = Error::infeasible("no schedule fits 1 KiB").context("solving resnet18");
+        assert_eq!(e.kind(), ErrorKind::InfeasibleBudget);
+        assert_eq!(format!("{e}"), "solving resnet18");
+        assert_eq!(format!("{e:#}"), "solving resnet18: no schedule fits 1 KiB");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn conversions_default_to_internal() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::from(io);
+        assert_eq!(e.kind(), ErrorKind::Internal);
+
+        let any = anyhow::anyhow!("inner");
+        let e = Error::from(any).with_kind(ErrorKind::Backend);
+        assert_eq!(e.kind(), ErrorKind::Backend);
+        assert_eq!(format!("{e}"), "inner");
+    }
+
+    #[test]
+    fn context_trait_works_on_all_result_flavors() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "io"));
+        assert_eq!(r.context("ctx").unwrap_err().kind(), ErrorKind::Internal);
+
+        let r: anyhow::Result<()> = Err(anyhow::anyhow!("any"));
+        let e = r.kind(ErrorKind::Backend).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Backend);
+
+        let r: Result<()> = Err(Error::invalid("bad"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::InvalidSpec);
+        assert_eq!(format!("{e:#}"), "outer: bad");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing 'x'").unwrap_err().kind(), ErrorKind::InvalidSpec);
+    }
+}

@@ -1,0 +1,59 @@
+//! The public facade: one typed pipeline from chain spec to executed
+//! schedule.
+//!
+//! The paper's tool is a single pipeline — describe a chain, compute the
+//! optimal checkpointing strategy for a memory limit, execute it. Before
+//! this module the crate exposed that pipeline three times (CLI glue,
+//! service wire, test/bench hand-wiring), each with its own chain
+//! construction, raw-`u64` budgets, and stringly-typed errors. `api` is
+//! now the one entry point everything routes through:
+//!
+//! * [`ChainSpec`] — the four chain sources (built-in profile, native
+//!   preset, inline stages, on-disk manifest), normalized and validated
+//!   in one place.
+//! * [`MemBytes`] / [`SlotCount`] — typed units with the single
+//!   human-suffix parser ([`MemBytes::parse`]), shared by CLI flags and
+//!   the JSON wire.
+//! * [`PlanRequest`] → [`Plan`] — solve the DP once (table-cached),
+//!   answer any budget: schedule, sweep, feasibility range, simulator
+//!   verification, and really-executing replay ([`Plan::execute`]).
+//! * [`Error`] / [`ErrorKind`] — structured errors; the service's HTTP
+//!   statuses and the CLI's exit codes each come from one table
+//!   ([`ErrorKind::http_status`], [`ErrorKind::exit_code`]).
+//!
+//! # Quickstart
+//!
+//! ```
+//! use chainckpt::api::{ChainSpec, MemBytes, PlanRequest};
+//!
+//! // spec → plan: one DP solve, fingerprint-cached process-wide
+//! let plan = PlanRequest::new(
+//!     ChainSpec::profile("resnet", 18, 224, 4),
+//!     MemBytes::parse("4G")?,
+//! )
+//! .plan()?;
+//!
+//! // plan → schedule, simulator-verified, at any budget ≤ 4 GiB
+//! let schedule = plan.schedule()?;
+//! let report = plan.verify(&schedule)?;
+//! assert!(report.peak_bytes <= plan.budget().get());
+//! # Ok::<(), chainckpt::api::Error>(())
+//! ```
+//!
+//! Sweeps reuse the same table (`plan.sweep(&budgets)`), and
+//! [`Plan::execute`] / [`execute_schedule`] replay a schedule against a
+//! compiled [`crate::runtime::Runtime`] on either tensor backend.
+
+mod error;
+mod plan;
+mod spec;
+mod units;
+
+pub use error::{Context, Error, ErrorKind, Result};
+pub use plan::{execute_schedule, ExecuteOptions, ExecutionReport, Plan, PlanRequest};
+pub use spec::{ChainSpec, MAX_STAGES, PRESET_FLOPS_PER_US};
+pub use units::{MemBytes, SlotCount};
+
+// Re-exported so facade callers never need to reach into `solver` for the
+// types that appear in the facade's own signatures.
+pub use crate::solver::{Mode, Schedule};

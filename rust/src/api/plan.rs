@@ -1,0 +1,356 @@
+//! [`PlanRequest`] → [`Plan`]: the spec→plan→execute pipeline as one
+//! typed handle.
+//!
+//! A [`Plan`] wraps a resolved [`Chain`] plus the solver's
+//! [`Planner`] (one DP table, fingerprint-cached process-wide) and
+//! answers every question the consumers used to ask the solver layer
+//! directly: the optimal schedule at any budget ≤ the planned top
+//! ([`Plan::schedule_at`]), whole budget sweeps ([`Plan::sweep`]), the
+//! feasibility frontier ([`Plan::feasible_range`]), simulator
+//! verification ([`Plan::verify`]), and really-executing replay against a
+//! compiled [`Runtime`] ([`Plan::execute`] / [`execute_schedule`]).
+
+use super::error::{Context, Error, ErrorKind, Result};
+use super::spec::ChainSpec;
+use super::units::{MemBytes, SlotCount};
+use crate::backend::Backend;
+use crate::chain::Chain;
+use crate::executor::Executor;
+use crate::runtime::Runtime;
+use crate::simulator::{simulate, SimReport};
+use crate::solver::{Mode, Planner, Schedule};
+use crate::train::SyntheticData;
+use crate::util::median;
+
+/// Everything needed to plan a chain: the spec, the top memory budget the
+/// DP is discretized against, the slot axis, and the solver mode.
+///
+/// Budgets above the request's `budget` cannot be answered by the
+/// resulting [`Plan`] (they clamp); budgets below come free — build the
+/// request at the largest budget you intend to ask about.
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    spec: ChainSpec,
+    budget: MemBytes,
+    slots: SlotCount,
+    mode: Mode,
+}
+
+impl PlanRequest {
+    /// A request with the default discretization (the paper's S = 500)
+    /// and the optimal-persistent mode ([`Mode::Full`]).
+    pub fn new(spec: ChainSpec, budget: MemBytes) -> PlanRequest {
+        PlanRequest { spec, budget, slots: SlotCount::default(), mode: Mode::Full }
+    }
+
+    /// Override the DP slot axis.
+    pub fn slots(mut self, slots: impl Into<SlotCount>) -> PlanRequest {
+        self.slots = slots.into();
+        self
+    }
+
+    /// Override the solver mode (`Mode::AdRevolve` = the revolve
+    /// baseline's model).
+    pub fn mode(mut self, mode: Mode) -> PlanRequest {
+        self.mode = mode;
+        self
+    }
+
+    /// Resolve the spec and solve (or fetch from the shared table cache)
+    /// the DP — the one expensive step of the pipeline. Everything on the
+    /// returned [`Plan`] is at most O(L) per query.
+    pub fn plan(&self) -> Result<Plan> {
+        if self.budget.get() == 0 {
+            return Err(Error::invalid("memory budget must be ≥ 1 byte"));
+        }
+        if self.slots.get() == 0 {
+            return Err(Error::invalid("slot count must be ≥ 1"));
+        }
+        let chain = self
+            .spec
+            .resolve()
+            .with_context(|| format!("resolving chain spec ({})", self.spec))?;
+        let planner = Planner::new(&chain, self.budget.get(), self.slots.get(), self.mode);
+        Ok(Plan { chain, planner, budget: self.budget })
+    }
+}
+
+/// A chain's DP solved once, able to answer any budget ≤ the planned top
+/// (see [`PlanRequest`]). Construction is [`PlanRequest::plan`].
+pub struct Plan {
+    chain: Chain,
+    planner: Planner,
+    budget: MemBytes,
+}
+
+impl Plan {
+    /// The resolved chain this plan answers for.
+    pub fn chain(&self) -> &Chain {
+        &self.chain
+    }
+
+    /// The top budget the DP was discretized against.
+    pub fn budget(&self) -> MemBytes {
+        self.budget
+    }
+
+    /// The solver mode the table was filled for.
+    pub fn mode(&self) -> Mode {
+        self.planner.mode()
+    }
+
+    /// Bytes per memory slot — the granularity at which budgets are
+    /// distinguished.
+    pub fn slot_bytes(&self) -> f64 {
+        self.planner.slot_bytes()
+    }
+
+    /// Optimal predicted time at `memory`, without reconstructing the
+    /// schedule. `None` if no persistent schedule fits.
+    pub fn cost_at(&self, memory: MemBytes) -> Option<f64> {
+        self.planner.cost_at(memory.get())
+    }
+
+    /// The optimal persistent schedule within `memory` (O(L)
+    /// reconstruction from the shared table). `None` if infeasible.
+    pub fn schedule_at(&self, memory: MemBytes) -> Option<Schedule> {
+        self.planner.schedule_at(memory.get())
+    }
+
+    /// The schedule at the plan's own top budget, or an
+    /// [`ErrorKind::InfeasibleBudget`] error naming the budget and (when
+    /// one exists) the smallest budget that would work.
+    pub fn schedule(&self) -> Result<Schedule> {
+        self.schedule_at(self.budget).ok_or_else(|| {
+            let hint = match self.feasible_range() {
+                Some((lo, _)) => format!(" (smallest feasible budget: {lo})"),
+                None => " (no persistent schedule exists at any budget this plan covers)".into(),
+            };
+            Error::infeasible(format!(
+                "no feasible persistent schedule for chain '{}' within {}{hint}",
+                self.chain.name, self.budget
+            ))
+        })
+    }
+
+    /// Schedules for a whole budget sweep, reconstructed in parallel from
+    /// the shared table; `out[i]` equals `schedule_at(budgets[i])`.
+    pub fn sweep(&self, budgets: &[MemBytes]) -> Vec<Option<Schedule>> {
+        let raw: Vec<u64> = budgets.iter().map(|m| m.get()).collect();
+        self.planner.sweep(&raw)
+    }
+
+    /// The byte-budget feasibility interval `[min, top]` this plan can
+    /// serve; `None` when even the top budget is infeasible.
+    pub fn feasible_range(&self) -> Option<(MemBytes, MemBytes)> {
+        self.planner
+            .feasible_range()
+            .map(|(lo, hi)| (MemBytes::new(lo), MemBytes::new(hi)))
+    }
+
+    /// Independently verify a schedule in the byte-accurate simulator.
+    /// The schedule does not have to come from this plan (baselines
+    /// verify the same way). An invalid sequence is an
+    /// [`ErrorKind::Internal`] error: every schedule this crate hands out
+    /// is supposed to replay cleanly, so a failure here is a solver bug,
+    /// not a bad request.
+    pub fn verify(&self, schedule: &Schedule) -> Result<SimReport> {
+        simulate(&self.chain, schedule)
+            .map_err(|e| Error::internal(format!("solver produced an invalid schedule: {e}")))
+    }
+
+    /// Plan → really execute: replay this plan's optimal schedule against
+    /// compiled stages (see [`execute_schedule`] for the measurement
+    /// contract). Fails with [`ErrorKind::InfeasibleBudget`] if the top
+    /// budget admits no schedule.
+    pub fn execute<B: Backend>(
+        &self,
+        rt: &Runtime<B>,
+        data: &SyntheticData<B::Tensor>,
+        opts: &ExecuteOptions,
+    ) -> Result<ExecutionReport> {
+        let schedule = self.schedule()?;
+        execute_schedule(rt, &schedule, data, opts)
+    }
+}
+
+/// Measurement contract for [`execute_schedule`].
+#[derive(Debug, Clone)]
+pub struct ExecuteOptions {
+    /// Timed repetitions (median taken); one untimed warmup run precedes
+    /// them.
+    pub reps: usize,
+    /// Parameter-init seed for the fresh [`Executor`].
+    pub seed: u64,
+    /// Byte budget enforced by the executor's ledger each replay
+    /// (`None` = measure only, don't enforce).
+    pub memory_limit: Option<MemBytes>,
+}
+
+impl Default for ExecuteOptions {
+    fn default() -> Self {
+        ExecuteOptions { reps: 3, seed: 1, memory_limit: None }
+    }
+}
+
+/// One really-executed measurement of a schedule.
+#[derive(Debug, Clone)]
+pub struct ExecutionReport {
+    /// Loss captured by the final timed replay.
+    pub loss: f32,
+    /// Peak bytes charged to the executor's memory ledger.
+    pub peak: MemBytes,
+    /// Median wall-clock of one replay, seconds.
+    pub elapsed_s: f64,
+    /// Items per second at the manifest's batch size.
+    pub throughput: f64,
+    /// Ops in the replayed schedule.
+    pub ops: usize,
+}
+
+/// Execute `schedule` against really-computing stages: a fresh
+/// [`Executor`] (so repeated measurements are independent and
+/// deterministic per seed), the loss target from `data.targets[0]`, one
+/// warmup replay, then `opts.reps` timed replays (median reported).
+///
+/// This is the one execution path behind `chainckpt train`/`compare`, the
+/// executor benchmark, and [`Plan::execute`] — any [`Schedule`] works,
+/// including the store-all / periodic baselines.
+pub fn execute_schedule<B: Backend>(
+    rt: &Runtime<B>,
+    schedule: &Schedule,
+    data: &SyntheticData<B::Tensor>,
+    opts: &ExecuteOptions,
+) -> Result<ExecutionReport> {
+    if data.is_empty() {
+        return Err(Error::invalid("execute_schedule needs at least one data batch"));
+    }
+    let mut ex = Executor::new(rt, opts.seed).kind(ErrorKind::Backend)?;
+    let loss_stage = rt.manifest.stages.len() - 1;
+    ex.set_data_param(loss_stage, &data.targets[0]).kind(ErrorKind::Backend)?;
+    let limit = opts.memory_limit.map(MemBytes::get);
+    let mut times = Vec::with_capacity(opts.reps);
+    let mut last = None;
+    for r in 0..opts.reps.max(1) + 1 {
+        let res = ex
+            .run(schedule, &data.inputs[0], limit)
+            .with_context(|| format!("replaying a {} schedule", schedule.strategy))
+            .kind(ErrorKind::Backend)?;
+        if r > 0 {
+            times.push(res.elapsed_s);
+        }
+        last = Some(res);
+    }
+    let res = last.expect("at least one replay ran");
+    let elapsed_s = median(&mut times);
+    let batch = rt.manifest.input_shape[0] as f64;
+    Ok(ExecutionReport {
+        loss: res.loss,
+        peak: MemBytes::new(res.peak_bytes),
+        elapsed_s,
+        throughput: batch / elapsed_s,
+        ops: res.ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::solver::solve;
+
+    fn toy(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        Chain::new("toy", stages, 100)
+    }
+
+    #[test]
+    fn plan_matches_the_raw_planner_surface() {
+        let chain = toy(7);
+        let top = chain.store_all_memory() + chain.wa0;
+        let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes(top))
+            .slots(SlotCount(140))
+            .plan()
+            .unwrap();
+        let raw = Planner::new(&chain, top, 140, Mode::Full);
+        for m in [top / 3, top / 2, top] {
+            assert_eq!(
+                plan.schedule_at(MemBytes(m)).map(|s| s.ops),
+                raw.schedule_at(m).map(|s| s.ops),
+                "budget {m}"
+            );
+            assert_eq!(plan.cost_at(MemBytes(m)), raw.cost_at(m));
+        }
+        assert_eq!(
+            plan.feasible_range().map(|(a, b)| (a.get(), b.get())),
+            raw.feasible_range()
+        );
+        let budgets: Vec<MemBytes> = (1..=6).map(|i| MemBytes(top * i / 6)).collect();
+        let raw_budgets: Vec<u64> = budgets.iter().map(|m| m.get()).collect();
+        assert_eq!(
+            plan.sweep(&budgets).into_iter().map(|s| s.map(|x| x.ops)).collect::<Vec<_>>(),
+            raw.sweep(&raw_budgets).into_iter().map(|s| s.map(|x| x.ops)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn plan_is_bit_identical_to_solve_at_its_own_budget() {
+        let chain = toy(9);
+        let m = chain.store_all_memory() / 2;
+        let via_api = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes(m))
+            .slots(SlotCount(150))
+            .plan()
+            .unwrap()
+            .schedule()
+            .unwrap();
+        let via_solve = solve(&chain, m, 150, Mode::Full).unwrap();
+        assert_eq!(via_api.ops, via_solve.ops);
+        assert_eq!(via_api.predicted_time, via_solve.predicted_time);
+    }
+
+    #[test]
+    fn infeasible_budget_is_kind_tagged_with_a_hint() {
+        let chain = toy(5);
+        let err = PlanRequest::new(ChainSpec::inline(chain), MemBytes(64))
+            .slots(SlotCount(60))
+            .plan()
+            .unwrap()
+            .schedule()
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InfeasibleBudget);
+        assert!(format!("{err:#}").contains("64 B"), "{err:#}");
+    }
+
+    #[test]
+    fn zero_budget_and_zero_slots_are_invalid_not_panics() {
+        let err =
+            PlanRequest::new(ChainSpec::inline(toy(3)), MemBytes(0)).plan().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        let err = PlanRequest::new(ChainSpec::inline(toy(3)), MemBytes(1024))
+            .slots(SlotCount(0))
+            .plan()
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn verify_accepts_solver_output_and_flags_garbage() {
+        let chain = toy(6);
+        let top = chain.store_all_memory() + chain.wa0;
+        let plan = PlanRequest::new(ChainSpec::inline(chain), MemBytes(top))
+            .slots(SlotCount(100))
+            .plan()
+            .unwrap();
+        let sched = plan.schedule().unwrap();
+        let rep = plan.verify(&sched).unwrap();
+        assert!(rep.peak_bytes <= top);
+
+        use crate::solver::{Op, StrategyKind};
+        let bogus = Schedule::new(vec![Op::Bwd(3)], StrategyKind::Optimal, 0.0);
+        let err = plan.verify(&bogus).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Internal);
+    }
+}

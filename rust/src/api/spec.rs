@@ -1,0 +1,416 @@
+//! [`ChainSpec`] — one description of "which chain", whatever the source.
+//!
+//! Before the facade, each consumer hand-wired its own chain
+//! construction: `main.rs` built profile chains from CLI flags,
+//! `service/wire.rs` parsed profile/preset/inline JSON specs with its own
+//! validation, and the figure harness called [`crate::chain::profiles`]
+//! directly. `ChainSpec` owns all of that: the four sources (built-in
+//! **profile**, native **preset**, **inline** stages, on-disk
+//! **manifest**) normalize and validate in exactly one place, so the CLI,
+//! the service wire, and library callers cannot drift apart.
+
+use super::error::{fail, Context, ErrorKind, Result};
+use crate::backend::native::presets;
+use crate::chain::manifest::Manifest;
+use crate::chain::{profiles, Chain, Stage};
+use crate::util::json::Value;
+
+/// Stage cap for inline chains: bounds DP time (O(L²·S) per table) so one
+/// request cannot pin a service worker for minutes.
+pub const MAX_STAGES: usize = 2048;
+
+/// FLOP/µs assumed when deriving analytic timings for `preset` and
+/// `manifest` chains (a mid-range single-core rate for the native engine;
+/// only the *relative* stage durations shape the schedule).
+pub const PRESET_FLOPS_PER_US: f64 = 5.0e3;
+
+/// Where a chain comes from. Build one with the [`ChainSpec`]
+/// constructors or parse the service wire form with
+/// [`ChainSpec::from_json`]; turn it into a solver [`Chain`] with
+/// [`ChainSpec::resolve`] (or hand it straight to
+/// [`super::PlanRequest`]).
+#[derive(Debug, Clone, PartialEq)]
+enum Source {
+    /// An analytic profile of the paper's benchmark networks
+    /// ([`crate::chain::profiles`]).
+    Profile { family: String, depth: u32, image: u64, batch: u64 },
+    /// A native-backend transformer preset
+    /// ([`crate::backend::native::presets`]) with analytic roofline
+    /// timings.
+    Preset(String),
+    /// An already-built chain (e.g. measured by the estimator, or parsed
+    /// from an inline `"stages"` wire spec).
+    Inline(Chain),
+    /// A stage manifest directory on disk (`manifest.json` as written by
+    /// `python/compile/aot.py`), with analytic timings.
+    Manifest(std::path::PathBuf),
+}
+
+/// A validated-on-resolve description of a chain (see [module docs](self)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainSpec {
+    source: Source,
+}
+
+impl ChainSpec {
+    /// A built-in analytic profile: `family` ∈
+    /// resnet/densenet/inception/vgg, `image`/`batch` within the
+    /// catalog's supported ranges (checked at [`resolve`](Self::resolve)).
+    pub fn profile(
+        family: impl Into<String>,
+        depth: u32,
+        image: u64,
+        batch: u64,
+    ) -> ChainSpec {
+        ChainSpec { source: Source::Profile { family: family.into(), depth, image, batch } }
+    }
+
+    /// A native-backend preset chain (`quickstart` / `default` / `wide`).
+    pub fn preset(name: impl Into<String>) -> ChainSpec {
+        ChainSpec { source: Source::Preset(name.into()) }
+    }
+
+    /// An already-built chain, used as-is.
+    pub fn inline(chain: Chain) -> ChainSpec {
+        ChainSpec { source: Source::Inline(chain) }
+    }
+
+    /// A manifest directory on disk, timed analytically.
+    pub fn manifest(dir: impl Into<std::path::PathBuf>) -> ChainSpec {
+        ChainSpec { source: Source::Manifest(dir.into()) }
+    }
+
+    /// Parse the **untrusted** wire form — the `"chain"` field of
+    /// `/solve`, `/sweep`, `/simulate`:
+    ///
+    /// * `{"profile": {"family": "resnet", "depth": 101, "image": 1000,
+    ///   "batch": 8}}` — depth defaults to the family's first supported
+    ///   depth, image to 224, batch to 4.
+    /// * `{"preset": "default"}`
+    /// * `{"stages": [{"uf": …, "ub": …, "wa": …, "wabar": …}, …],
+    ///   "input_bytes": …}` — an inline measured profile (e.g. from
+    ///   `estimate` output on the caller's own hardware).
+    ///
+    /// The filesystem-touching `{"manifest": "DIR"}` source is
+    /// deliberately **rejected** here: this parser fronts the network
+    /// daemon, and resolving a client-supplied path would let a remote
+    /// caller probe (and attempt to parse) arbitrary server files. Local
+    /// callers that own their input use [`ChainSpec::from_json_local`].
+    pub fn from_json(spec: &Value) -> Result<ChainSpec> {
+        if spec.get("manifest").is_some() {
+            fail!(
+                InvalidSpec,
+                "the 'manifest' chain source reads the local filesystem and is only \
+                 available to local callers (CLI --chain / ChainSpec::manifest); \
+                 send 'profile', 'preset', or inline 'stages' instead"
+            );
+        }
+        Self::from_json_local(spec)
+    }
+
+    /// Parse the wire form *plus* the local-only `{"manifest": "DIR"}`
+    /// source (an on-disk manifest directory, timed analytically). Used
+    /// by the CLI's `--chain FILE`, where the spec file is the
+    /// operator's own input — never by the network service.
+    pub fn from_json_local(spec: &Value) -> Result<ChainSpec> {
+        if let Some(profile) = spec.get("profile") {
+            return profile_from_json(profile);
+        }
+        if let Some(preset) = spec.get("preset") {
+            let name = preset.as_str().context("'preset' must be a string")?;
+            return Ok(ChainSpec::preset(name));
+        }
+        if spec.get("stages").is_some() {
+            return Ok(ChainSpec::inline(chain_from_stages(spec)?));
+        }
+        if let Some(dir) = spec.get("manifest") {
+            let dir = dir.as_str().context("'manifest' must be a directory path string")?;
+            return Ok(ChainSpec::manifest(dir));
+        }
+        fail!(
+            InvalidSpec,
+            "chain spec needs one of 'profile', 'preset', 'stages', or 'manifest'"
+        )
+    }
+
+    /// The batch size this spec implies, when it names one: the
+    /// profile's `batch`, or the preset/manifest input shape's leading
+    /// dimension. `None` for inline chains (a solver [`Chain`] carries
+    /// no batch) and for sources that fail to resolve. Re-reads cheap
+    /// geometry metadata for preset/manifest sources — use it once, next
+    /// to [`resolve`](Self::resolve).
+    pub fn batch_hint(&self) -> Option<u64> {
+        match &self.source {
+            Source::Profile { batch, .. } => Some(*batch),
+            Source::Preset(name) => presets::preset(name)
+                .ok()
+                .and_then(|m| m.input_shape.first().map(|&b| b as u64)),
+            Source::Inline(_) => None,
+            Source::Manifest(dir) => Manifest::load(dir)
+                .ok()
+                .and_then(|m| m.input_shape.first().map(|&b| b as u64)),
+        }
+    }
+
+    /// Normalize and validate into a solver [`Chain`]. This is the *only*
+    /// place chain-source validation lives; every entry path (CLI flags,
+    /// JSON wire, library builders) funnels through it.
+    pub fn resolve(&self) -> Result<Chain> {
+        match &self.source {
+            Source::Profile { family, depth, image, batch } => {
+                if !(32..=4096).contains(image) {
+                    fail!(InvalidSpec, "'image' = {image} out of range (32..=4096)");
+                }
+                if !(1..=1024).contains(batch) {
+                    fail!(InvalidSpec, "'batch' = {batch} out of range (1..=1024)");
+                }
+                profiles::try_by_name(family, *depth, *image, *batch)
+                    .with_context(|| {
+                        format!(
+                            "unknown profile family '{family}' or unsupported depth {depth} \
+                             (families: {}; e.g. resnet depths {:?})",
+                            profiles::FAMILIES.join("/"),
+                            profiles::supported_depths("resnet"),
+                        )
+                    })
+                    .kind(ErrorKind::UnknownChain)
+            }
+            Source::Preset(name) => {
+                let manifest = presets::preset(name).kind(ErrorKind::UnknownChain)?;
+                Ok(manifest.to_chain_analytic(PRESET_FLOPS_PER_US))
+            }
+            Source::Inline(chain) => Ok(chain.clone()),
+            Source::Manifest(dir) => {
+                let manifest = Manifest::load(dir).kind(ErrorKind::InvalidSpec)?;
+                Ok(manifest.to_chain_analytic(PRESET_FLOPS_PER_US))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ChainSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.source {
+            Source::Profile { family, depth, image, batch } => {
+                write!(f, "profile {family}-{depth} (image {image}, batch {batch})")
+            }
+            Source::Preset(name) => write!(f, "preset '{name}'"),
+            Source::Inline(chain) => write!(f, "inline chain '{}'", chain.name),
+            Source::Manifest(dir) => write!(f, "manifest {}", dir.display()),
+        }
+    }
+}
+
+fn profile_from_json(p: &Value) -> Result<ChainSpec> {
+    let family = p
+        .get("family")
+        .and_then(|v| v.as_str())
+        .context("profile needs a string 'family' (resnet/densenet/inception/vgg)")?
+        .to_string();
+    let depth = match p.get("depth") {
+        None => *profiles::supported_depths(&family).first().unwrap_or(&0),
+        Some(v) => {
+            let d = v.as_u64().context("'depth' must be a non-negative integer")?;
+            // no silent u32 wrap: 2^32+18 must not alias depth 18
+            u32::try_from(d).ok().with_context(|| format!("'depth' = {d} out of range"))?
+        }
+    };
+    let image = p.get("image").map_or(Ok(224), |v| {
+        v.as_u64().context("'image' must be a non-negative integer")
+    })?;
+    let batch = p.get("batch").map_or(Ok(4), |v| {
+        v.as_u64().context("'batch' must be a non-negative integer")
+    })?;
+    Ok(ChainSpec::profile(family, depth, image, batch))
+}
+
+fn chain_from_stages(spec: &Value) -> Result<Chain> {
+    let stages_json = spec
+        .get("stages")
+        .and_then(|v| v.as_arr())
+        .context("'stages' must be an array")?;
+    if stages_json.is_empty() {
+        fail!(InvalidSpec, "'stages' must not be empty");
+    }
+    if stages_json.len() > MAX_STAGES {
+        fail!(InvalidSpec, "{} stages exceed the {MAX_STAGES}-stage cap", stages_json.len());
+    }
+    let wa0 = spec
+        .get("input_bytes")
+        .context("inline chains need 'input_bytes' (bytes of the chain input a^0)")?
+        .as_u64()
+        .context("'input_bytes' must be a non-negative integer")?;
+    let name = spec
+        .get("name")
+        .and_then(|v| v.as_str())
+        .unwrap_or("inline")
+        .to_string();
+
+    let mut stages = Vec::with_capacity(stages_json.len());
+    for (i, s) in stages_json.iter().enumerate() {
+        let num = |key: &str| -> Result<f64> {
+            let v = s
+                .get(key)
+                .with_context(|| format!("stage {i}: missing '{key}'"))?
+                .as_f64()
+                .with_context(|| format!("stage {i}: '{key}' must be a number"))?;
+            if !v.is_finite() || v < 0.0 {
+                fail!(InvalidSpec, "stage {i}: '{key}' = {v} must be finite and ≥ 0");
+            }
+            Ok(v)
+        };
+        let bytes = |key: &str| -> Result<u64> {
+            s.get(key)
+                .with_context(|| format!("stage {i}: missing '{key}'"))?
+                .as_u64()
+                .with_context(|| format!("stage {i}: '{key}' must be a non-negative integer"))
+        };
+        let opt_bytes = |key: &str, default: u64| -> Result<u64> {
+            match s.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_u64()
+                    .with_context(|| format!("stage {i}: '{key}' must be a non-negative integer")),
+            }
+        };
+        let (uf, ub) = (num("uf")?, num("ub")?);
+        let (wa, wabar) = (bytes("wa")?, bytes("wabar")?);
+        if wabar < wa {
+            fail!(InvalidSpec, "stage {i}: wabar = {wabar} < wa = {wa} (ā must include a)");
+        }
+        let stage_name = s
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(String::from)
+            .unwrap_or_else(|| format!("s{}", i + 1));
+        let stage = Stage::new(stage_name, uf, ub, wa, wabar)
+            .with_overheads(opt_bytes("of", 0)?, opt_bytes("ob", 0)?)
+            .with_delta_size(opt_bytes("wd", wa)?);
+        stages.push(stage);
+    }
+    Ok(Chain::new(name, stages, wa0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_chain(body: &str) -> Result<Chain> {
+        ChainSpec::from_json(&Value::parse(body).unwrap())?.resolve()
+    }
+
+    #[test]
+    fn profile_spec_round_trips_to_a_chain() {
+        let chain = parse_chain(
+            r#"{"profile": {"family": "resnet", "depth": 18, "image": 224, "batch": 8}}"#,
+        )
+        .unwrap();
+        assert_eq!(chain.name, "resnet18-i224-b8");
+        assert_eq!(chain.len(), profiles::resnet(18, 224, 8).len());
+    }
+
+    #[test]
+    fn profile_defaults_fill_in() {
+        assert!(parse_chain(r#"{"profile": {"family": "vgg"}}"#).is_ok());
+    }
+
+    #[test]
+    fn builder_and_json_paths_agree() {
+        let via_json = parse_chain(
+            r#"{"profile": {"family": "densenet", "depth": 121, "image": 224, "batch": 8}}"#,
+        )
+        .unwrap();
+        let via_builder = ChainSpec::profile("densenet", 121, 224, 8).resolve().unwrap();
+        assert_eq!(via_json, via_builder);
+    }
+
+    #[test]
+    fn bad_profiles_are_kind_tagged_errors_not_panics() {
+        for (body, kind) in [
+            (r#"{"profile": {"family": "alexnet"}}"#, ErrorKind::UnknownChain),
+            (r#"{"profile": {"family": "resnet", "depth": 51}}"#, ErrorKind::UnknownChain),
+            // 2^32 + 18: a u32 wrap would alias depth 18
+            (
+                r#"{"profile": {"family": "resnet", "depth": 4294967314}}"#,
+                ErrorKind::InvalidSpec,
+            ),
+            (
+                r#"{"profile": {"family": "resnet", "depth": 50, "image": 4}}"#,
+                ErrorKind::InvalidSpec,
+            ),
+            (
+                r#"{"profile": {"family": "resnet", "depth": 50, "batch": 0}}"#,
+                ErrorKind::InvalidSpec,
+            ),
+            (r#"{"preset": "nope"}"#, ErrorKind::UnknownChain),
+            (r#"{}"#, ErrorKind::InvalidSpec),
+        ] {
+            let err = parse_chain(body).unwrap_err();
+            assert_eq!(err.kind(), kind, "{body}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn preset_spec_builds_the_native_geometry() {
+        let chain = parse_chain(r#"{"preset": "quickstart"}"#).unwrap();
+        assert_eq!(chain.len(), 5); // dense + attn + mlp + dense + loss
+    }
+
+    #[test]
+    fn inline_stages_spec() {
+        let chain = parse_chain(
+            r#"{"name": "mini", "input_bytes": 400,
+                "stages": [
+                  {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 250},
+                  {"name": "loss", "uf": 0.5, "ub": 0.5, "wa": 4, "wabar": 4, "of": 8}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(chain.name, "mini");
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain.wa0, 400);
+        assert_eq!(chain.wabar(1), 250);
+        assert_eq!(chain.of(2), 8);
+        assert_eq!(chain.stages[1].name, "loss");
+    }
+
+    #[test]
+    fn inline_stage_validation() {
+        // wabar < wa must be a structured error, not Stage::new's panic
+        let err = parse_chain(
+            r#"{"input_bytes": 1, "stages": [{"uf": 1, "ub": 1, "wa": 10, "wabar": 5}]}"#,
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        assert!(format!("{err:#}").contains("wabar"), "{err:#}");
+    }
+
+    #[test]
+    fn missing_manifest_is_invalid_spec() {
+        let err = ChainSpec::manifest("/nonexistent/artifacts").resolve().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn batch_hint_tracks_the_source() {
+        assert_eq!(ChainSpec::profile("resnet", 18, 224, 8).batch_hint(), Some(8));
+        let preset_batch =
+            presets::preset("quickstart").unwrap().input_shape.first().map(|&b| b as u64);
+        assert_eq!(ChainSpec::preset("quickstart").batch_hint(), preset_batch);
+        assert!(preset_batch.is_some());
+        let inline = ChainSpec::inline(profiles::resnet(18, 224, 8));
+        assert_eq!(inline.batch_hint(), None);
+        assert_eq!(ChainSpec::preset("nope").batch_hint(), None);
+    }
+
+    #[test]
+    fn wire_form_rejects_the_filesystem_manifest_source() {
+        // the untrusted parser must never turn a network request into a
+        // local file read — only from_json_local (CLI --chain) may
+        let spec = Value::parse(r#"{"manifest": "/etc"}"#).unwrap();
+        let err = ChainSpec::from_json(&spec).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        assert!(format!("{err:#}").contains("local callers"), "{err:#}");
+        assert!(ChainSpec::from_json_local(&spec).is_ok());
+    }
+}

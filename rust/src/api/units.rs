@@ -1,0 +1,229 @@
+//! Typed units of the facade: byte budgets and DP slot counts.
+//!
+//! Before this module, memory budgets travelled as raw `u64` and DP
+//! discretizations as raw `usize` — and both the CLI (`util::parse_size`)
+//! and the service wire (`wire::parse_bytes`) carried their own copy of
+//! the human-suffix grammar. [`MemBytes::parse`] is now the *single*
+//! parser for `"512M"` / `"512MB"` / `"1.5GiB"`-style strings, and
+//! [`MemBytes`] / [`SlotCount`] make a bytes-vs-slots mixup a type error
+//! instead of a latent bug.
+
+use std::fmt;
+
+use super::error::{fail, Error, Result};
+use crate::chain::DEFAULT_SLOTS;
+
+/// A byte count (memory budget, activation size, peak usage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct MemBytes(pub u64);
+
+impl MemBytes {
+    /// Wrap a raw byte count.
+    pub const fn new(bytes: u64) -> MemBytes {
+        MemBytes(bytes)
+    }
+
+    /// The raw byte count.
+    pub const fn get(self) -> u64 {
+        self.0
+    }
+
+    /// Parse a human byte size: a plain integer (`"1048576"`) or a
+    /// decimal with a 1024-based suffix — `K`/`M`/`G`/`T`, optionally
+    /// followed by `B` or `iB`, any case, optional space before the
+    /// suffix. `"512M"`, `"512MB"`, `"512 MiB"`, and `"1.5g"` all parse;
+    /// fractional values are allowed only with a suffix (`"1.5"` bytes
+    /// is rejected, `"1.5K"` is 1536). This is the one suffix parser in
+    /// the crate: CLI flags and JSON wire strings both go through it.
+    pub fn parse(s: &str) -> Result<MemBytes> {
+        let t = s.trim();
+        let split = t
+            .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+            .unwrap_or(t.len());
+        let (num, suffix) = t.split_at(split);
+        if num.is_empty() {
+            fail!(InvalidSpec, "bad size string '{s}': no leading number");
+        }
+        let mult: u64 = match suffix.trim().to_ascii_lowercase().as_str() {
+            "" | "b" => 1,
+            "k" | "kb" | "kib" => 1 << 10,
+            "m" | "mb" | "mib" => 1 << 20,
+            "g" | "gb" | "gib" => 1 << 30,
+            "t" | "tb" | "tib" => 1u64 << 40,
+            other => fail!(
+                InvalidSpec,
+                "bad size string '{s}': unknown suffix '{other}' (use K/M/G/T, optionally +B/iB)"
+            ),
+        };
+        // plain integers (no suffix multiplier, no fraction) parse
+        // exactly as u64 — the f64 path below would round above 2^53 and
+        // reject u64::MAX (which rounds up to 2^64)
+        if mult == 1 && !num.contains('.') {
+            return num
+                .parse()
+                .map(MemBytes)
+                .map_err(|_| Error::invalid(format!("bad size string '{s}': unparsable number '{num}'")));
+        }
+        let base: f64 = num
+            .parse()
+            .map_err(|_| Error::invalid(format!("bad size string '{s}': unparsable number '{num}'")))?;
+        if !base.is_finite() || base < 0.0 {
+            fail!(InvalidSpec, "bad size string '{s}': size must be finite and >= 0");
+        }
+        if mult == 1 && base.fract() != 0.0 {
+            fail!(InvalidSpec, "bad size string '{s}': fractional bytes need a suffix");
+        }
+        let bytes = base * mult as f64;
+        // `u64::MAX as f64` rounds up to exactly 2^64, so `>=` is needed
+        // to reject 2^64 itself instead of silently saturating the cast
+        if bytes >= u64::MAX as f64 {
+            fail!(InvalidSpec, "bad size string '{s}': exceeds the u64 byte range");
+        }
+        Ok(MemBytes(bytes as u64))
+    }
+}
+
+impl fmt::Display for MemBytes {
+    /// Human form, parseable back by [`MemBytes::parse`] (within the
+    /// two-decimal rounding): `512 B`, `2.0 KiB`, `3.00 MiB`, `5.00 GiB`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&crate::util::fmt_bytes(self.0))
+    }
+}
+
+impl From<u64> for MemBytes {
+    fn from(bytes: u64) -> MemBytes {
+        MemBytes(bytes)
+    }
+}
+
+impl From<MemBytes> for u64 {
+    fn from(m: MemBytes) -> u64 {
+        m.0
+    }
+}
+
+/// A DP discretization: how many memory slots the slot axis has
+/// (the paper's `S`; granularity, **not** bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SlotCount(pub usize);
+
+impl SlotCount {
+    /// Wrap a raw slot count.
+    pub const fn new(slots: usize) -> SlotCount {
+        SlotCount(slots)
+    }
+
+    /// The raw slot count.
+    pub const fn get(self) -> usize {
+        self.0
+    }
+}
+
+impl Default for SlotCount {
+    /// The paper's S = 500.
+    fn default() -> SlotCount {
+        SlotCount(DEFAULT_SLOTS)
+    }
+}
+
+impl fmt::Display for SlotCount {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} slots", self.0)
+    }
+}
+
+impl From<usize> for SlotCount {
+    fn from(slots: usize) -> SlotCount {
+        SlotCount(slots)
+    }
+}
+
+impl From<SlotCount> for usize {
+    fn from(s: SlotCount) -> usize {
+        s.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_legacy_cli_grammar() {
+        // exactly what the old util::parse_size accepted
+        assert_eq!(MemBytes::parse("1024").unwrap(), MemBytes(1024));
+        assert_eq!(MemBytes::parse("1K").unwrap(), MemBytes(1024));
+        assert_eq!(MemBytes::parse("1.5G").unwrap(), MemBytes(3 * (1u64 << 29)));
+        assert_eq!(MemBytes::parse("2m").unwrap(), MemBytes(2 << 20));
+        assert_eq!(MemBytes::parse(" 512M ").unwrap(), MemBytes(512 << 20));
+    }
+
+    #[test]
+    fn parses_the_extended_suffix_forms() {
+        assert_eq!(MemBytes::parse("512MB").unwrap(), MemBytes(512 << 20));
+        assert_eq!(MemBytes::parse("512MiB").unwrap(), MemBytes(512 << 20));
+        assert_eq!(MemBytes::parse("512 MiB").unwrap(), MemBytes(512 << 20));
+        assert_eq!(MemBytes::parse("1.5GB").unwrap(), MemBytes(3 * (1u64 << 29)));
+        assert_eq!(MemBytes::parse("4gib").unwrap(), MemBytes(4 << 30));
+        assert_eq!(MemBytes::parse("2T").unwrap(), MemBytes(2u64 << 40));
+        assert_eq!(MemBytes::parse("100B").unwrap(), MemBytes(100));
+        assert_eq!(MemBytes::parse("0").unwrap(), MemBytes(0));
+    }
+
+    #[test]
+    fn plain_integers_are_exact_up_to_u64_max() {
+        // the f64 path would round these; integers must not lose a byte
+        let odd = (1u64 << 53) + 1;
+        assert_eq!(MemBytes::parse(&odd.to_string()).unwrap(), MemBytes(odd));
+        assert_eq!(
+            MemBytes::parse(&u64::MAX.to_string()).unwrap(),
+            MemBytes(u64::MAX)
+        );
+        assert!(MemBytes::parse("18446744073709551616").is_err()); // 2^64
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        for bytes in [0u64, 512, 2048, 3 << 20, 5 << 30, (15.75 * (1u64 << 30) as f64) as u64] {
+            let shown = MemBytes(bytes).to_string();
+            let back = MemBytes::parse(&shown).unwrap().get();
+            // Display rounds to 1–2 decimals; round-trip within 1 %
+            let tol = (bytes / 100).max(1);
+            assert!(
+                back.abs_diff(bytes) <= tol,
+                "{bytes} → '{shown}' → {back}"
+            );
+        }
+        // exact values round-trip exactly
+        assert_eq!(MemBytes::parse(&MemBytes(512).to_string()).unwrap(), MemBytes(512));
+        assert_eq!(
+            MemBytes::parse(&MemBytes(3 << 20).to_string()).unwrap(),
+            MemBytes(3 << 20)
+        );
+    }
+
+    #[test]
+    fn rejections_are_invalid_spec_errors() {
+        // "16777216T" is exactly 2^64 — the saturating f64→u64 cast must
+        // not silently clamp it to u64::MAX
+        for bad in
+            ["", "x", "-5", "1.5", "1..5K", "12Q", "1e309G", "nanG", "K", "12 34", "16777216T"]
+        {
+            let err = MemBytes::parse(bad).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                crate::api::ErrorKind::InvalidSpec,
+                "'{bad}' must be InvalidSpec"
+            );
+            assert!(format!("{err:#}").contains("bad size string"), "'{bad}': {err:#}");
+        }
+    }
+
+    #[test]
+    fn slot_count_default_is_the_papers_s() {
+        assert_eq!(SlotCount::default().get(), DEFAULT_SLOTS);
+        assert_eq!(SlotCount::from(300usize).get(), 300);
+        assert_eq!(SlotCount(150).to_string(), "150 slots");
+    }
+}

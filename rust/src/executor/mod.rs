@@ -13,6 +13,10 @@
 //! what the engine itself does; which engine (pure-Rust [`native`],
 //! PJRT [`pjrt`]) is a type parameter resolved at compile time.
 //!
+//! For one measured replay (fresh executor, warmup + timed median) use
+//! the facade's [`crate::api::execute_schedule`] / `Plan::execute` —
+//! that is the path `chainckpt compare` and the executor bench drive.
+//!
 //! [`native`]: crate::backend::native
 //! [`pjrt`]: crate::backend::pjrt
 

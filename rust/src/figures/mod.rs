@@ -14,18 +14,19 @@
 //! alone), so the plots inherit the simulator's validity guarantees.
 //!
 //! DP cost: each panel's 10-budget optimal/revolve sweep is served by one
-//! [`Planner`] per mode — one table fill per `(chain, mode)` instead of
-//! one per budget, and chains repeated across figures hit the planner's
-//! table cache.
+//! [`api::Plan`](crate::api::Plan) per mode — one table fill per
+//! `(chain, mode)` instead of one per budget, and chains repeated across
+//! figures hit the planner's table cache underneath the facade.
 
 use std::fmt::Write as _;
 
 use anyhow::{Context, Result};
 
+use crate::api::{ChainSpec, MemBytes, PlanRequest, SlotCount};
 use crate::chain::{profiles, Chain};
 use crate::simulator::simulate;
 use crate::solver::{
-    paper_segment_sweep, periodic_schedule, store_all_schedule, Mode, Planner, StrategyKind,
+    paper_segment_sweep, periodic_schedule, store_all_schedule, Mode, StrategyKind,
 };
 use crate::util::fmt_bytes;
 
@@ -100,8 +101,9 @@ pub fn panel(chain: &Chain, batch: u64, device_memory: u64) -> Panel {
         }
     }
 
-    // sequential: the paper's segment sweep
-    for k in paper_segment_sweep(chain.len() - 1) {
+    // sequential: the paper's segment sweep (needs a compute stage
+    // before the loss — a 1-stage inline chain has nothing to segment)
+    for k in if chain.len() >= 2 { paper_segment_sweep(chain.len() - 1) } else { Vec::new() } {
         let sched = periodic_schedule(chain, k);
         if let Ok(rep) = simulate(chain, &sched) {
             if rep.peak_bytes <= device_memory {
@@ -117,25 +119,34 @@ pub fn panel(chain: &Chain, batch: u64, device_memory: u64) -> Panel {
     }
 
     // optimal & revolve: 10 memory limits equally spaced up to store-all
-    // memory (paper §5.3), clamped to the device. One Planner (one DP
+    // memory (paper §5.3), clamped to the device. One api::Plan (one DP
     // table) per mode serves the whole sweep: the discretization is taken
     // against the top budget `hi`, so the sub-budget points share its
     // slot grid instead of re-running the DP per budget.
+    // a degenerate all-zero-size chain (reachable via inline specs) has
+    // hi == 0: no DP point exists, and PlanRequest rejects a 0 budget
     let hi = chain.store_all_memory().min(device_memory);
-    let budgets: Vec<u64> = (1..=10u64).map(|i| hi * i / 10).collect();
+    let budgets: Vec<MemBytes> = (1..=10u64).map(|i| MemBytes::new(hi * i / 10)).collect();
     for mode in [Mode::Full, Mode::AdRevolve] {
+        if hi == 0 {
+            break;
+        }
         let strategy = match mode {
             Mode::Full => StrategyKind::Optimal,
             Mode::AdRevolve => StrategyKind::Revolve,
         };
-        let planner = Planner::new(chain, hi, slots, mode);
-        for (&m, sched) in budgets.iter().zip(planner.sweep(&budgets)) {
+        let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(hi))
+            .slots(SlotCount::new(slots))
+            .mode(mode)
+            .plan()
+            .expect("an inline chain spec always resolves");
+        for (&m, sched) in budgets.iter().zip(plan.sweep(&budgets)) {
             let Some(sched) = sched else { continue };
             let Ok(rep) = simulate(chain, &sched) else { continue };
-            debug_assert!(rep.peak_bytes <= m, "{strategy}: sim peak exceeds budget");
+            debug_assert!(rep.peak_bytes <= m.get(), "{strategy}: sim peak exceeds budget");
             points.push(Point {
                 strategy,
-                param: m,
+                param: m.get(),
                 peak_bytes: rep.peak_bytes,
                 makespan_ms: rep.makespan,
                 throughput: batch as f64 / (rep.makespan * 1e-3),
@@ -361,6 +372,16 @@ mod tests {
         let p = panel(&chain, 16, DEVICE_MEMORY);
         let (gain, _, _) = optimal_vs_sequential(&p).unwrap_or_else(|e| panic!("{e:#}"));
         assert!(gain >= -1e-9, "optimal must not lose at equal memory: gain={gain}");
+    }
+
+    #[test]
+    fn degenerate_inline_chains_do_not_panic() {
+        // reachable via `simulate --chain`: a single zero-size stage has
+        // nothing to segment (sequential) and a 0-byte store-all top (DP)
+        use crate::chain::Stage;
+        let zero = Chain::new("zero", vec![Stage::new("loss", 0.0, 0.0, 0, 0)], 0);
+        let p = panel(&zero, 1, DEVICE_MEMORY);
+        assert!(p.points.iter().all(|pt| pt.strategy == StrategyKind::StoreAll));
     }
 
     #[test]

@@ -39,7 +39,16 @@
 //!   (`chainckpt serve`) answering `/solve`, `/sweep`, `/simulate`,
 //!   `/chains`, `/stats` from a bounded thread pool, with the planner's
 //!   fingerprint-keyed table cache shared across all connections.
+//! * [`api`] — **the public facade** over all of the above: [`api::ChainSpec`]
+//!   (one description of "which chain"), [`api::MemBytes`] /
+//!   [`api::SlotCount`] (typed units with the single human-suffix
+//!   parser), [`api::PlanRequest`] → [`api::Plan`] (spec → plan →
+//!   executed schedule), and [`api::Error`] with an [`api::ErrorKind`]
+//!   that maps to HTTP statuses and CLI exit codes through one table
+//!   each. The CLI, the service routes, the figure harness, and the
+//!   benches all go through it — start here.
 
+pub mod api;
 pub mod backend;
 pub mod chain;
 pub mod estimator;

@@ -1,46 +1,55 @@
 //! `chainckpt` CLI — the L3 coordinator binary.
 //!
 //! Subcommands:
-//!   solve     compute a schedule for a profile chain and a memory budget
-//!   simulate  replay all four strategies on a profile chain
+//!   solve     compute a schedule for a chain spec and a memory budget
+//!   simulate  replay all four strategies on a chain spec
 //!   estimate  measure per-stage timings of compiled stages (§5.1)
 //!   train     run SGD with a checkpointing schedule over real stages
 //!   compare   measured throughput-vs-memory of all strategies (real run)
 //!   figures   regenerate the paper's Figures 3–13 + summary as CSV
 //!   serve     run the HTTP planning daemon (schedules as a service)
 //!
-//! The execution subcommands (`estimate`/`train`/`compare`) take
-//! `--backend native|pjrt`: `native` (the default) runs the pure-Rust
-//! engine on an in-process preset chain (`--preset quickstart|default|
-//! wide`); `pjrt` loads AOT artifacts from `--artifacts <dir>`.
+//! Every subcommand goes through [`chainckpt::api`] — the same
+//! `ChainSpec → PlanRequest → Plan` pipeline the planning service and
+//! library callers use, so a chain spec means exactly the same thing on
+//! every surface. Chain specs come from `--family/--depth/--image/--batch`
+//! (built-in profile), `--preset NAME` (native-backend chain), or
+//! `--chain FILE` (a JSON spec file in the service wire form, including
+//! inline `"stages"` and on-disk `"manifest"` sources).
+//!
+//! Exit codes are keyed off [`chainckpt::api::ErrorKind`]: usage/spec
+//! errors exit 2, an infeasible budget exits 3, backend/internal
+//! failures exit 1.
 //!
 //! Run `chainckpt help` for flags.
 
 use std::io::Write as _;
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use chainckpt::api::{
+    self, ChainSpec, Context as _, Error, ErrorKind, ExecuteOptions, MemBytes, Mode,
+    PlanRequest, Result, Schedule, SlotCount,
+};
 use chainckpt::backend::Backend;
-use chainckpt::chain::{profiles, Chain, DEFAULT_SLOTS};
+use chainckpt::chain::{Chain, DEFAULT_SLOTS};
 use chainckpt::estimator::{
     chain_from_timings, estimate, format_table, measured_chain, EstimatorConfig,
 };
 use chainckpt::figures;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
-use chainckpt::solver::{
-    paper_segment_sweep, periodic_schedule, solve, store_all_schedule, Mode, Planner, Schedule,
-};
+use chainckpt::solver::{paper_segment_sweep, periodic_schedule, store_all_schedule};
 use chainckpt::train::{mean_loss, SyntheticData, Trainer};
+use chainckpt::util::json::Value;
 use chainckpt::util::{fmt_bytes, Args, FLAG_SET};
 
 const USAGE: &str = "\
 chainckpt — optimal checkpointing for heterogeneous chains (RR-9302)
 
 USAGE:
-  chainckpt solve    --family resnet --depth 101 --image 1000 --batch 8 --memory 4G
+  chainckpt solve    [CHAIN SPEC] --memory 4G
                      [--slots 500] [--strategy optimal|revolve] [--show-ops]
-  chainckpt simulate --family resnet --depth 101 --image 1000 --batch 8
+  chainckpt simulate [CHAIN SPEC]
   chainckpt estimate [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--reps 5] [--warmup 2]
   chainckpt train    [--backend native|pjrt] [--preset default] [--artifacts DIR]
@@ -53,6 +62,15 @@ USAGE:
   chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
                      [--slots 500] [--queue 64]
 
+CHAIN SPEC (solve/simulate; one pipeline with the service and library):
+  --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
+  --preset quickstart|default|wide     a native-backend chain, planned
+                                       with analytic roofline timings
+  --chain FILE                         a JSON chain-spec file in the
+                                       service wire form: {\"profile\":…},
+                                       {\"preset\":…}, inline {\"stages\":…},
+                                       or {\"manifest\": \"DIR\"}
+
 The planning service answers POST /solve, /sweep, /simulate and
 GET /chains, /stats, /healthz with JSON; repeated requests for a chain
 hit the planner's shared DP-table cache. --port 0 picks a free port.
@@ -61,20 +79,87 @@ Backends: --backend native (pure-Rust engine, chains generated in-process
 from --preset quickstart|default|wide — the default) or --backend pjrt
 (AOT HLO artifacts from --artifacts, requires the real xla bindings).
 
-Profile flags: --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
-Sizes accept K/M/G suffixes (1024-based).
+Sizes accept K/M/G/T suffixes, optionally with B/iB (1024-based):
+512M, 512MiB, 1.5GB.
+
+EXIT CODES (from api::ErrorKind, one table):
+  0  success
+  1  backend or internal failure
+  2  usage error (bad flag, unknown chain/strategy, bad size string)
+  3  valid request, but no schedule fits the memory budget
 ";
 
-fn profile_chain(args: &Args) -> Chain {
-    let family = args.str("family", "resnet");
-    let depth = args.u32("depth", 101);
-    let image = args.u64("image", 1000);
-    let batch = args.u64("batch", 8);
-    profiles::by_name(&family, depth, image, batch)
+// ---------------------------------------------------------------------------
+// Checked flag parsing: a malformed value is a *usage error* (exit 2 via
+// ErrorKind::InvalidSpec), never a panic — `Args`' panicking getters are
+// for benches, not for the documented CLI contract.
+// ---------------------------------------------------------------------------
+
+fn uint_flag(args: &Args, key: &str, default: u64) -> Result<u64> {
+    match args.opt_str(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| Error::invalid(format!("--{key}: bad integer '{s}'"))),
+    }
 }
 
-fn describe(chain: &Chain, sched: &Schedule, budget: Option<u64>, unit: &str) -> Result<()> {
-    let rep = simulate(chain, sched).map_err(|e| anyhow::anyhow!("invalid schedule: {e}"))?;
+fn usize_flag(args: &Args, key: &str, default: usize) -> Result<usize> {
+    Ok(uint_flag(args, key, default as u64)? as usize)
+}
+
+fn f64_flag(args: &Args, key: &str, default: f64) -> Result<f64> {
+    match args.opt_str(key) {
+        None => Ok(default),
+        Some(s) => s
+            .parse()
+            .map_err(|_| Error::invalid(format!("--{key}: bad number '{s}'"))),
+    }
+}
+
+/// A byte-size flag through the facade's one suffix parser.
+fn mem_flag(args: &Args, key: &str) -> Result<Option<MemBytes>> {
+    match args.opt_str(key) {
+        None => Ok(None),
+        Some(s) => Ok(Some(
+            MemBytes::parse(s).with_context(|| format!("--{key}"))?,
+        )),
+    }
+}
+
+/// The unified chain spec of `solve`/`simulate`: `--preset`, `--chain
+/// FILE`, or the profile flags (`--family/--depth/--image/--batch`).
+fn chain_spec(args: &Args) -> Result<ChainSpec> {
+    if let Some(name) = args.opt_str("preset") {
+        return Ok(ChainSpec::preset(name));
+    }
+    if let Some(path) = args.opt_str("chain") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading chain spec file '{path}'"))
+            .kind(ErrorKind::InvalidSpec)?;
+        let v = Value::parse(&text)
+            .with_context(|| format!("parsing chain spec file '{path}'"))
+            .kind(ErrorKind::InvalidSpec)?;
+        // the *local* parser: a CLI-supplied spec file may also name an
+        // on-disk {"manifest": DIR} (the service's wire parser rejects it)
+        return ChainSpec::from_json_local(&v);
+    }
+    // checked u32 for --depth: `as u32` would wrap 2^32+18 to depth 18,
+    // the exact aliasing the JSON spec path rejects
+    let depth64 = uint_flag(args, "depth", 101)?;
+    let depth = u32::try_from(depth64)
+        .map_err(|_| Error::invalid(format!("--depth {depth64} out of range")))?;
+    Ok(ChainSpec::profile(
+        args.str("family", "resnet"),
+        depth,
+        uint_flag(args, "image", 1000)?,
+        uint_flag(args, "batch", 8)?,
+    ))
+}
+
+fn describe(chain: &Chain, sched: &Schedule, budget: Option<MemBytes>, unit: &str) -> Result<()> {
+    let rep = simulate(chain, sched)
+        .map_err(|e| Error::internal(format!("invalid schedule: {e}")))?;
     println!("strategy        : {}", sched.strategy);
     println!("ops             : {}", rep.ops);
     println!("recomputed fwds : {}", rep.recomputed_forwards);
@@ -83,35 +168,37 @@ fn describe(chain: &Chain, sched: &Schedule, budget: Option<u64>, unit: &str) ->
     println!("overhead        : {:.1} %", 100.0 * (rep.makespan / chain.ideal_time() - 1.0));
     println!("peak memory     : {}", fmt_bytes(rep.peak_bytes));
     if let Some(m) = budget {
-        println!("budget          : {} (fits: {})", fmt_bytes(m), rep.peak_bytes <= m);
+        println!("budget          : {m} (fits: {})", rep.peak_bytes <= m.get());
     }
     Ok(())
 }
 
-fn cmd_solve(args: &Args) -> Result<()> {
-    let chain = profile_chain(args);
-    let memory = args.u64("memory", 4 << 30);
-    let slots = args.usize("slots", DEFAULT_SLOTS);
-    let mode = match args.str("strategy", "optimal").as_str() {
-        "optimal" => Mode::Full,
-        "revolve" => Mode::AdRevolve,
-        s => bail!("--strategy {s}: solve supports optimal|revolve"),
-    };
-    println!("chain {} (L+1 = {}), budget {}", chain.name, chain.len(), fmt_bytes(memory));
-    let t0 = std::time::Instant::now();
-    let planner = Planner::new(&chain, memory, slots, mode);
-    println!(
-        "plan time       : {:.2} s (S = {slots}; one DP table answers every budget ≤ {})",
-        t0.elapsed().as_secs_f64(),
-        fmt_bytes(memory)
-    );
-    if let Some((flo, fhi)) = planner.feasible_range() {
-        println!("feasible range  : {} – {}", fmt_bytes(flo), fmt_bytes(fhi));
+fn solve_mode(args: &Args) -> Result<Mode> {
+    match args.str("strategy", "optimal").as_str() {
+        "optimal" => Ok(Mode::Full),
+        "revolve" => Ok(Mode::AdRevolve),
+        s => Err(Error::invalid(format!("--strategy {s}: solve supports optimal|revolve"))),
     }
-    let Some(sched) = planner.schedule_at(memory) else {
-        bail!("no feasible persistent schedule within {}", fmt_bytes(memory));
-    };
-    describe(&chain, &sched, Some(memory), "ms")?;
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let spec = chain_spec(args)?;
+    let memory = mem_flag(args, "memory")?.unwrap_or(MemBytes::new(4 << 30));
+    let slots = SlotCount::new(usize_flag(args, "slots", DEFAULT_SLOTS)?);
+    let mode = solve_mode(args)?;
+    let t0 = std::time::Instant::now();
+    let plan = PlanRequest::new(spec, memory).slots(slots).mode(mode).plan()?;
+    println!("chain {} (L+1 = {}), budget {memory}", plan.chain().name, plan.chain().len());
+    println!(
+        "plan time       : {:.2} s (S = {}; one DP table answers every budget ≤ {memory})",
+        t0.elapsed().as_secs_f64(),
+        slots.get(),
+    );
+    if let Some((flo, fhi)) = plan.feasible_range() {
+        println!("feasible range  : {flo} – {fhi}");
+    }
+    let sched = plan.schedule()?; // ErrorKind::InfeasibleBudget → exit 3
+    describe(plan.chain(), &sched, Some(memory), "ms")?;
     if args.has("show-ops") {
         println!("{}", sched.compact());
     }
@@ -119,8 +206,16 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let chain = profile_chain(args);
-    let batch = args.u64("batch", 8);
+    let spec = chain_spec(args)?;
+    let chain = spec.resolve()?;
+    // the batch the throughput column divides by: an explicit --batch
+    // wins; otherwise it must match the chain actually built — the
+    // spec's own batch hint (profile batch / preset or manifest input
+    // shape), falling back to 1 when the source names none (inline)
+    let batch = match args.opt_str("batch") {
+        Some(_) => uint_flag(args, "batch", 8)?,
+        None => spec.batch_hint().unwrap_or(1).max(1),
+    };
     println!(
         "chain {} (L+1 = {}), store-all memory {}",
         chain.name,
@@ -177,7 +272,11 @@ fn announce<B: Backend>(rt: &Runtime<B>) {
 fn load_native(args: &Args) -> Result<Runtime<chainckpt::backend::NativeBackend>> {
     let preset = args.str("preset", "default");
     println!("building native preset '{preset}' …");
-    let rt = Runtime::native_preset(&preset)?;
+    // unknown preset name = usage error (exit 2, like `solve --preset`);
+    // a failure compiling a *known* preset is a backend fault (exit 1)
+    let manifest = chainckpt::backend::native::presets::preset(&preset)
+        .kind(ErrorKind::UnknownChain)?;
+    let rt = Runtime::native(manifest).kind(ErrorKind::Backend)?;
     announce(&rt);
     Ok(rt)
 }
@@ -186,7 +285,8 @@ fn load_pjrt(args: &Args) -> Result<Runtime<chainckpt::backend::PjrtBackend>> {
     let dir = args.str("artifacts", "artifacts/default");
     println!("loading artifacts from {dir} …");
     let rt = Runtime::load(&dir)
-        .with_context(|| format!("loading {dir} (run `make artifacts` first?)"))?;
+        .with_context(|| format!("loading {dir} (run `make artifacts` first?)"))
+        .kind(ErrorKind::Backend)?;
     announce(&rt);
     Ok(rt)
 }
@@ -198,7 +298,7 @@ macro_rules! with_backend {
         match $args.str("backend", "native").as_str() {
             "native" => $f(&load_native($args)?, $args),
             "pjrt" => $f(&load_pjrt($args)?, $args),
-            other => bail!("--backend {other}: use native|pjrt"),
+            other => Err(Error::invalid(format!("--backend {other}: use native|pjrt"))),
         }
     };
 }
@@ -210,14 +310,14 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 fn estimate_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let defaults = EstimatorConfig::default();
     let cfg = EstimatorConfig {
-        reps: args.usize("reps", defaults.reps),
-        warmup: args.usize("warmup", defaults.warmup),
+        reps: usize_flag(args, "reps", defaults.reps)?,
+        warmup: usize_flag(args, "warmup", defaults.warmup)?,
     };
     println!(
         "estimator config: reps = {} (median taken), warmup = {} (untimed)",
         cfg.reps, cfg.warmup
     );
-    let timings = estimate(rt, cfg)?;
+    let timings = estimate(rt, cfg).kind(ErrorKind::Backend)?;
     // assemble from the timings already in hand (measured_chain would
     // re-run the whole timing loop)
     let chain = chain_from_timings(&rt.manifest, &timings);
@@ -230,18 +330,21 @@ fn estimate_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn pick_schedule(args: &Args, chain: &Chain, memory: u64) -> Result<Schedule> {
-    // The DP strategies go through `solve` (a Planner at its own budget):
+fn pick_schedule(args: &Args, chain: &Chain, memory: MemBytes) -> Result<Schedule> {
+    // The DP strategies go through one api::Plan at the requested budget:
     // repeated picks for the same measured chain (e.g. train restarts)
-    // hit the shared table cache.
+    // hit the planner's shared table cache underneath the facade.
+    let dp = |mode: Mode| {
+        PlanRequest::new(ChainSpec::inline(chain.clone()), memory).mode(mode).plan()?.schedule()
+    };
     match args.str("strategy", "optimal").as_str() {
-        "optimal" => solve(chain, memory, DEFAULT_SLOTS, Mode::Full)
-            .with_context(|| format!("no optimal schedule fits {}", fmt_bytes(memory))),
-        "revolve" => solve(chain, memory, DEFAULT_SLOTS, Mode::AdRevolve)
-            .with_context(|| format!("no revolve schedule fits {}", fmt_bytes(memory))),
-        "sequential" => Ok(periodic_schedule(chain, args.usize("segments", 4))),
+        "optimal" => dp(Mode::Full).with_context(|| format!("no optimal schedule fits {memory}")),
+        "revolve" => {
+            dp(Mode::AdRevolve).with_context(|| format!("no revolve schedule fits {memory}"))
+        }
+        "sequential" => Ok(periodic_schedule(chain, usize_flag(args, "segments", 4)?)),
         "pytorch" => Ok(store_all_schedule(chain)),
-        s => bail!("unknown --strategy {s}"),
+        s => Err(Error::invalid(format!("unknown --strategy {s}"))),
     }
 }
 
@@ -251,45 +354,47 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let cfg = EstimatorConfig::default();
-    let chain = measured_chain(rt, cfg)?;
+    let chain = measured_chain(rt, cfg).kind(ErrorKind::Backend)?;
     let store_all_mem = chain.store_all_memory();
     // default budget: 75% of store-all (short chains — quickstart is 5
     // stages — have no feasible persistent schedule much below that;
     // --memory or --memory-frac override)
-    let frac = args.f64("memory-frac", 0.75);
-    let memory = args.u64("memory", (store_all_mem as f64 * frac) as u64);
+    let frac = f64_flag(args, "memory-frac", 0.75)?;
+    let memory = mem_flag(args, "memory")?
+        .unwrap_or(MemBytes::new((store_all_mem as f64 * frac) as u64));
     println!(
-        "measured chain: ideal {:.1} µs/iter, store-all {}, budget {}",
+        "measured chain: ideal {:.1} µs/iter, store-all {}, budget {memory}",
         chain.ideal_time(),
         fmt_bytes(store_all_mem),
-        fmt_bytes(memory)
     );
     let sched = pick_schedule(args, &chain, memory)?;
     describe(&chain, &sched, Some(memory), "µs")?;
 
-    let steps = args.usize("steps", 100);
-    let lr = args.f64("lr", 0.05) as f32;
-    let n_batches = args.usize("batches", 8);
-    let log_every = args.usize("log-every", 10);
-    let data = SyntheticData::generate(&rt.manifest, n_batches, 7)?;
-    let mut trainer = Trainer::new(rt, sched, lr, Some(memory), 42)?;
-    let logs = trainer.train(&data, steps, log_every, |log| {
-        println!(
-            "step {:>5}  loss {:.6}  {:.1} ms/step  peak {}",
-            log.step,
-            log.loss,
-            log.step_time_s * 1e3,
-            fmt_bytes(log.peak_bytes)
-        );
-    })?;
+    let steps = usize_flag(args, "steps", 100)?;
+    let lr = f64_flag(args, "lr", 0.05)? as f32;
+    let n_batches = usize_flag(args, "batches", 8)?;
+    let log_every = usize_flag(args, "log-every", 10)?;
+    let data = SyntheticData::generate(&rt.manifest, n_batches, 7).kind(ErrorKind::Backend)?;
+    let mut trainer =
+        Trainer::new(rt, sched, lr, Some(memory.get()), 42).kind(ErrorKind::Backend)?;
+    let logs = trainer
+        .train(&data, steps, log_every, |log| {
+            println!(
+                "step {:>5}  loss {:.6}  {:.1} ms/step  peak {}",
+                log.step,
+                log.loss,
+                log.step_time_s * 1e3,
+                fmt_bytes(log.peak_bytes)
+            );
+        })
+        .kind(ErrorKind::Backend)?;
     let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
     let last = mean_loss(&logs, 10);
     println!("final loss (mean of last 10): {last:.6} (from {first:.6})");
     let peak = logs.iter().map(|l| l.peak_bytes).max().unwrap_or(0);
     println!(
-        "peak memory {} within budget {} (ledger-enforced); loss decreased: {}",
+        "peak memory {} within budget {memory} (ledger-enforced); loss decreased: {}",
         fmt_bytes(peak),
-        fmt_bytes(memory),
         last < first
     );
     if let Some(out) = args.opt_str("out") {
@@ -309,39 +414,30 @@ fn cmd_compare(args: &Args) -> Result<()> {
 
 fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let cfg = EstimatorConfig::default();
-    let chain = measured_chain(rt, cfg)?;
-    let points = args.usize("points", 6);
-    let reps = args.usize("reps", 3);
-    let batch = rt.manifest.input_shape[0] as u64;
-    let data = SyntheticData::<B::Tensor>::generate(&rt.manifest, 2, 7)?;
+    let chain = measured_chain(rt, cfg).kind(ErrorKind::Backend)?;
+    let points = usize_flag(args, "points", 6)?;
+    let reps = usize_flag(args, "reps", 3)?;
+    let data =
+        SyntheticData::<B::Tensor>::generate(&rt.manifest, 2, 7).kind(ErrorKind::Backend)?;
     let hi = chain.store_all_memory();
     let lo = chain.min_memory_hint();
+    let opts = ExecuteOptions { reps, ..ExecuteOptions::default() };
     let mut rows: Vec<(String, String, u64, f64)> = Vec::new();
 
+    // every row — baselines and DP strategies alike — is one
+    // api::execute_schedule measurement (fresh executor, warmup + timed
+    // median), the same path Plan::execute and the executor bench use
     let mut run_measured = |name: String, param: String, sched: &Schedule| -> Result<()> {
-        let mut ex = chainckpt::executor::Executor::new(rt, 1)?;
-        let loss_stage = rt.manifest.stages.len() - 1;
-        ex.set_data_param(loss_stage, &data.targets[0])?;
-        // warmup + timed medians
-        let mut times = Vec::new();
-        let mut peak = 0;
-        for r in 0..reps + 1 {
-            let res = ex.run(sched, &data.inputs[0], None)?;
-            peak = res.peak_bytes;
-            if r > 0 {
-                times.push(res.elapsed_s);
-            }
-        }
-        let t = chainckpt::util::median(&mut times);
+        let rep = api::execute_schedule(rt, sched, &data, &opts)?;
         println!(
             "{:<12} {:>12} peak {:>12} {:>8.1} ms/iter {:>8.2} im/s",
             name,
             param,
-            fmt_bytes(peak),
-            t * 1e3,
-            batch as f64 / t
+            fmt_bytes(rep.peak.get()),
+            rep.elapsed_s * 1e3,
+            rep.throughput
         );
-        rows.push((name, param, peak, batch as f64 / t));
+        rows.push((name, param, rep.peak.get(), rep.throughput));
         Ok(())
     };
 
@@ -349,19 +445,25 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     for k in paper_segment_sweep(chain.len() - 1).into_iter().take(points) {
         run_measured("sequential".into(), format!("{k} segs"), &periodic_schedule(&chain, k))?;
     }
-    // One DP table per mode serves the whole budget sweep. The planner
+    // One DP table per mode serves the whole budget sweep. The plan
     // discretizes against the top budget, so a sub-budget point only sees
     // `S·m/hi` of the grid — double the paper's S=500 to keep low-budget
     // rows at least as precise as the old per-budget solves were at
     // mid-sweep (still ≥3× less DP work than per-budget tables).
-    let budgets: Vec<u64> =
-        (1..=points as u64).map(|i| lo + (hi - lo) * i / points as u64).collect();
-    let sweep_slots = 2 * DEFAULT_SLOTS;
+    let budgets: Vec<MemBytes> = (1..=points as u64)
+        .map(|i| MemBytes::new(lo + (hi - lo) * i / points as u64))
+        .collect();
+    let sweep_slots = SlotCount::new(2 * DEFAULT_SLOTS);
     let t0 = std::time::Instant::now();
-    let opt_planner = Planner::new(&chain, hi, sweep_slots, Mode::Full);
-    let rev_planner = Planner::new(&chain, hi, sweep_slots, Mode::AdRevolve);
-    let opt_scheds = opt_planner.sweep(&budgets);
-    let rev_scheds = rev_planner.sweep(&budgets);
+    let opt_plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(hi))
+        .slots(sweep_slots)
+        .plan()?;
+    let rev_plan = PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(hi))
+        .slots(sweep_slots)
+        .mode(Mode::AdRevolve)
+        .plan()?;
+    let opt_scheds = opt_plan.sweep(&budgets);
+    let rev_scheds = rev_plan.sweep(&budgets);
     println!(
         "planned {} budgets from 2 DP tables in {:.2} s",
         budgets.len(),
@@ -369,10 +471,10 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     );
     for ((&m, s_opt), s_rev) in budgets.iter().zip(opt_scheds).zip(rev_scheds) {
         if let Some(s) = s_opt {
-            run_measured("optimal".into(), fmt_bytes(m), &s)?;
+            run_measured("optimal".into(), fmt_bytes(m.get()), &s)?;
         }
         if let Some(s) = s_rev {
-            run_measured("revolve".into(), fmt_bytes(m), &s)?;
+            run_measured("revolve".into(), fmt_bytes(m.get()), &s)?;
         }
     }
     if let Some(out) = args.opt_str("out") {
@@ -393,7 +495,14 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let figs: Vec<u32> = if which == "all" || which == FLAG_SET {
         (3..=13).collect()
     } else {
-        vec![which.parse().context("--fig must be 3..13 or 'all'")?]
+        let f: u32 = which
+            .parse()
+            .context("--fig must be 3..13 or 'all'")
+            .kind(ErrorKind::InvalidSpec)?;
+        if !(3..=13).contains(&f) {
+            return Err(Error::invalid(format!("--fig {f}: the paper has figures 3..13")));
+        }
+        vec![f]
     };
     let mut all_panels = Vec::new();
     for f in figs {
@@ -440,10 +549,10 @@ fn cmd_figures(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = chainckpt::service::ServiceConfig {
-        addr: format!("{}:{}", args.str("addr", "127.0.0.1"), args.u64("port", 8080)),
-        workers: args.usize("threads", 0), // 0 = one per core
-        queue_depth: args.usize("queue", 64),
-        slots: args.usize("slots", DEFAULT_SLOTS),
+        addr: format!("{}:{}", args.str("addr", "127.0.0.1"), uint_flag(args, "port", 8080)?),
+        workers: usize_flag(args, "threads", 0)?, // 0 = one per core
+        queue_depth: usize_flag(args, "queue", 64)?,
+        slots: usize_flag(args, "slots", DEFAULT_SLOTS)?,
         ..Default::default()
     };
     let server = chainckpt::service::serve(cfg)?;
@@ -454,10 +563,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    match cmd {
+    let result = match cmd {
         "solve" => cmd_solve(&args),
         "simulate" => cmd_simulate(&args),
         "estimate" => cmd_estimate(&args),
@@ -471,7 +580,12 @@ fn main() -> Result<()> {
         }
         other => {
             eprint!("unknown command '{other}'\n\n{USAGE}");
-            std::process::exit(2);
+            std::process::exit(ErrorKind::InvalidSpec.exit_code());
         }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        // the one ErrorKind → exit-code table (documented in USAGE)
+        std::process::exit(e.kind().exit_code());
     }
 }

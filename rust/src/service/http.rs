@@ -227,12 +227,27 @@ impl Response {
     }
 
     /// The service's structured error envelope:
-    /// `{"error": {"code": <status>, "message": "..."}}`.
+    /// `{"error": {"code": <status>, "kind": "...", "message": "..."}}`.
+    ///
+    /// Protocol-level errors (bad framing, unknown route, wrong method)
+    /// derive `kind` from the status so clients can always dispatch on
+    /// the field; semantic handler errors go through the router's
+    /// `error_response`, whose `kind` is the precise
+    /// `api::ErrorKind` name instead.
     pub fn error(status: u16, message: impl Display) -> Response {
+        let kind = match status {
+            400 => "bad_request",
+            404 => "not_found",
+            405 => "method_not_allowed",
+            413 => "payload_too_large",
+            422 => "invalid_spec",
+            _ => "internal",
+        };
         let payload = obj([(
             "error",
             obj([
                 ("code", Value::from(status as u64)),
+                ("kind", Value::from(kind)),
                 ("message", Value::from(message.to_string())),
             ]),
         )]);

@@ -10,23 +10,28 @@
 //! | `GET  /healthz`  | liveness probe                                      |
 //!
 //! Error contract: malformed JSON → `400`, semantically invalid input →
-//! `422`, unknown route → `404`, wrong method on a known path → `405` —
-//! all with the structured `{"error": {...}}` envelope and **without**
-//! dropping the connection.
+//! `422`, unknown route → `404`, wrong method on a known path → `405`,
+//! broken server-side invariant → `500` — all with the structured
+//! `{"error": {...}}` envelope and **without** dropping the connection.
+//! Handler errors are kind-tagged [`api::Error`](Error)s; the status
+//! comes from the single [`ErrorKind::http_status`](crate::api::ErrorKind)
+//! table (previously this file tagged server-side failures by message
+//! *prefix*, because the vendored anyhow cannot downcast).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use super::http::{Request, Response};
 use super::wire;
 use super::ServiceState;
+use crate::api::{
+    ChainSpec, Context, Error, MemBytes, PlanRequest, Result, PRESET_FLOPS_PER_US,
+};
 use crate::backend::native::presets;
 use crate::chain::profiles;
 use crate::simulator::simulate;
-use crate::solver::{cache_stats, Planner, Schedule, StrategyKind};
+use crate::solver::{cache_stats, Schedule, StrategyKind};
 use crate::util::json::{obj, Value};
 
 /// Dispatch one request, recording per-route counters and latency.
@@ -75,15 +80,29 @@ fn ok(v: Value) -> Response {
     Response::json(200, v.to_json_string())
 }
 
-/// Context prefix marking a *server-side* invariant failure. The vendored
-/// anyhow has no downcasting, so handlers tag such errors by message:
-/// `with_json_body` maps them to `500` (page the operator) instead of the
-/// `422` (blame the request) that every validation error gets.
-const INTERNAL: &str = "internal error";
+/// Render a kind-tagged facade error as the service's error envelope:
+/// the HTTP status comes straight from [`ErrorKind::http_status`]
+/// (one table — no message sniffing), and the kind's stable name rides
+/// along as `"kind"` so clients can dispatch without parsing messages.
+///
+/// [`ErrorKind::http_status`]: crate::api::ErrorKind::http_status
+fn error_response(err: &Error) -> Response {
+    let status = err.kind().http_status();
+    let payload = obj([(
+        "error",
+        obj([
+            ("code", Value::from(status as u64)),
+            ("kind", Value::from(err.kind().as_str())),
+            ("message", Value::from(format!("{err:#}"))),
+        ]),
+    )]);
+    Response::json(status, payload.to_json_string())
+}
 
-/// Parse the body as JSON (`400` on syntax errors), run the handler
-/// (`422` on validation errors — `500` for [`INTERNAL`]-tagged ones —
-/// with the full anyhow context chain).
+/// Parse the body as JSON (`400` on syntax errors), run the handler; a
+/// handler error's status is its [`ErrorKind`](crate::api::ErrorKind)
+/// through [`error_response`], with the full context chain as the
+/// message.
 fn with_json_body(req: &Request, handler: impl FnOnce(&Value) -> Result<Value>) -> Response {
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) if !t.trim().is_empty() => t,
@@ -96,11 +115,7 @@ fn with_json_body(req: &Request, handler: impl FnOnce(&Value) -> Result<Value>) 
     };
     match handler(&body) {
         Ok(v) => ok(v),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            let status = if msg.starts_with(INTERNAL) { 500 } else { 422 };
-            Response::error(status, msg)
-        }
+        Err(e) => error_response(&e),
     }
 }
 
@@ -109,37 +124,39 @@ fn with_json_body(req: &Request, handler: impl FnOnce(&Value) -> Result<Value>) 
 // ---------------------------------------------------------------------------
 
 fn solve(body: &Value, state: &ServiceState) -> Result<Value> {
-    let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
+    let spec = ChainSpec::from_json(body.get("chain").context("missing 'chain'")?)?;
     let memory = wire::parse_bytes(body.get("memory").context("missing 'memory'")?, "memory")?;
     let slots = wire::parse_slots(body, state.slots)?;
     let mode = wire::parse_mode(body)?;
 
-    // Exactly `cmd_solve`'s call pattern: a planner at the requested
-    // budget, answering that budget. Same chain + budget + slots across
-    // connections share one cached DP table.
-    let planner = Planner::new(&chain, memory, slots, mode);
+    // Exactly `cmd_solve`'s call pattern (both go through the facade): a
+    // plan at the requested budget, answering that budget. Same chain +
+    // budget + slots across connections share one cached DP table.
+    let plan = PlanRequest::new(spec, memory).slots(slots).mode(mode).plan()?;
+    let chain = plan.chain();
     let mut out = BTreeMap::new();
     out.insert("chain".to_string(), Value::from(chain.name.clone()));
     out.insert("chain_len".to_string(), Value::from(chain.len()));
-    out.insert("budget".to_string(), Value::from(memory));
+    out.insert("budget".to_string(), Value::from(memory.get()));
     out.insert("slots".to_string(), Value::from(slots));
-    if let Some((lo, hi)) = planner.feasible_range() {
+    if let Some((lo, hi)) = plan.feasible_range() {
         out.insert(
             "feasible_range".to_string(),
-            obj([("min", Value::from(lo)), ("max", Value::from(hi))]),
+            obj([("min", Value::from(lo.get())), ("max", Value::from(hi.get()))]),
         );
     }
-    match planner.schedule_at(memory) {
+    match plan.schedule_at(memory) {
         None => {
+            // an infeasible budget is a *finding*, not a request error:
+            // the response stays 200 with `feasible: false`
             out.insert("feasible".to_string(), Value::Bool(false));
         }
         Some(sched) => {
             out.insert("feasible".to_string(), Value::Bool(true));
             // the simulator independently verifies what we hand out; a
-            // failure here is a solver bug, not a bad request
-            let rep = simulate(&chain, &sched).map_err(|e| {
-                anyhow::anyhow!("{INTERNAL}: solver produced an invalid schedule: {e}")
-            })?;
+            // failure is ErrorKind::Internal → 500 (a solver bug, not a
+            // bad request)
+            let rep = plan.verify(&sched)?;
             out.insert("schedule".to_string(), wire::schedule_to_json(&sched));
             out.insert("simulated".to_string(), wire::report_to_json(&rep));
             out.insert("ideal_time".to_string(), Value::from(chain.ideal_time()));
@@ -153,27 +170,28 @@ fn solve(body: &Value, state: &ServiceState) -> Result<Value> {
 // ---------------------------------------------------------------------------
 
 fn sweep(body: &Value, state: &ServiceState) -> Result<Value> {
-    let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
+    let spec = ChainSpec::from_json(body.get("chain").context("missing 'chain'")?)?;
     let budgets = wire::parse_budgets(body)?;
     let slots = wire::parse_slots(body, state.slots)?;
     let mode = wire::parse_mode(body)?;
     let include_ops = matches!(body.get("include_ops"), Some(Value::Bool(true)));
 
-    // one planner at the sweep's top budget = one shared DP table for
+    // one plan at the sweep's top budget = one shared DP table for
     // every point (the acceptance criterion this endpoint exists for).
-    // Reconstruction is serial on purpose: `Planner::sweep`'s scoped
+    // Reconstruction is serial on purpose — `Plan::sweep`'s scoped
     // threads would oversubscribe the CPU when several pool workers run
     // sweeps at once, and each point is only O(L) anyway (≤ MAX_BUDGETS).
     let top = *budgets.iter().max().expect("budgets validated non-empty");
-    let planner = Planner::new(&chain, top, slots, mode);
-    let schedules: Vec<_> = budgets.iter().map(|&m| planner.schedule_at(m)).collect();
+    let plan = PlanRequest::new(spec, top).slots(slots).mode(mode).plan()?;
+    let chain = plan.chain();
+    let schedules: Vec<_> = budgets.iter().map(|&m| plan.schedule_at(m)).collect();
 
     let points: Vec<Value> = budgets
         .iter()
         .zip(&schedules)
         .map(|(&m, sched)| {
             let mut pt = BTreeMap::new();
-            pt.insert("budget".to_string(), Value::from(m));
+            pt.insert("budget".to_string(), Value::from(m.get()));
             match sched {
                 None => {
                     pt.insert("feasible".to_string(), Value::Bool(false));
@@ -200,11 +218,13 @@ fn sweep(body: &Value, state: &ServiceState) -> Result<Value> {
     out.insert("chain".to_string(), Value::from(chain.name.clone()));
     out.insert("chain_len".to_string(), Value::from(chain.len()));
     out.insert("slots".to_string(), Value::from(slots));
-    out.insert("top_budget".to_string(), Value::from(top));
+    out.insert("top_budget".to_string(), Value::from(top.get()));
     out.insert(
         "feasible_range".to_string(),
-        match planner.feasible_range() {
-            Some((lo, hi)) => obj([("min", Value::from(lo)), ("max", Value::from(hi))]),
+        match plan.feasible_range() {
+            Some((lo, hi)) => {
+                obj([("min", Value::from(lo.get())), ("max", Value::from(hi.get()))])
+            }
             None => Value::Null,
         },
     );
@@ -219,7 +239,7 @@ fn sweep(body: &Value, state: &ServiceState) -> Result<Value> {
 fn simulate_ops(body: &Value) -> Result<Value> {
     let chain = wire::parse_chain(body.get("chain").context("missing 'chain'")?)?;
     let ops = wire::parse_ops(body)?;
-    let budget = match body.get("memory") {
+    let budget: Option<MemBytes> = match body.get("memory") {
         None => None,
         Some(v) => Some(wire::parse_bytes(v, "memory")?),
     };
@@ -232,8 +252,11 @@ fn simulate_ops(body: &Value) -> Result<Value> {
             out.insert("valid".to_string(), Value::Bool(true));
             out.insert("simulated".to_string(), wire::report_to_json(&rep));
             if let Some(m) = budget {
-                out.insert("budget".to_string(), Value::from(m));
-                out.insert("within_budget".to_string(), Value::Bool(rep.peak_bytes <= m));
+                out.insert("budget".to_string(), Value::from(m.get()));
+                out.insert(
+                    "within_budget".to_string(),
+                    Value::Bool(rep.peak_bytes <= m.get()),
+                );
             }
         }
         Err(e) => {
@@ -272,7 +295,7 @@ fn chains() -> Value {
         .iter()
         .filter_map(|&name| {
             let manifest = presets::preset(name).ok()?;
-            let chain = manifest.to_chain_analytic(wire::PRESET_FLOPS_PER_US);
+            let chain = manifest.to_chain_analytic(PRESET_FLOPS_PER_US);
             Some(obj([
                 ("name", Value::from(name)),
                 ("stages", Value::from(manifest.stages.len())),
@@ -407,6 +430,32 @@ impl Stats {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn error_responses_key_status_off_the_kind_table() {
+        // one table, no message sniffing: an "internal error"-prefixed
+        // *message* no longer matters, only the kind does
+        let e = Error::invalid("internal error: just a weird client string");
+        let resp = error_response(&e);
+        assert_eq!(resp.status, 422);
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().as_u64(), Some(422));
+        assert_eq!(
+            v.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("invalid_spec")
+        );
+
+        let e = Error::internal("solver produced an invalid schedule").context("handling /solve");
+        let resp = error_response(&e);
+        assert_eq!(resp.status, 500);
+        let v = Value::parse(&resp.body).unwrap();
+        assert_eq!(
+            v.get("error").unwrap().get("kind").unwrap().as_str(),
+            Some("internal")
+        );
+        let msg = v.get("error").unwrap().get("message").unwrap().as_str().unwrap();
+        assert!(msg.contains("handling /solve") && msg.contains("invalid schedule"));
+    }
 
     #[test]
     fn stats_percentiles_and_counters() {

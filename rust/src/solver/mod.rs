@@ -13,6 +13,11 @@
 //! *sweep* over one chain — figures, `compare`, capacity planning — build
 //! one [`Planner`] at the top budget and query it per budget: the DP
 //! table is filled once and shared (see the [`planner`] module docs).
+//!
+//! These are the solver-layer substrate. Application code — the CLI, the
+//! planning service, benches, library consumers — goes through
+//! [`crate::api`] (`ChainSpec → PlanRequest → Plan`), which wraps this
+//! module and is the only place outside it that constructs a [`Planner`].
 
 mod exhaustive;
 mod optimal;

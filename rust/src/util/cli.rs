@@ -49,10 +49,13 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Plain (suffix-less) integer flag. Byte-size flags that accept
+    /// `K`/`M`/`G` suffixes go through `api::MemBytes::parse` instead —
+    /// the facade owns the one copy of that grammar.
     pub fn u64(&self, key: &str, default: u64) -> u64 {
         self.flags
             .get(key)
-            .map(|s| parse_size(s).unwrap_or_else(|| panic!("--{key}: bad number '{s}'")))
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad integer '{s}'")))
             .unwrap_or(default)
     }
 
@@ -70,23 +73,6 @@ impl Args {
             .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key}: bad float '{s}'")))
             .unwrap_or(default)
     }
-}
-
-/// Parse integer sizes with optional `K`/`M`/`G` (1024-based) suffix:
-/// `"512M"` → 536870912. Used for `--memory` budgets.
-pub fn parse_size(s: &str) -> Option<u64> {
-    let s = s.trim();
-    let (num, mult) = match s.chars().last()? {
-        'k' | 'K' => (&s[..s.len() - 1], 1u64 << 10),
-        'm' | 'M' => (&s[..s.len() - 1], 1u64 << 20),
-        'g' | 'G' => (&s[..s.len() - 1], 1u64 << 30),
-        _ => (s, 1),
-    };
-    let base: f64 = num.parse().ok()?;
-    if base < 0.0 {
-        return None;
-    }
-    Some((base * mult as f64) as u64)
 }
 
 /// Human-readable bytes for reports.
@@ -118,22 +104,15 @@ mod tests {
     fn mixed_forms() {
         // note: a bare `--flag` greedily takes a following non-flag token,
         // so positionals must precede flags (documented grammar)
-        let a = parse(&["solve", "x", "--memory", "512M", "--slots=200", "--verbose"]);
+        let a = parse(&["solve", "x", "--steps", "40", "--slots=200", "--verbose"]);
         assert_eq!(a.positional, vec!["solve", "x"]);
-        assert_eq!(a.u64("memory", 0), 512 << 20);
+        assert_eq!(a.u64("steps", 0), 40);
         assert_eq!(a.usize("slots", 500), 200);
         assert!(a.has("verbose"));
         assert_eq!(a.str("missing", "d"), "d");
-    }
-
-    #[test]
-    fn size_suffixes() {
-        assert_eq!(parse_size("1024"), Some(1024));
-        assert_eq!(parse_size("1K"), Some(1024));
-        assert_eq!(parse_size("1.5G"), Some(3 * (1u64 << 29)));
-        assert_eq!(parse_size("2m"), Some(2 << 20));
-        assert_eq!(parse_size("x"), None);
-        assert_eq!(parse_size("-5"), None);
+        // suffixed byte sizes are the facade's job (api::MemBytes::parse),
+        // so --memory-style flags are read with opt_str, not u64
+        assert_eq!(a.opt_str("slots"), Some("200"));
     }
 
     #[test]

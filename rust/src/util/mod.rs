@@ -7,7 +7,7 @@ pub mod cli;
 pub mod json;
 pub mod rng;
 
-pub use cli::{fmt_bytes, parse_size, Args, FLAG_SET};
+pub use cli::{fmt_bytes, Args, FLAG_SET};
 pub use json::Value as Json;
 pub use rng::Rng;
 

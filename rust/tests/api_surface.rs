@@ -1,0 +1,188 @@
+//! The facade's parity contract: every [`ChainSpec`] source (profile,
+//! preset, inline) yields **byte-identical** schedules whether entered
+//! through `api::Plan`, the CLI `solve` subcommand, or a `/solve` request
+//! to the planning service — the acceptance criterion of the api
+//! redesign. Plus a source scan proving the facade *owns* planner
+//! construction and memory-suffix parsing.
+//!
+//! The comparison key is the schedule's compact op line (`Fck^1 F∅^2 …`):
+//! exactly what `solve --show-ops` prints as its last line and what
+//! `/solve` returns token-by-token in `schedule.ops`.
+
+use std::process::Command;
+
+use chainckpt::api::{ChainSpec, MemBytes, PlanRequest, SlotCount};
+use chainckpt::chain::profiles;
+use chainckpt::service::http::Client;
+use chainckpt::service::{serve, ServiceConfig};
+use chainckpt::util::json::Value;
+
+/// The facade arm: spec → plan → schedule at `memory`.
+fn api_compact(spec: ChainSpec, memory: u64, slots: usize) -> String {
+    PlanRequest::new(spec, MemBytes::new(memory))
+        .slots(SlotCount::new(slots))
+        .plan()
+        .expect("spec resolves")
+        .schedule_at(MemBytes::new(memory))
+        .expect("test budgets are feasible")
+        .compact()
+}
+
+/// The CLI arm: run the real binary, return `--show-ops`' compact line
+/// (the last stdout line).
+fn cli_compact(extra: &[&str], memory: u64, slots: usize) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_chainckpt"))
+        .arg("solve")
+        .args(extra)
+        .args(["--memory", &memory.to_string(), "--slots", &slots.to_string(), "--show-ops"])
+        .output()
+        .expect("spawn the chainckpt binary");
+    assert!(
+        out.status.success(),
+        "solve {extra:?} failed (status {:?}): {}",
+        out.status.code(),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8(out.stdout).expect("utf-8 stdout");
+    stdout.lines().last().expect("solve --show-ops prints the op line last").to_string()
+}
+
+/// The service arm: POST `/solve` against an ephemeral-port daemon,
+/// rejoin `schedule.ops` with spaces.
+fn service_compact(chain_json: &str, memory: u64, slots: usize) -> String {
+    let server = serve(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        ..ServiceConfig::default()
+    })
+    .expect("bind the test daemon");
+    let mut client = Client::connect(server.addr()).unwrap();
+    let body = format!(r#"{{"chain": {chain_json}, "memory": {memory}, "slots": {slots}}}"#);
+    let (status, resp) = client.request("POST", "/solve", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = Value::parse(&resp).unwrap();
+    assert_eq!(v.get("feasible"), Some(&Value::Bool(true)), "{resp}");
+    let ops: Vec<&str> = v
+        .get("schedule")
+        .and_then(|s| s.get("ops"))
+        .and_then(|o| o.as_arr())
+        .expect("schedule.ops")
+        .iter()
+        .map(|t| t.as_str().expect("op tokens are strings"))
+        .collect();
+    let compact = ops.join(" ");
+    drop(client);
+    server.stop();
+    compact
+}
+
+#[test]
+fn profile_source_is_byte_identical_across_api_cli_and_service() {
+    let chain = profiles::resnet(18, 224, 8);
+    let memory = chain.store_all_memory() / 2;
+    let slots = 150;
+
+    let via_api = api_compact(ChainSpec::profile("resnet", 18, 224, 8), memory, slots);
+    assert!(!via_api.is_empty() && via_api.contains('^'), "got: {via_api}");
+    let via_cli = cli_compact(
+        &["--family", "resnet", "--depth", "18", "--image", "224", "--batch", "8"],
+        memory,
+        slots,
+    );
+    let via_service = service_compact(
+        r#"{"profile": {"family": "resnet", "depth": 18, "image": 224, "batch": 8}}"#,
+        memory,
+        slots,
+    );
+    assert_eq!(via_api, via_cli, "api vs CLI");
+    assert_eq!(via_api, via_service, "api vs /solve");
+}
+
+#[test]
+fn preset_source_is_byte_identical_across_api_cli_and_service() {
+    let memory = 1u64 << 30;
+    let slots = 100;
+
+    let via_api = api_compact(ChainSpec::preset("quickstart"), memory, slots);
+    let via_cli = cli_compact(&["--preset", "quickstart"], memory, slots);
+    let via_service = service_compact(r#"{"preset": "quickstart"}"#, memory, slots);
+    assert_eq!(via_api, via_cli, "api vs CLI");
+    assert_eq!(via_api, via_service, "api vs /solve");
+}
+
+#[test]
+fn inline_source_is_byte_identical_across_api_cli_and_service() {
+    let spec_json = r#"{"name": "toy6", "input_bytes": 100,
+        "stages": [
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 300},
+          {"name": "loss", "uf": 0.1, "ub": 0.1, "wa": 4, "wabar": 4}
+        ]}"#;
+    let spec = ChainSpec::from_json(&Value::parse(spec_json).unwrap()).unwrap();
+    let chain = spec.resolve().unwrap();
+    // mid-range budget so the schedule is a non-trivial checkpointing one
+    let memory = chain.store_all_memory() * 2 / 3;
+    let slots = 120;
+
+    // the CLI takes the very same wire-form spec from a file (--chain)
+    let spec_path = std::env::temp_dir().join(format!(
+        "chainckpt-api-surface-{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&spec_path, spec_json).unwrap();
+
+    let via_api = api_compact(spec, memory, slots);
+    let via_cli = cli_compact(&["--chain", spec_path.to_str().unwrap()], memory, slots);
+    let via_service = service_compact(spec_json, memory, slots);
+    std::fs::remove_file(&spec_path).ok();
+
+    assert_eq!(via_api, via_cli, "api vs CLI");
+    assert_eq!(via_api, via_service, "api vs /solve");
+}
+
+// ---------------------------------------------------------------------------
+// Facade ownership: the acceptance criterion "no module outside
+// rust/src/api/ constructs a Planner or parses a memory suffix directly"
+// ---------------------------------------------------------------------------
+
+fn rust_sources(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
+    for entry in std::fs::read_dir(dir).expect("readable source tree") {
+        let path = entry.expect("dir entry").path();
+        if path.is_dir() {
+            rust_sources(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+#[test]
+fn facade_owns_planner_construction_and_suffix_parsing() {
+    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let mut files = Vec::new();
+    rust_sources(&src, &mut files);
+    assert!(files.len() > 30, "source scan found only {} files", files.len());
+    for path in files {
+        let rel = path.strip_prefix(&src).unwrap().to_string_lossy().replace('\\', "/");
+        let text = std::fs::read_to_string(&path).unwrap();
+        // the solver layer owns Planner; the facade wraps it; nobody else
+        // builds one directly
+        if !(rel.starts_with("api/") || rel.starts_with("solver/")) {
+            assert!(
+                !text.contains("Planner::new"),
+                "{rel} constructs a Planner directly — route it through api::PlanRequest"
+            );
+        }
+        // the one suffix parser is api::MemBytes::parse
+        if !rel.starts_with("api/") {
+            assert!(
+                !text.contains("parse_size") && !text.contains("fn parse_suffix"),
+                "{rel} parses memory suffixes — route it through api::MemBytes::parse"
+            );
+        }
+    }
+}

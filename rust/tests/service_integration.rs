@@ -10,11 +10,12 @@
 use std::sync::Mutex;
 use std::time::Duration;
 
+use chainckpt::api::{ChainSpec, MemBytes, PlanRequest, SlotCount};
 use chainckpt::chain::profiles;
 use chainckpt::service::http::Client;
 use chainckpt::service::{serve, Server, ServiceConfig};
 use chainckpt::simulator::simulate;
-use chainckpt::solver::{cache_stats, clear_cache, store_all_schedule, Mode, Planner};
+use chainckpt::solver::{cache_stats, clear_cache, store_all_schedule};
 use chainckpt::util::json::Value;
 
 static SERIAL: Mutex<()> = Mutex::new(());
@@ -57,10 +58,17 @@ fn solve_is_byte_identical_to_the_cli_solver() {
     let memory = chain.store_all_memory() / 2;
     let slots = 150;
 
-    // what `chainckpt solve` computes for the same inputs
-    let expected = Planner::new(&chain, memory, slots, Mode::Full)
-        .schedule_at(memory)
-        .expect("half of store-all is feasible for resnet18");
+    // what `chainckpt solve` computes for the same inputs (the CLI and
+    // the service both go through api::PlanRequest)
+    let expected = PlanRequest::new(
+        ChainSpec::profile("resnet", 18, 224, 8),
+        MemBytes::new(memory),
+    )
+    .slots(SlotCount::new(slots))
+    .plan()
+    .expect("the built-in profile resolves")
+    .schedule_at(MemBytes::new(memory))
+    .expect("half of store-all is feasible for resnet18");
     let expected_ops: Vec<String> = expected.ops.iter().map(|op| op.to_string()).collect();
 
     let server = start_server();
@@ -89,6 +97,49 @@ fn solve_is_byte_identical_to_the_cli_solver() {
     let sim = v.get("simulated").unwrap();
     assert_eq!(sim.get("peak_bytes").unwrap().as_u64(), Some(rep.peak_bytes));
     assert!(rep.peak_bytes <= memory);
+
+    // …and the *actual* CLI binary agrees byte-for-byte: `solve
+    // --show-ops` prints the same compact op line, and exits 0
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_chainckpt"))
+        .args([
+            "solve", "--family", "resnet", "--depth", "18", "--image", "224", "--batch", "8",
+            "--memory", &memory.to_string(), "--slots", &slots.to_string(), "--show-ops",
+        ])
+        .output()
+        .expect("spawn the chainckpt binary");
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(
+        stdout.lines().last().unwrap(),
+        expected.compact(),
+        "CLI op line must match the facade's schedule"
+    );
+
+    // the CLI exit-code table (api::ErrorKind::exit_code, documented in
+    // USAGE): infeasible budget = 3, usage/spec error = 2
+    let run = |args: &[&str]| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_chainckpt"))
+            .args(args)
+            .output()
+            .expect("spawn the chainckpt binary")
+    };
+    let profile18: &[&str] =
+        &["solve", "--family", "resnet", "--depth", "18", "--image", "224", "--batch", "8"];
+    let infeasible = run(&[profile18, &["--memory", "1024"]].concat());
+    assert_eq!(
+        infeasible.status.code(),
+        Some(3),
+        "1 KiB cannot fit resnet18: {}",
+        String::from_utf8_lossy(&infeasible.stderr)
+    );
+    let bad_strategy = run(&[profile18, &["--memory", "1G", "--strategy", "bogus"]].concat());
+    assert_eq!(bad_strategy.status.code(), Some(2));
+    let bad_size = run(&[profile18, &["--memory", "12Q"]].concat());
+    assert_eq!(bad_size.status.code(), Some(2));
+    let unknown_family = run(&["solve", "--family", "alexnet", "--memory", "1G"]);
+    assert_eq!(unknown_family.status.code(), Some(2));
+    let unknown_cmd = run(&["frobnicate"]);
+    assert_eq!(unknown_cmd.status.code(), Some(2));
 
     drop(client);
     server.stop();
@@ -153,8 +204,11 @@ fn concurrent_clients_all_get_correct_responses() {
     let expected: Vec<Vec<String>> = budgets
         .iter()
         .map(|&m| {
-            Planner::new(&chain, m, slots, Mode::Full)
-                .schedule_at(m)
+            PlanRequest::new(ChainSpec::inline(chain.clone()), MemBytes::new(m))
+                .slots(SlotCount::new(slots))
+                .plan()
+                .expect("inline chain resolves")
+                .schedule_at(MemBytes::new(m))
                 .expect("test budgets are feasible")
                 .ops
                 .iter()
