@@ -90,6 +90,19 @@ fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
 
     let data = SyntheticData::generate(&rt.manifest, 16, 7)?;
     let mut trainer = Trainer::new(rt, schedule, lr, Some(budget), 42)?;
+    if B::SUPPORTS_LOWERED {
+        // compile the schedule once into a slot-addressed ExecPlan; the
+        // training loop then replays it zero-allocation over one arena
+        trainer.lower()?;
+        let plan = trainer.lowered_plan().expect("just lowered");
+        println!(
+            "lowered plan: {} values → {} slots, arena {} (plan-time peak {})",
+            plan.values.len(),
+            plan.slots.len(),
+            fmt_bytes(plan.arena_bytes),
+            fmt_bytes(plan.peak_bytes)
+        );
+    }
     let t0 = std::time::Instant::now();
     let logs = trainer.train(&data, steps, steps.div_euclid(20).max(1), |log| {
         println!(

@@ -54,9 +54,20 @@ fn main() -> Result<()> {
     );
     println!("ops: {}", schedule.compact());
 
-    // 4. train a few steps under the memory ledger
+    // 4. lower the schedule (liveness → arena slots, peak known ahead of
+    //    time) and train a few steps — the loop runs over one pooled
+    //    arena with zero steady-state allocations
     let data = SyntheticData::generate(&rt.manifest, 4, 7)?;
     let mut trainer = Trainer::new(&rt, schedule, 0.1, Some(budget.get()), 42)?;
+    trainer.lower()?;
+    let plan = trainer.lowered_plan().expect("just lowered");
+    println!(
+        "lowered: {} values in {} arena slots, arena {}, plan-time peak {}",
+        plan.values.len(),
+        plan.slots.len(),
+        fmt_bytes(plan.arena_bytes),
+        fmt_bytes(plan.peak_bytes)
+    );
     trainer.train(&data, 20, 5, |log| {
         println!(
             "step {:>3}  loss {:.5}  peak {}",

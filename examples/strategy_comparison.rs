@@ -66,7 +66,10 @@ fn run<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let chain = measured_chain(rt, EstimatorConfig::default()).kind(ErrorKind::Backend)?;
     let batch = rt.manifest.input_shape[0] as u64;
     let data = SyntheticData::generate(&rt.manifest, 1, 17).kind(ErrorKind::Backend)?;
-    let opts = ExecuteOptions { reps, seed: 1, memory_limit: None };
+    // lowered execution (the default): each schedule compiles once to an
+    // ExecPlan and replays over the pooled arena — zero steady-state
+    // allocations on the native engine
+    let opts = ExecuteOptions { reps, seed: 1, ..ExecuteOptions::default() };
 
     let mut rows: Vec<Row> = Vec::new();
     let mut measure = |strategy: &'static str, param: String, sched: &Schedule| -> Result<()> {

@@ -1,105 +1,101 @@
-//! Executor benchmark: end-to-end iteration throughput of a really
-//! executing chain per strategy, plus the L3 replay *overhead* — the time
-//! the coordinator spends outside stage compute (value store, ledger,
-//! tensor plumbing). DESIGN.md §Perf targets replay overhead < 5 % of
-//! step time.
+//! Executor benchmark: lowered (pooled, zero-alloc) vs legacy per-op
+//! replay, per strategy, on a really executing chain.
 //!
-//! Every row is one `api::execute_schedule` measurement (fresh executor,
-//! warmup + timed median) — the same execution path `chainckpt compare`
-//! and `Plan::execute` use — and the DP rows come from one `api::Plan`
-//! per mode.
+//! For every strategy the paper evaluates this measures, on the same
+//! executor/params/data:
 //!
-//! Runs the native engine by default (a real hot path on any machine);
-//! `--backend pjrt --artifacts DIR` measures the PJRT build instead.
+//! * **step-time p50** of both replay paths (median of `--reps` timed
+//!   iterations after warmup), and
+//! * **steady-state allocations/iteration** of both paths, counted by a
+//!   wrapping global allocator around one post-warmup iteration.
+//!
+//! Hard gates (process exits non-zero on failure, so CI catches
+//! regressions):
+//!
+//! * the lowered path performs **0 steady-state allocations/iteration**
+//!   on the default (quickstart) preset — bigger presets cross the
+//!   matmul parallelism threshold, whose `thread::scope` spawns allocate
+//!   by design;
+//! * the lowered p50 shows no step-time regression vs legacy
+//!   (≤ 1.25× slack for timer noise; in practice it is faster).
+//!
+//! Results land in `BENCH_executor.json` (uploaded as a CI artifact).
 //!
 //! ```sh
-//! cargo bench --bench bench_executor -- [--preset quickstart] [--reps 5]
+//! cargo bench --bench bench_executor -- [--preset quickstart] [--reps 7] [--quick]
 //! ```
 
-use chainckpt::api::{
-    execute_schedule, ChainSpec, ExecuteOptions, MemBytes, Mode, PlanRequest, SlotCount,
-};
-use chainckpt::backend::Backend;
-use chainckpt::estimator::{estimate, measured_chain, EstimatorConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use chainckpt::api::{ChainSpec, MemBytes, Mode, PlanRequest, SlotCount};
+use chainckpt::backend::{Backend, NativeTensor, Tensor};
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
 use chainckpt::runtime::Runtime;
 use chainckpt::solver::{periodic_schedule, store_all_schedule, Schedule};
-use chainckpt::train::SyntheticData;
-use chainckpt::util::{fmt_bytes, Args};
+use chainckpt::util::json::{obj, Value};
+use chainckpt::util::{fmt_bytes, median, Args, Rng};
 
-fn main() {
-    let args = Args::from_env();
-    match args.str("backend", "native").as_str() {
-        "native" => {
-            let preset = args.str("preset", "quickstart");
-            let rt = Runtime::native_preset(&preset).expect("building native preset");
-            bench(&rt, &args);
-        }
-        "pjrt" => {
-            let dir = args.str("artifacts", "artifacts/quickstart");
-            match Runtime::load(&dir) {
-                Ok(rt) => bench(&rt, &args),
-                Err(e) => eprintln!("skipping pjrt executor bench: {e:#} (run `make artifacts`)"),
-            }
-        }
-        other => {
-            eprintln!("--backend {other}: use native|pjrt");
-            std::process::exit(2);
-        }
+/// Counts every heap allocation (alloc / alloc_zeroed / realloc) so the
+/// bench can prove the lowered hot path touches the allocator zero times
+/// in steady state.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
     }
 }
 
-fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
-    let reps = args.usize("reps", 5);
-    let cfg = EstimatorConfig::default();
-    let chain = measured_chain(rt, cfg).unwrap();
-    let batch = rt.manifest.input_shape[0] as u64;
-    let data = SyntheticData::generate(&rt.manifest, 1, 9).expect("synthetic batch");
-    let opts = ExecuteOptions { reps, ..ExecuteOptions::default() };
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
-    // pure-compute floor: Σ median entry times (what the stages alone cost)
-    let timings = estimate(rt, cfg).unwrap();
-    let compute_floor_ms: f64 = timings.iter().map(|t| (t.uf_us + t.ub_us) / 1e3).sum();
+struct Row {
+    strategy: String,
+    ops: usize,
+    peak_bytes: u64,
+    legacy_ms_p50: f64,
+    lowered_ms_p50: f64,
+    legacy_allocs: u64,
+    lowered_allocs: u64,
+}
 
-    let run = |name: &str, sched: &Schedule| {
-        let rep = execute_schedule(rt, sched, &data, &opts).unwrap();
-        let t = rep.elapsed_s * 1e3;
-        // overhead proxy: measured minus the per-op compute floor scaled
-        // by the actual op multiset of this schedule
-        let sched_floor: f64 = sched
-            .ops
-            .iter()
-            .map(|op| {
-                let l = op.stage() as usize;
-                if l == 0 {
-                    return 0.0;
-                }
-                match op {
-                    chainckpt::solver::Op::Bwd(_) => timings[l - 1].ub_us / 1e3,
-                    chainckpt::solver::Op::DropA(_) => 0.0,
-                    _ => timings[l - 1].uf_us / 1e3,
-                }
-            })
-            .sum();
-        let overhead_pct = 100.0 * (t - sched_floor).max(0.0) / t;
-        println!(
-            "{name:<14} {:>4} ops  peak {:>12}  {:>8.2} ms/iter  {:>7.2} seq/s  L3 overhead ~{:>4.1}%",
-            rep.ops,
-            fmt_bytes(rep.peak.get()),
-            t,
-            batch as f64 * 1e3 / t,
-            overhead_pct
-        );
-        (t, overhead_pct)
-    };
+fn main() {
+    let args = Args::from_env();
+    let preset = args.str("preset", "quickstart");
+    let quick = args.has("quick");
+    let reps = args.usize("reps", if quick { 3 } else { 7 });
+    let rt = Runtime::native_preset(&preset).expect("building native preset");
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 1 }).unwrap();
 
-    println!(
-        "[{}] chain {} — compute floor {compute_floor_ms:.2} ms/iter",
-        rt.backend.name(),
-        chain.name
-    );
-    let (_, ov1) = run("pytorch", &store_all_schedule(&chain));
-    run("sequential-2", &periodic_schedule(&chain, 2));
-    run("sequential-4", &periodic_schedule(&chain, 4));
+    // fixed input/target shared by every measurement
+    let mut rng = Rng::new(9);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let input =
+        NativeTensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let n_stages = rt.manifest.stages.len();
+    let target = rng.normal_vec(rt.manifest.sig_of(n_stages - 1).params[0].nelem());
+
+    let mut schedules: Vec<(String, Schedule)> = vec![
+        ("pytorch".into(), store_all_schedule(&chain)),
+        ("sequential-2".into(), periodic_schedule(&chain, 2)),
+        ("sequential-4".into(), periodic_schedule(&chain, 4)),
+    ];
     let tight = MemBytes::new(chain.store_all_memory() * 3 / 4);
     for (label, mode) in [("optimal-75%", Mode::Full), ("revolve-75%", Mode::AdRevolve)] {
         let plan = PlanRequest::new(ChainSpec::inline(chain.clone()), tight)
@@ -108,10 +104,151 @@ fn bench<B: Backend>(rt: &Runtime<B>, args: &Args) {
             .plan()
             .expect("inline chain spec resolves");
         if let Some(s) = plan.schedule_at(tight) {
-            run(label, &s);
+            schedules.push((label.into(), s));
         }
     }
+
     println!(
-        "\nDESIGN.md §Perf target: L3 replay overhead < 5 % of step time (store-all: {ov1:.1} %)"
+        "[{}] chain {} — {} strategies × (legacy | lowered), {reps} reps",
+        rt.backend.name(),
+        chain.name,
+        schedules.len()
     );
+    println!(
+        "{:<14} {:>5} {:>12} {:>14} {:>14} {:>13} {:>13}",
+        "strategy", "ops", "peak", "legacy p50", "lowered p50", "legacy allocs", "lowered allocs"
+    );
+
+    let mut rows = Vec::new();
+    for (name, sched) in &schedules {
+        let row = measure(&rt, sched, &input, &target, n_stages - 1, reps, name);
+        println!(
+            "{:<14} {:>5} {:>12} {:>11.2} ms {:>11.2} ms {:>11}/it {:>11}/it",
+            row.strategy,
+            row.ops,
+            fmt_bytes(row.peak_bytes),
+            row.legacy_ms_p50,
+            row.lowered_ms_p50,
+            row.legacy_allocs,
+            row.lowered_allocs
+        );
+        rows.push(row);
+    }
+
+    // gates
+    let zero_alloc_gate_applies = preset == "quickstart";
+    let zero_alloc_ok =
+        !zero_alloc_gate_applies || rows.iter().all(|r| r.lowered_allocs == 0);
+    let no_regression = rows
+        .iter()
+        .all(|r| r.lowered_ms_p50 <= r.legacy_ms_p50 * 1.25 + 0.05);
+    println!();
+    println!(
+        "GATE lowered zero-alloc steady state: {}",
+        if zero_alloc_ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "GATE lowered step-time no-regression (≤1.25× legacy p50): {}",
+        if no_regression { "PASS" } else { "FAIL" }
+    );
+
+    let json_rows: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            obj([
+                ("strategy", Value::from(r.strategy.clone())),
+                ("ops", Value::from(r.ops)),
+                ("peak_bytes", Value::from(r.peak_bytes)),
+                ("legacy_ms_p50", Value::from(r.legacy_ms_p50)),
+                ("lowered_ms_p50", Value::from(r.lowered_ms_p50)),
+                ("legacy_allocs_per_iter", Value::from(r.legacy_allocs)),
+                ("lowered_allocs_per_iter", Value::from(r.lowered_allocs)),
+                (
+                    "lowered_speedup",
+                    Value::from(if r.lowered_ms_p50 > 0.0 {
+                        r.legacy_ms_p50 / r.lowered_ms_p50
+                    } else {
+                        0.0
+                    }),
+                ),
+            ])
+        })
+        .collect();
+    let doc = obj([
+        ("bench", Value::from("executor")),
+        ("preset", Value::from(preset.clone())),
+        ("reps", Value::from(reps)),
+        ("rows", Value::Arr(json_rows)),
+        (
+            "gates",
+            obj([
+                ("lowered_zero_alloc", Value::Bool(zero_alloc_ok)),
+                ("zero_alloc_gate_applies", Value::Bool(zero_alloc_gate_applies)),
+                ("no_step_time_regression", Value::Bool(no_regression)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_executor.json", doc.to_json_string()).expect("writing bench json");
+    println!("wrote BENCH_executor.json");
+
+    if !zero_alloc_ok || !no_regression {
+        std::process::exit(1);
+    }
+}
+
+/// Measure both replay paths for one schedule on one fresh executor per
+/// path (fixed seed ⇒ identical params), returning p50 step times and
+/// steady-state allocation counts.
+fn measure(
+    rt: &Runtime<chainckpt::backend::NativeBackend>,
+    sched: &Schedule,
+    input: &NativeTensor,
+    target: &[f32],
+    loss_stage: usize,
+    reps: usize,
+    name: &str,
+) -> Row {
+    // legacy path
+    let mut ex = Executor::new(rt, 77).unwrap();
+    ex.set_data_param(loss_stage, target).unwrap();
+    ex.run(sched, input, None).unwrap(); // warmup
+    let mut legacy_times = Vec::with_capacity(reps);
+    let mut last_peak = 0;
+    let mut last_ops = 0;
+    for _ in 0..reps {
+        let res = ex.run(sched, input, None).unwrap();
+        legacy_times.push(res.elapsed_s * 1e3);
+        last_peak = res.peak_bytes;
+        last_ops = res.ops;
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    ex.run(sched, input, None).unwrap();
+    let legacy_allocs = ALLOCS.load(Ordering::Relaxed) - before;
+
+    // lowered path: same seed, schedule compiled once, pool persists
+    let mut ex = Executor::new(rt, 77).unwrap();
+    ex.set_data_param(loss_stage, target).unwrap();
+    let mut low = ex.lower(sched).unwrap();
+    // two warmups: the first grows the scratch pool to its high-water mark
+    ex.run_lowered(&mut low, input, None).unwrap();
+    ex.run_lowered(&mut low, input, None).unwrap();
+    let mut lowered_times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let res = ex.run_lowered(&mut low, input, None).unwrap();
+        lowered_times.push(res.elapsed_s * 1e3);
+        assert_eq!(res.peak_bytes, last_peak, "{name}: lowered peak != legacy ledger peak");
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    ex.run_lowered(&mut low, input, None).unwrap();
+    let lowered_allocs = ALLOCS.load(Ordering::Relaxed) - before;
+
+    Row {
+        strategy: name.to_string(),
+        ops: last_ops,
+        peak_bytes: last_peak,
+        legacy_ms_p50: median(&mut legacy_times),
+        lowered_ms_p50: median(&mut lowered_times),
+        legacy_allocs,
+        lowered_allocs,
+    }
 }

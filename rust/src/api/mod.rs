@@ -16,7 +16,9 @@
 //!   the JSON wire.
 //! * [`PlanRequest`] → [`Plan`] — solve the DP once (table-cached),
 //!   answer any budget: schedule, sweep, feasibility range, simulator
-//!   verification, and really-executing replay ([`Plan::execute`]).
+//!   verification, lowering to a slot-addressed [`ExecPlan`]
+//!   ([`Plan::lower`]), and really-executing replay ([`Plan::execute`],
+//!   lowered by default).
 //! * [`Error`] / [`ErrorKind`] — structured errors; the service's HTTP
 //!   statuses and the CLI's exit codes each come from one table
 //!   ([`ErrorKind::http_status`], [`ErrorKind::exit_code`]).
@@ -54,6 +56,7 @@ pub use plan::{execute_schedule, ExecuteOptions, ExecutionReport, Plan, PlanRequ
 pub use spec::{ChainSpec, MAX_STAGES, PRESET_FLOPS_PER_US};
 pub use units::{MemBytes, SlotCount};
 
-// Re-exported so facade callers never need to reach into `solver` for the
-// types that appear in the facade's own signatures.
+// Re-exported so facade callers never need to reach into `solver` (or
+// `plan`) for the types that appear in the facade's own signatures.
+pub use crate::plan::ExecPlan;
 pub use crate::solver::{Mode, Schedule};

@@ -16,6 +16,7 @@ use super::units::{MemBytes, SlotCount};
 use crate::backend::Backend;
 use crate::chain::Chain;
 use crate::executor::Executor;
+use crate::plan::ExecPlan;
 use crate::runtime::Runtime;
 use crate::simulator::{simulate, SimReport};
 use crate::solver::{Mode, Planner, Schedule};
@@ -159,6 +160,26 @@ impl Plan {
             .map_err(|e| Error::internal(format!("solver produced an invalid schedule: {e}")))
     }
 
+    /// Lower this plan's optimal schedule into an [`ExecPlan`]: per-value
+    /// liveness (explicit free points), arena slot assignment with byte
+    /// offsets, and a plan-time peak byte-identical to [`Plan::verify`]'s
+    /// simulator verdict. **The one lowering entry** — the CLI's
+    /// `--lowered` paths, the service's `POST /lower`, and
+    /// [`execute_schedule`]'s pooled replay all come through here or
+    /// [`Plan::lower_schedule`].
+    pub fn lower(&self) -> Result<ExecPlan> {
+        let schedule = self.schedule()?;
+        self.lower_schedule(&schedule)
+    }
+
+    /// Lower any schedule (the baselines included) against this plan's
+    /// chain. An invalid sequence is an [`ErrorKind::Internal`] error,
+    /// like [`Plan::verify`].
+    pub fn lower_schedule(&self, schedule: &Schedule) -> Result<ExecPlan> {
+        crate::plan::lower(&self.chain, schedule)
+            .map_err(|e| Error::internal(format!("schedule does not lower: {e}")))
+    }
+
     /// Plan → really execute: replay this plan's optimal schedule against
     /// compiled stages (see [`execute_schedule`] for the measurement
     /// contract). Fails with [`ErrorKind::InfeasibleBudget`] if the top
@@ -185,11 +206,17 @@ pub struct ExecuteOptions {
     /// Byte budget enforced by the executor's ledger each replay
     /// (`None` = measure only, don't enforce).
     pub memory_limit: Option<MemBytes>,
+    /// Replay through the lowered path (schedule compiled once to an
+    /// [`ExecPlan`], replayed over a persistent buffer pool with zero
+    /// steady-state allocations). **Default: on.** Ignored — with a
+    /// legacy-replay fallback — on backends without in-place kernels
+    /// ([`Backend::SUPPORTS_LOWERED`] is `false`, i.e. pjrt).
+    pub lowered: bool,
 }
 
 impl Default for ExecuteOptions {
     fn default() -> Self {
-        ExecuteOptions { reps: 3, seed: 1, memory_limit: None }
+        ExecuteOptions { reps: 3, seed: 1, memory_limit: None, lowered: true }
     }
 }
 
@@ -212,6 +239,11 @@ pub struct ExecutionReport {
 /// [`Executor`] (so repeated measurements are independent and
 /// deterministic per seed), the loss target from `data.targets[0]`, one
 /// warmup replay, then `opts.reps` timed replays (median reported).
+/// With `opts.lowered` (the default, on backends that support it) the
+/// schedule is compiled once to an [`ExecPlan`] and every replay runs
+/// over the persistent pool; otherwise the legacy per-op replay runs.
+/// Both paths produce bit-identical losses and gradients — only memory
+/// behavior and speed differ.
 ///
 /// This is the one execution path behind `chainckpt train`/`compare`, the
 /// executor benchmark, and [`Plan::execute`] — any [`Schedule`] works,
@@ -229,13 +261,20 @@ pub fn execute_schedule<B: Backend>(
     let loss_stage = rt.manifest.stages.len() - 1;
     ex.set_data_param(loss_stage, &data.targets[0]).kind(ErrorKind::Backend)?;
     let limit = opts.memory_limit.map(MemBytes::get);
+    let mut lowered = if opts.lowered && B::SUPPORTS_LOWERED {
+        Some(ex.lower(schedule).kind(ErrorKind::Backend)?)
+    } else {
+        None
+    };
     let mut times = Vec::with_capacity(opts.reps);
     let mut last = None;
     for r in 0..opts.reps.max(1) + 1 {
-        let res = ex
-            .run(schedule, &data.inputs[0], limit)
-            .with_context(|| format!("replaying a {} schedule", schedule.strategy))
-            .kind(ErrorKind::Backend)?;
+        let res = match &mut lowered {
+            Some(low) => ex.run_lowered(low, &data.inputs[0], limit),
+            None => ex.run(schedule, &data.inputs[0], limit),
+        }
+        .with_context(|| format!("replaying a {} schedule", schedule.strategy))
+        .kind(ErrorKind::Backend)?;
         if r > 0 {
             times.push(res.elapsed_s);
         }
@@ -334,6 +373,25 @@ mod tests {
             .plan()
             .unwrap_err();
         assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn lower_agrees_with_verify_and_kind_tags_garbage() {
+        let chain = toy(6);
+        let top = chain.store_all_memory() + chain.wa0;
+        let plan = PlanRequest::new(ChainSpec::inline(chain), MemBytes(top))
+            .slots(SlotCount(100))
+            .plan()
+            .unwrap();
+        let sched = plan.schedule().unwrap();
+        let lowered = plan.lower().unwrap();
+        assert_eq!(lowered.peak_bytes, plan.verify(&sched).unwrap().peak_bytes);
+        assert!(lowered.arena_bytes >= lowered.peak_bytes);
+        assert_eq!(lowered.op_count(), sched.ops.len());
+
+        use crate::solver::{Op, StrategyKind};
+        let bogus = Schedule::new(vec![Op::Bwd(3)], StrategyKind::Optimal, 0.0);
+        assert_eq!(plan.lower_schedule(&bogus).unwrap_err().kind(), ErrorKind::Internal);
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod pjrt;
 pub use native::{NativeBackend, NativeTensor};
 pub use pjrt::PjrtBackend;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::chain::manifest::Manifest;
 
@@ -84,8 +84,113 @@ pub trait Tensor: Clone + std::fmt::Debug + Sized {
     /// Extract the contents as a flat row-major vector.
     fn to_vec(&self) -> Result<Vec<f32>>;
 
+    /// Copy the contents into a caller-provided buffer of exactly
+    /// [`Tensor::element_count`] elements. The default round-trips
+    /// through [`Tensor::to_vec`]; backends with host-resident storage
+    /// override it allocation-free (the lowered executor copies the batch
+    /// input into its pooled arena through this each iteration).
+    fn read_into(&self, out: &mut [f32]) -> Result<()> {
+        let v = self.to_vec()?;
+        anyhow::ensure!(
+            v.len() == out.len(),
+            "read_into: tensor has {} elements, buffer {}",
+            v.len(),
+            out.len()
+        );
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
     /// Number of elements.
     fn element_count(&self) -> usize;
+}
+
+/// Recycled temporary buffers for in-place kernels.
+///
+/// `take(n)` hands out a zeroed length-`n` buffer (reusing a previously
+/// returned one when available), `give` returns it. Because a lowered
+/// replay performs the identical take/give sequence every iteration, each
+/// physical buffer is resized to the same length every time — capacities
+/// ratchet up during the first iteration and **steady-state iterations
+/// perform zero heap allocations**.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    free: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// A zero-filled buffer of `n` elements (matching the `vec![0.0; n]`
+    /// the allocating kernels start from) — for accumulation targets
+    /// (`matmul_acc` and friends).
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// A length-`n` buffer with **unspecified contents** — for
+    /// temporaries the kernel fully overwrites before reading
+    /// (transpose/split/merge/affine/layernorm targets, element-wise
+    /// maps). Skips `take`'s per-call memset; in steady state this
+    /// neither writes nor allocates.
+    pub fn take_dirty(&mut self, n: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        if v.len() > n {
+            v.truncate(n);
+        } else {
+            v.resize(n, 0.0); // zeros only the grown tail
+        }
+        v
+    }
+
+    /// Return a buffer taken with [`Scratch::take`]. Buffers that are not
+    /// given back are simply dropped — correct, but re-allocated next
+    /// iteration.
+    pub fn give(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+}
+
+/// The output buffers of one in-place entry call, in the entry's output
+/// order. Each buffer is taken at most once and must be completely
+/// overwritten by the kernel (pooled storage carries stale bytes from the
+/// slot's previous occupant).
+pub struct Outs<'s, 'a> {
+    bufs: &'s mut [Option<&'a mut [f32]>],
+}
+
+impl<'s, 'a> Outs<'s, 'a> {
+    pub fn new(bufs: &'s mut [Option<&'a mut [f32]>]) -> Self {
+        Outs { bufs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Claim output `i`, checking the expected element count.
+    pub fn take(&mut self, i: usize, nelem: usize, what: &str) -> Result<&'a mut [f32]> {
+        let buf = self
+            .bufs
+            .get_mut(i)
+            .and_then(Option::take)
+            .with_context(|| format!("{what}: output #{i} missing or taken twice"))?;
+        anyhow::ensure!(
+            buf.len() == nelem,
+            "{what}: output #{i} has {} elements, expected {nelem}",
+            buf.len()
+        );
+        Ok(buf)
+    }
 }
 
 /// One compiled stage signature: the three manifest entry points over the
@@ -109,12 +214,41 @@ pub trait StageExecutable<T: Tensor> {
             Entry::Bwd => self.bwd(args),
         }
     }
+
+    /// In-place entry point over raw f32 storage: read positional `args`
+    /// (flat row-major slices in manifest order), write each output of
+    /// the entry's tuple into the pre-sized buffers of `outs`, using
+    /// `scratch` for temporaries. Argument and output buffers are
+    /// guaranteed disjoint by the caller (the lowered executor's slot
+    /// assignment), and results must be **bit-identical** to the
+    /// allocating entry points.
+    ///
+    /// The default rejects — only backends advertising
+    /// [`Backend::SUPPORTS_LOWERED`] implement it (the native engine's
+    /// zero-allocation kernels live in `backend::native`'s in-place
+    /// module).
+    fn entry_into(
+        &self,
+        entry: Entry,
+        args: &[&[f32]],
+        outs: &mut Outs<'_, '_>,
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let _ = (entry, args, outs, scratch);
+        anyhow::bail!("this backend has no in-place kernels (lowered execution is native-only)")
+    }
 }
 
 /// A tensor engine: compiles manifest signatures into executables.
 pub trait Backend {
     type Tensor: Tensor;
     type Stage: StageExecutable<Self::Tensor>;
+
+    /// Whether this engine implements [`StageExecutable::entry_into`] —
+    /// i.e. whether the lowered (pooled, zero-allocation) executor path
+    /// can run on it. [`api::execute_schedule`](crate::api) falls back to
+    /// the legacy per-op replay when this is `false`.
+    const SUPPORTS_LOWERED: bool = false;
 
     /// Short identifier (`"native"`, `"pjrt"`) for logs and errors.
     fn name(&self) -> &'static str;

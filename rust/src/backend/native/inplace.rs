@@ -1,0 +1,674 @@
+//! In-place entry points for the native stages: the zero-allocation
+//! twins of `stages.rs`, writing results straight into pooled storage.
+//!
+//! Contract (enforced by [`Executor::run_lowered`]'s slot assignment):
+//! argument and output buffers are disjoint; output buffers arrive
+//! pre-sized but **dirty** (a pooled slot carries its previous occupant's
+//! bytes), so every kernel fully overwrites — or zero-fills before
+//! accumulating into — each output it claims. Temporaries come from a
+//! [`Scratch`] pool; because a lowered replay takes and gives the same
+//! buffer sequence every iteration, steady-state iterations allocate
+//! nothing.
+//!
+//! **Bit-identity.** Every output here is computed by the same kernels in
+//! the same per-element accumulation order as the allocating entries
+//! (`matmul_into` = `vec![0.0; ..]` + the shared blocked loop, etc.), so
+//! a lowered replay's loss and gradients match the legacy replay bit for
+//! bit — which `tests/plan_parity.rs` asserts.
+//!
+//! [`Executor::run_lowered`]: crate::executor::Executor::run_lowered
+
+use anyhow::{ensure, Result};
+
+use super::kernels::{
+    add_bias, col_sum_into, gelu, gelu_grad, layernorm_bwd_into, layernorm_into, matmul_acc,
+    matmul_into, softmax_rows, softmax_rows_bwd_into, transpose_into,
+};
+use super::stages::{affine_into, Attn, Dense, LayerNorm, Loss, Mlp};
+use super::NativeStage;
+use crate::backend::{Entry, Outs, Scratch};
+
+/// Dispatch one in-place entry (see [`crate::backend::StageExecutable::entry_into`]).
+pub(super) fn entry_into(
+    stage: &NativeStage,
+    entry: Entry,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    match stage {
+        NativeStage::Dense(s) => match entry {
+            Entry::Fwd => dense_fwd(s, args, outs, scratch, false),
+            Entry::FwdAll => dense_fwd(s, args, outs, scratch, true),
+            Entry::Bwd => dense_bwd(s, args, outs, scratch),
+        },
+        NativeStage::LayerNorm(s) => match entry {
+            Entry::Fwd => layernorm_fwd(s, args, outs, scratch, false),
+            Entry::FwdAll => layernorm_fwd(s, args, outs, scratch, true),
+            Entry::Bwd => layernorm_bwd_entry(s, args, outs),
+        },
+        NativeStage::Mlp(s) => match entry {
+            Entry::Fwd => mlp_fwd(s, args, outs, scratch, false),
+            Entry::FwdAll => mlp_fwd(s, args, outs, scratch, true),
+            Entry::Bwd => mlp_bwd(s, args, outs, scratch),
+        },
+        NativeStage::Attn(s) => match entry {
+            Entry::Fwd => attn_fwd(s, args, outs, scratch, false),
+            Entry::FwdAll => attn_fwd(s, args, outs, scratch, true),
+            Entry::Bwd => attn_bwd(s, args, outs, scratch),
+        },
+        NativeStage::Loss(s) => match entry {
+            // the loss stage tapes nothing: fwd_all ≡ fwd
+            Entry::Fwd | Entry::FwdAll => loss_fwd(s, args, outs),
+            Entry::Bwd => loss_bwd(s, args, outs),
+        },
+    }
+}
+
+fn arity(args: &[&[f32]], want: usize, what: &str) -> Result<()> {
+    ensure!(args.len() == want, "{what}: expected {want} args, got {}", args.len());
+    Ok(())
+}
+
+/// Argument `i`, checked against an expected element count.
+fn arg<'a>(args: &[&'a [f32]], i: usize, nelem: usize, what: &str) -> Result<&'a [f32]> {
+    let d = args[i];
+    ensure!(
+        d.len() == nelem,
+        "{what}: arg #{i} has {} elements, expected {nelem}",
+        d.len()
+    );
+    Ok(d)
+}
+
+/// Bind `$slice` to output `$i` when `$all`, else to a scratch buffer
+/// remembered in `$buf` (give it back with `give_back!`).
+macro_rules! out_or_scratch {
+    ($buf:ident, $slice:ident, $all:expr, $outs:ident, $i:expr, $n:expr, $scratch:ident, $what:expr) => {
+        let mut $buf: Option<Vec<f32>> = None;
+        let $slice: &mut [f32] = if $all {
+            $outs.take($i, $n, $what)?
+        } else {
+            $buf = Some($scratch.take_dirty($n));
+            $buf.as_mut().expect("just set").as_mut_slice()
+        };
+    };
+}
+
+macro_rules! give_back {
+    ($scratch:ident, $($buf:ident),+ $(,)?) => {
+        $(if let Some(b) = $buf { $scratch.give(b); })+
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Dense
+// ---------------------------------------------------------------------------
+
+fn dense_fwd(
+    s: &Dense,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+    all: bool,
+) -> Result<()> {
+    let what = "dense/fwd_into";
+    arity(args, 3, what)?;
+    let m = s.m();
+    let w = arg(args, 0, s.d_in * s.d_out, what)?;
+    let bias = arg(args, 1, s.d_out, what)?;
+    let x = arg(args, 2, m * s.d_in, what)?;
+    if !s.gelu {
+        // linear head: z is the output itself (no ā extras either way)
+        let y = outs.take(0, m * s.d_out, what)?;
+        matmul_into(x, w, y, m, s.d_in, s.d_out);
+        add_bias(y, bias, m, s.d_out);
+        return Ok(());
+    }
+    out_or_scratch!(z_buf, z, all, outs, 1, m * s.d_out, scratch, what);
+    matmul_into(x, w, z, m, s.d_in, s.d_out);
+    add_bias(z, bias, m, s.d_out);
+    let y = outs.take(0, m * s.d_out, what)?;
+    for (yo, &zv) in y.iter_mut().zip(z.iter()) {
+        *yo = gelu(zv);
+    }
+    give_back!(scratch, z_buf);
+    Ok(())
+}
+
+fn dense_bwd(
+    s: &Dense,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let what = "dense/bwd_into";
+    // (w, b, x, ā…, δ): ā = (y,) for linear, (y, z) with a gelu
+    let n_abar = if s.gelu { 2 } else { 1 };
+    arity(args, 3 + n_abar + 1, what)?;
+    let m = s.m();
+    let w = arg(args, 0, s.d_in * s.d_out, what)?;
+    let x = arg(args, 2, m * s.d_in, what)?;
+    let dy = arg(args, 3 + n_abar, m * s.d_out, what)?;
+    let mut dz_buf: Option<Vec<f32>> = None;
+    let dz: &[f32] = if s.gelu {
+        let z = arg(args, 4, m * s.d_out, what)?;
+        let mut t = scratch.take_dirty(m * s.d_out);
+        for ((o, &g), &zv) in t.iter_mut().zip(dy).zip(z) {
+            *o = g * gelu_grad(zv);
+        }
+        dz_buf = Some(t);
+        dz_buf.as_deref().expect("just set")
+    } else {
+        dy
+    };
+    let mut wt = scratch.take_dirty(s.d_in * s.d_out);
+    transpose_into(w, &mut wt, s.d_in, s.d_out);
+    let dx = outs.take(0, m * s.d_in, what)?;
+    matmul_into(dz, &wt, dx, m, s.d_out, s.d_in);
+    let mut xt = scratch.take_dirty(m * s.d_in);
+    transpose_into(x, &mut xt, m, s.d_in);
+    let gw = outs.take(1, s.d_in * s.d_out, what)?;
+    matmul_into(&xt, dz, gw, s.d_in, m, s.d_out);
+    let gb = outs.take(2, s.d_out, what)?;
+    col_sum_into(dz, gb, m, s.d_out);
+    scratch.give(xt);
+    scratch.give(wt);
+    give_back!(scratch, dz_buf);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm
+// ---------------------------------------------------------------------------
+
+fn layernorm_fwd(
+    s: &LayerNorm,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+    all: bool,
+) -> Result<()> {
+    let what = "layernorm/fwd_into";
+    arity(args, 3, what)?;
+    let (m, d) = (s.b * s.t, s.d);
+    let g = arg(args, 0, d, what)?;
+    let beta = arg(args, 1, d, what)?;
+    let x = arg(args, 2, m * d, what)?;
+    out_or_scratch!(xhat_buf, xhat, all, outs, 1, m * d, scratch, what);
+    out_or_scratch!(rstd_buf, rstd, all, outs, 2, m, scratch, what);
+    layernorm_into(x, xhat, rstd, m, d);
+    let y = outs.take(0, m * d, what)?;
+    affine_into(xhat, g, beta, y, m, d);
+    give_back!(scratch, rstd_buf, xhat_buf);
+    Ok(())
+}
+
+fn layernorm_bwd_entry(s: &LayerNorm, args: &[&[f32]], outs: &mut Outs<'_, '_>) -> Result<()> {
+    let what = "layernorm/bwd_into";
+    // (g, beta, x, y, xhat, rstd, δ)
+    arity(args, 7, what)?;
+    let (m, d) = (s.b * s.t, s.d);
+    let g = arg(args, 0, d, what)?;
+    let xhat = arg(args, 4, m * d, what)?;
+    let rstd = arg(args, 5, m, what)?;
+    let dy = arg(args, 6, m * d, what)?;
+    let dx = outs.take(0, m * d, what)?;
+    let gg = outs.take(1, d, what)?;
+    let gb = outs.take(2, d, what)?;
+    layernorm_bwd_into(dy, xhat, rstd, g, dx, gg, gb, m, d);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Mlp
+// ---------------------------------------------------------------------------
+
+fn mlp_fwd(
+    s: &Mlp,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+    all: bool,
+) -> Result<()> {
+    let what = "mlp/fwd_into";
+    arity(args, 7, what)?;
+    let (m, d, f) = (s.b * s.t, s.d, s.f);
+    let g = arg(args, 0, d, what)?;
+    let beta = arg(args, 1, d, what)?;
+    let w1 = arg(args, 2, d * f, what)?;
+    let c1 = arg(args, 3, f, what)?;
+    let w2 = arg(args, 4, f * d, what)?;
+    let c2 = arg(args, 5, d, what)?;
+    let x = arg(args, 6, m * d, what)?;
+    out_or_scratch!(xhat_buf, xhat, all, outs, 1, m * d, scratch, what);
+    out_or_scratch!(rstd_buf, rstd, all, outs, 2, m, scratch, what);
+    out_or_scratch!(z1_buf, z1, all, outs, 3, m * f, scratch, what);
+    out_or_scratch!(u_buf, u, all, outs, 4, m * f, scratch, what);
+    layernorm_into(x, xhat, rstd, m, d);
+    let mut h = scratch.take_dirty(m * d);
+    affine_into(xhat, g, beta, &mut h, m, d);
+    matmul_into(&h, w1, z1, m, d, f);
+    add_bias(z1, c1, m, f);
+    for (o, &zv) in u.iter_mut().zip(z1.iter()) {
+        *o = gelu(zv);
+    }
+    let mut z2 = scratch.take(m * d);
+    matmul_acc(u, w2, &mut z2, m, f, d);
+    add_bias(&mut z2, c2, m, d);
+    let y = outs.take(0, m * d, what)?;
+    for ((o, &xv), &zv) in y.iter_mut().zip(x).zip(&z2) {
+        *o = xv + zv;
+    }
+    scratch.give(z2);
+    scratch.give(h);
+    give_back!(scratch, u_buf, z1_buf, rstd_buf, xhat_buf);
+    Ok(())
+}
+
+fn mlp_bwd(
+    s: &Mlp,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let what = "mlp/bwd_into";
+    // (g, beta, w1, c1, w2, c2, x, y, xhat, rstd, z1, u, δ)
+    arity(args, 13, what)?;
+    let (m, d, f) = (s.b * s.t, s.d, s.f);
+    let g = arg(args, 0, d, what)?;
+    let beta = arg(args, 1, d, what)?;
+    let w1 = arg(args, 2, d * f, what)?;
+    let w2 = arg(args, 4, f * d, what)?;
+    let xhat = arg(args, 8, m * d, what)?;
+    let rstd = arg(args, 9, m, what)?;
+    let z1 = arg(args, 10, m * f, what)?;
+    let u = arg(args, 11, m * f, what)?;
+    let dy = arg(args, 12, m * d, what)?;
+    // residual: y = x + z2 ⇒ dz2 = dy
+    let mut ut = scratch.take_dirty(m * f);
+    transpose_into(u, &mut ut, m, f);
+    let gw2 = outs.take(5, f * d, what)?;
+    matmul_into(&ut, dy, gw2, f, m, d);
+    let gc2 = outs.take(6, d, what)?;
+    col_sum_into(dy, gc2, m, d);
+    let mut w2t = scratch.take_dirty(f * d);
+    transpose_into(w2, &mut w2t, f, d);
+    let mut du = scratch.take(m * f);
+    matmul_acc(dy, &w2t, &mut du, m, d, f);
+    let mut dz1 = scratch.take_dirty(m * f);
+    for ((o, &g_), &zv) in dz1.iter_mut().zip(&du).zip(z1) {
+        *o = g_ * gelu_grad(zv);
+    }
+    // h is cheap to recompute from the checkpointed x̂
+    let mut h = scratch.take_dirty(m * d);
+    affine_into(xhat, g, beta, &mut h, m, d);
+    let mut ht = scratch.take_dirty(m * d);
+    transpose_into(&h, &mut ht, m, d);
+    let gw1 = outs.take(3, d * f, what)?;
+    matmul_into(&ht, &dz1, gw1, d, m, f);
+    let gc1 = outs.take(4, f, what)?;
+    col_sum_into(&dz1, gc1, m, f);
+    let mut w1t = scratch.take_dirty(d * f);
+    transpose_into(w1, &mut w1t, d, f);
+    let mut dh = scratch.take(m * d);
+    matmul_acc(&dz1, &w1t, &mut dh, m, f, d);
+    let mut dx_ln = scratch.take_dirty(m * d);
+    let gg = outs.take(1, d, what)?;
+    let gbeta = outs.take(2, d, what)?;
+    layernorm_bwd_into(&dh, xhat, rstd, g, &mut dx_ln, gg, gbeta, m, d);
+    let dx = outs.take(0, m * d, what)?;
+    for ((o, &a), &b) in dx.iter_mut().zip(dy).zip(&dx_ln) {
+        *o = a + b;
+    }
+    scratch.give(dx_ln);
+    scratch.give(dh);
+    scratch.give(w1t);
+    scratch.give(ht);
+    scratch.give(h);
+    scratch.give(dz1);
+    scratch.give(du);
+    scratch.give(w2t);
+    scratch.give(ut);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Attn
+// ---------------------------------------------------------------------------
+
+fn attn_fwd(
+    s: &Attn,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+    all: bool,
+) -> Result<()> {
+    let what = "attn/fwd_into";
+    arity(args, 7, what)?;
+    let (m, d, t, dh) = (s.b * s.t, s.d, s.t, s.dh());
+    let bh = s.b * s.heads;
+    let g = arg(args, 0, d, what)?;
+    let beta = arg(args, 1, d, what)?;
+    let wq = arg(args, 2, d * d, what)?;
+    let wk = arg(args, 3, d * d, what)?;
+    let wv = arg(args, 4, d * d, what)?;
+    let wo = arg(args, 5, d * d, what)?;
+    let x = arg(args, 6, m * d, what)?;
+    out_or_scratch!(xhat_buf, xhat, all, outs, 1, m * d, scratch, what);
+    out_or_scratch!(rstd_buf, rstd, all, outs, 2, m, scratch, what);
+    out_or_scratch!(q_buf, q, all, outs, 3, bh * t * dh, scratch, what);
+    out_or_scratch!(k_buf, k, all, outs, 4, bh * t * dh, scratch, what);
+    out_or_scratch!(v_buf, v, all, outs, 5, bh * t * dh, scratch, what);
+    out_or_scratch!(p_buf, p, all, outs, 6, bh * t * t, scratch, what);
+    out_or_scratch!(c_buf, c, all, outs, 7, bh * t * dh, scratch, what);
+    layernorm_into(x, xhat, rstd, m, d);
+    let mut h = scratch.take_dirty(m * d);
+    affine_into(xhat, g, beta, &mut h, m, d);
+    let mut proj = scratch.take_dirty(m * d);
+    matmul_into(&h, wq, &mut proj, m, d, d);
+    s.split_into(&proj, q);
+    matmul_into(&h, wk, &mut proj, m, d, d);
+    s.split_into(&proj, k);
+    matmul_into(&h, wv, &mut proj, m, d, d);
+    s.split_into(&proj, v);
+    let scale = 1.0 / (dh as f32).sqrt();
+    for i in 0..bh {
+        let qb = &q[i * t * dh..(i + 1) * t * dh];
+        let kb = &k[i * t * dh..(i + 1) * t * dh];
+        let vb = &v[i * t * dh..(i + 1) * t * dh];
+        let mut kt = scratch.take_dirty(t * dh);
+        transpose_into(kb, &mut kt, t, dh);
+        let mut sblk = scratch.take(t * t);
+        matmul_acc(qb, &kt, &mut sblk, t, dh, t);
+        for sv in sblk.iter_mut() {
+            *sv *= scale;
+        }
+        softmax_rows(&mut sblk, t, t);
+        let mut cb = scratch.take(t * dh);
+        matmul_acc(&sblk, vb, &mut cb, t, t, dh);
+        p[i * t * t..(i + 1) * t * t].copy_from_slice(&sblk);
+        c[i * t * dh..(i + 1) * t * dh].copy_from_slice(&cb);
+        scratch.give(cb);
+        scratch.give(sblk);
+        scratch.give(kt);
+    }
+    // output projection + residual: y = x + merge(c)·wo
+    let mut cm = scratch.take_dirty(m * d);
+    s.merge_into(c, &mut cm);
+    let mut o = scratch.take(m * d);
+    matmul_acc(&cm, wo, &mut o, m, d, d);
+    let y = outs.take(0, m * d, what)?;
+    for ((yo, &xv), &ov) in y.iter_mut().zip(x).zip(&o) {
+        *yo = xv + ov;
+    }
+    scratch.give(o);
+    scratch.give(cm);
+    scratch.give(proj);
+    scratch.give(h);
+    give_back!(scratch, c_buf, p_buf, v_buf, k_buf, q_buf, rstd_buf, xhat_buf);
+    Ok(())
+}
+
+fn attn_bwd(
+    s: &Attn,
+    args: &[&[f32]],
+    outs: &mut Outs<'_, '_>,
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let what = "attn/bwd_into";
+    // (g, beta, wq, wk, wv, wo, x, y, xhat, rstd, q, k, v, p, c, δ)
+    arity(args, 16, what)?;
+    let (m, d, t, dh) = (s.b * s.t, s.d, s.t, s.dh());
+    let bh = s.b * s.heads;
+    let g = arg(args, 0, d, what)?;
+    let beta = arg(args, 1, d, what)?;
+    let wq = arg(args, 2, d * d, what)?;
+    let wk = arg(args, 3, d * d, what)?;
+    let wv = arg(args, 4, d * d, what)?;
+    let wo = arg(args, 5, d * d, what)?;
+    let xhat = arg(args, 8, m * d, what)?;
+    let rstd = arg(args, 9, m, what)?;
+    let q = arg(args, 10, bh * t * dh, what)?;
+    let k = arg(args, 11, bh * t * dh, what)?;
+    let v = arg(args, 12, bh * t * dh, what)?;
+    let p = arg(args, 13, bh * t * t, what)?;
+    let c = arg(args, 14, bh * t * dh, what)?;
+    let dy = arg(args, 15, m * d, what)?;
+    // output projection: o = merge(c)·wo, y = x + o
+    let mut cf = scratch.take_dirty(m * d);
+    s.merge_into(c, &mut cf);
+    let mut cft = scratch.take_dirty(m * d);
+    transpose_into(&cf, &mut cft, m, d);
+    let gwo = outs.take(6, d * d, what)?;
+    matmul_into(&cft, dy, gwo, d, m, d);
+    let mut wot = scratch.take_dirty(d * d);
+    transpose_into(wo, &mut wot, d, d);
+    let mut dcm = scratch.take(m * d);
+    matmul_acc(dy, &wot, &mut dcm, m, d, d);
+    let mut dc = scratch.take_dirty(bh * t * dh);
+    s.split_into(&dcm, &mut dc);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = scratch.take_dirty(bh * t * dh);
+    let mut dk = scratch.take_dirty(bh * t * dh);
+    let mut dv = scratch.take_dirty(bh * t * dh);
+    for i in 0..bh {
+        let pb = &p[i * t * t..(i + 1) * t * t];
+        let qb = &q[i * t * dh..(i + 1) * t * dh];
+        let kb = &k[i * t * dh..(i + 1) * t * dh];
+        let vb = &v[i * t * dh..(i + 1) * t * dh];
+        let dcb = &dc[i * t * dh..(i + 1) * t * dh];
+        // c = p·v
+        let mut vbt = scratch.take_dirty(t * dh);
+        transpose_into(vb, &mut vbt, t, dh);
+        let mut dp = scratch.take(t * t);
+        matmul_acc(dcb, &vbt, &mut dp, t, dh, t);
+        let mut pbt = scratch.take_dirty(t * t);
+        transpose_into(pb, &mut pbt, t, t);
+        let mut dvb = scratch.take(t * dh);
+        matmul_acc(&pbt, dcb, &mut dvb, t, t, dh);
+        // softmax backward, then the scaled score products
+        let mut ds = scratch.take_dirty(t * t);
+        softmax_rows_bwd_into(pb, &dp, &mut ds, t, t);
+        let mut dqb = scratch.take(t * dh);
+        matmul_acc(&ds, kb, &mut dqb, t, t, dh);
+        let mut dst = scratch.take_dirty(t * t);
+        transpose_into(&ds, &mut dst, t, t);
+        let mut dkb = scratch.take(t * dh);
+        matmul_acc(&dst, qb, &mut dkb, t, t, dh);
+        for x_ in dqb.iter_mut() {
+            *x_ *= scale;
+        }
+        for x_ in dkb.iter_mut() {
+            *x_ *= scale;
+        }
+        dq[i * t * dh..(i + 1) * t * dh].copy_from_slice(&dqb);
+        dk[i * t * dh..(i + 1) * t * dh].copy_from_slice(&dkb);
+        dv[i * t * dh..(i + 1) * t * dh].copy_from_slice(&dvb);
+        scratch.give(dkb);
+        scratch.give(dst);
+        scratch.give(dqb);
+        scratch.give(ds);
+        scratch.give(dvb);
+        scratch.give(pbt);
+        scratch.give(dp);
+        scratch.give(vbt);
+    }
+    // projections back to h
+    let mut dq2d = scratch.take_dirty(m * d);
+    s.merge_into(&dq, &mut dq2d);
+    let mut dk2d = scratch.take_dirty(m * d);
+    s.merge_into(&dk, &mut dk2d);
+    let mut dv2d = scratch.take_dirty(m * d);
+    s.merge_into(&dv, &mut dv2d);
+    let mut h = scratch.take_dirty(m * d);
+    affine_into(xhat, g, beta, &mut h, m, d);
+    let mut ht = scratch.take_dirty(m * d);
+    transpose_into(&h, &mut ht, m, d);
+    let gwq = outs.take(3, d * d, what)?;
+    matmul_into(&ht, &dq2d, gwq, d, m, d);
+    let gwk = outs.take(4, d * d, what)?;
+    matmul_into(&ht, &dk2d, gwk, d, m, d);
+    let gwv = outs.take(5, d * d, what)?;
+    matmul_into(&ht, &dv2d, gwv, d, m, d);
+    // dh = dq2d·wqᵀ + dk2d·wkᵀ + dv2d·wvᵀ — each product computed into a
+    // fresh-zeroed buffer then added, mirroring the allocating path's
+    // `matmul` + axpy order so the floats round identically
+    let mut wt = scratch.take_dirty(d * d);
+    let mut dh_ = scratch.take(m * d);
+    transpose_into(wq, &mut wt, d, d);
+    matmul_acc(&dq2d, &wt, &mut dh_, m, d, d);
+    let mut tmp = scratch.take(m * d);
+    transpose_into(wk, &mut wt, d, d);
+    matmul_acc(&dk2d, &wt, &mut tmp, m, d, d);
+    for (a, &b) in dh_.iter_mut().zip(&tmp) {
+        *a += b;
+    }
+    tmp.fill(0.0);
+    transpose_into(wv, &mut wt, d, d);
+    matmul_acc(&dv2d, &wt, &mut tmp, m, d, d);
+    for (a, &b) in dh_.iter_mut().zip(&tmp) {
+        *a += b;
+    }
+    let mut dx_ln = scratch.take_dirty(m * d);
+    let gg = outs.take(1, d, what)?;
+    let gbeta = outs.take(2, d, what)?;
+    layernorm_bwd_into(&dh_, xhat, rstd, g, &mut dx_ln, gg, gbeta, m, d);
+    let dx = outs.take(0, m * d, what)?;
+    for ((o, &a), &b) in dx.iter_mut().zip(dy).zip(&dx_ln) {
+        *o = a + b;
+    }
+    scratch.give(dx_ln);
+    scratch.give(tmp);
+    scratch.give(dh_);
+    scratch.give(wt);
+    scratch.give(ht);
+    scratch.give(h);
+    scratch.give(dv2d);
+    scratch.give(dk2d);
+    scratch.give(dq2d);
+    scratch.give(dv);
+    scratch.give(dk);
+    scratch.give(dq);
+    scratch.give(dc);
+    scratch.give(dcm);
+    scratch.give(wot);
+    scratch.give(cft);
+    scratch.give(cf);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Loss
+// ---------------------------------------------------------------------------
+
+fn loss_fwd(s: &Loss, args: &[&[f32]], outs: &mut Outs<'_, '_>) -> Result<()> {
+    let what = "loss/fwd_into";
+    arity(args, 2, what)?;
+    let n = s.n();
+    let target = arg(args, 0, n, what)?;
+    let x = arg(args, 1, n, what)?;
+    let sum: f32 = x.iter().zip(target).map(|(&a, &b)| (a - b) * (a - b)).sum();
+    let out = outs.take(0, 1, what)?;
+    out[0] = sum / n as f32;
+    Ok(())
+}
+
+fn loss_bwd(s: &Loss, args: &[&[f32]], outs: &mut Outs<'_, '_>) -> Result<()> {
+    let what = "loss/bwd_into";
+    // (target, x, loss, δ): the target is data, not a parameter
+    arity(args, 4, what)?;
+    let n = s.n();
+    let target = arg(args, 0, n, what)?;
+    let x = arg(args, 1, n, what)?;
+    let dy = arg(args, 3, 1, what)?[0];
+    let dx = outs.take(0, n, what)?;
+    for ((o, &a), &b) in dx.iter_mut().zip(x).zip(target) {
+        *o = dy * 2.0 * (a - b) / n as f32;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::presets;
+    use crate::backend::{Backend, NativeBackend, StageExecutable, Tensor};
+    use crate::backend::NativeTensor;
+    use crate::util::Rng;
+
+    /// Run one entry both ways on random inputs and demand bit-equality.
+    fn check_entry(stage: &NativeStage, entry: Entry, args: &[&NativeTensor]) {
+        let want = stage.entry(entry, args).expect("allocating entry");
+        let flat: Vec<&[f32]> = args.iter().map(|t| t.data()).collect();
+        let mut store: Vec<Option<Vec<f32>>> =
+            want.iter().map(|t| Some(vec![7.5f32; t.element_count()])).collect();
+        let mut slices: Vec<Option<&mut [f32]>> =
+            store.iter_mut().map(|o| o.as_mut().map(|v| v.as_mut_slice())).collect();
+        let mut outs = Outs::new(&mut slices);
+        let mut scratch = Scratch::new();
+        entry_into(stage, entry, &flat, &mut outs, &mut scratch).expect("in-place entry");
+        for (i, (w, got)) in want.iter().zip(&store).enumerate() {
+            let got = got.as_ref().expect("untouched storage");
+            for (j, (a, b)) in w.data().iter().zip(got.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "out {i}[{j}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_entries_are_bit_identical_for_every_preset_stage() {
+        // quickstart covers dense(gelu)/attn/mlp/dense(none)/loss; the
+        // probe adds layernorm — all five kinds, all three entries
+        let mut manifests = vec![presets::preset("quickstart").unwrap()];
+        manifests.push(presets::layernorm_probe(2, 4, 16).unwrap());
+        let be = NativeBackend;
+        let mut rng = Rng::new(42);
+        for manifest in &manifests {
+            for (sig, spec) in &manifest.signatures {
+                let stage = be.compile(manifest, sig).unwrap();
+                // θ… then a_in, random but shared between both paths
+                let mut owned: Vec<NativeTensor> = spec
+                    .params
+                    .iter()
+                    .map(|p| {
+                        NativeTensor::from_vec(&rng.normal_vec(p.nelem()), &p.shape).unwrap()
+                    })
+                    .collect();
+                let nin = spec.in_shape.iter().product::<usize>().max(1);
+                owned.push(
+                    NativeTensor::from_vec(&rng.normal_vec(nin), &spec.in_shape).unwrap(),
+                );
+                let fwd_args: Vec<&NativeTensor> = owned.iter().collect();
+                check_entry(&stage, Entry::Fwd, &fwd_args);
+                check_entry(&stage, Entry::FwdAll, &fwd_args);
+                // bwd: (θ…, a_in, ā…, δ_out) with ā from the real fwd_all
+                let abar = stage.fwd_all(&fwd_args).unwrap();
+                let nout = spec.out_shape.iter().product::<usize>().max(1);
+                let delta = if spec.out_shape.is_empty() {
+                    NativeTensor::scalar(1.0)
+                } else {
+                    NativeTensor::from_vec(&rng.normal_vec(nout), &spec.out_shape).unwrap()
+                };
+                let mut bwd_args: Vec<&NativeTensor> = owned.iter().collect();
+                bwd_args.extend(abar.iter());
+                bwd_args.push(&delta);
+                check_entry(&stage, Entry::Bwd, &bwd_args);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reaches_steady_state() {
+        // after one warm pass the take/give cycle reuses every buffer
+        let mut s = Scratch::new();
+        let a = s.take(64);
+        let b = s.take(128);
+        s.give(b);
+        s.give(a);
+        let a2 = s.take(64);
+        assert_eq!(a2.len(), 64);
+        assert!(a2.iter().all(|&v| v == 0.0), "reused buffers are re-zeroed");
+        s.give(a2);
+    }
+}

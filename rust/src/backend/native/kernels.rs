@@ -9,11 +9,26 @@
 //!
 //! The matmul is cache-blocked over the inner (k) dimension: a 64-row
 //! panel of `B` stays hot in L2 while rows of `A`/`C` stream through it.
-//! [`matmul_acc`] is shared by the dense/attention stage kernels *and*
-//! the synthetic-data teacher in [`crate::train`].
+//! Above [`MM_PAR_MIN_FLOPS`] the row dimension is additionally split
+//! across `std::thread::scope` workers (each row's accumulation order is
+//! unchanged, so serial and parallel results are bit-identical); small
+//! stages stay serial — spawn overhead would swamp them. [`matmul_acc`]
+//! is shared by the dense/attention stage kernels *and* the
+//! synthetic-data teacher in [`crate::train`].
+//!
+//! Every kernel has an `*_into` variant writing caller-provided buffers;
+//! the allocating versions are thin wrappers over them, so the in-place
+//! (lowered-executor) path and the legacy path compute through the same
+//! loops and produce bit-identical floats.
 
 /// Panel height of the blocked matmul (rows of `B` kept hot per pass).
 pub const MM_BLOCK: usize = 64;
+
+/// Flop threshold (2·m·k·n) above which [`matmul_acc`] fans rows out
+/// across threads. Chosen so the quickstart-sized stages (≲1 MFLOP) stay
+/// serial — and therefore allocation-free — while default/wide matmuls
+/// (tens to hundreds of MFLOPs) parallelize.
+pub const MM_PAR_MIN_FLOPS: usize = 1 << 23;
 
 /// `C = A·B` with `A: (m, k)`, `B: (k, n)`, both row-major.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -22,17 +37,55 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     out
 }
 
-/// `C += A·B` — the cache-blocked inner loop. Panels of `MM_BLOCK` rows
-/// of `B` are reused across every row of `A`; the innermost loop is a
-/// unit-stride axpy over a row of `C`, which the compiler vectorizes.
+/// `C = A·B` into a caller-provided buffer (zeroed first — same starting
+/// point as [`matmul`]'s fresh vector, so the results are bit-identical).
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    out.fill(0.0);
+    matmul_acc(a, b, out, m, k, n);
+}
+
+/// Worker count for one matmul of `flops = 2·m·k·n` over `m` rows.
+fn matmul_threads(flops: usize, m: usize) -> usize {
+    if flops < MM_PAR_MIN_FLOPS || m < 2 {
+        return 1;
+    }
+    use std::sync::OnceLock;
+    static CORES: OnceLock<usize> = OnceLock::new();
+    let cores =
+        *CORES.get_or_init(|| std::thread::available_parallelism().map_or(1, |n| n.get()));
+    cores.min(m)
+}
+
+/// `C += A·B` — the cache-blocked inner loop, row-parallel for large
+/// shapes. Panels of `MM_BLOCK` rows of `B` are reused across every row
+/// of `A`; the innermost loop is a unit-stride axpy over a row of `C`,
+/// which the compiler vectorizes. Each output row accumulates in the
+/// same order regardless of the thread count.
 pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k, "matmul: A is not (m, k)");
     assert_eq!(b.len(), k * n, "matmul: B is not (k, n)");
     assert_eq!(out.len(), m * n, "matmul: C is not (m, n)");
+    let threads = matmul_threads(2usize.saturating_mul(m * k).saturating_mul(n), m);
+    if threads <= 1 || k == 0 || n == 0 {
+        matmul_acc_rows(a, b, out, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ac, oc) in a.chunks(chunk * k).zip(out.chunks_mut(chunk * n)) {
+            s.spawn(move || matmul_acc_rows(ac, b, oc, k, n));
+        }
+    });
+}
+
+/// The serial kernel over a contiguous row block (`a: (rows, k)`,
+/// `out: (rows, n)` with `rows = a.len() / k`).
+fn matmul_acc_rows(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    let rows = if k > 0 { a.len() / k } else { 0 };
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + MM_BLOCK).min(k);
-        for i in 0..m {
+        for i in 0..rows {
             let arow = &a[i * k..(i + 1) * k];
             let orow = &mut out[i * n..(i + 1) * n];
             for kk in k0..k1 {
@@ -53,14 +106,20 @@ pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: 
 /// transpose followed by [`matmul`], so every contraction goes through
 /// the one blocked kernel.
 pub fn transpose(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    assert_eq!(x.len(), rows * cols, "transpose: bad shape");
     let mut out = vec![0.0f32; x.len()];
+    transpose_into(x, &mut out, rows, cols);
+    out
+}
+
+/// [`transpose`] into a caller-provided buffer (fully overwritten).
+pub fn transpose_into(x: &[f32], out: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols, "transpose: bad shape");
+    assert_eq!(out.len(), rows * cols, "transpose: bad out shape");
     for r in 0..rows {
         for c in 0..cols {
             out[c * rows + r] = x[r * cols + c];
         }
     }
-    out
 }
 
 /// Add a broadcast row bias in place: `x: (m, n) += bias: (n,)`.
@@ -76,14 +135,21 @@ pub fn add_bias(x: &mut [f32], bias: &[f32], m: usize, n: usize) {
 
 /// Column sums: `x: (m, n)` → `(n,)` (bias gradients).
 pub fn col_sum(x: &[f32], m: usize, n: usize) -> Vec<f32> {
-    assert_eq!(x.len(), m * n);
     let mut out = vec![0.0f32; n];
+    col_sum_into(x, &mut out, m, n);
+    out
+}
+
+/// [`col_sum`] into a caller-provided buffer (zeroed, then accumulated).
+pub fn col_sum_into(x: &[f32], out: &mut [f32], m: usize, n: usize) {
+    assert_eq!(x.len(), m * n);
+    assert_eq!(out.len(), n);
+    out.fill(0.0);
     for r in 0..m {
         for (o, &v) in out.iter_mut().zip(&x[r * n..(r + 1) * n]) {
             *o += v;
         }
     }
-    out
 }
 
 const SQRT_2_OVER_PI: f32 = 0.797_884_56;
@@ -111,9 +177,17 @@ pub const LN_EPS: f32 = 1e-5;
 /// exactly the tensors the backward pass consumes (and what `fwd_all`
 /// checkpoints).
 pub fn layernorm(x: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
-    assert_eq!(x.len(), m * d);
     let mut xhat = vec![0.0f32; m * d];
     let mut rstd = vec![0.0f32; m];
+    layernorm_into(x, &mut xhat, &mut rstd, m, d);
+    (xhat, rstd)
+}
+
+/// [`layernorm`] into caller-provided `x̂`/`rstd` buffers (overwritten).
+pub fn layernorm_into(x: &[f32], xhat: &mut [f32], rstd: &mut [f32], m: usize, d: usize) {
+    assert_eq!(x.len(), m * d);
+    assert_eq!(xhat.len(), m * d);
+    assert_eq!(rstd.len(), m);
     for r in 0..m {
         let row = &x[r * d..(r + 1) * d];
         let mu = row.iter().sum::<f32>() / d as f32;
@@ -124,7 +198,6 @@ pub fn layernorm(x: &[f32], m: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
             *o = (v - mu) * rs;
         }
     }
-    (xhat, rstd)
 }
 
 /// Backward of `h = x̂·g + β` given `dh: (m, d)`.
@@ -139,13 +212,34 @@ pub fn layernorm_bwd(
     m: usize,
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; m * d];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    layernorm_bwd_into(dh, xhat, rstd, g, &mut dx, &mut dg, &mut db, m, d);
+    (dx, dg, db)
+}
+
+/// [`layernorm_bwd`] into caller-provided buffers (`dx` overwritten,
+/// `dg`/`db` zeroed then accumulated across rows).
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_bwd_into(
+    dh: &[f32],
+    xhat: &[f32],
+    rstd: &[f32],
+    g: &[f32],
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+    m: usize,
+    d: usize,
+) {
     assert_eq!(dh.len(), m * d);
     assert_eq!(xhat.len(), m * d);
     assert_eq!(rstd.len(), m);
     assert_eq!(g.len(), d);
-    let mut dx = vec![0.0f32; m * d];
-    let mut dg = vec![0.0f32; d];
-    let mut db = vec![0.0f32; d];
+    assert_eq!((dx.len(), dg.len(), db.len()), (m * d, d, d));
+    dg.fill(0.0);
+    db.fill(0.0);
     for r in 0..m {
         let dhr = &dh[r * d..(r + 1) * d];
         let xr = &xhat[r * d..(r + 1) * d];
@@ -167,7 +261,6 @@ pub fn layernorm_bwd(
             dxr[j] = rs * (dxhat - mean1 - xr[j] * mean2);
         }
     }
-    (dx, dg, db)
 }
 
 /// In-place numerically-stable softmax over each row of `s: (rows, cols)`.
@@ -191,9 +284,16 @@ pub fn softmax_rows(s: &mut [f32], rows: usize, cols: usize) {
 /// Softmax backward over rows: given probs `p` and upstream `dp`, returns
 /// `ds = p ⊙ (dp − Σ_col(dp ⊙ p))` (per row).
 pub fn softmax_rows_bwd(p: &[f32], dp: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut ds = vec![0.0f32; rows * cols];
+    softmax_rows_bwd_into(p, dp, &mut ds, rows, cols);
+    ds
+}
+
+/// [`softmax_rows_bwd`] into a caller-provided buffer (overwritten).
+pub fn softmax_rows_bwd_into(p: &[f32], dp: &[f32], ds: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(p.len(), rows * cols);
     assert_eq!(dp.len(), rows * cols);
-    let mut ds = vec![0.0f32; rows * cols];
+    assert_eq!(ds.len(), rows * cols);
     for r in 0..rows {
         let pr = &p[r * cols..(r + 1) * cols];
         let dpr = &dp[r * cols..(r + 1) * cols];
@@ -203,7 +303,6 @@ pub fn softmax_rows_bwd(p: &[f32], dp: &[f32], rows: usize, cols: usize) -> Vec<
             dsr[j] = pr[j] * (dpr[j] - dot);
         }
     }
-    ds
 }
 
 #[cfg(test)]
@@ -237,6 +336,56 @@ mod tests {
                 assert!((g - w).abs() <= 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn parallel_matmul_is_bit_identical_to_serial() {
+        // above MM_PAR_MIN_FLOPS the row-parallel path engages; each row
+        // accumulates in the same order, so the floats must match bit
+        // for bit (the lowered-vs-legacy parity tests depend on this)
+        let (m, k, n) = (128usize, 192, 192);
+        assert!(2 * m * k * n >= MM_PAR_MIN_FLOPS, "shape must cross the threshold");
+        let mut rng = crate::util::Rng::new(11);
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_acc_rows(&a, &b, &mut serial, k, n);
+        let par = matmul(&a, &b, m, k, n);
+        for (i, (s, p)) in serial.iter().zip(&par).enumerate() {
+            assert_eq!(s.to_bits(), p.to_bits(), "elem {i}: {s} vs {p}");
+        }
+    }
+
+    #[test]
+    fn small_matmuls_stay_serial() {
+        assert_eq!(matmul_threads(1 << 20, 64), 1);
+        assert_eq!(matmul_threads(1 << 30, 1), 1); // one row cannot split
+        assert!(matmul_threads(1 << 30, 4096) >= 1);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_kernels() {
+        let mut rng = crate::util::Rng::new(3);
+        let (m, d) = (6, 32);
+        let x = rng.normal_vec(m * d);
+        let g = rng.normal_vec(d);
+        let dh = rng.normal_vec(m * d);
+        let (xhat, rstd) = layernorm(&x, m, d);
+        let mut xhat2 = vec![9.0f32; m * d]; // dirty buffers, like a pooled slot
+        let mut rstd2 = vec![9.0f32; m];
+        layernorm_into(&x, &mut xhat2, &mut rstd2, m, d);
+        assert_eq!(xhat, xhat2);
+        assert_eq!(rstd, rstd2);
+        let (dx, dg, db) = layernorm_bwd(&dh, &xhat, &rstd, &g, m, d);
+        let (mut dx2, mut dg2, mut db2) = (vec![9.0; m * d], vec![9.0; d], vec![9.0; d]);
+        layernorm_bwd_into(&dh, &xhat, &rstd, &g, &mut dx2, &mut dg2, &mut db2, m, d);
+        assert_eq!((dx, dg, db), (dx2, dg2, db2));
+        let mut t = vec![9.0f32; m * d];
+        transpose_into(&x, &mut t, m, d);
+        assert_eq!(t, transpose(&x, m, d));
+        let mut cs = vec![9.0f32; d];
+        col_sum_into(&x, &mut cs, m, d);
+        assert_eq!(cs, col_sum(&x, m, d));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //!
 //! [`SignatureSpec`]: crate::chain::manifest::SignatureSpec
 
+mod inplace;
 pub mod kernels;
 pub mod presets;
 mod stages;
@@ -73,6 +74,20 @@ impl Tensor for NativeTensor {
         Ok(self.data.clone())
     }
 
+    fn read_into(&self, out: &mut [f32]) -> Result<()> {
+        // host-resident storage: a straight copy, no allocation (the
+        // lowered executor stages batch inputs through this every
+        // iteration)
+        ensure!(
+            self.data.len() == out.len(),
+            "read_into: tensor has {} elements, buffer {}",
+            self.data.len(),
+            out.len()
+        );
+        out.copy_from_slice(&self.data);
+        Ok(())
+    }
+
     fn element_count(&self) -> usize {
         self.data.len()
     }
@@ -86,6 +101,10 @@ pub struct NativeBackend;
 impl Backend for NativeBackend {
     type Tensor = NativeTensor;
     type Stage = NativeStage;
+
+    /// The native stages implement the in-place entry points
+    /// (`inplace.rs`), so the lowered zero-allocation executor runs here.
+    const SUPPORTS_LOWERED: bool = true;
 
     fn name(&self) -> &'static str {
         "native"

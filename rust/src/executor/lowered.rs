@@ -1,0 +1,409 @@
+//! The lowered replay path: bind an [`ExecPlan`] to compiled stages and
+//! replay it over one persistent f32 arena with zero steady-state heap
+//! allocations.
+//!
+//! [`Executor::lower`] runs once per `(executor, schedule)`: it lowers
+//! the schedule against the executor's manifest-derived size model
+//! ([`crate::plan::lower`]), translates the plan's byte slots into
+//! element ranges of a pooled arena (sub-ranges for the `ā` components,
+//! positional argument/output bindings per op), and preallocates
+//! everything — arena, gradient buffers, binding tables.
+//! [`Executor::run_lowered`] then replays the steps through the
+//! backend's in-place entry points: the hot loop touches no allocator,
+//! no string-keyed registry, and no per-op ledger — the plan's
+//! `peak_bytes` (byte-identical to the simulator, and to what the legacy
+//! replay's ledger would have reported) is checked against the memory
+//! limit once, up front.
+//!
+//! Safety of the binding step: an op's argument and output ranges are
+//! disjoint by slot-assignment construction (frees happen only after the
+//! step), so one pass of `split_at_mut` over the arena hands out all the
+//! borrows — no `unsafe`, no copies.
+
+use std::ops::Range;
+
+use anyhow::{ensure, Context, Result};
+
+use super::{Executor, StepResult};
+use crate::backend::{Backend, Entry, Outs, Scratch, StageExecutable, Tensor};
+use crate::plan::{self, ExecPlan, Item, ValueId};
+use crate::solver::{Op, Schedule};
+
+/// Max positional args of any entry (attn/bwd has 16).
+const MAX_ARGS: usize = 24;
+/// Max outputs of any entry (attn/fwd_all has 8).
+const MAX_OUTS: usize = 12;
+
+/// The persistent storage of a lowered executor: one arena holding every
+/// slot, plus the kernels' recycled temporaries.
+struct BufferPool {
+    data: Vec<f32>,
+    /// Reusable sort buffer for the per-op borrow walk
+    /// (start, end, is_out, position).
+    walk: Vec<(usize, usize, bool, usize)>,
+}
+
+/// One op with all its bindings pre-resolved to arena element ranges.
+struct RtStep {
+    /// 0-based stage index (`ℓ-1`).
+    stage: usize,
+    entry: Entry,
+    /// Leading args `0..n_params` come from the stage's parameter store.
+    n_params: usize,
+    /// Remaining args: (position, arena range).
+    pool_args: Vec<(usize, Range<usize>)>,
+    n_args: usize,
+    /// Pool outputs: (position, arena range).
+    pool_outs: Vec<(usize, Range<usize>)>,
+    n_outs: usize,
+    /// Outputs `1..` are the stage's gradient buffers (backward ops of
+    /// stages with trainable params).
+    grads: bool,
+    /// Read the loss scalar at this arena index after the step
+    /// (`Fall^{L+1}`).
+    read_loss: Option<usize>,
+}
+
+/// A schedule lowered against one executor: the [`ExecPlan`], the pooled
+/// arena it addresses, and the per-op runtime bindings. Owned by the
+/// caller and reused across iterations — that persistence is where the
+/// zero-allocation property comes from.
+pub struct Lowered {
+    plan: ExecPlan,
+    pool: BufferPool,
+    scratch: Scratch,
+    steps: Vec<RtStep>,
+    input_range: Range<usize>,
+    seed_range: Range<usize>,
+    delta0_range: Range<usize>,
+}
+
+impl Lowered {
+    /// The compiled plan (slot table, liveness, plan-time peak).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    /// Arena size in f32 elements (the one allocation the pool owns).
+    pub fn arena_elems(&self) -> usize {
+        self.pool.data.len()
+    }
+
+    /// `δ^0` of the last replay (gradient w.r.t. the chain input).
+    /// Allocates the returned vector — not a hot-path call.
+    pub fn input_gradient(&self) -> Vec<f32> {
+        self.pool.data[self.delta0_range.clone()].to_vec()
+    }
+}
+
+/// Hand out the borrows one op needs from the arena: `pool_args` as
+/// shared slices, `pool_outs` as mutable slices — all in one ordered
+/// `split_at_mut` walk (ranges are disjoint by plan construction; an
+/// overlap is an internal error, not UB).
+fn bind<'a>(
+    data: &'a mut [f32],
+    walk: &mut Vec<(usize, usize, bool, usize)>,
+    step: &RtStep,
+    args: &mut [&'a [f32]],
+    outs: &mut [Option<&'a mut [f32]>],
+) -> Result<()> {
+    walk.clear();
+    for (pos, r) in &step.pool_args {
+        walk.push((r.start, r.end, false, *pos));
+    }
+    for (pos, r) in &step.pool_outs {
+        walk.push((r.start, r.end, true, *pos));
+    }
+    walk.sort_unstable();
+    let mut rest = data;
+    let mut base = 0usize;
+    for &(s, e, is_out, pos) in walk.iter() {
+        ensure!(
+            s >= base,
+            "lowered plan bound overlapping arena ranges ({s}..{e} after {base}) — internal error"
+        );
+        let tail = std::mem::take(&mut rest);
+        let (_, r) = tail.split_at_mut(s - base);
+        let (seg, r2) = r.split_at_mut(e - s);
+        rest = r2;
+        base = e;
+        if is_out {
+            outs[pos] = Some(seg);
+        } else {
+            args[pos] = seg;
+        }
+    }
+    Ok(())
+}
+
+impl<'rt, B: Backend> Executor<'rt, B> {
+    /// Compile `schedule` into a [`Lowered`] replay bound to this
+    /// executor's stages: plan lowering (liveness + slots + plan-time
+    /// peak), arena layout from the manifest's real tensor shapes, and
+    /// per-op argument bindings. Requires a backend with in-place
+    /// kernels ([`Backend::SUPPORTS_LOWERED`]).
+    pub fn lower(&mut self, schedule: &Schedule) -> Result<Lowered> {
+        ensure!(
+            B::SUPPORTS_LOWERED,
+            "the {} backend has no in-place kernels — lowered execution runs on `native`",
+            self.rt.backend.name()
+        );
+        let plan = plan::lower(&self.chain_sizes, schedule)
+            .map_err(|e| anyhow::anyhow!("schedule does not lower: {e}"))?;
+        let mf = &self.rt.manifest;
+        let n = mf.stages.len();
+        debug_assert_eq!(plan.chain_len, n);
+        let input_elems: usize = mf.input_shape.iter().product::<usize>().max(1);
+        let a_elems = |l: usize| -> usize {
+            if l == 0 {
+                input_elems
+            } else {
+                mf.sig_of(l - 1).out_shape.iter().product::<usize>().max(1)
+            }
+        };
+        let abar_elems = |l: usize| -> usize {
+            a_elems(l) + mf.sig_of(l - 1).abar_extras.iter().map(|e| e.nelem()).sum::<usize>()
+        };
+        let item_elems = |item: Item| -> usize {
+            match item {
+                // δ^ℓ has its activation's shape (δ^{L+1} = the scalar
+                // loss seed, one element, like a^{L+1})
+                Item::A(l) | Item::Delta(l) => a_elems(l as usize),
+                Item::Abar(l) => abar_elems(l as usize),
+                // transients are the kernels' Scratch, not arena slots
+                Item::Transient(_) => 0,
+            }
+        };
+
+        // slot → element range: a slot is as big as its largest occupant
+        let mut slot_elems = vec![0usize; plan.slots.len()];
+        for v in &plan.values {
+            slot_elems[v.slot] = slot_elems[v.slot].max(item_elems(v.item));
+        }
+        let mut slot_off = vec![0usize; plan.slots.len()];
+        let mut total = 0usize;
+        for (s, &e) in slot_elems.iter().enumerate() {
+            slot_off[s] = total;
+            total += e;
+        }
+        let value_ranges: Vec<Range<usize>> = plan
+            .values
+            .iter()
+            .map(|v| {
+                let o = slot_off[v.slot];
+                o..o + item_elems(v.item)
+            })
+            .collect();
+        // reading a^ℓ out of a taped ā^ℓ means its leading component
+        let read_a_range = |vid: ValueId| -> Range<usize> {
+            let v = &plan.values[vid];
+            match v.item {
+                Item::Abar(l) => {
+                    let st = value_ranges[vid].start;
+                    st..st + a_elems(l as usize)
+                }
+                _ => value_ranges[vid].clone(),
+            }
+        };
+
+        let mut steps = Vec::with_capacity(plan.steps.len());
+        for pstep in &plan.steps {
+            match pstep.op {
+                // drops are pure liveness events — nothing to execute
+                Op::DropA(_) => {}
+                Op::FwdNoSave(l) | Op::FwdCk(l) => {
+                    let l = l as usize;
+                    let n_params = mf.sig_of(l - 1).params.len();
+                    steps.push(RtStep {
+                        stage: l - 1,
+                        entry: Entry::Fwd,
+                        n_params,
+                        pool_args: vec![(n_params, read_a_range(pstep.reads[0]))],
+                        n_args: n_params + 1,
+                        pool_outs: vec![(0, value_ranges[pstep.writes[0]].clone())],
+                        n_outs: 1,
+                        grads: false,
+                        read_loss: None,
+                    });
+                }
+                Op::FwdAll(l) => {
+                    let l = l as usize;
+                    let sig = mf.sig_of(l - 1);
+                    let n_params = sig.params.len();
+                    // the ā slot holds (a_out, extras…) back to back —
+                    // each fwd_all output lands in its own sub-range
+                    let vr = value_ranges[pstep.writes[0]].clone();
+                    let mut pool_outs = Vec::with_capacity(1 + sig.abar_extras.len());
+                    let mut off = vr.start;
+                    pool_outs.push((0, off..off + a_elems(l)));
+                    off += a_elems(l);
+                    for (j, e) in sig.abar_extras.iter().enumerate() {
+                        pool_outs.push((j + 1, off..off + e.nelem()));
+                        off += e.nelem();
+                    }
+                    debug_assert_eq!(off, vr.end, "ā layout mismatch for stage {l}");
+                    let read_loss = if l == n { Some(vr.start) } else { None };
+                    steps.push(RtStep {
+                        stage: l - 1,
+                        entry: Entry::FwdAll,
+                        n_params,
+                        pool_args: vec![(n_params, read_a_range(pstep.reads[0]))],
+                        n_args: n_params + 1,
+                        n_outs: pool_outs.len(),
+                        pool_outs,
+                        grads: false,
+                        read_loss,
+                    });
+                }
+                Op::Bwd(l) => {
+                    let l = l as usize;
+                    let sig = mf.sig_of(l - 1);
+                    let n_params = sig.params.len();
+                    // (θ…, a_in, ā…, δ_out) — reads are [a^{ℓ-1}, ā^ℓ, δ^ℓ]
+                    let mut pool_args = Vec::with_capacity(3 + sig.abar_extras.len());
+                    pool_args.push((n_params, read_a_range(pstep.reads[0])));
+                    let abar_vr = value_ranges[pstep.reads[1]].clone();
+                    let mut pos = n_params + 1;
+                    let mut off = abar_vr.start;
+                    pool_args.push((pos, off..off + a_elems(l)));
+                    pos += 1;
+                    off += a_elems(l);
+                    for e in &sig.abar_extras {
+                        pool_args.push((pos, off..off + e.nelem()));
+                        pos += 1;
+                        off += e.nelem();
+                    }
+                    debug_assert_eq!(off, abar_vr.end, "ā layout mismatch for stage {l}");
+                    pool_args.push((pos, value_ranges[pstep.reads[2]].clone()));
+                    pos += 1;
+                    steps.push(RtStep {
+                        stage: l - 1,
+                        entry: Entry::Bwd,
+                        n_params,
+                        pool_args,
+                        n_args: pos,
+                        pool_outs: vec![(0, value_ranges[pstep.writes[0]].clone())],
+                        n_outs: 1 + sig.n_grads,
+                        grads: sig.n_grads > 0,
+                        read_loss: None,
+                    });
+                }
+            }
+        }
+        debug_assert_eq!(
+            steps.len(),
+            plan.steps.iter().filter(|s| s.op.is_compute()).count(),
+            "every compute op binds exactly one runtime step"
+        );
+        ensure!(
+            steps.iter().any(|s| s.read_loss.is_some()),
+            "schedule never tapes the loss stage (no Fall^{n})"
+        );
+        for s in &steps {
+            ensure!(
+                s.n_args <= MAX_ARGS && s.n_outs <= MAX_OUTS,
+                "stage {} entry exceeds the binding arrays ({} args / {} outs)",
+                s.stage + 1,
+                s.n_args,
+                s.n_outs
+            );
+        }
+        self.ensure_grad_buffers();
+        Ok(Lowered {
+            input_range: value_ranges[plan.input].clone(),
+            seed_range: value_ranges[plan.seed].clone(),
+            delta0_range: value_ranges[plan.delta0].clone(),
+            plan,
+            pool: BufferPool { data: vec![0.0; total], walk: Vec::new() },
+            scratch: Scratch::new(),
+            steps,
+        })
+    }
+
+    /// Size the per-stage gradient buffers so backward kernels write
+    /// them in place (only allocates when shapes are wrong — i.e. on the
+    /// first call or after an interleaved legacy replay).
+    fn ensure_grad_buffers(&mut self) {
+        for (i, p) in self.params.iter().enumerate() {
+            let g = &mut self.grads[i];
+            if g.len() != p.trainable.len() {
+                *g = p.trainable.iter().map(|&pi| vec![0.0; p.values[pi].len()]).collect();
+                continue;
+            }
+            for (j, &pi) in p.trainable.iter().enumerate() {
+                if g[j].len() != p.values[pi].len() {
+                    g[j] = vec![0.0; p.values[pi].len()];
+                }
+            }
+        }
+    }
+
+    /// One training iteration over the lowered plan: stage the input and
+    /// the δ^{L+1} seed into the arena, replay every step through the
+    /// backend's in-place entries, and read the loss out of the `ā^{L+1}`
+    /// slot. The steady-state hot path performs **zero heap
+    /// allocations** — everything it touches (arena, scratch, gradient
+    /// buffers, binding tables) persists inside `low` and `self`.
+    ///
+    /// The reported peak is the plan's — byte-identical to both the
+    /// simulator and the legacy replay's ledger; `memory_limit` is
+    /// enforced against it up front.
+    pub fn run_lowered(
+        &mut self,
+        low: &mut Lowered,
+        input: &B::Tensor,
+        memory_limit: Option<u64>,
+    ) -> Result<StepResult> {
+        let start = std::time::Instant::now();
+        if let Some(limit) = memory_limit {
+            ensure!(
+                low.plan.peak_bytes <= limit,
+                "memory limit exceeded (peak {} > budget {limit})",
+                low.plan.peak_bytes
+            );
+        }
+        self.ensure_grad_buffers();
+        self.grads_valid = false;
+        input
+            .read_into(&mut low.pool.data[low.input_range.clone()])
+            .context("staging a^0 into the arena")?;
+        low.pool.data[low.seed_range.clone()].fill(1.0); // δ^{L+1} = 1
+
+        let mut loss = f32::NAN;
+        let Executor { exes, params, grads, .. } = self;
+        for st in low.steps.iter() {
+            {
+                let mut args_store: [&[f32]; MAX_ARGS] = [&[]; MAX_ARGS];
+                let mut outs_store: [Option<&mut [f32]>; MAX_OUTS] =
+                    std::array::from_fn(|_| None);
+                let BufferPool { data, walk } = &mut low.pool;
+                bind(data, walk, st, &mut args_store[..st.n_args], &mut outs_store[..st.n_outs])?;
+                for (i, v) in params[st.stage].values.iter().enumerate().take(st.n_params) {
+                    args_store[i] = v.as_slice();
+                }
+                if st.grads {
+                    for (j, gbuf) in grads[st.stage].iter_mut().enumerate() {
+                        outs_store[1 + j] = Some(gbuf.as_mut_slice());
+                    }
+                }
+                let mut outs = Outs::new(&mut outs_store[..st.n_outs]);
+                exes[st.stage]
+                    .entry_into(st.entry, &args_store[..st.n_args], &mut outs, &mut low.scratch)
+                    .with_context(|| {
+                        format!("lowered {:?} on stage {}", st.entry, st.stage + 1)
+                    })?;
+            }
+            if let Some(ix) = st.read_loss {
+                loss = low.pool.data[ix];
+            }
+        }
+        ensure!(loss.is_finite(), "loss stage produced a non-finite loss");
+        self.grads_valid = true;
+        Ok(StepResult {
+            loss,
+            peak_bytes: low.plan.peak_bytes,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            ops: low.plan.steps.len(),
+        })
+    }
+}

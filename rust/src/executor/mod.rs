@@ -13,6 +13,18 @@
 //! what the engine itself does; which engine (pure-Rust [`native`],
 //! PJRT [`pjrt`]) is a type parameter resolved at compile time.
 //!
+//! Two replay paths share this executor:
+//!
+//! * [`Executor::run`] — the legacy per-op replay: tensors allocated op
+//!   by op over `Vec<Option<Tensor>>` stores, a [`MemState`] ledger
+//!   walked alongside. Runs on any backend; the reference for parity.
+//! * [`Executor::lower`] + [`Executor::run_lowered`] — the lowered path:
+//!   the schedule is compiled once into a [`crate::plan::ExecPlan`]
+//!   (liveness → explicit frees → arena slots), then replayed over a
+//!   persistent [`Lowered`] buffer pool through the backend's in-place
+//!   kernels — **zero heap allocations** in the steady-state loop, and
+//!   the plan-time peak replaces the per-iteration ledger walk.
+//!
 //! For one measured replay (fresh executor, warmup + timed median) use
 //! the facade's [`crate::api::execute_schedule`] / `Plan::execute` —
 //! that is the path `chainckpt compare` and the executor bench drive.
@@ -20,8 +32,10 @@
 //! [`native`]: crate::backend::native
 //! [`pjrt`]: crate::backend::pjrt
 
+mod lowered;
 mod params;
 
+pub use lowered::Lowered;
 pub use params::StageParams;
 
 use anyhow::{bail, ensure, Context, Result};
@@ -56,7 +70,10 @@ pub struct Executor<'rt, B: Backend> {
     /// Size model used by the ledger (timings unused here).
     pub chain_sizes: Chain,
     /// Gradients from the last iteration, per stage (trainable order).
+    /// The lowered path writes these in place (buffers persist across
+    /// iterations); `grads_valid` gates [`Executor::sgd_step`].
     grads: Vec<Vec<Vec<f32>>>,
+    grads_valid: bool,
     // value store, 1-based stage indexing like the simulator
     a: Vec<Option<B::Tensor>>,
     abar: Vec<Option<Vec<B::Tensor>>>,
@@ -98,6 +115,7 @@ impl<'rt, B: Backend> Executor<'rt, B> {
             params,
             chain_sizes,
             grads: vec![Vec::new(); n],
+            grads_valid: false,
             a: vec![None; n + 1],
             abar: vec![None; n],
             delta: vec![None; n + 1],
@@ -127,18 +145,25 @@ impl<'rt, B: Backend> Executor<'rt, B> {
     }
 
     /// Apply SGD to every stage with the last iteration's gradients.
+    /// The gradient buffers stay allocated (the lowered path rewrites
+    /// them in place next iteration); `grads_valid` prevents applying
+    /// the same gradients twice.
     pub fn sgd_step(&mut self, lr: f32) -> Result<()> {
-        for i in 0..self.params.len() {
-            let n_expected = self.params[i].trainable.len();
-            if self.grads[i].len() != n_expected {
+        if !self.grads_valid {
+            bail!("no fresh gradients recorded — run an iteration first");
+        }
+        for (i, params) in self.params.iter_mut().enumerate() {
+            let grads = &self.grads[i];
+            if grads.len() != params.trainable.len() {
                 bail!(
-                    "stage {i}: {} gradients recorded, expected {n_expected} — run an iteration first",
-                    self.grads[i].len()
+                    "stage {i}: {} gradients recorded, expected {} — run an iteration first",
+                    grads.len(),
+                    params.trainable.len()
                 );
             }
-            let grads = std::mem::take(&mut self.grads[i]);
-            self.params[i].sgd_step(&grads, lr)?;
+            params.sgd_step(grads, lr)?;
         }
+        self.grads_valid = false;
         Ok(())
     }
 
@@ -161,6 +186,7 @@ impl<'rt, B: Backend> Executor<'rt, B> {
         for g in &mut self.grads {
             g.clear();
         }
+        self.grads_valid = false;
         self.a[0] = Some(input.clone());
         self.delta[n] = Some(B::Tensor::scalar(1.0));
         let mut ledger = MemState::initial(&self.chain_sizes);
@@ -264,6 +290,7 @@ impl<'rt, B: Backend> Executor<'rt, B> {
 
         ensure!(self.delta[0].is_some(), "schedule ended without δ^0");
         ensure!(loss.is_finite(), "loss stage never taped (no Fall^{n})");
+        self.grads_valid = true;
         Ok(StepResult {
             loss,
             peak_bytes: ledger.peak,

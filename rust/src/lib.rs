@@ -20,6 +20,11 @@
 //! * [`simulator`] — a byte-accurate replay of any operation sequence
 //!   (Table 1 semantics): validity, peak memory, makespan. Ground truth
 //!   for every property test and for figure generation.
+//! * [`plan`] — the lowering layer: compiles a solved schedule into an
+//!   [`plan::ExecPlan`] — per-value liveness (explicit free points,
+//!   subsuming `drop`), arena slot assignment with fixed byte offsets,
+//!   and a plan-time peak that byte-matches the simulator. What the
+//!   zero-allocation executor replays.
 //! * [`backend`] — the tensor-engine seam: `Backend` / `Tensor` /
 //!   `StageExecutable` traits with two implementations:
 //!   [`backend::native`], a pure-Rust f32 engine with hand-written
@@ -54,6 +59,7 @@ pub mod chain;
 pub mod estimator;
 pub mod executor;
 pub mod figures;
+pub mod plan;
 pub mod runtime;
 pub mod service;
 pub mod simulator;

@@ -56,8 +56,9 @@ USAGE:
                      [--memory 8M | --memory-frac 0.75] [--steps 100] [--lr 0.05]
                      [--strategy optimal|sequential|revolve|pytorch]
                      [--segments 4] [--batches 8] [--log-every 10] [--out loss.csv]
+                     [--lowered | --legacy]
   chainckpt compare  [--backend native|pjrt] [--preset default] [--artifacts DIR]
-                     [--points 6] [--out compare.csv]
+                     [--points 6] [--out compare.csv] [--lowered | --legacy]
   chainckpt figures  [--fig 3|all] [--out results]
   chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
                      [--slots 500] [--queue 64]
@@ -71,9 +72,20 @@ CHAIN SPEC (solve/simulate; one pipeline with the service and library):
                                        {\"preset\":…}, inline {\"stages\":…},
                                        or {\"manifest\": \"DIR\"}
 
-The planning service answers POST /solve, /sweep, /simulate and
+Execution path: train/compare replay through the *lowered* pipeline by
+default — the schedule is compiled once into a slot-addressed ExecPlan
+(liveness analysis + arena slot assignment, see the `plan` module) and
+replayed over a persistent buffer pool with zero steady-state heap
+allocations. --legacy forces the old per-op replay (the parity
+reference); --lowered states the default explicitly. Lowered execution
+needs the native engine's in-place kernels — on pjrt both flags fall
+back to the legacy replay.
+
+The planning service answers POST /solve, /sweep, /simulate, /lower and
 GET /chains, /stats, /healthz with JSON; repeated requests for a chain
 hit the planner's shared DP-table cache. --port 0 picks a free port.
+POST /lower returns the lowered plan for a chain + budget (or explicit
+\"ops\"): slot table with byte offsets, arena size, plan-time peak.
 
 Backends: --backend native (pure-Rust engine, chains generated in-process
 from --preset quickstart|default|wide — the default) or --backend pjrt
@@ -291,6 +303,17 @@ fn load_pjrt(args: &Args) -> Result<Runtime<chainckpt::backend::PjrtBackend>> {
     Ok(rt)
 }
 
+/// The `--lowered | --legacy` pair of `train`/`compare`. Lowered is the
+/// default on engines with in-place kernels; `--legacy` opts out, and
+/// backends without the kernels (pjrt) always run legacy. Passing both
+/// flags is a usage error.
+fn lowered_flag<B: Backend>(args: &Args) -> Result<bool> {
+    if args.has("lowered") && args.has("legacy") {
+        return Err(Error::invalid("--lowered and --legacy are mutually exclusive"));
+    }
+    Ok(B::SUPPORTS_LOWERED && !args.has("legacy"))
+}
+
 /// Run `f` on the runtime of the selected backend (monomorphized per
 /// engine — no trait objects on the hot path).
 macro_rules! with_backend {
@@ -369,6 +392,7 @@ fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     );
     let sched = pick_schedule(args, &chain, memory)?;
     describe(&chain, &sched, Some(memory), "µs")?;
+    let lowered = lowered_flag::<B>(args)?;
 
     let steps = usize_flag(args, "steps", 100)?;
     let lr = f64_flag(args, "lr", 0.05)? as f32;
@@ -377,6 +401,17 @@ fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     let data = SyntheticData::generate(&rt.manifest, n_batches, 7).kind(ErrorKind::Backend)?;
     let mut trainer =
         Trainer::new(rt, sched, lr, Some(memory.get()), 42).kind(ErrorKind::Backend)?;
+    if lowered {
+        trainer.lower().kind(ErrorKind::Backend)?;
+        let plan = trainer.lowered_plan().expect("just lowered");
+        println!(
+            "lowered: {} values → {} arena slots, arena {}, plan-time peak {}",
+            plan.values.len(),
+            plan.slots.len(),
+            fmt_bytes(plan.arena_bytes),
+            fmt_bytes(plan.peak_bytes)
+        );
+    }
     let logs = trainer
         .train(&data, steps, log_every, |log| {
             println!(
@@ -421,7 +456,12 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
         SyntheticData::<B::Tensor>::generate(&rt.manifest, 2, 7).kind(ErrorKind::Backend)?;
     let hi = chain.store_all_memory();
     let lo = chain.min_memory_hint();
-    let opts = ExecuteOptions { reps, ..ExecuteOptions::default() };
+    let lowered = lowered_flag::<B>(args)?;
+    println!(
+        "execution path: {}",
+        if lowered { "lowered (pooled arena, zero-alloc steady state)" } else { "legacy per-op replay" }
+    );
+    let opts = ExecuteOptions { reps, lowered, ..ExecuteOptions::default() };
     let mut rows: Vec<(String, String, u64, f64)> = Vec::new();
 
     // every row — baselines and DP strategies alike — is one
@@ -557,7 +597,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = chainckpt::service::serve(cfg)?;
     println!("planning service listening on http://{}", server.addr());
-    println!("endpoints: POST /solve /sweep /simulate · GET /chains /stats /healthz");
+    println!("endpoints: POST /solve /sweep /simulate /lower · GET /chains /stats /healthz");
     println!("try: curl -s http://{}/chains", server.addr());
     server.join();
     Ok(())

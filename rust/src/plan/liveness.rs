@@ -1,0 +1,347 @@
+//! Liveness analysis: one symbolic Table-1 replay of a schedule that
+//! turns implicit residency into an explicit value table.
+//!
+//! Every tensor instance a schedule ever materializes — each `a^ℓ`,
+//! `ā^ℓ`, `δ^ℓ` *per (re)computation*, plus the per-op transient blob
+//! (`o_f` / `o_b`) — becomes one [`Value`] with a birth step, a death
+//! step (its last use, after which the storage is provably reusable) and
+//! a byte size from the chain's cost model. The per-op transition is
+//! [`MemState::apply`] — the *same* function [`crate::simulator::simulate`]
+//! replays — so the death points coincide exactly with Table 1's free
+//! semantics and the accumulated peak is byte-identical to the
+//! simulator's verdict by construction.
+//!
+//! `DropA` is subsumed: it contributes a [`Step`] with an empty
+//! read/write set whose only effect is an explicit free — exactly what
+//! every *other* op's last-use frees already look like in this IR.
+
+use crate::chain::Chain;
+use crate::simulator::{MemState, SeqCheck, SimError};
+use crate::solver::{Op, Schedule};
+
+/// Index into [`super::ExecPlan::values`].
+pub type ValueId = usize;
+
+/// What a [`Value`] holds, in the paper's notation. Stage indices are
+/// 1-based like [`Op`]; `A(0)` is the chain input, `Delta(L+1)` the loss
+/// backward's scalar seed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Item {
+    /// A standalone activation `a^ℓ` (output of `F∅`/`Fck`).
+    A(u32),
+    /// A full checkpoint `ā^ℓ` (output of `Fall`; contains `a^ℓ`).
+    Abar(u32),
+    /// A gradient `δ^ℓ` (output of `B^{ℓ+1}`).
+    Delta(u32),
+    /// The transient working set of one op on stage `ℓ` (`o_f`/`o_b`):
+    /// born and dead within a single step.
+    Transient(u32),
+}
+
+impl Item {
+    /// Paper-notation label (`a^3`, `ā^2`, `δ^1`, `tmp^4`).
+    pub fn label(&self) -> String {
+        match *self {
+            Item::A(l) => format!("a^{l}"),
+            Item::Abar(l) => format!("ā^{l}"),
+            Item::Delta(l) => format!("δ^{l}"),
+            Item::Transient(l) => format!("tmp^{l}"),
+        }
+    }
+
+    /// The 1-based stage index this item belongs to (0 for `a^0`/`δ^0`).
+    pub fn stage(&self) -> u32 {
+        match *self {
+            Item::A(l) | Item::Abar(l) | Item::Delta(l) | Item::Transient(l) => l,
+        }
+    }
+}
+
+impl std::fmt::Display for Item {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// One tensor instance with its exactly-known lifetime.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Value {
+    pub item: Item,
+    /// Cost-model bytes (`ω_a` / `ω_ā` / `ω_δ` / `o_f` / `o_b`).
+    pub bytes: u64,
+    /// Step index that writes this value (0 for the initial `{a^0,
+    /// δ^{L+1}}` pair, which is live before the first step — see
+    /// [`Value::initial`]).
+    pub birth: usize,
+    /// Step index after which the storage is free again; `None` for
+    /// values still live when the schedule ends (`δ^0`).
+    pub death: Option<usize>,
+    /// Live from before step 0 (`a^0` and the `δ^{L+1}` seed).
+    pub initial: bool,
+    /// Arena slot this value is placed in (filled by the slot-assignment
+    /// pass; indexes [`super::ExecPlan::slots`]).
+    pub slot: usize,
+}
+
+/// One schedule op with its resolved value bindings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Step {
+    pub op: Op,
+    /// Values read, in the executor's argument order: forwards read
+    /// `[a^{ℓ-1}]`, `B^ℓ` reads `[a^{ℓ-1}, ā^ℓ, δ^ℓ]`, `drop` reads
+    /// nothing. An `a` read may resolve to an [`Item::Abar`] value — the
+    /// consumer then reads the checkpoint's leading `a` component.
+    pub reads: Vec<ValueId>,
+    /// Values this op writes: `[a^ℓ]` / `[ā^ℓ]` / `[δ^{ℓ-1}]`.
+    pub writes: Vec<ValueId>,
+    /// Values whose storage is released once this step completes (their
+    /// last use), including the op's own transient. Physical buffers stay
+    /// intact *during* the step — the ledger's "δ replaces a" accounting
+    /// is a byte-count convention, not an aliasing license.
+    pub frees: Vec<ValueId>,
+    /// The op's transient working set, when the stage declares one
+    /// (`o_f`/`o_b` > 0). Also listed in `frees`.
+    pub transient: Option<ValueId>,
+}
+
+/// Everything the liveness replay derives; consumed by [`super::lower`].
+pub(crate) struct Analysis {
+    pub values: Vec<Value>,
+    pub steps: Vec<Step>,
+    /// Byte-identical to `simulate(chain, schedule)?.peak_bytes`.
+    pub peak_bytes: u64,
+    pub input: ValueId,
+    pub seed: ValueId,
+    pub delta0: ValueId,
+}
+
+/// The `a^ℓ` a consumer reads: the standalone value if resident, else
+/// the live checkpoint containing it.
+fn resolve_a(cur_a: &[Option<ValueId>], cur_abar: &[Option<ValueId>], l: usize) -> ValueId {
+    cur_a[l]
+        .or(if l >= 1 { cur_abar[l] } else { None })
+        .expect("apply validated a-readability")
+}
+
+/// Record a value written at step `i` and mark it live in its class map.
+fn birth(
+    values: &mut Vec<Value>,
+    item: Item,
+    bytes: u64,
+    i: usize,
+    live: &mut [Option<ValueId>],
+    l: usize,
+) -> ValueId {
+    let id = values.len();
+    values.push(Value { item, bytes, birth: i, death: None, initial: false, slot: 0 });
+    debug_assert!(live[l].is_none(), "apply rejected the duplicate store");
+    live[l] = Some(id);
+    id
+}
+
+/// Mark the live value of a class dead at step `i` (its last use).
+fn death(values: &mut [Value], i: usize, live: &mut [Option<ValueId>], l: usize) -> ValueId {
+    let id = live[l].take().expect("apply freed a resident item");
+    values[id].death = Some(i);
+    id
+}
+
+pub(crate) fn analyze(chain: &Chain, schedule: &Schedule) -> Result<Analysis, SimError> {
+    let n = chain.len();
+    let mut st = MemState::initial(chain);
+    let mut values = vec![
+        Value {
+            item: Item::A(0),
+            bytes: chain.wa(0),
+            birth: 0,
+            death: None,
+            initial: true,
+            slot: 0,
+        },
+        Value {
+            item: Item::Delta(n as u32),
+            bytes: chain.wdelta(n),
+            birth: 0,
+            death: None,
+            initial: true,
+            slot: 0,
+        },
+    ];
+    let (input, seed) = (0usize, 1usize);
+
+    // live value per item class, mirroring `st`'s resident flags
+    let mut cur_a: Vec<Option<ValueId>> = vec![None; n + 1];
+    let mut cur_abar: Vec<Option<ValueId>> = vec![None; n + 1]; // indexed by ℓ, entry 0 unused
+    let mut cur_delta: Vec<Option<ValueId>> = vec![None; n + 1];
+    cur_a[0] = Some(input);
+    cur_delta[n] = Some(seed);
+
+    let mut seq = SeqCheck::new(n);
+    let mut steps: Vec<Step> = Vec::with_capacity(schedule.ops.len());
+
+    for (i, &op) in schedule.ops.iter().enumerate() {
+        // the shared sequence-level + single-op transitions — the same
+        // two calls simulate() makes, so validity cannot drift
+        seq.observe(op, i)?;
+        let eff = st.apply(chain, op, i)?;
+
+        // resolve reads against the *pre-op* value maps (apply validated
+        // readability, so the lookups cannot fail)
+        let mut step = Step {
+            op,
+            reads: Vec::new(),
+            writes: Vec::new(),
+            frees: Vec::new(),
+            transient: None,
+        };
+        match op {
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => {
+                step.reads.push(resolve_a(&cur_a, &cur_abar, l as usize - 1));
+            }
+            Op::Bwd(l) => {
+                let l = l as usize;
+                step.reads.push(resolve_a(&cur_a, &cur_abar, l - 1));
+                step.reads.push(cur_abar[l].expect("apply validated ā"));
+                step.reads.push(cur_delta[l].expect("apply validated δ"));
+            }
+            Op::DropA(_) => {}
+        }
+
+        // births
+        if let Some(l) = eff.stored_a {
+            let id = birth(&mut values, Item::A(l as u32), chain.wa(l), i, &mut cur_a, l);
+            step.writes.push(id);
+        }
+        if let Some(l) = eff.stored_abar {
+            let id =
+                birth(&mut values, Item::Abar(l as u32), chain.wabar(l), i, &mut cur_abar, l);
+            step.writes.push(id);
+        }
+        if let Some(l) = eff.stored_delta {
+            let id =
+                birth(&mut values, Item::Delta(l as u32), chain.wdelta(l), i, &mut cur_delta, l);
+            step.writes.push(id);
+        }
+
+        // deaths (last uses, explicit from here on)
+        if let Some(l) = eff.freed_delta {
+            step.frees.push(death(&mut values, i, &mut cur_delta, l));
+        }
+        if let Some(l) = eff.freed_abar {
+            step.frees.push(death(&mut values, i, &mut cur_abar, l));
+        }
+        if let Some(l) = eff.freed_a {
+            step.frees.push(death(&mut values, i, &mut cur_a, l));
+        }
+
+        // the op's transient working set lives only inside this step
+        let tbytes = match op {
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => chain.of(l as usize),
+            Op::Bwd(l) => chain.ob(l as usize),
+            Op::DropA(_) => 0,
+        };
+        if tbytes > 0 {
+            let id = values.len();
+            values.push(Value {
+                item: Item::Transient(op.stage()),
+                bytes: tbytes,
+                birth: i,
+                death: Some(i),
+                initial: false,
+                slot: 0,
+            });
+            step.transient = Some(id);
+            step.frees.push(id);
+        }
+
+        steps.push(step);
+    }
+
+    seq.finish(&st)?;
+    let delta0 = cur_delta[0].expect("finish() guaranteed δ^0 is resident");
+
+    Ok(Analysis { values, steps, peak_bytes: st.peak, input, seed, delta0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::solver::{store_all_schedule, StrategyKind};
+
+    fn toy() -> Chain {
+        Chain::new(
+            "toy",
+            vec![
+                Stage::new("s1", 1.0, 2.0, 100, 250).with_overheads(16, 24),
+                Stage::new("s2", 3.0, 4.0, 50, 120),
+                Stage::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            80,
+        )
+    }
+
+    #[test]
+    fn store_all_liveness_matches_simulate() {
+        let c = toy();
+        let s = store_all_schedule(&c);
+        let a = analyze(&c, &s).unwrap();
+        let rep = crate::simulator::simulate(&c, &s).unwrap();
+        assert_eq!(a.peak_bytes, rep.peak_bytes);
+        assert_eq!(a.steps.len(), s.ops.len());
+        // the initial pair is live from the start; δ^0 never dies
+        assert!(a.values[a.input].initial && a.values[a.seed].initial);
+        assert_eq!(a.values[a.delta0].item, Item::Delta(0));
+        assert_eq!(a.values[a.delta0].death, None);
+        // every non-final value has an explicit death at or after birth
+        for v in &a.values {
+            if let Some(d) = v.death {
+                assert!(d >= v.birth, "{}: death {d} < birth {}", v.item, v.birth);
+            }
+        }
+        // stage 1 declares transients → its ops carry transient values
+        let t = a.steps[0].transient.expect("stage 1 has o_f > 0");
+        assert_eq!(a.values[t].item, Item::Transient(1));
+        assert_eq!((a.values[t].birth, a.values[t].death), (0, Some(0)));
+    }
+
+    #[test]
+    fn invalid_sequences_are_rejected_like_the_simulator() {
+        let c = toy();
+        for ops in [
+            vec![Op::FwdNoSave(2)],                             // missing a^1
+            vec![Op::FwdAll(1), Op::FwdAll(2), Op::FwdAll(3)],  // incomplete
+            vec![Op::FwdNoSave(9)],                             // out of range
+        ] {
+            let s = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+            let mine = analyze(&c, &s).err().expect("invalid");
+            let sim = crate::simulator::simulate(&c, &s).err().expect("invalid");
+            assert_eq!(mine, sim);
+        }
+    }
+
+    #[test]
+    fn drop_a_becomes_an_explicit_free_step() {
+        // Fck^1 stores a^1; dropping it before any use is a pure free.
+        let c = toy();
+        let ops = vec![
+            Op::FwdCk(1),
+            Op::DropA(1),
+            Op::FwdAll(1),
+            Op::FwdAll(2),
+            Op::FwdAll(3),
+            Op::Bwd(3),
+            Op::Bwd(2),
+            Op::Bwd(1),
+        ];
+        let s = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        let a = analyze(&c, &s).unwrap();
+        let drop = &a.steps[1];
+        assert!(drop.reads.is_empty() && drop.writes.is_empty());
+        assert_eq!(drop.frees.len(), 1);
+        assert_eq!(a.values[drop.frees[0]].item, Item::A(1));
+        assert_eq!(a.values[drop.frees[0]].death, Some(1));
+        let rep = crate::simulator::simulate(&c, &s).unwrap();
+        assert_eq!(a.peak_bytes, rep.peak_bytes);
+    }
+}

@@ -1,0 +1,196 @@
+//! Lowered execution plans: compile a solved [`Schedule`] + [`Chain`]
+//! into a slot-addressed IR the executor can replay with zero steady-state
+//! allocations.
+//!
+//! The paper's Table 1 gives every tensor a schedule ever materializes an
+//! exactly known lifetime — yet a naive replay rediscovers none of it,
+//! allocating fresh buffers op by op. Because the schedule is *static*,
+//! memory placement can be static too. Lowering runs once per
+//! `(chain, schedule)` pair and produces an [`ExecPlan`]:
+//!
+//! 1. **Liveness** ([`Value`], [`Step`]): one symbolic replay resolves
+//!    every read to the concrete value it consumes and turns Table 1's
+//!    implicit residency rules into explicit birth/death points — the
+//!    `drop a^ℓ` op dissolves into the same explicit frees every other
+//!    last use gets. The replay drives the *simulator's own* transition
+//!    function, so validity and accounting cannot drift.
+//! 2. **Slot assignment** ([`Slot`]): values with disjoint lifetimes
+//!    share a reusable arena slot with a fixed byte offset;
+//!    [`ExecPlan::arena_bytes`] is the whole iteration's physical
+//!    footprint, known before any tensor exists.
+//! 3. **Plan-time peak** ([`ExecPlan::peak_bytes`]): byte-identical to
+//!    [`simulate`](crate::simulator::simulate)'s verdict for the same
+//!    schedule, by construction — the executor no longer needs a
+//!    per-iteration ledger walk.
+//!
+//! The executor side ([`crate::executor::Executor::lower`]) binds an
+//! `ExecPlan` to a compiled runtime: slots become ranges of one pooled
+//! f32 arena owned across iterations, and the native backend's in-place
+//! kernels write straight into them.
+//!
+//! ```
+//! use chainckpt::chain::{Chain, Stage};
+//! use chainckpt::plan::lower;
+//! use chainckpt::simulator::simulate;
+//! use chainckpt::solver::store_all_schedule;
+//!
+//! let chain = Chain::new(
+//!     "demo",
+//!     vec![
+//!         Stage::new("s1", 1.0, 2.0, 100, 250),
+//!         Stage::new("s2", 1.0, 2.0, 50, 120),
+//!         Stage::new("loss", 0.1, 0.1, 4, 4),
+//!     ],
+//!     80,
+//! );
+//! let schedule = store_all_schedule(&chain);
+//! let plan = lower(&chain, &schedule)?;
+//!
+//! // the plan-time peak is the simulator's verdict, byte for byte
+//! assert_eq!(plan.peak_bytes, simulate(&chain, &schedule)?.peak_bytes);
+//! // and the arena (which keeps kernel inputs/outputs disjoint) covers it
+//! assert!(plan.arena_bytes >= plan.peak_bytes);
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+
+mod liveness;
+mod slots;
+
+pub use liveness::{Item, Step, Value, ValueId};
+pub use slots::Slot;
+
+use crate::chain::Chain;
+use crate::simulator::SimError;
+use crate::solver::Schedule;
+
+/// A schedule compiled against a chain: every op with resolved value
+/// bindings, every value with its lifetime and arena slot, and the two
+/// numbers the runtime needs before any tensor exists — the physical
+/// arena size and the Table-1 peak.
+///
+/// Built by [`lower`]; replayed by
+/// [`Executor::run_lowered`](crate::executor::Executor::run_lowered) and
+/// served by the planning daemon's `POST /lower`.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// One entry per schedule op, in order (including `drop` steps, which
+    /// bind no kernel).
+    pub steps: Vec<Step>,
+    /// Every tensor instance the schedule materializes.
+    pub values: Vec<Value>,
+    /// The reusable arena regions; `values[v].slot` indexes this table.
+    pub slots: Vec<Slot>,
+    /// Total arena footprint: Σ slot sizes. Always ≥ `peak_bytes` — the
+    /// arena keeps an op's inputs and outputs physically disjoint where
+    /// the paper's accounting lets the output "replace" an input.
+    pub arena_bytes: u64,
+    /// Table-1 peak of the schedule — byte-identical to
+    /// [`simulate`](crate::simulator::simulate) on the same inputs.
+    pub peak_bytes: u64,
+    /// The initial `a^0` value (the executor copies the batch input here).
+    pub input: ValueId,
+    /// The initial `δ^{L+1}` seed value (set to 1.0 each iteration).
+    pub seed: ValueId,
+    /// The final `δ^0` value (the input gradient).
+    pub delta0: ValueId,
+    /// `L+1` of the chain this plan was lowered against.
+    pub chain_len: usize,
+}
+
+impl ExecPlan {
+    /// Number of ops (= schedule length, `drop` steps included).
+    pub fn op_count(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Values placed in slot `s`, for inspection/serialization.
+    pub fn slot_values(&self, s: usize) -> impl Iterator<Item = (ValueId, &Value)> {
+        self.values.iter().enumerate().filter(move |(_, v)| v.slot == s)
+    }
+}
+
+/// Compile `schedule` against `chain`: liveness analysis, slot
+/// assignment, plan-time peak. Fails exactly where
+/// [`simulate`](crate::simulator::simulate) would, with the same
+/// [`SimError`].
+pub fn lower(chain: &Chain, schedule: &Schedule) -> Result<ExecPlan, SimError> {
+    let mut a = liveness::analyze(chain, schedule)?;
+    let (slots, arena_bytes) = slots::assign(&mut a.values, &a.steps);
+    Ok(ExecPlan {
+        steps: a.steps,
+        values: a.values,
+        slots,
+        arena_bytes,
+        peak_bytes: a.peak_bytes,
+        input: a.input,
+        seed: a.seed,
+        delta0: a.delta0,
+        chain_len: chain.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::simulator::simulate;
+    use crate::solver::{periodic_schedule, solve, store_all_schedule, Mode};
+
+    fn toy(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300).with_overheads(8, 12))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        Chain::new("toy", stages, 100)
+    }
+
+    #[test]
+    fn peak_matches_simulator_across_strategies() {
+        let c = toy(7);
+        let mut schedules = vec![store_all_schedule(&c), periodic_schedule(&c, 3)];
+        let hi = c.store_all_memory() + c.wa0;
+        for m in [hi / 2, (hi * 3) / 4, hi] {
+            if let Some(s) = solve(&c, m, 300, Mode::Full) {
+                schedules.push(s);
+            }
+        }
+        assert!(schedules.len() > 2, "at least one DP budget must be feasible");
+        for sched in &schedules {
+            let plan = lower(&c, sched).unwrap();
+            let rep = simulate(&c, sched).unwrap();
+            assert_eq!(plan.peak_bytes, rep.peak_bytes, "{}", sched.strategy);
+            assert!(plan.arena_bytes >= plan.peak_bytes);
+            assert_eq!(plan.op_count(), sched.ops.len());
+            assert_eq!(plan.chain_len, c.len());
+        }
+    }
+
+    #[test]
+    fn lower_rejects_what_simulate_rejects() {
+        use crate::solver::{Op, StrategyKind};
+        let c = toy(3);
+        let bogus = Schedule::new(vec![Op::Bwd(2)], StrategyKind::Optimal, 0.0);
+        assert_eq!(lower(&c, &bogus).unwrap_err(), simulate(&c, &bogus).unwrap_err());
+    }
+
+    #[test]
+    fn slot_table_is_consistent() {
+        let c = toy(5);
+        let plan = lower(&c, &store_all_schedule(&c)).unwrap();
+        for v in &plan.values {
+            assert!(v.slot < plan.slots.len());
+            assert!(v.bytes <= plan.slots[v.slot].bytes);
+        }
+        // offsets tile [0, arena)
+        let mut end = 0;
+        for s in &plan.slots {
+            assert_eq!(s.offset, end);
+            end += s.bytes;
+        }
+        assert_eq!(end, plan.arena_bytes);
+        // every slot hosts at least one value
+        for s in 0..plan.slots.len() {
+            assert!(plan.slot_values(s).next().is_some(), "empty slot {s}");
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //! | `POST /solve`    | chain + budget → optimal schedule + predicted cost  |
 //! | `POST /sweep`    | chain + budget list → per-budget costs, one DP table|
 //! | `POST /simulate` | chain + op sequence → simulator peak/cost verdict   |
+//! | `POST /lower`    | chain + budget (or op sequence) → lowered plan:     |
+//! |                  | slot table, arena size, plan-time peak              |
 //! | `GET  /chains`   | built-in profiles and native presets, by name       |
 //! | `GET  /stats`    | request counters, latency percentiles, cache stats  |
 //! | `GET  /healthz`  | liveness probe                                      |
@@ -48,6 +50,7 @@ const ROUTES: &[(&str, &str, &str)] = &[
     ("POST", "/solve", "solve"),
     ("POST", "/sweep", "sweep"),
     ("POST", "/simulate", "simulate"),
+    ("POST", "/lower", "lower"),
     ("GET", "/chains", "chains"),
     ("GET", "/stats", "stats"),
     ("GET", "/healthz", "healthz"),
@@ -68,6 +71,7 @@ fn dispatch(req: &Request, state: &ServiceState) -> (&'static str, Response) {
         "solve" => with_json_body(req, |body| solve(body, state)),
         "sweep" => with_json_body(req, |body| sweep(body, state)),
         "simulate" => with_json_body(req, |body| simulate_ops(body)),
+        "lower" => with_json_body(req, |body| lower(body, state)),
         "chains" => ok(chains()),
         "stats" => ok(stats(state)),
         "healthz" => ok(obj([("ok", Value::Bool(true))])),
@@ -263,6 +267,80 @@ fn simulate_ops(body: &Value) -> Result<Value> {
             // an invalid op sequence is a *finding*, not a request error
             out.insert("valid".to_string(), Value::Bool(false));
             out.insert("error".to_string(), Value::from(e.to_string()));
+        }
+    }
+    Ok(Value::Obj(out))
+}
+
+// ---------------------------------------------------------------------------
+// POST /lower
+// ---------------------------------------------------------------------------
+
+/// Lower a schedule against a chain and return the slot IR: the slot
+/// table (offsets, sizes, per-slot value lifetimes), the arena size, and
+/// the plan-time peak (byte-identical to `/simulate` on the same ops).
+/// The schedule comes from an explicit `"ops"` array when present,
+/// otherwise from solving `"memory"` (+ optional `"slots"`/`"strategy"`)
+/// exactly like `/solve`.
+fn lower(body: &Value, state: &ServiceState) -> Result<Value> {
+    let spec = ChainSpec::from_json(body.get("chain").context("missing 'chain'")?)?;
+    let mut out = BTreeMap::new();
+
+    if body.get("ops").is_some() {
+        // explicit sequence: lowering failure is a *finding* (like
+        // /simulate's invalid verdict), not a request error; an optional
+        // "memory" gets the same within_budget verdict /simulate gives
+        let ops = wire::parse_ops(body)?;
+        let budget = match body.get("memory") {
+            None => None,
+            Some(v) => Some(wire::parse_bytes(v, "memory")?),
+        };
+        let chain = spec.resolve()?;
+        out.insert("chain".to_string(), Value::from(chain.name.clone()));
+        out.insert("chain_len".to_string(), Value::from(chain.len()));
+        let sched = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        match crate::plan::lower(&chain, &sched) {
+            Ok(plan) => {
+                out.insert("valid".to_string(), Value::Bool(true));
+                if let Some(m) = budget {
+                    out.insert("budget".to_string(), Value::from(m.get()));
+                    out.insert(
+                        "within_budget".to_string(),
+                        Value::Bool(plan.peak_bytes <= m.get()),
+                    );
+                }
+                out.insert("plan".to_string(), wire::plan_to_json(&plan));
+            }
+            Err(e) => {
+                out.insert("valid".to_string(), Value::Bool(false));
+                out.insert("error".to_string(), Value::from(e.to_string()));
+            }
+        }
+        return Ok(Value::Obj(out));
+    }
+
+    let memory = wire::parse_bytes(
+        body.get("memory").context("missing 'memory' (or an explicit 'ops' array)")?,
+        "memory",
+    )?;
+    let slots = wire::parse_slots(body, state.slots)?;
+    let mode = wire::parse_mode(body)?;
+    let plan = PlanRequest::new(spec, memory).slots(slots).mode(mode).plan()?;
+    let chain = plan.chain();
+    out.insert("chain".to_string(), Value::from(chain.name.clone()));
+    out.insert("chain_len".to_string(), Value::from(chain.len()));
+    out.insert("budget".to_string(), Value::from(memory.get()));
+    match plan.schedule_at(memory) {
+        None => {
+            out.insert("feasible".to_string(), Value::Bool(false));
+        }
+        Some(sched) => {
+            out.insert("feasible".to_string(), Value::Bool(true));
+            // a solver schedule that fails to lower is a solver bug:
+            // ErrorKind::Internal → 500, mirroring /solve's verify
+            let lowered = plan.lower_schedule(&sched)?;
+            out.insert("schedule".to_string(), wire::schedule_to_json(&sched));
+            out.insert("plan".to_string(), wire::plan_to_json(&lowered));
         }
     }
     Ok(Value::Obj(out))

@@ -14,9 +14,10 @@ use std::collections::BTreeMap;
 
 use crate::api::{ChainSpec, Context, Error, MemBytes, Mode, Result};
 use crate::chain::Chain;
+use crate::plan::ExecPlan;
 use crate::simulator::SimReport;
 use crate::solver::{Op, Schedule};
-use crate::util::json::Value;
+use crate::util::json::{obj, Value};
 
 /// Slot-axis cap, bounding per-request DP time (paper uses S = 500).
 pub const MAX_SLOTS: usize = 2000;
@@ -150,17 +151,64 @@ pub fn parse_ops(body: &Value) -> Result<Vec<Op>> {
 // Responses
 // ---------------------------------------------------------------------------
 
+/// Serialize an op sequence as compact-notation tokens — the exact
+/// inverse of [`parse_op`], so `/solve`, `/simulate` and `/lower` speak
+/// one alphabet (`parse ∘ print = id`, tested below).
+pub fn ops_to_json(ops: &[Op]) -> Value {
+    Value::Arr(ops.iter().map(|op| Value::from(op.to_string())).collect())
+}
+
 /// Serialize a schedule: strategy label, solver-predicted time, and the
 /// op sequence as compact-notation tokens (parseable by [`parse_op`],
 /// byte-identical to what `chainckpt solve --show-ops` prints per op).
 pub fn schedule_to_json(sched: &Schedule) -> Value {
-    let ops: Vec<Value> = sched.ops.iter().map(|op| Value::from(op.to_string())).collect();
     let mut obj = BTreeMap::new();
     obj.insert("strategy".to_string(), Value::from(sched.strategy.to_string()));
     obj.insert("predicted_time".to_string(), Value::from(sched.predicted_time));
     obj.insert("op_count".to_string(), Value::from(sched.ops.len()));
-    obj.insert("ops".to_string(), Value::Arr(ops));
+    obj.insert("ops".to_string(), ops_to_json(&sched.ops));
     Value::Obj(obj)
+}
+
+/// Serialize a lowered [`ExecPlan`] for `POST /lower`: the headline
+/// numbers (plan-time peak, arena size) plus the full slot table — every
+/// slot's byte offset/size and the values (with lifetimes) placed in it.
+pub fn plan_to_json(plan: &ExecPlan) -> Value {
+    let slots: Vec<Value> = plan
+        .slots
+        .iter()
+        .enumerate()
+        .map(|(s, slot)| {
+            let values: Vec<Value> = plan
+                .slot_values(s)
+                .map(|(_, v)| {
+                    obj([
+                        ("item", Value::from(v.item.label())),
+                        ("bytes", Value::from(v.bytes)),
+                        ("birth", Value::from(v.birth)),
+                        (
+                            "death",
+                            v.death.map(|d| Value::from(d)).unwrap_or(Value::Null),
+                        ),
+                    ])
+                })
+                .collect();
+            obj([
+                ("slot", Value::from(s)),
+                ("offset", Value::from(slot.offset)),
+                ("bytes", Value::from(slot.bytes)),
+                ("values", Value::Arr(values)),
+            ])
+        })
+        .collect();
+    obj([
+        ("op_count", Value::from(plan.op_count())),
+        ("value_count", Value::from(plan.values.len())),
+        ("slot_count", Value::from(plan.slots.len())),
+        ("peak_bytes", Value::from(plan.peak_bytes)),
+        ("arena_bytes", Value::from(plan.arena_bytes)),
+        ("slots", Value::Arr(slots)),
+    ])
 }
 
 /// Serialize a simulator verdict.
@@ -214,21 +262,55 @@ mod tests {
     }
 
     #[test]
-    fn op_tokens_round_trip_display() {
-        let ops = [
-            Op::FwdNoSave(2),
-            Op::FwdCk(1),
-            Op::FwdAll(5),
-            Op::Bwd(5),
-            Op::DropA(3),
-        ];
-        for op in ops {
-            assert_eq!(parse_op(&op.to_string()).unwrap(), op, "{op}");
+    fn op_tokens_round_trip_display_for_all_five_variants() {
+        // parse ∘ print = id over the whole alphabet: every Op variant,
+        // a spread of stage indices (1-digit, multi-digit, u32::MAX) —
+        // so /solve, /simulate and /lower provably speak one language
+        for l in (1u32..=64).chain([999, 4096, u32::MAX]) {
+            for op in [Op::FwdNoSave(l), Op::FwdCk(l), Op::FwdAll(l), Op::Bwd(l), Op::DropA(l)]
+            {
+                assert_eq!(parse_op(&op.to_string()).unwrap(), op, "{op}");
+            }
         }
         assert_eq!(parse_op("F0^7").unwrap(), Op::FwdNoSave(7)); // ASCII alias
         assert!(parse_op("Fck^0").is_err());
         assert!(parse_op("Fck").is_err());
         assert!(parse_op("X^1").is_err());
+        assert!(parse_op("drop a^0").is_err());
+    }
+
+    #[test]
+    fn ops_to_json_is_the_exact_inverse_of_parse_ops() {
+        let ops = vec![
+            Op::FwdCk(1),
+            Op::FwdNoSave(2),
+            Op::FwdAll(12),
+            Op::Bwd(12),
+            Op::DropA(1),
+        ];
+        let body = obj([("ops", ops_to_json(&ops))]);
+        assert_eq!(parse_ops(&body).unwrap(), ops);
+    }
+
+    #[test]
+    fn plan_json_carries_the_slot_table() {
+        use crate::chain::{Chain, Stage};
+        let chain = Chain::new(
+            "t",
+            vec![Stage::new("s1", 1.0, 1.0, 10, 25), Stage::new("loss", 1.0, 1.0, 4, 4)],
+            8,
+        );
+        let sched = crate::solver::store_all_schedule(&chain);
+        let plan = crate::plan::lower(&chain, &sched).unwrap();
+        let v = plan_to_json(&plan);
+        assert_eq!(v.get("peak_bytes").unwrap().as_u64(), Some(plan.peak_bytes));
+        assert_eq!(v.get("arena_bytes").unwrap().as_u64(), Some(plan.arena_bytes));
+        let slots = v.get("slots").unwrap().as_arr().unwrap();
+        assert_eq!(slots.len(), plan.slots.len());
+        // every slot row lists at least one value with a lifetime
+        for s in slots {
+            assert!(!s.get("values").unwrap().as_arr().unwrap().is_empty());
+        }
     }
 
     #[test]

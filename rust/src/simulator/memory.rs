@@ -5,12 +5,22 @@
 //! is honored: `a^ℓ` is *readable* whenever either the standalone tensor
 //! or the full checkpoint is stored, and consuming ops only free the
 //! standalone copy (a taped `ā^{ℓ-1}` survives until its own `B^{ℓ-1}`).
+//!
+//! [`MemState::apply`] is the one transition function for a single
+//! Table 1 op: precondition checks, transient peak charge, stores and
+//! frees. Both [`crate::simulator::simulate`] and the lowering pass in
+//! [`crate::plan`] drive it, so the simulator's verdict and the lowered
+//! plan's liveness/peak can never drift apart.
 
 use crate::chain::Chain;
+use crate::solver::Op;
 
 /// Why a sequence is invalid at some operation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
+    /// An op named a stage outside `1..=L+1` (malformed input, e.g. a
+    /// hand-written `/simulate` or `/lower` request).
+    StageOutOfRange { op_index: usize, l: u32 },
     /// An op needed `a^ℓ` (readable) and it was absent.
     MissingActivation { op_index: usize, l: u32 },
     /// `B^ℓ` needed `δ^ℓ` or `ā^ℓ` and it was absent.
@@ -27,6 +37,9 @@ pub enum SimError {
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            SimError::StageOutOfRange { op_index, l } => {
+                write!(f, "op #{op_index}: stage {l} outside the chain")
+            }
             SimError::MissingActivation { op_index, l } => {
                 write!(f, "op #{op_index}: a^{l} not resident")
             }
@@ -45,6 +58,67 @@ impl std::fmt::Display for SimError {
 }
 
 impl std::error::Error for SimError {}
+
+/// What one [`MemState::apply`] transition did to the resident set, in
+/// terms the caller can act on (the simulator ignores it; the lowering
+/// pass turns it into value births/deaths).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpEffect {
+    /// `a^ℓ` newly stored (F∅ / Fck).
+    pub stored_a: Option<usize>,
+    /// `ā^ℓ` newly stored (Fall).
+    pub stored_abar: Option<usize>,
+    /// `δ^ℓ` newly stored (B^{ℓ+1}).
+    pub stored_delta: Option<usize>,
+    /// Standalone `a^ℓ` freed (the F∅ input, B's `a^{ℓ-1}`, DropA's
+    /// target). `None` when the read went through a taped `ā`.
+    pub freed_a: Option<usize>,
+    /// `ā^ℓ` freed (by its `B^ℓ`).
+    pub freed_abar: Option<usize>,
+    /// `δ^ℓ` freed (by its `B^ℓ`).
+    pub freed_delta: Option<usize>,
+}
+
+/// Sequence-level invariants shared by [`crate::simulator::simulate`]
+/// and the lowering pass: each `B^ℓ` executes at most once, and a
+/// complete sequence must end having produced `δ^0` with every backward
+/// done. ([`MemState::apply`] owns the *per-op* rules; this owns the
+/// whole-walk rules — both callers drive both, so neither can drift.)
+#[derive(Debug, Clone)]
+pub struct SeqCheck {
+    bwd_done: Vec<bool>,
+}
+
+impl SeqCheck {
+    pub fn new(chain_len: usize) -> Self {
+        SeqCheck { bwd_done: vec![false; chain_len + 1] }
+    }
+
+    /// Call before [`MemState::apply`]: rejects a repeated `B^ℓ` (checked
+    /// ahead of the transition, which would misreport it as a missing
+    /// `δ^ℓ`) and records the execution. Out-of-range stages pass
+    /// through — `apply` reports those with the right op index.
+    pub fn observe(&mut self, op: Op, op_index: usize) -> Result<(), SimError> {
+        if let Op::Bwd(l) = op {
+            if let Some(done) = self.bwd_done.get_mut(l as usize) {
+                if *done {
+                    return Err(SimError::DuplicateBackward { op_index, l });
+                }
+                *done = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Call after the walk: the sequence must have computed `δ^0` by
+    /// executing every `B^ℓ`.
+    pub fn finish(&self, st: &MemState) -> Result<(), SimError> {
+        if !st.has_delta(0) || !self.bwd_done[1..].iter().all(|&b| b) {
+            return Err(SimError::IncompleteBackward);
+        }
+        Ok(())
+    }
+}
 
 /// Resident-set tracker. Indices: `a`/`delta` over `0..=L+1`, `abar` over
 /// `1..=L+1` (stored at `l-1`).
@@ -113,6 +187,89 @@ impl MemState {
         self.peak = self.peak.max(self.current + extra);
     }
 
+    /// Apply one Table 1 op: precondition checks, the transient peak
+    /// charge, then the stores/frees of the op's row — exactly the
+    /// accounting [`crate::simulator::simulate`] reports. Sequence-level
+    /// invariants (each `B^ℓ` at most once, completeness) are the
+    /// caller's job; this is the single-op transition only.
+    pub fn apply(&mut self, chain: &Chain, op: Op, op_index: usize) -> Result<OpEffect, SimError> {
+        let n = self.n();
+        let stage = op.stage();
+        if stage == 0 || stage as usize > n {
+            return Err(SimError::StageOutOfRange { op_index, l: stage });
+        }
+        let mut eff = OpEffect::default();
+        match op {
+            Op::FwdNoSave(l) | Op::FwdCk(l) => {
+                let l = l as usize;
+                if !self.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index, l: l as u32 - 1 });
+                }
+                // inputs + new output + transient overhead live together
+                self.touch_peak(chain.wa(l) + chain.of(l));
+                self.store_a(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index, item })?;
+                eff.stored_a = Some(l);
+                if matches!(op, Op::FwdNoSave(_)) && self.free_a_if_standalone(l - 1) {
+                    eff.freed_a = Some(l - 1); // F∅ replaces its input
+                }
+            }
+            Op::FwdAll(l) => {
+                let l = l as usize;
+                if !self.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index, l: l as u32 - 1 });
+                }
+                self.touch_peak(chain.wabar(l) + chain.of(l));
+                self.store_abar(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index, item })?;
+                eff.stored_abar = Some(l);
+            }
+            Op::Bwd(l) => {
+                let l = l as usize;
+                if !self.has_delta(l) {
+                    return Err(SimError::MissingBackwardInput {
+                        op_index,
+                        l: l as u32,
+                        what: "δ",
+                    });
+                }
+                if !self.has_abar(l) {
+                    return Err(SimError::MissingBackwardInput {
+                        op_index,
+                        l: l as u32,
+                        what: "ā",
+                    });
+                }
+                if !self.a_readable(l - 1) {
+                    return Err(SimError::MissingActivation { op_index, l: l as u32 - 1 });
+                }
+                // Paper's Table 1 accounting: the output δ^{ℓ-1} *replaces*
+                // a^{ℓ-1} (ω_δ = ω_a) rather than transiently coexisting —
+                // this matches m_all's backward term ω_δ^s + ω_ā^s + o_b^s.
+                self.touch_peak(chain.ob(l));
+                self.free_delta(l);
+                self.free_abar(l);
+                eff.freed_delta = Some(l);
+                eff.freed_abar = Some(l);
+                if self.free_a_if_standalone(l - 1) {
+                    eff.freed_a = Some(l - 1);
+                }
+                self.store_delta(l - 1)
+                    .map_err(|item| SimError::DuplicateStore { op_index, item })?;
+                eff.stored_delta = Some(l - 1);
+            }
+            Op::DropA(l) => {
+                let l = l as usize;
+                if !self.has_a(l) {
+                    return Err(SimError::MissingActivation { op_index, l: l as u32 });
+                }
+                self.free_a_if_standalone(l);
+                eff.freed_a = Some(l);
+            }
+        }
+        Ok(eff)
+    }
+
     pub fn store_a(&mut self, l: usize) -> Result<(), String> {
         if self.a[l] {
             return Err(format!("a^{l}"));
@@ -144,11 +301,15 @@ impl MemState {
     }
 
     /// Free the standalone `a^ℓ` if (and only if) it is resident — taped
-    /// copies inside `ā^ℓ` are not touched.
-    pub fn free_a_if_standalone(&mut self, l: usize) {
+    /// copies inside `ā^ℓ` are not touched. Returns whether a standalone
+    /// copy was actually freed.
+    pub fn free_a_if_standalone(&mut self, l: usize) -> bool {
         if self.a[l] {
             self.a[l] = false;
             self.current -= self.wa[l];
+            true
+        } else {
+            false
         }
     }
 
@@ -232,5 +393,30 @@ mod tests {
         st.touch_peak(100);
         assert_eq!(st.peak, base + 100);
         assert_eq!(st.current, base);
+    }
+
+    #[test]
+    fn apply_reports_stores_and_frees() {
+        let c = chain();
+        let mut st = MemState::initial(&c);
+        let eff = st.apply(&c, Op::FwdNoSave(1), 0).unwrap();
+        assert_eq!(eff.stored_a, Some(1));
+        assert_eq!(eff.freed_a, Some(0)); // F∅ replaced its input
+        let eff = st.apply(&c, Op::FwdAll(2), 1).unwrap();
+        assert_eq!(eff.stored_abar, Some(2));
+        assert_eq!(eff.freed_a, None); // Fall keeps its input
+        let eff = st.apply(&c, Op::Bwd(2), 2).unwrap();
+        assert_eq!(eff.stored_delta, Some(1));
+        assert_eq!((eff.freed_delta, eff.freed_abar, eff.freed_a), (Some(2), Some(2), Some(1)));
+    }
+
+    #[test]
+    fn apply_rejects_out_of_range_stages() {
+        let c = chain();
+        let mut st = MemState::initial(&c);
+        assert_eq!(
+            st.apply(&c, Op::FwdNoSave(9), 0),
+            Err(SimError::StageOutOfRange { op_index: 0, l: 9 })
+        );
     }
 }

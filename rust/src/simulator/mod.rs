@@ -8,7 +8,7 @@
 
 mod memory;
 
-pub use memory::{MemState, SimError};
+pub use memory::{MemState, OpEffect, SeqCheck, SimError};
 
 use crate::chain::Chain;
 use crate::solver::{Op, Schedule};
@@ -36,97 +36,33 @@ impl SimReport {
 /// Replay `schedule` over `chain` from `{a^0, δ^{L+1}}`; checks every
 /// Table 1 precondition and that the sequence computes `δ^0` with each
 /// `B^ℓ` exactly once.
+///
+/// The per-op transition (precondition checks, peak charge, stores and
+/// frees) is [`MemState::apply`], and the sequence-level invariants
+/// (each `B^ℓ` once, completeness) are [`SeqCheck`] — both shared
+/// verbatim with the lowering pass in [`crate::plan`], so a lowered
+/// plan's validity, liveness and plan-time peak can never drift from
+/// this replay.
 pub fn simulate(chain: &Chain, schedule: &Schedule) -> Result<SimReport, SimError> {
     let n = chain.len();
     let mut st = MemState::initial(chain);
+    let mut seq = SeqCheck::new(n);
     let mut makespan = 0.0f64;
-    let mut bwd_done = vec![false; n + 1];
     let mut fwd_ops = 0usize;
 
     for (i, &op) in schedule.ops.iter().enumerate() {
+        seq.observe(op, i)?;
+        st.apply(chain, op, i)?;
         match op {
-            Op::FwdNoSave(l) => {
-                let l = l as usize;
-                if !st.a_readable(l - 1) {
-                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
-                }
-                // inputs + new output + transient overhead live together
-                st.touch_peak(chain.wa(l) + chain.of(l));
-                st.store_a(l)
-                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
-                st.free_a_if_standalone(l - 1); // F∅ replaces its input
-                makespan += chain.uf(l);
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => {
+                makespan += chain.uf(l as usize);
                 fwd_ops += 1;
             }
-            Op::FwdCk(l) => {
-                let l = l as usize;
-                if !st.a_readable(l - 1) {
-                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
-                }
-                st.touch_peak(chain.wa(l) + chain.of(l));
-                st.store_a(l)
-                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
-                makespan += chain.uf(l);
-                fwd_ops += 1;
-            }
-            Op::FwdAll(l) => {
-                let l = l as usize;
-                if !st.a_readable(l - 1) {
-                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
-                }
-                st.touch_peak(chain.wabar(l) + chain.of(l));
-                st.store_abar(l)
-                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
-                makespan += chain.uf(l);
-                fwd_ops += 1;
-            }
-            Op::Bwd(l) => {
-                let l = l as usize;
-                if bwd_done[l] {
-                    return Err(SimError::DuplicateBackward { op_index: i, l: l as u32 });
-                }
-                if !st.has_delta(l) {
-                    return Err(SimError::MissingBackwardInput {
-                        op_index: i,
-                        l: l as u32,
-                        what: "δ",
-                    });
-                }
-                if !st.has_abar(l) {
-                    return Err(SimError::MissingBackwardInput {
-                        op_index: i,
-                        l: l as u32,
-                        what: "ā",
-                    });
-                }
-                if !st.a_readable(l - 1) {
-                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 - 1 });
-                }
-                // Paper's Table 1 accounting: the output δ^{ℓ-1} *replaces*
-                // a^{ℓ-1} (ω_δ = ω_a) rather than transiently coexisting —
-                // this matches m_all's backward term ω_δ^s + ω_ā^s + o_b^s.
-                st.touch_peak(chain.ob(l));
-                st.free_delta(l);
-                st.free_abar(l);
-                st.free_a_if_standalone(l - 1);
-                st.store_delta(l - 1)
-                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
-                bwd_done[l] = true;
-                makespan += chain.ub(l);
-            }
-            Op::DropA(l) => {
-                let l = l as usize;
-                if !st.has_a(l) {
-                    return Err(SimError::MissingActivation { op_index: i, l: l as u32 });
-                }
-                st.free_a_if_standalone(l);
-            }
+            Op::Bwd(l) => makespan += chain.ub(l as usize),
+            Op::DropA(_) => {} // free (0 time)
         }
     }
-
-    if !st.has_delta(0) || !bwd_done[1..=n].iter().all(|&b| b) {
-        return Err(SimError::IncompleteBackward);
-    }
+    seq.finish(&st)?;
 
     Ok(SimReport {
         makespan,

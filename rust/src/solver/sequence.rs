@@ -33,6 +33,12 @@ impl Op {
     pub fn is_forward(&self) -> bool {
         matches!(self, Op::FwdNoSave(_) | Op::FwdCk(_) | Op::FwdAll(_))
     }
+
+    /// Whether this op runs real stage compute (everything but the free
+    /// `drop a^ℓ`) — the ops a lowered plan binds kernel calls to.
+    pub fn is_compute(&self) -> bool {
+        !matches!(self, Op::DropA(_))
+    }
 }
 
 impl fmt::Display for Op {

@@ -13,7 +13,7 @@ use anyhow::{ensure, Context, Result};
 use crate::backend::native::kernels::matmul;
 use crate::backend::{Backend, Tensor};
 use crate::chain::manifest::Manifest;
-use crate::executor::Executor;
+use crate::executor::{Executor, Lowered};
 use crate::runtime::Runtime;
 use crate::solver::Schedule;
 use crate::util::Rng;
@@ -91,6 +91,10 @@ pub struct Trainer<'rt, B: Backend> {
     /// Byte budget enforced by the ledger each step (`None` = unlimited).
     pub memory_limit: Option<u64>,
     loss_stage: usize,
+    /// The compiled lowered replay, when [`Trainer::lower`] was called:
+    /// every step then runs over the persistent buffer pool (zero
+    /// steady-state allocations) instead of the legacy per-op replay.
+    lowered: Option<Lowered>,
 }
 
 impl<'rt, B: Backend> Trainer<'rt, B> {
@@ -107,7 +111,23 @@ impl<'rt, B: Backend> Trainer<'rt, B> {
             rt.manifest.stages[loss_stage].kind == "loss",
             "last stage must be the loss stage"
         );
-        Ok(Trainer { exec, schedule, lr, memory_limit, loss_stage })
+        Ok(Trainer { exec, schedule, lr, memory_limit, loss_stage, lowered: None })
+    }
+
+    /// Switch this trainer to the lowered execution path: compile the
+    /// schedule once into an [`crate::plan::ExecPlan`] bound to a
+    /// persistent buffer pool — every subsequent [`Trainer::step`]
+    /// replays it with zero steady-state allocations. Requires a backend
+    /// with in-place kernels (the native engine).
+    pub fn lower(&mut self) -> Result<()> {
+        let low = self.exec.lower(&self.schedule).context("lowering the training schedule")?;
+        self.lowered = Some(low);
+        Ok(())
+    }
+
+    /// The lowered plan, when [`Trainer::lower`] was called.
+    pub fn lowered_plan(&self) -> Option<&crate::plan::ExecPlan> {
+        self.lowered.as_ref().map(Lowered::plan)
     }
 
     /// One SGD step on batch `idx` (cycling through the dataset).
@@ -116,7 +136,10 @@ impl<'rt, B: Backend> Trainer<'rt, B> {
         self.exec
             .set_data_param(self.loss_stage, &data.targets[idx])
             .context("setting loss target")?;
-        let res = self.exec.run(&self.schedule, &data.inputs[idx], self.memory_limit)?;
+        let res = match &mut self.lowered {
+            Some(low) => self.exec.run_lowered(low, &data.inputs[idx], self.memory_limit)?,
+            None => self.exec.run(&self.schedule, &data.inputs[idx], self.memory_limit)?,
+        };
         self.exec.sgd_step(self.lr)?;
         Ok(StepLog {
             step,

@@ -10,7 +10,7 @@ use chainckpt::executor::Executor;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{
-    periodic_schedule, solve, store_all_schedule, Mode, Planner, Schedule,
+    periodic_schedule, solve, store_all_schedule, Mode, Op, Planner, Schedule, StrategyKind,
 };
 use chainckpt::train::{SyntheticData, Trainer};
 use chainckpt::util::Rng;
@@ -105,6 +105,81 @@ fn executor_peak_matches_simulator_prediction_for_all_strategies() {
         assert_eq!(peak, sim.peak_bytes, "strategy {}", sched.strategy);
     }
     assert_eq!(seen.len(), 4, "expected all four strategy families: {seen:?}");
+}
+
+/// The §4.1 counterexample's move expressed on an executable chain of
+/// `l ≥ 4` stages: checkpoint `a^1`, tape `ā^2` from it after `B^l`,
+/// then **drop `a^1` before its backward use** (the non-persistent
+/// step), re-forwarding stage 1 at the very end.
+fn non_persistent_sequence(l: u32) -> Vec<Op> {
+    assert!(l >= 4);
+    let mut ops = vec![Op::FwdCk(1), Op::FwdCk(2)];
+    for j in 3..l {
+        ops.push(Op::FwdNoSave(j));
+    }
+    ops.push(Op::FwdAll(l));
+    ops.push(Op::Bwd(l));
+    ops.push(Op::FwdAll(2)); // tape ā^2 out of the checkpointed a^1
+    ops.push(Op::DropA(1)); // ← non-persistent: a^1 dies before B^2 uses it
+    for j in (3..l).rev() {
+        for i in 3..j {
+            ops.push(if i == 3 { Op::FwdCk(3) } else { Op::FwdNoSave(i) });
+        }
+        ops.push(Op::FwdAll(j));
+        ops.push(Op::Bwd(j));
+    }
+    ops.push(Op::FwdAll(1)); // recompute stage 1 for B^2/B^1
+    ops.push(Op::Bwd(2));
+    ops.push(Op::Bwd(1));
+    ops
+}
+
+#[test]
+fn drop_a_parity_between_simulator_executor_and_lowered_path() {
+    // Until now only the simulator ever exercised DropA; this executes
+    // the §4.1-style non-persistent sequence on the native backend and
+    // demands the identical byte verdict everywhere.
+    let rt = runtime();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    let sched = Schedule::new(
+        non_persistent_sequence(chain.len() as u32),
+        StrategyKind::Optimal,
+        0.0,
+    );
+    let sim = simulate(&chain, &sched).expect("non-persistent sequence is valid");
+    // dropping the checkpoint must actually release memory vs store-all
+    let sim_all = simulate(&chain, &store_all_schedule(&chain)).unwrap();
+    assert!(sim.peak_bytes < sim_all.peak_bytes);
+
+    // legacy executor: identical peak, gradients agree with store-all
+    let (loss, grads, peak) = run_once(&rt, &sched);
+    assert_eq!(peak, sim.peak_bytes, "legacy executor ⇄ simulator DropA parity");
+    let (loss_ref, grads_ref, _) = run_once(&rt, &store_all_schedule(&chain));
+    assert!((loss - loss_ref).abs() < 1e-5);
+    assert_grads_equal(&grads_ref, &grads, "non-persistent sequence");
+
+    // lowered path: DropA dissolves into an explicit free in the plan;
+    // the replayed peak and results match the legacy path bit-for-bit
+    let plan = chainckpt::plan::lower(&chain, &sched).unwrap();
+    assert_eq!(plan.peak_bytes, sim.peak_bytes, "plan-time peak");
+    let mut ex = Executor::new(&rt, 77).unwrap();
+    let n = ex.n_stages();
+    let mut rng = Rng::new(1234);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let x = NativeTensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+    ex.set_data_param(n - 1, &target).unwrap();
+    let mut low = ex.lower(&sched).unwrap();
+    let res = ex.run_lowered(&mut low, &x, None).unwrap();
+    assert_eq!(res.peak_bytes, sim.peak_bytes, "lowered ⇄ simulator DropA parity");
+    assert_eq!(res.loss.to_bits(), loss.to_bits(), "lowered ⇄ legacy loss bits");
+    for i in 0..n {
+        for (a, b) in grads[i].iter().zip(ex.grads(i)) {
+            for (x1, x2) in a.iter().zip(b) {
+                assert_eq!(x1.to_bits(), x2.to_bits(), "stage {i} grad bits");
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! Lowering parity: the acceptance contract of the `plan` layer.
+//!
+//! 1. **Plan-time peak = simulator peak, byte for byte** — for all four
+//!    strategy families (store-all / sequential / optimal / revolve) ×
+//!    all three native presets (quickstart / default / wide) × ≥3
+//!    feasible budgets per DP mode.
+//! 2. **Lowered execution ≡ legacy execution, bit for bit** — same
+//!    ledger peak, same loss bits, same gradient bits, same input
+//!    gradient — across the full strategy×budget matrix on the
+//!    quickstart preset plus the layernorm probe. (Execution on
+//!    default/wide is omitted on purpose: the kernels are
+//!    shape-generic — `backend::native::inplace`'s unit test proves
+//!    per-entry bit-identity for every signature kind — and running the
+//!    big presets under a debug-profile test harness would take minutes
+//!    per iteration. The peak-parity matrix above covers every preset.)
+
+use chainckpt::backend::native::presets;
+use chainckpt::backend::{NativeBackend, NativeTensor, Tensor};
+use chainckpt::chain::Chain;
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
+use chainckpt::plan::lower;
+use chainckpt::runtime::Runtime;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{
+    periodic_schedule, store_all_schedule, Mode, Planner, Schedule,
+};
+use chainckpt::util::Rng;
+
+/// All four strategy families; the two DP modes at the bottom, middle
+/// and top of their feasible budget range (≥3 budgets each).
+fn schedules_for(chain: &Chain) -> Vec<(String, Schedule)> {
+    let mut out = vec![
+        ("pytorch".to_string(), store_all_schedule(chain)),
+        ("sequential-2".to_string(), periodic_schedule(chain, 2)),
+        ("sequential-3".to_string(), periodic_schedule(chain, 3)),
+    ];
+    let top = chain.store_all_memory() + chain.wa0;
+    for mode in [Mode::Full, Mode::AdRevolve] {
+        let planner = Planner::new(chain, top, 300, mode);
+        let (lo, hi) = planner.feasible_range().expect("some budget feasible");
+        for (tag, m) in [("lo", lo), ("mid", lo + (hi - lo) / 2), ("hi", hi)] {
+            let sched = planner
+                .schedule_at(m)
+                .unwrap_or_else(|| panic!("{mode:?}@{tag}: {m} inside feasible range"));
+            out.push((format!("{mode:?}@{tag}"), sched));
+        }
+    }
+    out
+}
+
+#[test]
+fn plan_peak_matches_simulator_for_every_preset_strategy_and_budget() {
+    for preset in ["quickstart", "default", "wide"] {
+        let manifest = presets::preset(preset).unwrap();
+        // analytic timings; the peak depends only on the byte model
+        let chain = manifest.to_chain_analytic(1.0e3);
+        for (name, sched) in schedules_for(&chain) {
+            let plan = lower(&chain, &sched)
+                .unwrap_or_else(|e| panic!("{preset}/{name}: {e}"));
+            let rep = simulate(&chain, &sched).unwrap();
+            assert_eq!(
+                plan.peak_bytes, rep.peak_bytes,
+                "{preset}/{name}: plan-time peak must equal simulate() byte-for-byte"
+            );
+            assert!(
+                plan.arena_bytes >= plan.peak_bytes,
+                "{preset}/{name}: arena {} < peak {}",
+                plan.arena_bytes,
+                plan.peak_bytes
+            );
+            assert_eq!(plan.op_count(), sched.ops.len(), "{preset}/{name}");
+        }
+    }
+}
+
+/// (loss, per-stage gradient tensors, ledger peak, input gradient).
+type RunOutcome = (f32, Vec<Vec<Vec<f32>>>, u64, Vec<f32>);
+
+fn fixed_batch(rt: &Runtime<NativeBackend>) -> (NativeTensor, Vec<f32>) {
+    let mut rng = Rng::new(1234);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let x = NativeTensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let n = rt.manifest.stages.len();
+    let target = rng.normal_vec(rt.manifest.sig_of(n - 1).params[0].nelem());
+    (x, target)
+}
+
+fn run_legacy(rt: &Runtime<NativeBackend>, sched: &Schedule) -> RunOutcome {
+    let mut ex = Executor::new(rt, 77).unwrap();
+    let n = ex.n_stages();
+    let (x, target) = fixed_batch(rt);
+    ex.set_data_param(n - 1, &target).unwrap();
+    let res = ex.run(sched, &x, None).unwrap();
+    let grads = (0..n).map(|i| ex.grads(i).to_vec()).collect();
+    (res.loss, grads, res.peak_bytes, ex.input_gradient().unwrap())
+}
+
+fn run_lowered_twice(rt: &Runtime<NativeBackend>, sched: &Schedule) -> RunOutcome {
+    let mut ex = Executor::new(rt, 77).unwrap();
+    let n = ex.n_stages();
+    let (x, target) = fixed_batch(rt);
+    ex.set_data_param(n - 1, &target).unwrap();
+    let mut low = ex.lower(sched).unwrap();
+    // run twice: the second iteration replays over a *dirty* pool (slots
+    // full of the previous iteration's bytes) — results must not change
+    let first = ex.run_lowered(&mut low, &x, None).unwrap();
+    let res = ex.run_lowered(&mut low, &x, None).unwrap();
+    assert_eq!(first.loss.to_bits(), res.loss.to_bits(), "iteration-independent");
+    let grads = (0..n).map(|i| ex.grads(i).to_vec()).collect();
+    (res.loss, grads, res.peak_bytes, low.input_gradient())
+}
+
+fn assert_bit_identical(a: &RunOutcome, b: &RunOutcome, what: &str) {
+    assert_eq!(a.0.to_bits(), b.0.to_bits(), "{what}: loss bits");
+    assert_eq!(a.2, b.2, "{what}: ledger peak");
+    assert_eq!(a.1.len(), b.1.len());
+    for (i, (ga, gb)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(ga.len(), gb.len(), "{what}: stage {i} grad count");
+        for (j, (va, vb)) in ga.iter().zip(gb).enumerate() {
+            assert_eq!(va.len(), vb.len());
+            for (k, (x, y)) in va.iter().zip(vb).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "{what}: stage {i} grad {j}[{k}]: {x} vs {y}"
+                );
+            }
+        }
+    }
+    assert_eq!(a.3.len(), b.3.len(), "{what}: input-gradient length");
+    for (k, (x, y)) in a.3.iter().zip(&b.3).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: δ^0[{k}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn lowered_execution_is_bit_identical_to_legacy_across_the_matrix() {
+    let rt = Runtime::native_preset("quickstart").unwrap();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    for (name, sched) in schedules_for(&chain) {
+        let legacy = run_legacy(&rt, &sched);
+        let lowered = run_lowered_twice(&rt, &sched);
+        assert_bit_identical(&legacy, &lowered, &name);
+        // and both agree with the simulator's byte verdict
+        let sim = simulate(&chain, &sched).unwrap();
+        assert_eq!(legacy.2, sim.peak_bytes, "{name}: legacy vs simulator");
+    }
+}
+
+#[test]
+fn lowered_execution_covers_the_layernorm_stage_kind() {
+    // the probe chain (dense-none → layernorm → loss) exercises the one
+    // stage kind the transformer presets don't
+    let rt = Runtime::native(presets::layernorm_probe(2, 4, 16).unwrap()).unwrap();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    for (name, sched) in [
+        ("pytorch".to_string(), store_all_schedule(&chain)),
+        ("sequential-2".to_string(), periodic_schedule(&chain, 2)),
+    ] {
+        let legacy = run_legacy(&rt, &sched);
+        let lowered = run_lowered_twice(&rt, &sched);
+        assert_bit_identical(&legacy, &lowered, &name);
+    }
+}
+
+#[test]
+fn lowered_training_loop_stays_consistent_with_legacy() {
+    // several SGD steps through api-level machinery: the lowered trainer
+    // must track the legacy trainer bit-for-bit across parameter updates
+    use chainckpt::train::{SyntheticData, Trainer};
+    let rt = Runtime::native_preset("quickstart").unwrap();
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+    let budget = chain.store_all_memory() * 3 / 4;
+    let sched = Planner::new(&chain, budget, 300, Mode::Full)
+        .schedule_at(budget)
+        .expect("75% budget feasible");
+    let data = SyntheticData::generate(&rt.manifest, 3, 21).unwrap();
+
+    let mut legacy = Trainer::new(&rt, sched.clone(), 0.1, Some(budget), 42).unwrap();
+    let mut lowered = Trainer::new(&rt, sched, 0.1, Some(budget), 42).unwrap();
+    lowered.lower().unwrap();
+    for step in 0..8 {
+        let a = legacy.step(&data, step).unwrap();
+        let b = lowered.step(&data, step).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {step} loss");
+        assert_eq!(a.peak_bytes, b.peak_bytes, "step {step} peak");
+    }
+}

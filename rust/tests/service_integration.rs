@@ -366,6 +366,97 @@ fn simulate_endpoint_matches_local_simulator() {
 }
 
 #[test]
+fn lower_endpoint_serves_the_slot_ir_in_both_forms() {
+    let _guard = lock();
+    let server = start_server();
+    let mut client = Client::connect(server.addr()).unwrap();
+    let chain = profiles::resnet(18, 224, 4);
+    let memory = chain.store_all_memory() / 2;
+
+    // budget form: solve + lower in one round-trip; must match the local
+    // facade pipeline byte-for-byte
+    let local_plan = PlanRequest::new(
+        ChainSpec::profile("resnet", 18, 224, 4),
+        MemBytes::new(memory),
+    )
+    .slots(SlotCount::new(150))
+    .plan()
+    .unwrap();
+    let local_sched = local_plan.schedule_at(MemBytes::new(memory)).expect("feasible");
+    let local_lowered = local_plan.lower_schedule(&local_sched).unwrap();
+
+    let body = format!(
+        r#"{{"chain": {{"profile": {{"family": "resnet", "depth": 18, "image": 224,
+            "batch": 4}}}}, "memory": {memory}, "slots": 150}}"#
+    );
+    let (status, resp) = client.request("POST", "/lower", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp);
+    assert_eq!(v.get("feasible"), Some(&Value::Bool(true)));
+    let plan = v.get("plan").expect("feasible lower returns a plan");
+    assert_eq!(
+        plan.get("peak_bytes").unwrap().as_u64(),
+        Some(local_lowered.peak_bytes),
+        "wire plan peak = local lowering peak"
+    );
+    assert_eq!(
+        plan.get("arena_bytes").unwrap().as_u64(),
+        Some(local_lowered.arena_bytes)
+    );
+    assert_eq!(
+        plan.get("slot_count").unwrap().as_usize(),
+        Some(local_lowered.slots.len())
+    );
+    // the plan-time peak is the simulator's verdict, byte for byte
+    let rep = simulate(&chain, &local_sched).unwrap();
+    assert_eq!(plan.get("peak_bytes").unwrap().as_u64(), Some(rep.peak_bytes));
+    // the schedule rides along in the same token alphabet as /solve
+    let schedule = v.get("schedule").expect("schedule present");
+    let expected_ops: Vec<String> =
+        local_sched.ops.iter().map(|op| op.to_string()).collect();
+    assert_eq!(ops_of(schedule), expected_ops);
+
+    // explicit-ops form: the store-all sequence lowers to the same peak
+    // /simulate reports for it, and "memory" gets the same budget verdict
+    let sched = store_all_schedule(&chain);
+    let rep = simulate(&chain, &sched).unwrap();
+    let ops_json: Vec<String> = sched.ops.iter().map(|op| format!("\"{op}\"")).collect();
+    let body = format!(
+        r#"{{"chain": {{"profile": {{"family": "resnet", "depth": 18, "image": 224,
+            "batch": 4}}}}, "ops": [{}], "memory": {}}}"#,
+        ops_json.join(","),
+        rep.peak_bytes
+    );
+    let (status, resp) = client.request("POST", "/lower", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp);
+    assert_eq!(v.get("valid"), Some(&Value::Bool(true)));
+    assert_eq!(v.get("within_budget"), Some(&Value::Bool(true)));
+    let plan = v.get("plan").unwrap();
+    assert_eq!(plan.get("peak_bytes").unwrap().as_u64(), Some(rep.peak_bytes));
+
+    // an invalid sequence is a 200 verdict, like /simulate
+    let body = format!(
+        r#"{{"chain": {{"profile": {{"family": "resnet", "depth": 18, "image": 224,
+            "batch": 4}}}}, "ops": ["B^{}"]}}"#,
+        chain.len()
+    );
+    let (status, resp) = client.request("POST", "/lower", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp);
+    assert_eq!(v.get("valid"), Some(&Value::Bool(false)));
+    assert!(v.get("error").unwrap().as_str().is_some());
+
+    // no budget and no ops → a structured 4xx, not a hang or a drop
+    let body = r#"{"chain": {"preset": "quickstart"}}"#;
+    let (status, resp) = client.request("POST", "/lower", Some(body)).unwrap();
+    assert_eq!(status, 422, "{resp}");
+
+    drop(client);
+    server.stop();
+}
+
+#[test]
 fn chains_and_stats_expose_the_catalog_and_counters() {
     let _guard = lock();
     let server = start_server();
