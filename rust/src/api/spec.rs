@@ -4,15 +4,16 @@
 //! construction: `main.rs` built profile chains from CLI flags,
 //! `service/wire.rs` parsed profile/preset/inline JSON specs with its own
 //! validation, and the figure harness called [`crate::chain::profiles`]
-//! directly. `ChainSpec` owns all of that: the four sources (built-in
-//! **profile**, native **preset**, **inline** stages, on-disk
-//! **manifest**) normalize and validate in exactly one place, so the CLI,
-//! the service wire, and library callers cannot drift apart.
+//! directly. `ChainSpec` owns all of that: the five sources (built-in
+//! **profile**, native **preset**, **graph** DAG, **inline** stages,
+//! on-disk **manifest**) normalize and validate in exactly one place, so
+//! the CLI, the service wire, and library callers cannot drift apart.
 
 use super::error::{fail, Context, ErrorKind, Result};
 use crate::backend::native::presets;
 use crate::chain::manifest::Manifest;
 use crate::chain::{profiles, Chain, Stage};
+use crate::graph::{self, GraphSpec};
 use crate::util::json::Value;
 
 /// Stage cap for inline chains: bounds DP time (O(L²·S) per table) so one
@@ -38,6 +39,9 @@ enum Source {
     /// ([`crate::backend::native::presets`]) with analytic roofline
     /// timings.
     Preset(String),
+    /// A validated DAG ([`crate::graph`]), solved by frontier fusion:
+    /// resolves to its fused chain ([`GraphSpec::to_chain`]).
+    Graph(GraphSpec),
     /// An already-built chain (e.g. measured by the estimator, or parsed
     /// from an inline `"stages"` wire spec).
     Inline(Chain),
@@ -70,6 +74,11 @@ impl ChainSpec {
         ChainSpec { source: Source::Preset(name.into()) }
     }
 
+    /// A validated DAG, solved through its frontier-fused chain.
+    pub fn graph(g: GraphSpec) -> ChainSpec {
+        ChainSpec { source: Source::Graph(g) }
+    }
+
     /// An already-built chain, used as-is.
     pub fn inline(chain: Chain) -> ChainSpec {
         ChainSpec { source: Source::Inline(chain) }
@@ -87,6 +96,10 @@ impl ChainSpec {
     ///   "batch": 8}}` — depth defaults to the family's first supported
     ///   depth, image to 224, batch to 4.
     /// * `{"preset": "default"}`
+    /// * `{"graph": "residual"}` (a named graph preset,
+    ///   [`crate::graph::NAMES`]) or `{"graph": {"input_bytes": …,
+    ///   "nodes": […], "edges": [[0,1], …]}}` — a DAG, validated and
+    ///   frontier-fused into a chain ([`crate::graph::GraphSpec`]).
     /// * `{"stages": [{"uf": …, "ub": …, "wa": …, "wabar": …}, …],
     ///   "input_bytes": …}` — an inline measured profile (e.g. from
     ///   `estimate` output on the caller's own hardware).
@@ -102,7 +115,7 @@ impl ChainSpec {
                 InvalidSpec,
                 "the 'manifest' chain source reads the local filesystem and is only \
                  available to local callers (CLI --chain / ChainSpec::manifest); \
-                 send 'profile', 'preset', or inline 'stages' instead"
+                 send 'profile', 'preset', 'graph', or inline 'stages' instead"
             );
         }
         Self::from_json_local(spec)
@@ -120,6 +133,22 @@ impl ChainSpec {
             let name = preset.as_str().context("'preset' must be a string")?;
             return Ok(ChainSpec::preset(name));
         }
+        if let Some(gv) = spec.get("graph") {
+            if let Some(name) = gv.as_str() {
+                return match graph::preset(name) {
+                    Some(g) => Ok(ChainSpec::graph(g)),
+                    None => fail!(
+                        UnknownChain,
+                        "unknown graph preset '{name}' (graph presets: {})",
+                        graph::NAMES.join("/")
+                    ),
+                };
+            }
+            return match GraphSpec::from_json(gv) {
+                Ok(g) => Ok(ChainSpec::graph(g)),
+                Err(e) => fail!(InvalidSpec, "invalid graph spec: {e}"),
+            };
+        }
         if spec.get("stages").is_some() {
             return Ok(ChainSpec::inline(chain_from_stages(spec)?));
         }
@@ -129,7 +158,7 @@ impl ChainSpec {
         }
         fail!(
             InvalidSpec,
-            "chain spec needs one of 'profile', 'preset', 'stages', or 'manifest'"
+            "chain spec needs one of 'profile', 'preset', 'graph', 'stages', or 'manifest'"
         )
     }
 
@@ -145,7 +174,8 @@ impl ChainSpec {
             Source::Preset(name) => presets::preset(name)
                 .ok()
                 .and_then(|m| m.input_shape.first().map(|&b| b as u64)),
-            Source::Inline(_) => None,
+            // a GraphSpec carries byte sizes, not tensor shapes
+            Source::Graph(_) | Source::Inline(_) => None,
             Source::Manifest(dir) => Manifest::load(dir)
                 .ok()
                 .and_then(|m| m.input_shape.first().map(|&b| b as u64)),
@@ -179,6 +209,7 @@ impl ChainSpec {
                 let manifest = presets::preset(name).kind(ErrorKind::UnknownChain)?;
                 Ok(manifest.to_chain_analytic(PRESET_FLOPS_PER_US))
             }
+            Source::Graph(g) => Ok(g.to_chain()),
             Source::Inline(chain) => Ok(chain.clone()),
             Source::Manifest(dir) => {
                 let manifest = Manifest::load(dir).kind(ErrorKind::InvalidSpec)?;
@@ -195,6 +226,7 @@ impl std::fmt::Display for ChainSpec {
                 write!(f, "profile {family}-{depth} (image {image}, batch {batch})")
             }
             Source::Preset(name) => write!(f, "preset '{name}'"),
+            Source::Graph(g) => write!(f, "{g}"),
             Source::Inline(chain) => write!(f, "inline chain '{}'", chain.name),
             Source::Manifest(dir) => write!(f, "manifest {}", dir.display()),
         }
@@ -401,6 +433,61 @@ mod tests {
         let inline = ChainSpec::inline(profiles::resnet(18, 224, 8));
         assert_eq!(inline.batch_hint(), None);
         assert_eq!(ChainSpec::preset("nope").batch_hint(), None);
+    }
+
+    #[test]
+    fn graph_preset_resolves_to_the_fused_chain() {
+        let spec = ChainSpec::from_json(&Value::parse(r#"{"graph": "residual"}"#).unwrap())
+            .unwrap();
+        let chain = spec.resolve().unwrap();
+        let g = graph::preset("residual").unwrap();
+        assert_eq!(chain, g.to_chain());
+        assert_eq!(chain.len(), 7);
+        assert_eq!(spec.batch_hint(), None);
+        assert!(format!("{spec}").contains("residual"), "{spec}");
+    }
+
+    #[test]
+    fn inline_graph_object_round_trips() {
+        let chain = parse_chain(
+            r#"{"graph": {"name": "d", "input_bytes": 32,
+                "nodes": [
+                  {"uf": 1, "ub": 2, "wa": 100, "wabar": 120},
+                  {"uf": 1, "ub": 2, "wa": 80, "wabar": 90},
+                  {"uf": 1, "ub": 2, "wa": 60, "wabar": 60},
+                  {"name": "loss", "uf": 0.5, "ub": 0.5, "wa": 4, "wabar": 4}
+                ],
+                "edges": [[0,1],[0,2],[1,2],[2,3]]}}"#,
+        )
+        .unwrap();
+        assert_eq!(chain.len(), 4);
+        // the skip value a^1 is carried across stage 2 by fusion
+        assert_eq!(chain.wa(2), 80 + 100);
+    }
+
+    #[test]
+    fn bad_graphs_are_kind_tagged_errors() {
+        for (body, kind) in [
+            (r#"{"graph": "nope"}"#, ErrorKind::UnknownChain),
+            // a cycle
+            (
+                r#"{"graph": {"input_bytes": 1, "nodes": [
+                    {"uf": 1, "ub": 1, "wa": 4, "wabar": 4},
+                    {"uf": 1, "ub": 1, "wa": 4, "wabar": 4}],
+                    "edges": [[0,1],[1,0]]}}"#,
+                ErrorKind::InvalidSpec,
+            ),
+            // a dangling edge
+            (
+                r#"{"graph": {"input_bytes": 1, "nodes": [
+                    {"uf": 1, "ub": 1, "wa": 4, "wabar": 4}],
+                    "edges": [[0,5]]}}"#,
+                ErrorKind::InvalidSpec,
+            ),
+        ] {
+            let err = parse_chain(body).unwrap_err();
+            assert_eq!(err.kind(), kind, "{body}: {err:#}");
+        }
     }
 
     #[test]

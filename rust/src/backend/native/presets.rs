@@ -239,19 +239,49 @@ pub fn layernorm_probe(batch: usize, seq: usize, d: usize) -> Result<Manifest> {
     )
 }
 
-/// Every named preset [`preset`] accepts (service discovery, CLI docs).
-pub const NAMES: &[&str] = &["quickstart", "default", "wide"];
+/// A U-Net-style hourglass over the dense/layernorm kernels: two encoder
+/// stages halve the width, a layernorm bottleneck, two decoder stages
+/// restore it. The *executed* chain is sequential (the native kernels
+/// fuse each stage's work); the matching [`crate::graph`] preset overlays
+/// the encoder→decoder skip edges for the planning-side model.
+pub fn unet(batch: usize, seq: usize, d: usize) -> Result<Manifest> {
+    if d % 4 != 0 {
+        bail!("unet preset: d = {d} must be divisible by 4");
+    }
+    assemble(
+        "unet",
+        vec![
+            dense_sig(batch, seq, d, d / 2, "gelu"),  // encoder 1
+            dense_sig(batch, seq, d / 2, d / 4, "gelu"), // encoder 2
+            layernorm_sig(batch, seq, d / 4),         // bottleneck
+            dense_sig(batch, seq, d / 4, d / 2, "gelu"), // decoder 1
+            dense_sig(batch, seq, d / 2, d, "none"),  // decoder 2
+            loss_sig(batch, seq, d),
+        ],
+    )
+}
 
-/// Named presets, mirroring `python/compile/model.py::PRESETS`.
+/// Every named preset [`preset`] accepts (service discovery, CLI docs).
+pub const NAMES: &[&str] = &["quickstart", "default", "wide", "residual", "unet"];
+
+/// Named presets. The first three mirror `python/compile/model.py::PRESETS`;
+/// `residual` and `unet` are native-only geometries paired with graph
+/// presets ([`crate::graph::preset`]) that add their skip edges.
 ///
 /// * `quickstart` — tiny smoke chain (b2 t16 d64 h4 f128, 1 block).
 /// * `default`    — GPT-style trunk, ~3.2M params (b8 t64 d256 h4 f1024, 4 blocks).
 /// * `wide`       — GPT-2-base geometry (b4 t128 d768 h12 f3072, 6 blocks).
+/// * `residual`   — 2-block transformer sized for end-to-end tests
+///   (b2 t16 d64 h4 f128); its graph preset models the residual skips.
+/// * `unet`       — dense hourglass d→d/2→d/4→d/2→d (b2 t16 d64); its
+///   graph preset models the encoder→decoder skips.
 pub fn preset(name: &str) -> Result<Manifest> {
     match name {
         "quickstart" => transformer(name, 2, 16, 64, 4, 128, 1),
         "default" => transformer(name, 8, 64, 256, 4, 1024, 4),
         "wide" => transformer(name, 4, 128, 768, 12, 3072, 6),
+        "residual" => transformer(name, 2, 16, 64, 4, 128, 2),
+        "unet" => unet(2, 16, 64),
         other => bail!("unknown native preset '{other}' ({})", NAMES.join("/")),
     }
 }
@@ -307,5 +337,20 @@ mod tests {
         let m = layernorm_probe(2, 4, 16).unwrap();
         assert_eq!(m.stages.len(), 3);
         assert_eq!(m.stages[1].kind, "layernorm");
+    }
+
+    #[test]
+    fn residual_and_unet_presets_build() {
+        let r = preset("residual").unwrap();
+        assert_eq!(r.stages.len(), 7); // dense + (attn,mlp)×2 + dense + loss
+        assert_eq!(r.input_shape, vec![2, 16, 64]);
+
+        let u = preset("unet").unwrap();
+        assert_eq!(u.stages.len(), 6);
+        assert_eq!(u.stages[2].kind, "layernorm");
+        // hourglass: encoder outputs shrink, decoder outputs grow back
+        let w_a: Vec<u64> = u.stages.iter().map(|s| u.signatures[&s.sig].w_a).collect();
+        assert!(w_a[0] > w_a[1], "encoder halves width");
+        assert!(w_a[3] > w_a[2] || w_a[4] > w_a[3], "decoder restores width");
     }
 }

@@ -1,0 +1,200 @@
+//! Decomposition: articulation cuts, segment structure, and frontier
+//! fusion of a DAG into an equivalent heterogeneous [`Chain`].
+//!
+//! The key observation (Feng & Huang's graph-division idea adapted to the
+//! Table-1 model): sweep the nodes in topological order and watch the
+//! **frontier** — the set of already-computed outputs still awaiting a
+//! consumer. A topo position where the frontier collapses to the node
+//! just computed is an *articulation cut*: no value crosses it, so any
+//! schedule decomposes there and the chain DP's segment structure is
+//! exact. Between cuts lies an *irreducible core* (capped at
+//! [`MAX_CORE`](super::MAX_CORE) nodes) whose spanning values the fusion
+//! conservatively pins into every chain stage they span: fused stage `j`
+//! carries `ω_a` = the node's own output **plus** every earlier output
+//! whose last consumer lies beyond `j`. Running the ordinary chain DP on
+//! the fused chain therefore yields a schedule that is valid on the graph
+//! and whose true (multi-consumer) footprint never exceeds the fused
+//! chain's accounting — see [`super::sim`].
+//!
+//! On a chain-shaped graph every position is a cut, every frontier is the
+//! singleton `{j}`, and the fused chain equals the node chain verbatim —
+//! so graph solving degenerates to exactly the paper's DP, bit for bit.
+
+use crate::chain::{Chain, Stage};
+
+use super::spec::GraphSpec;
+
+/// Whether a segment is a plain chain link or an irreducible core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// A single node separated from its neighbours by articulation cuts.
+    Linear,
+    /// A maximal run of nodes crossed by at least one spanning value.
+    Core,
+}
+
+/// A maximal run of topo positions `start..=end` between articulation
+/// cuts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    pub start: usize,
+    /// Inclusive.
+    pub end: usize,
+    pub kind: SegmentKind,
+}
+
+impl Segment {
+    pub fn len(&self) -> usize {
+        self.end - self.start + 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl GraphSpec {
+    /// `true` iff no edge (and no pending consumer) spans past topo
+    /// position `j` — the frontier after `j` is exactly `{j}`.
+    pub fn is_cut(&self, j: usize) -> bool {
+        (0..j).all(|u| self.last_use(u) <= j)
+    }
+
+    /// Split the topo order into maximal segments between articulation
+    /// cuts. Single-node segments are [`SegmentKind::Linear`]; anything
+    /// longer is an irreducible [`SegmentKind::Core`]. A chain-shaped
+    /// graph yields `len()` Linear segments.
+    pub fn segments(&self) -> Vec<Segment> {
+        let n = self.len();
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        for j in 0..n {
+            if j + 1 == n || self.is_cut(j) {
+                let kind = if j == start { SegmentKind::Linear } else { SegmentKind::Core };
+                out.push(Segment { start, end: j, kind });
+                start = j + 1;
+            }
+        }
+        out
+    }
+
+    /// The chain of the nodes' **own** sizes in topo order, ignoring
+    /// spanning values — the per-node cost model the graph simulator
+    /// accounts against. For a chain-shaped graph this *is* the graph.
+    pub fn node_chain(&self) -> Chain {
+        let stages = self
+            .nodes()
+            .iter()
+            .map(|nd| {
+                Stage::new(nd.name.clone(), nd.uf, nd.ub, nd.wa, nd.wabar)
+                    .with_overheads(nd.of, nd.ob)
+            })
+            .collect();
+        Chain::new(self.name.clone(), stages, self.input_bytes)
+    }
+
+    /// Frontier fusion: linearize the DAG into a [`Chain`] whose stage `j`
+    /// output is the whole frontier after position `j` (the node's own
+    /// output plus every spanning value). The chain DP on this chain is
+    /// the decomposed graph solver; on chain-shaped graphs the result is
+    /// identical to [`Self::node_chain`].
+    pub fn to_chain(&self) -> Chain {
+        let n = self.len();
+        let mut stages = Vec::with_capacity(n);
+        for (j, nd) in self.nodes().iter().enumerate() {
+            // fused ω_a^j: node j's output + every u < j still live past j
+            let carried: u64 = (0..j)
+                .filter(|&u| self.last_use(u) > j)
+                .map(|u| self.nodes()[u].wa)
+                .sum();
+            let wa = nd.wa + carried;
+            // the tape extra (ā − a) is node-local; the carried values are
+            // plain activations, stored once whether checkpointed or not
+            let wabar = wa + (nd.wabar - nd.wa);
+            stages.push(
+                Stage::new(nd.name.clone(), nd.uf, nd.ub, wa, wabar)
+                    .with_overheads(nd.of, nd.ob),
+            );
+        }
+        Chain::new(self.name.clone(), stages, self.input_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::Node;
+    use super::*;
+
+    fn nd(name: &str, wa: u64) -> Node {
+        Node::new(name, 1.0, 2.0, wa, wa + 50)
+    }
+
+    fn chain4() -> GraphSpec {
+        GraphSpec::new(
+            "c4",
+            vec![nd("a", 100), nd("b", 200), nd("c", 50), nd("loss", 4)],
+            vec![(0, 1), (1, 2), (2, 3)],
+            64,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_graph_fuses_to_its_own_node_chain() {
+        let g = chain4();
+        assert_eq!(g.to_chain(), g.node_chain());
+        let segs = g.segments();
+        assert_eq!(segs.len(), 4);
+        assert!(segs.iter().all(|s| s.kind == SegmentKind::Linear && s.len() == 1));
+    }
+
+    #[test]
+    fn skip_edge_carries_bytes_and_opens_a_core() {
+        // diamond: a feeds both b and c; c also reads b
+        let g = GraphSpec::new(
+            "skip",
+            vec![nd("a", 100), nd("b", 200), nd("c", 50), nd("loss", 4)],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            64,
+        )
+        .unwrap();
+        let fused = g.to_chain();
+        // a's output (100) is pinned across position 1
+        assert_eq!(fused.wa(1), 100);
+        assert_eq!(fused.wa(2), 200 + 100);
+        assert_eq!(fused.wabar(2), 200 + 100 + 50);
+        assert_eq!(fused.wa(3), 50);
+        assert_eq!(fused.wa(4), 4);
+        let segs = g.segments();
+        assert_eq!(
+            segs,
+            vec![
+                Segment { start: 0, end: 2, kind: SegmentKind::Core },
+                Segment { start: 3, end: 3, kind: SegmentKind::Linear },
+            ]
+        );
+        assert!(!g.is_cut(0));
+        assert!(!g.is_cut(1));
+        assert!(g.is_cut(2));
+    }
+
+    #[test]
+    fn fused_sizes_dominate_node_sizes() {
+        let g = GraphSpec::new(
+            "wide",
+            vec![nd("a", 10), nd("b", 20), nd("c", 30), nd("d", 40), nd("loss", 4)],
+            vec![(0, 1), (1, 2), (2, 3), (3, 4), (0, 3), (1, 3)],
+            8,
+        )
+        .unwrap();
+        let fused = g.to_chain();
+        let local = g.node_chain();
+        for l in 1..=g.len() {
+            assert!(fused.wa(l) >= local.wa(l));
+            assert!(fused.wabar(l) >= local.wabar(l));
+            assert_eq!(fused.wabar(l) - fused.wa(l), local.wabar(l) - local.wa(l));
+        }
+        // position 2 carries both a (10) and b (20)
+        assert_eq!(fused.wa(3), 30 + 10 + 20);
+    }
+}

@@ -1,0 +1,203 @@
+//! Beyond chains: checkpointing for DAGs via segment decomposition.
+//!
+//! The paper's Table-1 model and Theorem-1 DP assume a pure sequential
+//! chain; real networks add residual/skip connections and branches. This
+//! module extends the solver to single-entry/single-exit DAGs in three
+//! steps:
+//!
+//! 1. **Spec** ([`GraphSpec`]) — nodes are Table-1 stages, edges are data
+//!    dependencies; construction validates everything (cycles, dangling
+//!    edges, entry/exit structure, core size).
+//! 2. **Decomposition** ([`GraphSpec::segments`] / [`GraphSpec::to_chain`])
+//!    — split the topo order at articulation cuts (positions no value
+//!    crosses) and *fuse* each irreducible core's spanning values into the
+//!    stage sizes, producing an ordinary heterogeneous [`Chain`] the
+//!    existing DP solves. On chain-shaped graphs the fused chain is the
+//!    node chain verbatim, so the solver degenerates to the paper's DP
+//!    exactly.
+//! 3. **Verification** ([`simulate_graph`]) — replay the schedule under
+//!    multi-consumer liveness (a value lives until its *last* consumer,
+//!    via the refcounted [`MemState`](crate::simulator::MemState)): the
+//!    true peak is never above the fused chain's conservative accounting,
+//!    and equals it when the graph is a chain.
+//!
+//! For small graphs (fused length ≤ [`EXHAUSTIVE_MAX`]) the exhaustive
+//! oracle [`exhaustive_optimal`](crate::solver::exhaustive_optimal)
+//! provides a lower bound on the achievable cost, which the randomized
+//! test harness cross-checks on hundreds of seeded DAGs.
+//!
+//! ```
+//! use chainckpt::graph::{solve_graph, GraphSpec, Node};
+//! use chainckpt::solver::Mode;
+//!
+//! // a diamond: a feeds both b and c, c reads both
+//! let g = GraphSpec::new(
+//!     "diamond",
+//!     vec![
+//!         Node::new("a", 1.0, 2.0, 100, 120),
+//!         Node::new("b", 1.0, 2.0, 80, 90),
+//!         Node::new("c", 1.0, 2.0, 60, 60),
+//!         Node::new("loss", 0.5, 0.5, 4, 4),
+//!     ],
+//!     vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+//!     32,
+//! )
+//! .unwrap();
+//! let budget = g.to_chain().store_all_memory() + g.input_bytes;
+//! let sol = solve_graph(&g, budget, 300, Mode::Full).expect("roomy budget is feasible");
+//! assert!(sol.graph_peak <= sol.fused_peak);
+//! assert!(sol.fused_peak <= budget);
+//! // the exhaustive oracle never beats the decomposed DP by more than rounding
+//! let bound = sol.exhaustive_bound.expect("4 fused stages ≤ EXHAUSTIVE_MAX");
+//! assert!(sol.schedule.predicted_time >= bound - 1e-9);
+//! ```
+
+mod decompose;
+mod presets;
+mod sim;
+mod spec;
+
+pub use decompose::{Segment, SegmentKind};
+pub use presets::{preset, NAMES};
+pub use sim::{bind, simulate_graph, Bindings, GraphReport, Mat, MatKind, OpBind};
+pub use spec::{GraphError, GraphSpec, Node, MAX_CORE, MAX_NODES};
+
+use crate::chain::Chain;
+use crate::solver::planner::Planner;
+use crate::solver::{exhaustive_optimal, Mode, Schedule};
+
+/// Largest fused-chain length for which [`solve_graph`] cross-checks the
+/// DP against the exhaustive oracle (whose state space is exponential).
+pub const EXHAUSTIVE_MAX: usize = 8;
+
+/// A solved graph: the fused chain, its segment structure, the DP
+/// schedule over fused stages (stage `ℓ` = topo node `ℓ-1`), and both
+/// peak accountings.
+#[derive(Debug, Clone)]
+pub struct GraphSolution {
+    /// The frontier-fused chain the DP ran on.
+    pub chain: Chain,
+    /// Articulation-cut segment structure of the topo order.
+    pub segments: Vec<Segment>,
+    /// The schedule, in fused-chain stage indices.
+    pub schedule: Schedule,
+    /// Peak bytes under the fused chain's conservative accounting.
+    pub fused_peak: u64,
+    /// Peak bytes under multi-consumer liveness (`≤ fused_peak`).
+    pub graph_peak: u64,
+    /// The exhaustive oracle's true-optimum cost on the fused chain, when
+    /// it is small enough to search (`len ≤` [`EXHAUSTIVE_MAX`]) and
+    /// feasible. A lower bound: the DP's `predicted_time` is never below
+    /// it (beyond discretization rounding).
+    pub exhaustive_bound: Option<f64>,
+}
+
+impl GraphSolution {
+    /// The schedule's ops labelled with the node each one touches.
+    pub fn node_sequence<'g>(&self, g: &'g GraphSpec) -> Vec<(crate::solver::Op, &'g str)> {
+        self.schedule
+            .ops
+            .iter()
+            .map(|&op| (op, g.nodes()[op.stage() as usize - 1].name.as_str()))
+            .collect()
+    }
+}
+
+/// Solve a graph under `memory` bytes: fuse ([`GraphSpec::to_chain`]),
+/// run the chain DP ([`Planner`]), verify the schedule under both the
+/// fused and the multi-consumer accounting, and attach the exhaustive
+/// bound when the fused chain is small enough. `None` if no schedule
+/// fits.
+pub fn solve_graph(g: &GraphSpec, memory: u64, slots: usize, mode: Mode) -> Option<GraphSolution> {
+    let chain = g.to_chain();
+    let planner = Planner::new(&chain, memory, slots, mode);
+    let schedule = planner.schedule_at(memory)?;
+    let bound = (chain.len() <= EXHAUSTIVE_MAX)
+        .then(|| exhaustive_optimal(&chain, memory))
+        .flatten();
+    let rep = simulate_graph(g, &schedule)
+        .unwrap_or_else(|e| panic!("DP emitted an invalid graph schedule: {e}"));
+    assert!(
+        rep.graph_peak <= rep.fused.peak_bytes,
+        "multi-consumer peak {} above the fused bound {}",
+        rep.graph_peak,
+        rep.fused.peak_bytes
+    );
+    Some(GraphSolution {
+        segments: g.segments(),
+        chain,
+        schedule,
+        fused_peak: rep.fused.peak_bytes,
+        graph_peak: rep.graph_peak,
+        exhaustive_bound: bound,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> GraphSpec {
+        GraphSpec::new(
+            "diamond",
+            vec![
+                Node::new("a", 1.0, 2.0, 100, 120),
+                Node::new("b", 1.0, 2.0, 80, 90),
+                Node::new("c", 1.0, 2.0, 60, 60),
+                Node::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            32,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_shaped_graph_solves_exactly_like_the_chain_dp() {
+        let g = GraphSpec::new(
+            "c",
+            vec![
+                Node::new("a", 1.0, 2.0, 100, 250),
+                Node::new("b", 3.0, 4.0, 50, 60),
+                Node::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            vec![(0, 1), (1, 2)],
+            64,
+        )
+        .unwrap();
+        let chain = g.node_chain();
+        let m = chain.store_all_memory() / 2 + chain.wa0;
+        let sol = solve_graph(&g, m, 300, Mode::Full);
+        let plain = crate::solver::solve(&chain, m, 300, Mode::Full);
+        match (sol, plain) {
+            (Some(s), Some(p)) => {
+                assert_eq!(s.schedule.ops, p.ops);
+                assert_eq!(s.schedule.predicted_time.to_bits(), p.predicted_time.to_bits());
+                assert_eq!(s.graph_peak, s.fused_peak);
+            }
+            (None, None) => {}
+            (s, p) => panic!("feasibility mismatch: graph={} chain={}", s.is_some(), p.is_some()),
+        }
+    }
+
+    #[test]
+    fn diamond_solution_carries_both_accountings() {
+        let g = diamond();
+        let budget = g.to_chain().store_all_memory() + g.input_bytes;
+        let sol = solve_graph(&g, budget, 300, Mode::Full).unwrap();
+        assert!(sol.graph_peak < sol.fused_peak, "skip values billed once");
+        assert_eq!(sol.segments.len(), 2);
+        let bound = sol.exhaustive_bound.unwrap();
+        assert!(sol.schedule.predicted_time >= bound - 1e-9);
+        // node labels line up with fused stages
+        let seq = sol.node_sequence(&g);
+        assert_eq!(seq.len(), sol.schedule.ops.len());
+        assert!(seq.iter().any(|(_, name)| *name == "b"));
+    }
+
+    #[test]
+    fn starved_graph_is_infeasible() {
+        let g = diamond();
+        assert!(solve_graph(&g, 64, 300, Mode::Full).is_none());
+    }
+}

@@ -1,0 +1,111 @@
+//! Graph presets: the native backend's `residual` and `unet` manifests
+//! with their skip edges made explicit.
+//!
+//! The native executor runs strictly sequential chains — each kernel
+//! absorbs its block's residual add — so the *executed* model is the
+//! fused chain. These presets are the planning-side view: the same
+//! per-stage costs ([`crate::backend::native::presets`] geometry run
+//! through the analytic FLOP model), plus the data-dependency edges the
+//! sequential chain hides. Solving the graph preset and executing the
+//! matching native preset therefore agree on cost while the graph side
+//! additionally knows which values fan out.
+
+use crate::api::PRESET_FLOPS_PER_US;
+use crate::backend::native::presets as native;
+use crate::chain::Chain;
+
+use super::spec::{GraphSpec, Node};
+
+/// Every named graph preset [`preset`] accepts.
+pub const NAMES: &[&str] = &["residual", "unet"];
+
+/// Named graph presets, or `None` for unknown names.
+///
+/// * `residual` — the native `residual` transformer (2 blocks) with a
+///   skip edge around every attn/mlp stage: edges `(i-1, i+1)` for each
+///   block stage, chaining into one 6-node irreducible core.
+/// * `unet` — the native `unet` hourglass with encoder→decoder skips
+///   `(enc1, dec2)` and `(enc2, dec1)`: a 5-node core plus the loss.
+pub fn preset(name: &str) -> Option<GraphSpec> {
+    let manifest = native::preset(name).ok()?;
+    let chain = manifest.to_chain_analytic(PRESET_FLOPS_PER_US);
+    let n = chain.len();
+    let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+    match name {
+        "residual" => {
+            // stages: dense, [attn, mlp]×2, dense, loss — skip around
+            // every block stage (the residual stream)
+            for i in 1..=n - 3 {
+                edges.push((i - 1, i + 1));
+            }
+        }
+        "unet" => {
+            // stages: enc1, enc2, ln, dec1, dec2, loss — concat skips
+            edges.push((0, 4));
+            edges.push((1, 3));
+        }
+        _ => return None,
+    }
+    Some(from_chain(name, &chain, edges))
+}
+
+/// Build a graph from a chain's per-stage costs and an explicit edge set.
+fn from_chain(name: &str, chain: &Chain, edges: Vec<(usize, usize)>) -> GraphSpec {
+    let nodes: Vec<Node> = (1..=chain.len())
+        .map(|l| {
+            Node::new(chain.stages[l - 1].name.clone(), chain.uf(l), chain.ub(l), chain.wa(l), chain.wabar(l))
+                .with_overheads(chain.of(l), chain.ob(l))
+        })
+        .collect();
+    GraphSpec::new(name, nodes, edges, chain.wa0)
+        .expect("preset geometry is a valid DAG")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::decompose::SegmentKind;
+    use super::*;
+
+    #[test]
+    fn residual_preset_is_one_core_plus_loss() {
+        let g = preset("residual").unwrap();
+        assert_eq!(g.len(), 7);
+        assert!(!g.is_chain());
+        let segs = g.segments();
+        assert_eq!(segs[0].kind, SegmentKind::Core);
+        assert_eq!(segs[0].len(), 6); // dense through output head
+        assert_eq!(segs.last().unwrap().kind, SegmentKind::Linear);
+        // node costs match the native chain verbatim
+        let native_chain =
+            native::preset("residual").unwrap().to_chain_analytic(PRESET_FLOPS_PER_US);
+        assert_eq!(g.node_chain().stages, native_chain.stages);
+        assert_eq!(g.input_bytes, native_chain.wa0);
+    }
+
+    #[test]
+    fn unet_preset_has_encoder_decoder_skips() {
+        let g = preset("unet").unwrap();
+        assert_eq!(g.len(), 6);
+        assert!(g.edges().contains(&(0, 4)));
+        assert!(g.edges().contains(&(1, 3)));
+        let segs = g.segments();
+        assert_eq!(segs[0], super::super::decompose::Segment {
+            start: 0,
+            end: 4,
+            kind: SegmentKind::Core,
+        });
+        // the fused chain pins the skip sources across the hourglass
+        let fused = g.to_chain();
+        let local = g.node_chain();
+        assert!(fused.wa(3) > local.wa(3), "bottleneck carries both skips");
+    }
+
+    #[test]
+    fn unknown_names_are_none() {
+        assert!(preset("quickstart").is_none()); // chain preset, not a graph
+        assert!(preset("nope").is_none());
+        for name in NAMES {
+            assert!(preset(name).is_some(), "{name}");
+        }
+    }
+}

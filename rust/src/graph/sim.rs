@@ -1,0 +1,402 @@
+//! Multi-consumer replay: verify a fused-chain schedule against the
+//! graph's true value lifetimes.
+//!
+//! The fused chain ([`GraphSpec::to_chain`]) charges every spanning value
+//! into each stage it crosses, so its accounting is conservative: a value
+//! carried across `k` resident checkpoints is billed `k` times. The graph
+//! replay here bills it once, from the op that materializes it to its
+//! **last consumer** — the multi-consumer generalization of Table 1's
+//! replace-on-read rule, driven through the refcounted
+//! [`MemState`](crate::simulator::MemState) (`store_a_counted` /
+//! `consume_a`).
+//!
+//! Two passes:
+//! 1. **Binding** — walk the (already fused-validated) op sequence and
+//!    bind every read to the latest materialization of the value it
+//!    names, counting consuming reads per materialization. Gradients
+//!    follow the backward sweep: `δ` for a node is born at its first
+//!    executed successor-backward and consumed by the node's own `B`.
+//! 2. **Accounting** — replay the sequence against the node-local sizes
+//!    ([`GraphSpec::node_chain`]), storing each activation with its true
+//!    fan-out and freeing it exactly at its last read.
+//!
+//! On a chain-shaped graph every value has one consumer and the replay's
+//! peak equals the chain simulator's byte for byte; with skip edges it is
+//! never above the fused chain's peak (each live value is covered by at
+//! least one resident fused checkpoint that the fused accounting bills
+//! in full).
+//!
+//! `DropA` (never emitted by the solvers) acts node-locally: it frees the
+//! named node's standalone output if resident, mirroring the chain op.
+
+use crate::simulator::{simulate, MemState, SimError, SimReport};
+use crate::solver::{Op, Schedule};
+
+use super::spec::GraphSpec;
+
+/// Which value a materialization holds. Node indices are topo positions
+/// (`0`-based; the fused chain's stage `ℓ` is node `ℓ-1`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatKind {
+    /// The graph input `a^0`.
+    Input,
+    /// Standalone output of a node.
+    A(usize),
+    /// Full tape `ā` of a node.
+    Abar(usize),
+    /// Gradient w.r.t. a node's output (the exit node's is the seed).
+    Delta(usize),
+    /// Gradient w.r.t. the graph input (`δ^0`, the walk's result).
+    DeltaInput,
+}
+
+/// One materialization: a value brought into memory by one op (or live at
+/// entry) and freed at a known point.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub kind: MatKind,
+    pub bytes: u64,
+    /// Op index that created it; `None` for entry-live values (the input
+    /// and the `δ` seed).
+    pub birth: Option<usize>,
+    /// Op index at which it is freed; `None` if still live at exit.
+    pub death: Option<usize>,
+    /// Consuming reads bound to this materialization (`A`/`Input` kinds;
+    /// tape and gradient lifetimes are fixed by their `B` ops instead).
+    pub reads: u32,
+}
+
+/// Read/write/free sets of one op, as materialization ids — the graph
+/// analogue of the chain lowering's step table.
+#[derive(Debug, Clone, Default)]
+pub struct OpBind {
+    pub reads: Vec<usize>,
+    pub writes: Vec<usize>,
+    pub frees: Vec<usize>,
+}
+
+/// Peak verdicts of both accountings.
+#[derive(Debug, Clone)]
+pub struct GraphReport {
+    /// The fused chain's report (validity, makespan, conservative peak).
+    pub fused: SimReport,
+    /// Peak bytes under multi-consumer liveness — `≤ fused.peak_bytes`,
+    /// equal on chain-shaped graphs.
+    pub graph_peak: u64,
+}
+
+/// A fused-chain schedule fully bound onto the graph: every value
+/// materialization with its birth/death, and per-op read/write/free
+/// sets. This is what [`crate::plan::lower_graph`] turns into slot IR.
+#[derive(Debug, Clone)]
+pub struct Bindings {
+    pub mats: Vec<Mat>,
+    /// One entry per schedule op, same order.
+    pub ops: Vec<OpBind>,
+    /// Mat id of the graph input.
+    pub input: usize,
+    /// Mat id of the `δ` seed (gradient of the exit node's output).
+    pub seed: usize,
+    /// Mat id of `δ^0`, produced by the entry node's backward.
+    pub delta0: usize,
+    pub report: GraphReport,
+}
+
+/// Replay `schedule` (an op sequence over the fused chain's stages)
+/// against the graph: first validate and account it on the fused chain,
+/// then bind and re-account it under multi-consumer liveness. Errors are
+/// the fused chain simulator's.
+pub fn simulate_graph(g: &GraphSpec, schedule: &Schedule) -> Result<GraphReport, SimError> {
+    bind(g, schedule).map(|b| b.report)
+}
+
+/// Full two-pass binding (see [module docs](self)). Intended for
+/// solver-emitted (persistent) schedules; hand-written sequences that
+/// redundantly store `a^ℓ` while `ā^ℓ` is resident bind their late reads
+/// to the standalone copy and account it until then.
+pub fn bind(g: &GraphSpec, schedule: &Schedule) -> Result<Bindings, SimError> {
+    let fused = simulate(&g.to_chain(), schedule)?;
+    let n = g.len();
+    let node_chain = g.node_chain();
+
+    let mut mats: Vec<Mat> = Vec::new();
+    let mut ops: Vec<OpBind> = vec![OpBind::default(); schedule.ops.len()];
+    let entry = |kind, bytes| Mat { kind, bytes, birth: None, death: None, reads: 0 };
+    let input = 0usize;
+    mats.push(entry(MatKind::Input, g.input_bytes));
+    let seed = 1usize;
+    mats.push(entry(MatKind::Delta(n - 1), node_chain.wdelta(n)));
+
+    // ---- pass 1: bind reads to the latest materialization ----
+    // per node: latest A or Abar mat of its output (fused validity plus
+    // the decreasing-backward invariant guarantee any read hits the
+    // generation that is still, or again, live)
+    let mut latest: Vec<Option<usize>> = vec![None; n];
+    // gradient residency in chain indexing: 0 = δ^0, u+1 = node u
+    let mut cur_delta: Vec<Option<usize>> = vec![None; n + 1];
+    cur_delta[n] = Some(seed);
+
+    // resolve the activations node j0 reads (the graph input for the
+    // entry node), count consuming reads, and record them on the op
+    fn read_inputs(
+        g: &GraphSpec,
+        latest: &[Option<usize>],
+        input: usize,
+        j0: usize,
+        i: usize,
+        mats: &mut [Mat],
+        ops: &mut [OpBind],
+    ) -> Result<(), SimError> {
+        let resolved = if j0 == 0 {
+            vec![input]
+        } else {
+            g.preds(j0)
+                .iter()
+                .map(|&u| {
+                    latest[u].ok_or(SimError::MissingActivation { op_index: i, l: u as u32 + 1 })
+                })
+                .collect::<Result<Vec<_>, _>>()?
+        };
+        for id in resolved {
+            if matches!(mats[id].kind, MatKind::A(_) | MatKind::Input) {
+                mats[id].reads += 1;
+            }
+            ops[i].reads.push(id);
+        }
+        Ok(())
+    }
+
+    for (i, &op) in schedule.ops.iter().enumerate() {
+        let l = op.stage() as usize;
+        let j0 = l - 1;
+        match op {
+            Op::FwdNoSave(_) | Op::FwdCk(_) | Op::FwdAll(_) => {
+                read_inputs(g, &latest, input, j0, i, &mut mats, &mut ops)?;
+                let (kind, bytes) = if matches!(op, Op::FwdAll(_)) {
+                    (MatKind::Abar(j0), node_chain.wabar(l))
+                } else {
+                    (MatKind::A(j0), node_chain.wa(l))
+                };
+                let id = mats.len();
+                mats.push(Mat { kind, bytes, birth: Some(i), death: None, reads: 0 });
+                ops[i].writes.push(id);
+                latest[j0] = Some(id);
+            }
+            Op::Bwd(_) => {
+                let d = cur_delta[l].ok_or(SimError::MissingBackwardInput {
+                    op_index: i,
+                    l: l as u32,
+                    what: "δ",
+                })?;
+                ops[i].reads.push(d);
+                let abar = latest[j0]
+                    .filter(|&m| matches!(mats[m].kind, MatKind::Abar(_)))
+                    .ok_or(SimError::MissingBackwardInput { op_index: i, l: l as u32, what: "ā" })?;
+                ops[i].reads.push(abar);
+                read_inputs(g, &latest, input, j0, i, &mut mats, &mut ops)?;
+                cur_delta[l] = None;
+                // gradient contributions: one δ per predecessor output
+                // (δ^0 for the entry), born at its first contributor
+                let grads: Vec<(usize, MatKind, u64)> = if j0 == 0 {
+                    vec![(0, MatKind::DeltaInput, g.input_bytes)]
+                } else {
+                    g.preds(j0)
+                        .iter()
+                        .map(|&u| (u + 1, MatKind::Delta(u), node_chain.wdelta(u + 1)))
+                        .collect()
+                };
+                for (slot, kind, bytes) in grads {
+                    if cur_delta[slot].is_none() {
+                        let id = mats.len();
+                        mats.push(Mat { kind, bytes, birth: Some(i), death: None, reads: 0 });
+                        cur_delta[slot] = Some(id);
+                        ops[i].writes.push(id);
+                    }
+                }
+            }
+            Op::DropA(_) => {} // resolved in pass 2 (needs residency)
+        }
+    }
+    let delta0 = cur_delta[0].expect("fused simulate checked completeness");
+
+    // ---- pass 2: refcounted accounting over node-local sizes ----
+    let mut st = MemState::initial(&node_chain);
+    st.set_consumers(0, mats[input].reads);
+    // currently-resident standalone A mat per node (for DropA targets)
+    let mut live_a: Vec<Option<usize>> = vec![None; n];
+    let slot_of = |kind: MatKind| match kind {
+        MatKind::Input => 0,
+        MatKind::A(u) => u + 1,
+        _ => unreachable!("only activations have a-slots"),
+    };
+    for (i, &op) in schedule.ops.iter().enumerate() {
+        let l = op.stage() as usize;
+        let j0 = l - 1;
+        // consuming reads decrement; the last one frees (recorded below)
+        macro_rules! consume_reads {
+            () => {
+                for r in 0..ops[i].reads.len() {
+                    let id = ops[i].reads[r];
+                    let kind = mats[id].kind;
+                    if matches!(kind, MatKind::A(_) | MatKind::Input) && st.consume_a(slot_of(kind))
+                    {
+                        mats[id].death = Some(i);
+                        ops[i].frees.push(id);
+                        if let MatKind::A(u) = kind {
+                            live_a[u] = None;
+                        }
+                    }
+                }
+            };
+        }
+        match op {
+            Op::FwdNoSave(_) | Op::FwdCk(_) => {
+                st.touch_peak(node_chain.wa(l) + node_chain.of(l));
+                let id = ops[i].writes[0];
+                st.store_a_counted(l, mats[id].reads)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                live_a[j0] = Some(id);
+                consume_reads!();
+            }
+            Op::FwdAll(_) => {
+                st.touch_peak(node_chain.wabar(l) + node_chain.of(l));
+                st.store_abar(l)
+                    .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                consume_reads!();
+            }
+            Op::Bwd(_) => {
+                st.touch_peak(node_chain.ob(l));
+                // frees mirror the chain transition: δ^ℓ and ā^ℓ retire here
+                for r in 0..ops[i].reads.len() {
+                    let id = ops[i].reads[r];
+                    match mats[id].kind {
+                        MatKind::Delta(u) if u == j0 => {
+                            st.free_delta(l);
+                            mats[id].death = Some(i);
+                            ops[i].frees.push(id);
+                        }
+                        MatKind::Abar(_) => {
+                            st.free_abar(l);
+                            mats[id].death = Some(i);
+                            ops[i].frees.push(id);
+                        }
+                        _ => {}
+                    }
+                }
+                consume_reads!();
+                for w in 0..ops[i].writes.len() {
+                    let id = ops[i].writes[w];
+                    let slot = match mats[id].kind {
+                        MatKind::DeltaInput => 0,
+                        MatKind::Delta(u) => u + 1,
+                        _ => unreachable!("backward writes are gradients"),
+                    };
+                    st.store_delta(slot)
+                        .map_err(|item| SimError::DuplicateStore { op_index: i, item })?;
+                }
+            }
+            Op::DropA(_) => {
+                if st.free_a_if_standalone(l) {
+                    let id = live_a[j0].take().expect("resident a tracked");
+                    mats[id].death = Some(i);
+                    ops[i].frees.push(id);
+                }
+            }
+        }
+    }
+    let graph_peak = st.peak;
+    debug_assert!(
+        graph_peak <= fused.peak_bytes,
+        "multi-consumer accounting above the fused bound: {graph_peak} > {}",
+        fused.peak_bytes
+    );
+    Ok(Bindings {
+        mats,
+        ops,
+        input,
+        seed,
+        delta0,
+        report: GraphReport { fused, graph_peak },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spec::{GraphSpec, Node};
+    use super::*;
+    use crate::solver::store_all_schedule;
+
+    fn nd(name: &str, wa: u64, wabar: u64) -> Node {
+        Node::new(name, 1.0, 2.0, wa, wabar)
+    }
+
+    fn diamond() -> GraphSpec {
+        GraphSpec::new(
+            "diamond",
+            vec![nd("a", 100, 120), nd("b", 80, 90), nd("c", 60, 60), nd("loss", 4, 4)],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            32,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_graph_replay_matches_chain_simulator_exactly() {
+        let g = GraphSpec::new(
+            "c",
+            vec![nd("a", 100, 120), nd("b", 80, 90), nd("loss", 4, 4)],
+            vec![(0, 1), (1, 2)],
+            32,
+        )
+        .unwrap();
+        let sched = store_all_schedule(&g.node_chain());
+        let rep = simulate_graph(&g, &sched).unwrap();
+        assert_eq!(rep.graph_peak, rep.fused.peak_bytes);
+    }
+
+    #[test]
+    fn skip_connection_is_billed_once_not_per_checkpoint() {
+        let g = diamond();
+        let sched = store_all_schedule(&g.to_chain());
+        let rep = simulate_graph(&g, &sched).unwrap();
+        // the fused chain carries a's 100 bytes inside both ā^2 and ā^3;
+        // the graph replay holds the single materialization
+        assert!(
+            rep.graph_peak < rep.fused.peak_bytes,
+            "graph {} vs fused {}",
+            rep.graph_peak,
+            rep.fused.peak_bytes
+        );
+    }
+
+    #[test]
+    fn bindings_track_births_deaths_and_fanout() {
+        let g = diamond();
+        let sched = store_all_schedule(&g.to_chain());
+        let b = bind(&g, &sched).unwrap();
+        // node a's tape is read by b, c, and B^1's input resolution…
+        let a_tape = b
+            .mats
+            .iter()
+            .find(|m| m.kind == MatKind::Abar(0))
+            .expect("store-all tapes a");
+        // …and freed exactly at B^1 (the last op)
+        assert_eq!(a_tape.death, Some(sched.ops.len() - 1));
+        // δ for node a is born at its first executed successor backward
+        // (B^3, node c) and consumed by B^1
+        let delta_a = b.mats.iter().find(|m| m.kind == MatKind::Delta(0)).unwrap();
+        let b3 = sched.ops.iter().position(|o| *o == crate::solver::Op::Bwd(3)).unwrap();
+        let b1 = sched.ops.iter().position(|o| *o == crate::solver::Op::Bwd(1)).unwrap();
+        assert_eq!(delta_a.birth, Some(b3));
+        assert_eq!(delta_a.death, Some(b1));
+        // δ^0 exists and is live at exit
+        assert!(b.mats[b.delta0].death.is_none());
+        assert_eq!(b.mats[b.delta0].kind, MatKind::DeltaInput);
+        // every op's frees point at mats that die there
+        for (i, ob) in b.ops.iter().enumerate() {
+            for &id in &ob.frees {
+                assert_eq!(b.mats[id].death, Some(i));
+            }
+        }
+    }
+}

@@ -1,0 +1,521 @@
+//! [`GraphSpec`] — a validated DAG of Table-1 stages.
+//!
+//! Nodes carry the same cost model as chain [`Stage`]s (forward/backward
+//! times, activation and tape sizes, transient overheads); edges are data
+//! dependencies. Construction is the one validation point: dangling
+//! edges, self-loops, cycles, multiple entries/exits, disconnected nodes
+//! and oversize graphs are all rejected with a structured [`GraphError`]
+//! before a spec exists — so every `GraphSpec` the rest of the stack sees
+//! is solvable. Nodes are stored in a deterministic topological order
+//! (stable across re-parses of the same graph), which is also the
+//! linearization order the decomposition pass sweeps.
+
+use crate::util::json::Value;
+
+/// Node-count cap, matching the inline-chain cap of the facade
+/// ([`crate::api::MAX_STAGES`]): bounds DP time for untrusted wire specs.
+pub const MAX_NODES: usize = 2048;
+
+/// Largest irreducible core (a maximal run of topo positions not
+/// separated by an articulation cut) the decomposition accepts. Beyond
+/// this the exhaustive cross-check oracle is unavailable and the fused
+/// stage sizes grow multiplicatively, so the spec is rejected up front.
+pub const MAX_CORE: usize = 8;
+
+/// One stage of the DAG, with the chain cost model's per-stage fields.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub name: String,
+    /// Forward / backward durations (`u_f`, `u_b`).
+    pub uf: f64,
+    pub ub: f64,
+    /// Output activation bytes `ω_a` and full-tape bytes `ω_ā ≥ ω_a`.
+    pub wa: u64,
+    pub wabar: u64,
+    /// Transient working-set overheads (`o_f`, `o_b`).
+    pub of: u64,
+    pub ob: u64,
+}
+
+impl Node {
+    pub fn new(name: impl Into<String>, uf: f64, ub: f64, wa: u64, wabar: u64) -> Node {
+        Node { name: name.into(), uf, ub, wa, wabar, of: 0, ob: 0 }
+    }
+
+    pub fn with_overheads(mut self, of: u64, ob: u64) -> Node {
+        self.of = of;
+        self.ob = ob;
+        self
+    }
+}
+
+/// Why a graph failed validation. Every variant maps to a kind-tagged
+/// `InvalidSpec` facade error (HTTP 422, CLI exit 2) at the API boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// The JSON wire form was structurally wrong (missing/mistyped field).
+    Malformed(String),
+    Empty,
+    /// More than [`MAX_NODES`] nodes.
+    TooManyNodes(usize),
+    /// An edge endpoint named a node index outside `0..len`.
+    DanglingEdge { from: usize, to: usize },
+    SelfLoop(usize),
+    /// The edge relation has a cycle through the named node.
+    Cycle(String),
+    /// Not exactly one entry node (in-degree 0) — the graph input feeds
+    /// exactly one node.
+    MultipleEntries(Vec<String>),
+    /// Not exactly one exit node (out-degree 0) — the loss.
+    MultipleExits(Vec<String>),
+    /// A node neither reaches the exit nor is reached from the entry.
+    Disconnected(String),
+    /// A node declared `ω_ā < ω_a` (the tape must contain the output).
+    BadTape { node: String, wa: u64, wabar: u64 },
+    /// An irreducible core spans more than [`MAX_CORE`] nodes.
+    CoreTooLarge { start: String, len: usize },
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Malformed(m) => write!(f, "malformed graph spec: {m}"),
+            GraphError::Empty => write!(f, "graph has no nodes"),
+            GraphError::TooManyNodes(n) => {
+                write!(f, "{n} nodes exceed the {MAX_NODES}-node cap")
+            }
+            GraphError::DanglingEdge { from, to } => {
+                write!(f, "edge [{from}, {to}] names a node outside the graph")
+            }
+            GraphError::SelfLoop(i) => write!(f, "node {i} has a self-loop"),
+            GraphError::Cycle(n) => write!(f, "graph has a cycle through node '{n}'"),
+            GraphError::MultipleEntries(ns) => {
+                write!(f, "graph needs exactly one entry node, found {}: {}", ns.len(), ns.join(", "))
+            }
+            GraphError::MultipleExits(ns) => {
+                write!(f, "graph needs exactly one exit (loss) node, found {}: {}", ns.len(), ns.join(", "))
+            }
+            GraphError::Disconnected(n) => {
+                write!(f, "node '{n}' is not on any entry→exit path")
+            }
+            GraphError::BadTape { node, wa, wabar } => {
+                write!(f, "node '{node}': wabar = {wabar} < wa = {wa} (ā must include a)")
+            }
+            GraphError::CoreTooLarge { start, len } => write!(
+                f,
+                "irreducible core starting at '{start}' spans {len} nodes \
+                 (max {MAX_CORE}; add an articulation point or pre-fuse the block)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// A validated DAG (see [module docs](self)). Nodes are in topological
+/// order; node `0` is the entry (reads the graph input), the last node
+/// is the exit (the loss).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphSpec {
+    pub name: String,
+    /// Bytes of the graph input `a^0`, consumed by the entry node.
+    pub input_bytes: u64,
+    nodes: Vec<Node>,
+    /// Edges in topo indices, sorted and deduplicated.
+    edges: Vec<(usize, usize)>,
+    preds: Vec<Vec<usize>>,
+    succs: Vec<Vec<usize>>,
+}
+
+impl GraphSpec {
+    /// Validate and build. `edges` are `(from, to)` indices into `nodes`
+    /// (any order — construction topo-sorts, deterministically).
+    pub fn new(
+        name: impl Into<String>,
+        nodes: Vec<Node>,
+        edges: Vec<(usize, usize)>,
+        input_bytes: u64,
+    ) -> Result<GraphSpec, GraphError> {
+        let n = nodes.len();
+        if n == 0 {
+            return Err(GraphError::Empty);
+        }
+        if n > MAX_NODES {
+            return Err(GraphError::TooManyNodes(n));
+        }
+        for node in &nodes {
+            if node.wabar < node.wa {
+                return Err(GraphError::BadTape {
+                    node: node.name.clone(),
+                    wa: node.wa,
+                    wabar: node.wabar,
+                });
+            }
+        }
+        let mut edge_set: Vec<(usize, usize)> = Vec::with_capacity(edges.len());
+        for &(from, to) in &edges {
+            if from >= n || to >= n {
+                return Err(GraphError::DanglingEdge { from, to });
+            }
+            if from == to {
+                return Err(GraphError::SelfLoop(from));
+            }
+            edge_set.push((from, to));
+        }
+        edge_set.sort_unstable();
+        edge_set.dedup();
+
+        // Deterministic Kahn topo sort: among ready nodes, lowest
+        // original index first — the same input graph always linearizes
+        // the same way.
+        let mut indeg = vec![0usize; n];
+        let mut succs0: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(f, t) in &edge_set {
+            indeg[t] += 1;
+            succs0[f].push(t);
+        }
+        let mut ready: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| std::cmp::Reverse(i))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(std::cmp::Reverse(i)) = ready.pop() {
+            order.push(i);
+            for &s in &succs0[i] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.push(std::cmp::Reverse(s));
+                }
+            }
+        }
+        if order.len() < n {
+            let stuck = indeg.iter().position(|&d| d > 0).expect("cycle leaves indegree");
+            return Err(GraphError::Cycle(nodes[stuck].name.clone()));
+        }
+
+        // Renumber into topo space.
+        let mut pos = vec![0usize; n];
+        for (p, &i) in order.iter().enumerate() {
+            pos[i] = p;
+        }
+        let nodes: Vec<Node> = order.iter().map(|&i| nodes[i].clone()).collect();
+        let mut edges: Vec<(usize, usize)> =
+            edge_set.iter().map(|&(f, t)| (pos[f], pos[t])).collect();
+        edges.sort_unstable();
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(f, t) in &edges {
+            preds[t].push(f);
+            succs[f].push(t);
+        }
+
+        // Exactly one entry and one exit; everything on an entry→exit path.
+        let entries: Vec<String> = (0..n)
+            .filter(|&i| preds[i].is_empty())
+            .map(|i| nodes[i].name.clone())
+            .collect();
+        if entries.len() != 1 {
+            return Err(GraphError::MultipleEntries(entries));
+        }
+        let exits: Vec<String> = (0..n)
+            .filter(|&i| succs[i].is_empty())
+            .map(|i| nodes[i].name.clone())
+            .collect();
+        if exits.len() != 1 && n > 1 {
+            return Err(GraphError::MultipleExits(exits));
+        }
+        // with one entry and one exit, any disconnected node would be a
+        // second entry or exit — but check reachability anyway to reject
+        // separate components that happen to pair up
+        let mut reach = vec![false; n];
+        let mut stack = vec![0usize];
+        reach[0] = true;
+        while let Some(i) = stack.pop() {
+            for &s in &succs[i] {
+                if !reach[s] {
+                    reach[s] = true;
+                    stack.push(s);
+                }
+            }
+        }
+        if let Some(i) = reach.iter().position(|&r| !r) {
+            return Err(GraphError::Disconnected(nodes[i].name.clone()));
+        }
+
+        let g = GraphSpec { name: name.into(), input_bytes, nodes, edges, preds, succs };
+        // every accepted spec must decompose within the core cap
+        for seg in g.segments() {
+            if seg.len() > MAX_CORE {
+                return Err(GraphError::CoreTooLarge {
+                    start: g.nodes[seg.start].name.clone(),
+                    len: seg.len(),
+                });
+            }
+        }
+        Ok(g)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Predecessors of node `i` in topo indices (sorted ascending).
+    pub fn preds(&self, i: usize) -> &[usize] {
+        &self.preds[i]
+    }
+
+    /// Successors of node `i` in topo indices (sorted ascending).
+    pub fn succs(&self, i: usize) -> &[usize] {
+        &self.succs[i]
+    }
+
+    /// Topo position of the last consumer of node `i`'s output, or `i`
+    /// itself for the exit node.
+    pub fn last_use(&self, i: usize) -> usize {
+        self.succs[i].last().copied().unwrap_or(i)
+    }
+
+    /// `true` iff the edge set is exactly the chain `0→1→…→n-1`.
+    pub fn is_chain(&self) -> bool {
+        self.edges.len() == self.nodes.len() - 1
+            && self.edges.iter().enumerate().all(|(i, &e)| e == (i, i + 1))
+    }
+
+    /// Parse the wire form:
+    ///
+    /// ```json
+    /// {"name": "g", "input_bytes": 512,
+    ///  "nodes": [{"name": "s1", "uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 250}, …],
+    ///  "edges": [[0, 1], [0, 2], [1, 2]]}
+    /// ```
+    ///
+    /// `of`/`ob` are optional per node (default 0). Structure errors come
+    /// back as [`GraphError::Malformed`]; graph-shape errors as their
+    /// specific variants.
+    pub fn from_json(v: &Value) -> Result<GraphSpec, GraphError> {
+        let mal = |m: String| GraphError::Malformed(m);
+        let name = v.get("name").and_then(|s| s.as_str()).unwrap_or("graph").to_string();
+        let input_bytes = v
+            .get("input_bytes")
+            .ok_or_else(|| mal("missing 'input_bytes' (bytes of the graph input)".into()))?
+            .as_u64()
+            .ok_or_else(|| mal("'input_bytes' must be a non-negative integer".into()))?;
+        let nodes_json = v
+            .get("nodes")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| mal("'nodes' must be an array".into()))?;
+        let mut nodes = Vec::with_capacity(nodes_json.len());
+        for (i, nd) in nodes_json.iter().enumerate() {
+            let num = |key: &str| -> Result<f64, GraphError> {
+                let x = nd
+                    .get(key)
+                    .ok_or_else(|| mal(format!("node {i}: missing '{key}'")))?
+                    .as_f64()
+                    .ok_or_else(|| mal(format!("node {i}: '{key}' must be a number")))?;
+                if !x.is_finite() || x < 0.0 {
+                    return Err(mal(format!("node {i}: '{key}' = {x} must be finite and ≥ 0")));
+                }
+                Ok(x)
+            };
+            let bytes = |key: &str, required: bool| -> Result<u64, GraphError> {
+                match nd.get(key) {
+                    None if !required => Ok(0),
+                    None => Err(mal(format!("node {i}: missing '{key}'"))),
+                    Some(x) => x
+                        .as_u64()
+                        .ok_or_else(|| mal(format!("node {i}: '{key}' must be a non-negative integer"))),
+                }
+            };
+            let name = nd
+                .get("name")
+                .and_then(|s| s.as_str())
+                .map(String::from)
+                .unwrap_or_else(|| format!("n{i}"));
+            nodes.push(
+                Node::new(name, num("uf")?, num("ub")?, bytes("wa", true)?, bytes("wabar", true)?)
+                    .with_overheads(bytes("of", false)?, bytes("ob", false)?),
+            );
+        }
+        let edges_json = v
+            .get("edges")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| mal("'edges' must be an array of [from, to] pairs".into()))?;
+        let mut edges = Vec::with_capacity(edges_json.len());
+        for (i, e) in edges_json.iter().enumerate() {
+            let pair = e
+                .as_arr()
+                .filter(|p| p.len() == 2)
+                .ok_or_else(|| mal(format!("edges[{i}] must be a [from, to] pair")))?;
+            let idx = |j: usize| -> Result<usize, GraphError> {
+                pair[j]
+                    .as_usize()
+                    .ok_or_else(|| mal(format!("edges[{i}][{j}] must be a node index")))
+            };
+            edges.push((idx(0)?, idx(1)?));
+        }
+        GraphSpec::new(name, nodes, edges, input_bytes)
+    }
+}
+
+impl std::fmt::Display for GraphSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "graph '{}' ({} nodes, {} edges)", self.name, self.nodes.len(), self.edges.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nd(name: &str) -> Node {
+        Node::new(name, 1.0, 2.0, 100, 250)
+    }
+
+    fn chain3() -> GraphSpec {
+        GraphSpec::new(
+            "c3",
+            vec![nd("a"), nd("b"), nd("loss")],
+            vec![(0, 1), (1, 2)],
+            64,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn chain_graph_validates_and_is_chain() {
+        let g = chain3();
+        assert!(g.is_chain());
+        assert_eq!(g.preds(1), &[0]);
+        assert_eq!(g.succs(0), &[1]);
+        assert_eq!(g.last_use(0), 1);
+        assert_eq!(g.last_use(2), 2);
+    }
+
+    #[test]
+    fn skip_edges_are_kept_and_sorted() {
+        let g = GraphSpec::new(
+            "skip",
+            vec![nd("a"), nd("b"), nd("c"), nd("loss")],
+            vec![(2, 3), (0, 1), (1, 2), (0, 2)],
+            64,
+        )
+        .unwrap();
+        assert!(!g.is_chain());
+        assert_eq!(g.edges(), &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        assert_eq!(g.preds(2), &[0, 1]);
+        assert_eq!(g.last_use(0), 2);
+    }
+
+    #[test]
+    fn topo_sort_is_deterministic_under_reordering() {
+        // same graph, nodes given in reverse: must linearize identically
+        let fwd = GraphSpec::new(
+            "g",
+            vec![nd("a"), nd("b"), nd("c"), nd("loss")],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            64,
+        )
+        .unwrap();
+        let rev = GraphSpec::new(
+            "g",
+            vec![nd("loss"), nd("c"), nd("b"), nd("a")],
+            vec![(3, 2), (3, 1), (2, 1), (1, 0)],
+            64,
+        )
+        .unwrap();
+        let names = |g: &GraphSpec| -> Vec<&str> {
+            g.nodes().iter().map(|n| n.name.as_str()).collect()
+        };
+        assert_eq!(names(&fwd), names(&rev));
+        assert_eq!(fwd.edges(), rev.edges());
+    }
+
+    #[test]
+    fn structural_errors_are_specific() {
+        let e = GraphSpec::new("g", vec![], vec![], 1).unwrap_err();
+        assert_eq!(e, GraphError::Empty);
+        let e = GraphSpec::new("g", vec![nd("a"), nd("b")], vec![(0, 5)], 1).unwrap_err();
+        assert_eq!(e, GraphError::DanglingEdge { from: 0, to: 5 });
+        let e = GraphSpec::new("g", vec![nd("a"), nd("b")], vec![(0, 0), (0, 1)], 1).unwrap_err();
+        assert_eq!(e, GraphError::SelfLoop(0));
+        let e = GraphSpec::new(
+            "g",
+            vec![nd("a"), nd("b"), nd("c")],
+            vec![(0, 1), (1, 2), (2, 1)],
+            1,
+        )
+        .unwrap_err();
+        assert!(matches!(e, GraphError::Cycle(_)), "{e}");
+        // two entries (b has no preds)
+        let e = GraphSpec::new("g", vec![nd("a"), nd("b"), nd("c")], vec![(0, 2), (1, 2)], 1)
+            .unwrap_err();
+        assert!(matches!(e, GraphError::MultipleEntries(ref ns) if ns.len() == 2), "{e}");
+        // two exits
+        let e = GraphSpec::new("g", vec![nd("a"), nd("b"), nd("c")], vec![(0, 1), (0, 2)], 1)
+            .unwrap_err();
+        assert!(matches!(e, GraphError::MultipleExits(ref ns) if ns.len() == 2), "{e}");
+        // bad tape
+        let mut bad = nd("b");
+        bad.wabar = 10;
+        let e = GraphSpec::new("g", vec![nd("a"), bad, nd("c")], vec![(0, 1), (1, 2)], 1)
+            .unwrap_err();
+        assert!(matches!(e, GraphError::BadTape { .. }), "{e}");
+    }
+
+    #[test]
+    fn oversize_core_is_rejected() {
+        // one skip spanning 10 nodes keeps every interior cut open
+        let n = 12;
+        let nodes: Vec<Node> = (0..n).map(|i| nd(&format!("n{i}"))).collect();
+        let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        edges.push((0, 10));
+        let e = GraphSpec::new("g", nodes, edges, 1).unwrap_err();
+        assert!(matches!(e, GraphError::CoreTooLarge { len: 11, .. }), "{e}");
+    }
+
+    #[test]
+    fn json_round_trip_and_malformed_rejection() {
+        let g = GraphSpec::from_json(
+            &Value::parse(
+                r#"{"name": "j", "input_bytes": 64,
+                    "nodes": [
+                      {"name": "a", "uf": 1.0, "ub": 2.0, "wa": 100, "wabar": 250},
+                      {"uf": 1.0, "ub": 2.0, "wa": 50, "wabar": 50, "of": 8},
+                      {"name": "loss", "uf": 0.5, "ub": 0.5, "wa": 4, "wabar": 4}
+                    ],
+                    "edges": [[0, 1], [0, 2], [1, 2]]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(g.len(), 3);
+        assert_eq!(g.nodes()[1].name, "n1");
+        assert_eq!(g.nodes()[1].of, 8);
+        assert!(!g.is_chain());
+
+        for bad in [
+            r#"{"nodes": [], "edges": []}"#,                           // missing input_bytes
+            r#"{"input_bytes": 1, "nodes": 3, "edges": []}"#,          // nodes not array
+            r#"{"input_bytes": 1, "nodes": [{"uf": 1}], "edges": []}"#, // node missing fields
+            r#"{"input_bytes": 1,
+                "nodes": [{"uf": 1, "ub": 1, "wa": 4, "wabar": 4}], "edges": [[0]]}"#,
+        ] {
+            let e = GraphSpec::from_json(&Value::parse(bad).unwrap()).unwrap_err();
+            assert!(matches!(e, GraphError::Malformed(_)), "{bad}: {e}");
+        }
+    }
+}

@@ -20,6 +20,12 @@
 //! * [`simulator`] — a byte-accurate replay of any operation sequence
 //!   (Table 1 semantics): validity, peak memory, makespan. Ground truth
 //!   for every property test and for figure generation.
+//! * [`graph`] — beyond chains: a validated DAG spec
+//!   ([`graph::GraphSpec`]) decomposed at articulation cuts and
+//!   frontier-fused into an ordinary chain the DP solves, verified by a
+//!   multi-consumer replay ([`graph::simulate_graph`]) in which a value
+//!   lives until its *last* consumer. Residual and U-Net presets pair
+//!   with the native backend's executable geometries.
 //! * [`plan`] — the lowering layer: compiles a solved schedule into an
 //!   [`plan::ExecPlan`] — per-value liveness (explicit free points,
 //!   subsuming `drop`), arena slot assignment with fixed byte offsets,
@@ -59,6 +65,7 @@ pub mod chain;
 pub mod estimator;
 pub mod executor;
 pub mod figures;
+pub mod graph;
 pub mod plan;
 pub mod runtime;
 pub mod service;

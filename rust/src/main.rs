@@ -13,7 +13,8 @@
 //! `ChainSpec → PlanRequest → Plan` pipeline the planning service and
 //! library callers use, so a chain spec means exactly the same thing on
 //! every surface. Chain specs come from `--family/--depth/--image/--batch`
-//! (built-in profile), `--preset NAME` (native-backend chain), or
+//! (built-in profile), `--preset NAME` (native-backend chain),
+//! `--graph NAME|FILE` (a DAG, frontier-fused into a chain), or
 //! `--chain FILE` (a JSON spec file in the service wire form, including
 //! inline `"stages"` and on-disk `"manifest"` sources).
 //!
@@ -65,12 +66,21 @@ USAGE:
 
 CHAIN SPEC (solve/simulate; one pipeline with the service and library):
   --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
-  --preset quickstart|default|wide     a native-backend chain, planned
+  --preset quickstart|default|wide|residual|unet
+                                       a native-backend chain, planned
                                        with analytic roofline timings
+  --graph residual|unet|FILE           a DAG: a named graph preset (the
+                                       native geometry plus its skip
+                                       edges) or a JSON file holding a
+                                       graph object ({\"input_bytes\":…,
+                                       \"nodes\":[…], \"edges\":[[0,1],…]},
+                                       bare or wrapped as {\"graph\":…});
+                                       validated, then frontier-fused
+                                       into a chain the DP solves
   --chain FILE                         a JSON chain-spec file in the
                                        service wire form: {\"profile\":…},
-                                       {\"preset\":…}, inline {\"stages\":…},
-                                       or {\"manifest\": \"DIR\"}
+                                       {\"preset\":…}, {\"graph\":…}, inline
+                                       {\"stages\":…}, or {\"manifest\": \"DIR\"}
 
 Execution path: train/compare replay through the *lowered* pipeline by
 default — the schedule is compiled once into a slot-addressed ExecPlan
@@ -139,11 +149,40 @@ fn mem_flag(args: &Args, key: &str) -> Result<Option<MemBytes>> {
     }
 }
 
-/// The unified chain spec of `solve`/`simulate`: `--preset`, `--chain
-/// FILE`, or the profile flags (`--family/--depth/--image/--batch`).
+/// The `--graph ARG` source: a named graph preset
+/// ([`chainckpt::graph::NAMES`]) or a JSON file holding a graph spec
+/// (a bare graph object, or one wrapped as `{"graph": {…}}` in the
+/// service wire form). Bad input is a usage error (exit 2).
+fn graph_spec_arg(arg: &str) -> Result<ChainSpec> {
+    if let Some(g) = chainckpt::graph::preset(arg) {
+        return Ok(ChainSpec::graph(g));
+    }
+    let text = std::fs::read_to_string(arg)
+        .with_context(|| {
+            format!(
+                "--graph '{arg}': not a graph preset ({}) and not a readable file",
+                chainckpt::graph::NAMES.join("/")
+            )
+        })
+        .kind(ErrorKind::InvalidSpec)?;
+    let v = Value::parse(&text)
+        .with_context(|| format!("parsing graph file '{arg}'"))
+        .kind(ErrorKind::InvalidSpec)?;
+    let body = v.get("graph").unwrap_or(&v);
+    match chainckpt::graph::GraphSpec::from_json(body) {
+        Ok(g) => Ok(ChainSpec::graph(g)),
+        Err(e) => Err(Error::invalid(format!("--graph '{arg}': {e}"))),
+    }
+}
+
+/// The unified chain spec of `solve`/`simulate`: `--preset`, `--graph`,
+/// `--chain FILE`, or the profile flags (`--family/--depth/--image/--batch`).
 fn chain_spec(args: &Args) -> Result<ChainSpec> {
     if let Some(name) = args.opt_str("preset") {
         return Ok(ChainSpec::preset(name));
+    }
+    if let Some(arg) = args.opt_str("graph") {
+        return graph_spec_arg(arg);
     }
     if let Some(path) = args.opt_str("chain") {
         let text = std::fs::read_to_string(path)

@@ -1,0 +1,205 @@
+//! Graph lowering: compile a schedule solved for a [`GraphSpec`] into
+//! the same slot-addressed [`ExecPlan`] IR as the chain lowering — but
+//! under multi-consumer liveness, so a skip value occupies one arena
+//! slot from its materialization to its *last* consumer instead of being
+//! billed into every checkpoint it crosses.
+//!
+//! The heavy lifting is [`crate::graph::bind`]: it validates the
+//! schedule on the fused chain, binds every read to the materialization
+//! it consumes, and computes the refcounted peak. This pass translates
+//! its [`Mat`](crate::graph::Mat)/[`OpBind`](crate::graph::OpBind)
+//! tables into [`Value`]/[`Step`] rows (adding the per-op `o_f`/`o_b`
+//! transients, exactly like the chain analysis) and reuses the chain
+//! slot assigner verbatim. On a chain-shaped graph the result is
+//! byte-identical to [`super::lower`] on the node chain.
+
+use crate::graph::{GraphSpec, MatKind};
+use crate::simulator::SimError;
+use crate::solver::{Op, Schedule};
+
+use super::liveness::{Item, Step, Value};
+use super::{slots, ExecPlan};
+
+/// Fused-stage item for a graph materialization (stage `ℓ` = topo node
+/// `ℓ-1`; the graph input and its gradient take stage 0).
+fn item_of(kind: MatKind) -> Item {
+    match kind {
+        MatKind::Input => Item::A(0),
+        MatKind::A(u) => Item::A(u as u32 + 1),
+        MatKind::Abar(u) => Item::Abar(u as u32 + 1),
+        MatKind::Delta(u) => Item::Delta(u as u32 + 1),
+        MatKind::DeltaInput => Item::Delta(0),
+    }
+}
+
+/// Compile `schedule` against `g`: graph binding, transient insertion,
+/// slot assignment. `peak_bytes` is the multi-consumer peak — equal to
+/// [`simulate_graph`](crate::graph::simulate_graph)'s `graph_peak`, and
+/// to the chain [`lower`](super::lower) peak when `g` is a chain. Fails
+/// exactly where the fused-chain simulator would.
+///
+/// Step read order follows the chain convention (activations first):
+/// forwards read `[preds…]`, `B^ℓ` reads `[preds…, ā^ℓ, δ^ℓ]` — a node
+/// with several predecessors simply has several activation reads.
+pub fn lower_graph(g: &GraphSpec, schedule: &Schedule) -> Result<ExecPlan, SimError> {
+    let b = crate::graph::bind(g, schedule)?;
+    let node_chain = g.node_chain();
+
+    let mut values: Vec<Value> = b
+        .mats
+        .iter()
+        .map(|m| Value {
+            item: item_of(m.kind),
+            bytes: m.bytes,
+            birth: m.birth.unwrap_or(0),
+            death: m.death,
+            initial: m.birth.is_none(),
+            slot: 0,
+        })
+        .collect();
+
+    let mut steps: Vec<Step> = Vec::with_capacity(schedule.ops.len());
+    for (i, (ob, &op)) in b.ops.iter().zip(&schedule.ops).enumerate() {
+        let mut reads = ob.reads.clone();
+        if matches!(op, Op::Bwd(_)) && reads.len() >= 2 {
+            // bind() records `[δ, ā, preds…]`; rotate into `[preds…, ā, δ]`
+            reads.rotate_left(2);
+            let k = reads.len();
+            reads.swap(k - 2, k - 1);
+        }
+        let tbytes = match op {
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => node_chain.of(l as usize),
+            Op::Bwd(l) => node_chain.ob(l as usize),
+            Op::DropA(_) => 0,
+        };
+        let mut frees = ob.frees.clone();
+        let mut transient = None;
+        if tbytes > 0 {
+            let id = values.len();
+            values.push(Value {
+                item: Item::Transient(op.stage()),
+                bytes: tbytes,
+                birth: i,
+                death: Some(i),
+                initial: false,
+                slot: 0,
+            });
+            transient = Some(id);
+            frees.push(id);
+        }
+        steps.push(Step { op, reads, writes: ob.writes.clone(), frees, transient });
+    }
+
+    let (slot_table, arena_bytes) = slots::assign(&mut values, &steps);
+    Ok(ExecPlan {
+        steps,
+        values,
+        slots: slot_table,
+        arena_bytes,
+        peak_bytes: b.report.graph_peak,
+        input: b.input,
+        seed: b.seed,
+        delta0: b.delta0,
+        chain_len: g.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{simulate_graph, Node};
+    use crate::solver::{store_all_schedule, Mode};
+
+    fn nd(name: &str, wa: u64, wabar: u64) -> Node {
+        Node::new(name, 1.0, 2.0, wa, wabar)
+    }
+
+    fn diamond() -> GraphSpec {
+        GraphSpec::new(
+            "diamond",
+            vec![nd("a", 100, 120), nd("b", 80, 90), nd("c", 60, 60), nd("loss", 4, 4)],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            32,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn graph_plan_peak_is_the_multi_consumer_verdict() {
+        let g = diamond();
+        for sched in [
+            store_all_schedule(&g.to_chain()),
+            crate::graph::solve_graph(&g, g.to_chain().store_all_memory() + 32, 300, Mode::Full)
+                .unwrap()
+                .schedule,
+        ] {
+            let plan = lower_graph(&g, &sched).unwrap();
+            let rep = simulate_graph(&g, &sched).unwrap();
+            assert_eq!(plan.peak_bytes, rep.graph_peak);
+            assert!(plan.peak_bytes < rep.fused.peak_bytes, "skips billed once");
+            assert!(plan.arena_bytes >= plan.peak_bytes);
+            assert_eq!(plan.op_count(), sched.ops.len());
+            assert_eq!(plan.chain_len, g.len());
+            // δ^0 is the result and survives the schedule
+            assert_eq!(plan.values[plan.delta0].item, Item::Delta(0));
+            assert_eq!(plan.values[plan.delta0].death, None);
+        }
+    }
+
+    #[test]
+    fn chain_shaped_graph_lowers_identically_to_the_chain_path() {
+        let g = GraphSpec::new(
+            "c",
+            vec![nd("a", 100, 250), nd("b", 50, 120), nd("loss", 4, 4)],
+            vec![(0, 1), (1, 2)],
+            64,
+        )
+        .unwrap();
+        let chain = g.node_chain();
+        let sched = store_all_schedule(&chain);
+        let gp = lower_graph(&g, &sched).unwrap();
+        let cp = super::super::lower(&chain, &sched).unwrap();
+        assert_eq!(gp.peak_bytes, cp.peak_bytes);
+        assert_eq!(gp.arena_bytes, cp.arena_bytes);
+        assert_eq!(gp.values.len(), cp.values.len());
+        assert_eq!(gp.steps.len(), cp.steps.len());
+        for (a, b) in gp.steps.iter().zip(&cp.steps) {
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.reads.len(), b.reads.len());
+        }
+    }
+
+    #[test]
+    fn backward_reads_follow_the_chain_argument_order() {
+        let g = diamond();
+        let sched = store_all_schedule(&g.to_chain());
+        let plan = lower_graph(&g, &sched).unwrap();
+        for step in &plan.steps {
+            if let Op::Bwd(_) = step.op {
+                let k = step.reads.len();
+                assert!(matches!(plan.values[step.reads[k - 1]].item, Item::Delta(_)));
+                assert!(matches!(plan.values[step.reads[k - 2]].item, Item::Abar(_)));
+                for &r in &step.reads[..k - 2] {
+                    assert!(matches!(plan.values[r].item, Item::A(_) | Item::Abar(_)));
+                }
+            }
+        }
+        // node c's backward reads two activation predecessors (a and b)
+        let b3 = plan
+            .steps
+            .iter()
+            .find(|s| s.op == Op::Bwd(3))
+            .expect("store-all runs every backward");
+        assert_eq!(b3.reads.len(), 4, "two preds + ā + δ");
+    }
+
+    #[test]
+    fn graph_lowering_rejects_what_the_fused_simulator_rejects() {
+        use crate::solver::{Schedule, StrategyKind};
+        let g = diamond();
+        let bogus = Schedule::new(vec![Op::Bwd(2)], StrategyKind::Optimal, 0.0);
+        let mine = lower_graph(&g, &bogus).unwrap_err();
+        let sim = crate::simulator::simulate(&g.to_chain(), &bogus).unwrap_err();
+        assert_eq!(mine, sim);
+    }
+}

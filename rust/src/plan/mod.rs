@@ -28,6 +28,10 @@
 //! f32 arena owned across iterations, and the native backend's in-place
 //! kernels write straight into them.
 //!
+//! Graphs lower through the same IR: [`lower_graph`] compiles a schedule
+//! solved for a [`crate::graph::GraphSpec`] under multi-consumer
+//! liveness, so skip values hold one slot until their last consumer.
+//!
 //! ```
 //! use chainckpt::chain::{Chain, Stage};
 //! use chainckpt::plan::lower;
@@ -53,9 +57,11 @@
 //! # Ok::<(), Box<dyn std::error::Error>>(())
 //! ```
 
+mod graph;
 mod liveness;
 mod slots;
 
+pub use graph::lower_graph;
 pub use liveness::{Item, Step, Value, ValueId};
 pub use slots::Slot;
 

@@ -3,7 +3,8 @@
 //!
 //! The `"chain"` field of `/solve`, `/sweep`, `/simulate` is the facade's
 //! chain-spec wire form — see [`ChainSpec::from_json`] for the grammar
-//! (`profile` / `preset` / inline `stages` / on-disk `manifest`). Chain
+//! (`profile` / `preset` / `graph` / inline `stages` / on-disk
+//! `manifest`). Chain
 //! construction and validation live entirely in [`crate::api`]; this
 //! module only covers the service-specific fields (budgets, slots,
 //! strategy, op tokens) and response serialization. Every parser returns
@@ -233,6 +234,8 @@ mod tests {
         // checks the wire plumbs through and keeps the kind tags
         let spec = Value::parse(r#"{"preset": "quickstart"}"#).unwrap();
         assert_eq!(parse_chain(&spec).unwrap().len(), 5);
+        let spec = Value::parse(r#"{"graph": "residual"}"#).unwrap();
+        assert_eq!(parse_chain(&spec).unwrap().len(), 7);
         let spec = Value::parse(r#"{"profile": {"family": "alexnet"}}"#).unwrap();
         assert_eq!(parse_chain(&spec).unwrap_err().kind(), ErrorKind::UnknownChain);
         let spec = Value::parse(r#"{}"#).unwrap();

@@ -11,6 +11,15 @@
 //! frees. Both [`crate::simulator::simulate`] and the lowering pass in
 //! [`crate::plan`] drive it, so the simulator's verdict and the lowered
 //! plan's liveness/peak can never drift apart.
+//!
+//! Standalone activations carry a **consumer count**: a stored `a^ℓ`
+//! stays resident until [`MemState::consume_a`] has been called once per
+//! planned consumer. On a chain every value has exactly one consumer
+//! (the default for [`MemState::store_a`]), which reproduces Table 1's
+//! replace-on-read semantics bit for bit; the graph replay in
+//! [`crate::graph`] stores values with their true fan-out via
+//! [`MemState::store_a_counted`], so a skip-connection input survives
+//! until its *last* consumer and is freed exactly there.
 
 use crate::chain::Chain;
 use crate::solver::Op;
@@ -125,6 +134,11 @@ impl SeqCheck {
 #[derive(Debug, Clone)]
 pub struct MemState {
     a: Vec<bool>,
+    /// Remaining consuming reads of the standalone `a^ℓ` (meaningful only
+    /// while `a[ℓ]`). `1` is the chain default (replace-on-read); larger
+    /// values model multi-consumer fan-out; `0` marks a value no consumer
+    /// manages (freed only by `DropA` or end of sequence).
+    a_left: Vec<u32>,
     abar: Vec<bool>,
     delta: Vec<bool>,
     wa: Vec<u64>,
@@ -145,6 +159,7 @@ impl MemState {
         let wabar: Vec<u64> = (1..=n).map(|l| chain.wabar(l)).collect();
         let mut st = MemState {
             a: vec![false; n + 1],
+            a_left: vec![0; n + 1],
             abar: vec![false; n],
             delta: vec![false; n + 1],
             wa,
@@ -154,6 +169,7 @@ impl MemState {
             peak: 0,
         };
         st.a[0] = true;
+        st.a_left[0] = 1;
         st.delta[n] = true;
         st.current = st.wa[0] + st.wd[n]; // input + δ^{L+1} seed
         st.peak = st.current;
@@ -210,7 +226,7 @@ impl MemState {
                 self.store_a(l)
                     .map_err(|item| SimError::DuplicateStore { op_index, item })?;
                 eff.stored_a = Some(l);
-                if matches!(op, Op::FwdNoSave(_)) && self.free_a_if_standalone(l - 1) {
+                if matches!(op, Op::FwdNoSave(_)) && self.consume_a(l - 1) {
                     eff.freed_a = Some(l - 1); // F∅ replaces its input
                 }
             }
@@ -251,7 +267,7 @@ impl MemState {
                 self.free_abar(l);
                 eff.freed_delta = Some(l);
                 eff.freed_abar = Some(l);
-                if self.free_a_if_standalone(l - 1) {
+                if self.consume_a(l - 1) {
                     eff.freed_a = Some(l - 1);
                 }
                 self.store_delta(l - 1)
@@ -270,14 +286,50 @@ impl MemState {
         Ok(eff)
     }
 
+    /// Store `a^ℓ` with the chain default of exactly one consumer.
     pub fn store_a(&mut self, l: usize) -> Result<(), String> {
+        self.store_a_counted(l, 1)
+    }
+
+    /// Store `a^ℓ` with an explicit planned-consumer count (the graph
+    /// replay's fan-out). `0` makes the value sticky: no
+    /// [`Self::consume_a`] will free it.
+    pub fn store_a_counted(&mut self, l: usize, consumers: u32) -> Result<(), String> {
         if self.a[l] {
             return Err(format!("a^{l}"));
         }
         self.a[l] = true;
+        self.a_left[l] = consumers;
         self.current += self.wa[l];
         self.peak = self.peak.max(self.current);
         Ok(())
+    }
+
+    /// Adjust the remaining-consumer count of a resident `a^ℓ` (used to
+    /// seed the graph input's true fan-out after [`Self::initial`]).
+    pub fn set_consumers(&mut self, l: usize, consumers: u32) {
+        debug_assert!(self.a[l], "a^{l} must be resident to set consumers");
+        self.a_left[l] = consumers;
+    }
+
+    /// Register one consuming read of the standalone `a^ℓ`: decrements
+    /// the remaining-consumer count and frees the value when it reaches
+    /// zero. Reads through a taped `ā^ℓ`, of absent values, or of sticky
+    /// (count-0) values are no-ops. Returns whether the standalone copy
+    /// was freed — with the chain's one-consumer default this is exactly
+    /// the old replace-on-read free.
+    pub fn consume_a(&mut self, l: usize) -> bool {
+        if !self.a[l] || self.a_left[l] == 0 {
+            return false;
+        }
+        self.a_left[l] -= 1;
+        if self.a_left[l] == 0 {
+            self.a[l] = false;
+            self.current -= self.wa[l];
+            true
+        } else {
+            false
+        }
     }
 
     pub fn store_abar(&mut self, l: usize) -> Result<(), String> {
@@ -306,6 +358,7 @@ impl MemState {
     pub fn free_a_if_standalone(&mut self, l: usize) -> bool {
         if self.a[l] {
             self.a[l] = false;
+            self.a_left[l] = 0;
             self.current -= self.wa[l];
             true
         } else {
@@ -384,6 +437,26 @@ mod tests {
         let mut st = MemState::initial(&chain());
         st.store_a(1).unwrap();
         assert!(st.store_a(1).is_err());
+    }
+
+    #[test]
+    fn multi_consumer_values_survive_until_last_read() {
+        let mut st = MemState::initial(&chain());
+        let base = st.current;
+        st.store_a_counted(1, 3).unwrap();
+        assert_eq!(st.current, base + 10);
+        assert!(!st.consume_a(1), "2 consumers left");
+        assert!(!st.consume_a(1), "1 consumer left");
+        assert!(st.has_a(1));
+        assert!(st.consume_a(1), "last consumer frees");
+        assert!(!st.has_a(1));
+        assert_eq!(st.current, base);
+        // sticky values (count 0) ignore consume but yield to a force free
+        st.store_a_counted(1, 0).unwrap();
+        assert!(!st.consume_a(1));
+        assert!(st.has_a(1));
+        assert!(st.free_a_if_standalone(1));
+        assert_eq!(st.current, base);
     }
 
     #[test]

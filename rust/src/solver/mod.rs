@@ -27,7 +27,7 @@ mod sequence;
 mod store_all;
 
 pub use exhaustive::exhaustive_optimal;
-pub use optimal::{solve, solve_table, DpTable, Mode};
+pub use optimal::{solve, solve_table, solve_table_with_workers, DpTable, Mode};
 pub use periodic::{paper_segment_sweep, periodic_schedule, segment_bounds};
 pub use planner::{cache_stats, clear_cache, Planner, PlannerCacheStats};
 pub use sequence::{Op, Schedule, StrategyKind};

@@ -113,7 +113,23 @@ impl DpTable {
 
 /// Full DP solve over a discretized chain. The table covers every
 /// `(s, t, m)`, so one solve supports reconstruction at any budget `≤ M`.
+///
+/// Uses every available core for the wavefront fill; see
+/// [`solve_table_with_workers`] for an explicit worker count (the
+/// regression suite pins `workers = 1` to prove the parallel fill is
+/// bit-identical to the serial one).
 pub fn solve_table(dc: &DiscreteChain, mode: Mode) -> DpTable {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    solve_table_with_workers(dc, mode, workers)
+}
+
+/// [`solve_table`] with a pinned worker count. `workers <= 1` forces the
+/// serial fill; larger counts chunk each anti-diagonal across scoped
+/// threads. The result is bit-identical regardless of `workers`: cells
+/// on one diagonal depend only on strictly shorter sub-chains, each cell
+/// is computed in isolation ([`fill_cell`]), and the writeback order is
+/// the deterministic diagonal order either way.
+pub fn solve_table_with_workers(dc: &DiscreteChain, mode: Mode, workers: usize) -> DpTable {
     let n = dc.len();
     let slots = dc.slots;
     let mut tab = DpTable::new(n, slots);
@@ -141,7 +157,6 @@ pub fn solve_table(dc: &DiscreteChain, mode: Mode) -> DpTable {
     // the offline build) and written back serially. The per-cell kernel
     // iterates m *innermost over contiguous rows* — the dominant loop is
     // two streaming adds + a compare over slot-indexed slices.
-    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
     for d in 1..n {
         let cells: Vec<usize> = ((d + 1)..=n).collect(); // t values; s = t - d
         let results: Vec<(usize, Vec<f64>, Vec<u16>)> = if cells.len() < 2 || workers < 2 {

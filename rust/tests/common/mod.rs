@@ -1,8 +1,13 @@
-//! Shared test substrate: random chain generation + a mini property-test
-//! driver (the vendored build has no `proptest`; this covers what these
-//! tests need — seeded random cases with failure reporting by seed).
+//! Shared test substrate: random chain/graph generation + a mini
+//! property-test driver (the vendored build has no `proptest`; this
+//! covers what these tests need — seeded random cases with failure
+//! reporting by seed).
+
+// each test binary compiles its own copy and uses a subset
+#![allow(dead_code)]
 
 use chainckpt::chain::{Chain, Stage};
+use chainckpt::graph::{GraphSpec, Node};
 use chainckpt::util::Rng;
 
 /// Run `f` on `cases` seeded random inputs; on panic, report the seed so
@@ -41,6 +46,93 @@ pub fn random_chain(rng: &mut Rng) -> Chain {
     stages.push(Stage::new("loss", 0.5, 0.5, 4, 4));
     let wa0 = 64 * (1 + rng.below(256));
     Chain::new("random", stages, wa0)
+}
+
+/// One random graph node, sized like the chain stages above (but a bit
+/// smaller — graph tests sweep hundreds of cases).
+fn random_node(rng: &mut Rng, i: usize) -> Node {
+    let wa = 64 * (1 + rng.below(64));
+    let ratio = 1.0 + rng.f32() as f64 * 5.0;
+    let wabar = ((wa as f64 * ratio) as u64).max(wa);
+    let uf = 0.5 + rng.f32() as f64 * 20.0;
+    let ub = uf * (1.0 + rng.f32() as f64 * 2.0);
+    let mut nd = Node::new(format!("n{i}"), uf, ub, wa, wabar);
+    if rng.below(5) == 0 {
+        nd = nd.with_overheads(rng.below(wa), rng.below(wa));
+    }
+    nd
+}
+
+/// A random block-structured DAG: a sequential backbone of 4–20 compute
+/// nodes plus a tiny loss, interleaved with residual-style skip blocks
+/// (an edge from a block's first node around 2–6 interior nodes, with an
+/// occasional second skip from the next node). Every irreducible core
+/// stays within [`chainckpt::graph::MAX_CORE`] nodes by construction;
+/// roughly a third of the graphs come out chain-shaped.
+pub fn random_graph(rng: &mut Rng) -> GraphSpec {
+    let target = 4 + rng.below(17) as usize; // compute nodes
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut push_node = |nodes: &mut Vec<Node>, edges: &mut Vec<(usize, usize)>, rng: &mut Rng| {
+        let i = nodes.len();
+        if i > 0 {
+            edges.push((i - 1, i));
+        }
+        nodes.push(random_node(rng, i));
+    };
+    while nodes.len() < target {
+        let remaining = target - nodes.len();
+        if remaining >= 3 && rng.below(2) == 0 {
+            // a skip block: `len` nodes, first output rejoining at the last
+            let len = (3 + rng.below(5) as usize).min(remaining).min(7);
+            let block_start = nodes.len();
+            for _ in 0..len {
+                push_node(&mut nodes, &mut edges, rng);
+            }
+            edges.push((block_start, block_start + len - 1));
+            if len >= 4 && rng.below(3) == 0 {
+                edges.push((block_start + 1, block_start + len - 1));
+            }
+        } else {
+            push_node(&mut nodes, &mut edges, rng);
+        }
+    }
+    // the loss node closes the graph (single exit)
+    let i = nodes.len();
+    edges.push((i - 1, i));
+    nodes.push(Node::new("loss", 0.5, 0.5, 4, 4));
+    let input_bytes = 64 * (1 + rng.below(64));
+    GraphSpec::new("random-graph", nodes, edges, input_bytes)
+        .expect("generator emits valid DAGs")
+}
+
+/// A small random DAG whose fused chain stays within
+/// [`chainckpt::graph::EXHAUSTIVE_MAX`] stages, so the exhaustive oracle
+/// can always cross-check the decomposed DP. About half are pure chains.
+pub fn small_random_graph(rng: &mut Rng) -> GraphSpec {
+    let l = 2 + rng.below(5) as usize; // compute nodes, total ≤ 7 with loss
+    let mut nodes: Vec<Node> = Vec::new();
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for i in 0..l {
+        if i > 0 {
+            edges.push((i - 1, i));
+        }
+        nodes.push(random_node(rng, i));
+    }
+    edges.push((l - 1, l));
+    nodes.push(Node::new("loss", 0.5, 0.5, 4, 4));
+    if l >= 3 && rng.below(2) == 0 {
+        // one skip of span ≥ 2, never duplicating a backbone edge
+        let span = 2 + rng.below((l - 1) as u64) as usize;
+        let from = rng.below((l + 1 - span.min(l)) as u64) as usize;
+        let to = (from + span).min(l);
+        if to - from >= 2 {
+            edges.push((from, to));
+        }
+    }
+    let input_bytes = 64 * (1 + rng.below(64));
+    GraphSpec::new("small-graph", nodes, edges, input_bytes)
+        .expect("generator emits valid DAGs")
 }
 
 /// A memory budget somewhere between "barely anything" and "roomy",

@@ -1,0 +1,181 @@
+//! Property tests for DAG checkpointing (segment decomposition +
+//! frontier fusion): on hundreds of seeded random graphs the decomposed
+//! DP must degenerate to the plain chain DP bit-for-bit when the graph
+//! is a chain, never beat the exhaustive oracle's true optimum anywhere,
+//! and emit schedules that replay validly within budget under both the
+//! fused and the multi-consumer accounting.
+
+mod common;
+
+use chainckpt::graph::{preset, simulate_graph, solve_graph, GraphSpec, NAMES};
+use chainckpt::plan::lower_graph;
+use chainckpt::simulator::simulate;
+use chainckpt::solver::{solve, Mode};
+use chainckpt::util::Rng;
+use common::{for_random_cases, random_budget, random_graph, small_random_graph};
+
+const SLOTS: usize = 200; // match solver_properties: fast sweeps, exactness elsewhere
+
+fn budget_for(rng: &mut Rng, g: &GraphSpec) -> u64 {
+    random_budget(rng, &g.to_chain())
+}
+
+#[test]
+fn decomposed_dp_never_beats_the_exhaustive_oracle() {
+    // small graphs: the fused chain always fits the oracle's state space,
+    // so every feasible solve carries a true-optimum lower bound
+    for_random_cases(120, 0x6EA9, |rng| {
+        let g = small_random_graph(rng);
+        let m = budget_for(rng, &g);
+        let Some(sol) = solve_graph(&g, m, SLOTS, Mode::Full) else { return };
+        let bound = sol.exhaustive_bound.unwrap_or_else(|| {
+            panic!("fused len {} must be within EXHAUSTIVE_MAX", sol.chain.len())
+        });
+        assert!(
+            sol.schedule.predicted_time >= bound - 1e-9,
+            "decomposed DP {} beat the exhaustive optimum {} (graph {}, m={m})",
+            sol.schedule.predicted_time,
+            bound,
+            g,
+        );
+    });
+}
+
+#[test]
+fn chain_shaped_graphs_degenerate_to_the_chain_dp() {
+    // when the graph is a chain, frontier fusion is the identity: the
+    // fused chain *is* the node chain and the decomposed solve must be
+    // the plain chain DP bit-for-bit — same ops, same cost bits, and the
+    // multi-consumer replay collapses to the chain accounting exactly
+    let mut chains_seen = 0u32;
+    for_random_cases(80, 0xC4A1, |rng| {
+        let g = small_random_graph(rng);
+        let m = budget_for(rng, &g);
+        if !g.is_chain() {
+            return;
+        }
+        chains_seen += 1;
+        let node_chain = g.node_chain();
+        assert_eq!(g.to_chain(), node_chain, "fusion must be the identity on chains");
+        let sol = solve_graph(&g, m, SLOTS, Mode::Full);
+        let plain = solve(&node_chain, m, SLOTS, Mode::Full);
+        match (sol, plain) {
+            (Some(s), Some(p)) => {
+                assert_eq!(s.schedule.ops, p.ops, "op sequences must be identical");
+                assert_eq!(
+                    s.schedule.predicted_time.to_bits(),
+                    p.predicted_time.to_bits(),
+                    "costs must be bit-identical"
+                );
+                assert_eq!(s.graph_peak, s.fused_peak, "one consumer per value on a chain");
+            }
+            (None, None) => {}
+            (s, p) => panic!(
+                "feasibility mismatch at m={m}: graph={} chain={}",
+                s.is_some(),
+                p.is_some()
+            ),
+        }
+    });
+    assert!(chains_seen >= 10, "generator must produce chain-shaped graphs ({chains_seen})");
+}
+
+#[test]
+fn graph_schedules_are_valid_and_within_budget() {
+    for_random_cases(60, 0xDA6, |rng| {
+        let g = random_graph(rng);
+        let m = budget_for(rng, &g);
+        // solve_graph itself replays the schedule through simulate_graph
+        // and panics on an invalid sequence — reaching the assertions
+        // below means the schedule was valid under both accountings
+        let Some(sol) = solve_graph(&g, m, SLOTS, Mode::Full) else { return };
+        assert!(
+            sol.fused_peak <= m,
+            "fused peak {} exceeds budget {m} ({g})",
+            sol.fused_peak
+        );
+        assert!(sol.graph_peak <= sol.fused_peak, "refcounting must never add bytes");
+        if g.is_chain() {
+            assert_eq!(sol.graph_peak, sol.fused_peak);
+        }
+        let rep = simulate(&sol.chain, &sol.schedule).unwrap();
+        let rel =
+            (rep.makespan - sol.schedule.predicted_time).abs() / rep.makespan.max(1e-12);
+        assert!(
+            rel < 1e-9,
+            "claimed {} vs simulated {}",
+            sol.schedule.predicted_time,
+            rep.makespan
+        );
+    });
+}
+
+#[test]
+fn graph_cost_is_monotone_in_memory() {
+    for_random_cases(20, 0x90B0, |rng| {
+        let g = random_graph(rng);
+        let fused = g.to_chain();
+        let lo = fused.min_memory_hint();
+        let hi = fused.store_all_memory() + fused.wa0;
+        let mut last = f64::INFINITY;
+        for i in 0..6 {
+            let m = lo + (hi - lo) * i / 5;
+            if let Some(sol) = solve_graph(&g, m, SLOTS, Mode::Full) {
+                assert!(
+                    sol.schedule.predicted_time <= last * (1.0 + 1e-9),
+                    "more memory made the graph solve slower: {last} -> {} at m={m}",
+                    sol.schedule.predicted_time
+                );
+                last = sol.schedule.predicted_time;
+            }
+        }
+        assert!(last.is_finite(), "roomy budget must be feasible for {g}");
+    });
+}
+
+#[test]
+fn lowered_graph_plans_match_the_replay_peak() {
+    for_random_cases(40, 0x10E2, |rng| {
+        let g = random_graph(rng);
+        let m = budget_for(rng, &g);
+        let Some(sol) = solve_graph(&g, m, SLOTS, Mode::Full) else { return };
+        let plan = lower_graph(&g, &sol.schedule)
+            .unwrap_or_else(|e| panic!("graph lowering rejected a DP schedule: {e}"));
+        let rep = simulate_graph(&g, &sol.schedule).unwrap();
+        assert_eq!(plan.peak_bytes, rep.graph_peak, "plan-time peak must match the replay");
+        assert!(plan.arena_bytes >= plan.peak_bytes);
+        assert_eq!(plan.op_count(), sol.schedule.ops.len());
+        assert_eq!(plan.chain_len, g.len());
+    });
+}
+
+#[test]
+fn graph_presets_solve_decompose_and_lower() {
+    for name in NAMES {
+        let g = preset(name).unwrap_or_else(|| panic!("preset {name} must build"));
+        assert!(!g.is_chain(), "{name} must have skip edges");
+        for seg in g.segments() {
+            assert!(seg.len() <= chainckpt::graph::MAX_CORE, "{name}: core {}", seg.len());
+        }
+        let fused = g.to_chain();
+        let budget = fused.store_all_memory() + fused.wa0;
+        let sol = solve_graph(&g, budget, 300, Mode::Full)
+            .unwrap_or_else(|| panic!("{name}: store-all budget must be feasible"));
+        assert!(
+            sol.graph_peak < sol.fused_peak,
+            "{name}: skip values must be billed once ({} vs {})",
+            sol.graph_peak,
+            sol.fused_peak
+        );
+        let plan = lower_graph(&g, &sol.schedule).unwrap();
+        assert_eq!(plan.peak_bytes, sol.graph_peak, "{name}");
+        // starved: a quarter of the largest single backward footprint
+        // (a hard lower bound on any schedule) must be infeasible
+        let need =
+            (1..=fused.len()).map(|l| fused.wdelta(l) + fused.wabar(l)).max().unwrap();
+        assert!(
+            solve_graph(&g, need / 4 + 1, 300, Mode::Full).is_none(),
+            "{name}: near-zero budget must be infeasible"
+        );
+    }
+}

@@ -2,8 +2,8 @@
 //!
 //! 1. **Plan-time peak = simulator peak, byte for byte** — for all four
 //!    strategy families (store-all / sequential / optimal / revolve) ×
-//!    all three native presets (quickstart / default / wide) × ≥3
-//!    feasible budgets per DP mode.
+//!    all five native presets (quickstart / default / wide / residual /
+//!    unet) × ≥3 feasible budgets per DP mode.
 //! 2. **Lowered execution ≡ legacy execution, bit for bit** — same
 //!    ledger peak, same loss bits, same gradient bits, same input
 //!    gradient — across the full strategy×budget matrix on the
@@ -13,13 +13,20 @@
 //!    per-entry bit-identity for every signature kind — and running the
 //!    big presets under a debug-profile test harness would take minutes
 //!    per iteration. The peak-parity matrix above covers every preset.)
+//! 3. **Graph presets agree across every accounting** — a schedule solved
+//!    for a [`chainckpt::graph`] preset has one fused-chain peak
+//!    (simulator = lowered chain plan) and one multi-consumer peak
+//!    (graph replay = lowered graph plan), and executing it end-to-end
+//!    on the matching native preset reproduces the simulator's peak
+//!    byte-for-byte, legacy and lowered execution bit-identical.
 
 use chainckpt::backend::native::presets;
 use chainckpt::backend::{NativeBackend, NativeTensor, Tensor};
 use chainckpt::chain::Chain;
 use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::executor::Executor;
-use chainckpt::plan::lower;
+use chainckpt::graph;
+use chainckpt::plan::{lower, lower_graph};
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{
@@ -51,7 +58,7 @@ fn schedules_for(chain: &Chain) -> Vec<(String, Schedule)> {
 
 #[test]
 fn plan_peak_matches_simulator_for_every_preset_strategy_and_budget() {
-    for preset in ["quickstart", "default", "wide"] {
+    for preset in presets::NAMES.iter().copied() {
         let manifest = presets::preset(preset).unwrap();
         // analytic timings; the peak depends only on the byte model
         let chain = manifest.to_chain_analytic(1.0e3);
@@ -161,6 +168,73 @@ fn lowered_execution_covers_the_layernorm_stage_kind() {
         let legacy = run_legacy(&rt, &sched);
         let lowered = run_lowered_twice(&rt, &sched);
         assert_bit_identical(&legacy, &lowered, &name);
+    }
+}
+
+#[test]
+fn graph_preset_schedules_share_one_peak_per_accounting() {
+    // a schedule solved for a graph preset must carry exactly two peak
+    // numbers: the fused-chain peak (what the sequential executor sees)
+    // and the multi-consumer peak (what the DAG actually needs) — each
+    // agreed on byte-for-byte by its simulator and its lowered plan
+    for name in graph::NAMES.iter().copied() {
+        let g = graph::preset(name).unwrap();
+        let fused = g.to_chain();
+        let top = fused.store_all_memory() + fused.wa0;
+        let mut solved = 0u32;
+        for (tag, m) in [("hi", top), ("mid", top * 3 / 4), ("lo", top / 2)] {
+            let Some(sol) = graph::solve_graph(&g, m, 300, Mode::Full) else { continue };
+            solved += 1;
+            let sim = simulate(&fused, &sol.schedule).unwrap();
+            assert_eq!(sim.peak_bytes, sol.fused_peak, "{name}@{tag}: fused replay");
+            let chain_plan = lower(&fused, &sol.schedule).unwrap();
+            assert_eq!(
+                chain_plan.peak_bytes, sim.peak_bytes,
+                "{name}@{tag}: lowered chain plan vs fused simulator"
+            );
+            let rep = graph::simulate_graph(&g, &sol.schedule).unwrap();
+            assert_eq!(rep.graph_peak, sol.graph_peak, "{name}@{tag}: graph replay");
+            let graph_plan = lower_graph(&g, &sol.schedule).unwrap();
+            assert_eq!(
+                graph_plan.peak_bytes, rep.graph_peak,
+                "{name}@{tag}: lowered graph plan vs multi-consumer replay"
+            );
+            assert!(rep.graph_peak <= sim.peak_bytes, "{name}@{tag}");
+        }
+        assert!(solved >= 1, "{name}: store-all budget must be feasible");
+    }
+}
+
+#[test]
+fn graph_preset_schedules_execute_natively_with_simulator_identical_peak() {
+    // end-to-end: solve the graph preset, then run its op sequence on the
+    // matching native preset (whose kernels absorb the skip adds, so the
+    // executed model is the fused sequential chain) — the ledger peak
+    // must equal the chain simulator's verdict, and the lowered executor
+    // must track the legacy one bit-for-bit
+    for name in graph::NAMES.iter().copied() {
+        let rt = Runtime::native_preset(name).unwrap();
+        let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 0 }).unwrap();
+        let g = graph::preset(name).unwrap();
+        let fused = g.to_chain();
+        let top = fused.store_all_memory() + fused.wa0;
+        let mut schedules = vec![(
+            "store-all".to_string(),
+            graph::solve_graph(&g, top, 300, Mode::Full)
+                .unwrap_or_else(|| panic!("{name}: store-all budget feasible"))
+                .schedule,
+        )];
+        if let Some(sol) = graph::solve_graph(&g, top * 3 / 5, 300, Mode::Full) {
+            schedules.push(("squeezed".to_string(), sol.schedule));
+        }
+        for (tag, sched) in schedules {
+            let what = format!("{name}/{tag}");
+            let legacy = run_legacy(&rt, &sched);
+            let lowered = run_lowered_twice(&rt, &sched);
+            assert_bit_identical(&legacy, &lowered, &what);
+            let sim = simulate(&chain, &sched).unwrap();
+            assert_eq!(legacy.2, sim.peak_bytes, "{what}: executed vs simulator peak");
+        }
     }
 }
 

@@ -1,6 +1,8 @@
 //! End-to-end tests of the planning service over real sockets: wire
 //! parity with the CLI solver, single-table sweeps, concurrent clients,
-//! and the structured-4xx error contract.
+//! the structured-4xx error contract, and the `graph` spec source
+//! (valid DAGs solve; cycles, dangling edges and oversize cores come
+//! back as kind-tagged 4xx without dropping the connection).
 //!
 //! The planner table cache is process-global, so every test takes the
 //! `SERIAL` lock before touching counters — tests in this binary run
@@ -12,6 +14,7 @@ use std::time::Duration;
 
 use chainckpt::api::{ChainSpec, MemBytes, PlanRequest, SlotCount};
 use chainckpt::chain::profiles;
+use chainckpt::graph;
 use chainckpt::service::http::Client;
 use chainckpt::service::{serve, Server, ServiceConfig};
 use chainckpt::simulator::simulate;
@@ -456,6 +459,161 @@ fn lower_endpoint_serves_the_slot_ir_in_both_forms() {
     server.stop();
 }
 
+/// `{"name": "nI", "uf": 1, "ub": 2, "wa": 64, "wabar": 128}` — a valid
+/// node for hand-built wire graphs.
+fn node_json(i: usize) -> String {
+    format!(r#"{{"name": "n{i}", "uf": 1.0, "ub": 2.0, "wa": 64, "wabar": 128}}"#)
+}
+
+/// A `/solve` body with an inline `graph` object of `n` identical nodes
+/// and the given JSON edge list.
+fn graph_body(n: usize, edges: &str) -> String {
+    let nodes: Vec<String> = (0..n).map(node_json).collect();
+    format!(
+        r#"{{"chain": {{"graph": {{"name": "t", "input_bytes": 64,
+            "nodes": [{}], "edges": {edges}}}}}, "memory": "1G"}}"#,
+        nodes.join(",")
+    )
+}
+
+#[test]
+fn graph_specs_solve_and_reject_over_the_wire() {
+    let _guard = lock();
+    let server = start_server();
+    let mut client = Client::connect(server.addr()).unwrap();
+
+    // happy path: the graph preset resolves to its fused chain, and the
+    // service's schedule matches the local facade byte-for-byte
+    let g = graph::preset("residual").unwrap();
+    let fused = g.to_chain();
+    let memory = fused.store_all_memory() + fused.wa0;
+    let expected = PlanRequest::new(ChainSpec::graph(g), MemBytes::new(memory))
+        .slots(SlotCount::new(150))
+        .plan()
+        .expect("graph preset resolves")
+        .schedule_at(MemBytes::new(memory))
+        .expect("store-all budget is feasible");
+    let body =
+        format!(r#"{{"chain": {{"graph": "residual"}}, "memory": {memory}, "slots": 150}}"#);
+    let (status, resp) = client.request("POST", "/solve", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp);
+    assert_eq!(v.get("feasible"), Some(&Value::Bool(true)));
+    let expected_ops: Vec<String> = expected.ops.iter().map(|op| op.to_string()).collect();
+    assert_eq!(ops_of(v.get("schedule").unwrap()), expected_ops);
+
+    // /sweep takes the same source
+    let body = format!(
+        r#"{{"chain": {{"graph": "unet"}}, "budgets": [{}, {}], "slots": 120}}"#,
+        memory / 4,
+        memory
+    );
+    let (status, resp) = client.request("POST", "/sweep", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(parse(&resp).get("points").unwrap().as_arr().unwrap().len(), 2);
+
+    // /simulate replays explicit ops against the fused chain
+    let sched = store_all_schedule(&fused);
+    let rep = simulate(&fused, &sched).unwrap();
+    let ops_json: Vec<String> = sched.ops.iter().map(|op| format!("\"{op}\"")).collect();
+    let body = format!(
+        r#"{{"chain": {{"graph": "residual"}}, "ops": [{}]}}"#,
+        ops_json.join(",")
+    );
+    let (status, resp) = client.request("POST", "/simulate", Some(&body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = parse(&resp);
+    assert_eq!(v.get("valid"), Some(&Value::Bool(true)));
+    assert_eq!(
+        v.get("simulated").unwrap().get("peak_bytes").unwrap().as_u64(),
+        Some(rep.peak_bytes),
+        "graph source must simulate on the fused chain"
+    );
+
+    // malformed graphs: each one a structured 422 with the precise kind,
+    // on the same keep-alive connection
+    let kind_of = |resp: &str| -> (u64, String, String) {
+        let v = parse(resp);
+        let err = v.get("error").expect("error envelope");
+        (
+            err.get("code").unwrap().as_u64().unwrap(),
+            err.get("kind").unwrap().as_str().unwrap().to_string(),
+            err.get("message").unwrap().as_str().unwrap().to_string(),
+        )
+    };
+
+    // a cycle
+    let (status, resp) = client
+        .request("POST", "/solve", Some(&graph_body(3, "[[0,1],[1,2],[2,1]]")))
+        .unwrap();
+    assert_eq!(status, 422, "{resp}");
+    let (code, kind, msg) = kind_of(&resp);
+    assert_eq!((code, kind.as_str()), (422, "invalid_spec"), "{msg}");
+    assert!(msg.contains("cycle"), "{msg}");
+
+    // a dangling edge
+    let (status, resp) = client
+        .request("POST", "/solve", Some(&graph_body(3, "[[0,1],[1,2],[0,5]]")))
+        .unwrap();
+    assert_eq!(status, 422, "{resp}");
+    assert_eq!(kind_of(&resp).1, "invalid_spec");
+
+    // an irreducible core wider than the exhaustive fallback can check:
+    // a skip spanning 10 interior nodes keeps every cut open
+    let mut edges: Vec<String> = (0..11).map(|i| format!("[{i},{}]", i + 1)).collect();
+    edges.push("[0,10]".to_string());
+    let body = graph_body(12, &format!("[{}]", edges.join(",")));
+    let (status, resp) = client.request("POST", "/solve", Some(&body)).unwrap();
+    assert_eq!(status, 422, "{resp}");
+    let (_, kind, msg) = kind_of(&resp);
+    assert_eq!(kind, "invalid_spec");
+    assert!(msg.contains("core"), "{msg}");
+
+    // an unknown graph preset names the known ones
+    let body = r#"{"chain": {"graph": "nope"}, "memory": "1G"}"#;
+    let (status, resp) = client.request("POST", "/solve", Some(body)).unwrap();
+    assert_eq!(status, 422, "{resp}");
+    let (_, kind, msg) = kind_of(&resp);
+    assert_eq!(kind, "unknown_chain");
+    assert!(msg.contains("residual"), "{msg}");
+
+    // the connection survived all five rejections
+    let (status, resp) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "connection must survive graph 4xx responses");
+    assert!(resp.contains("true"));
+
+    // the CLI agrees on the exit-code contract: bad --graph input = 2,
+    // a valid graph preset = 0
+    let run = |args: &[&str]| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_chainckpt"))
+            .args(args)
+            .output()
+            .expect("spawn the chainckpt binary")
+    };
+    let ok = run(&["solve", "--graph", "residual", "--memory", "1G"]);
+    assert_eq!(ok.status.code(), Some(0), "{}", String::from_utf8_lossy(&ok.stderr));
+    let unknown = run(&["solve", "--graph", "nope", "--memory", "1G"]);
+    assert_eq!(unknown.status.code(), Some(2));
+    let missing = run(&["solve", "--graph", "/no/such/graph.json", "--memory", "1G"]);
+    assert_eq!(missing.status.code(), Some(2));
+    let cyclic =
+        std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("cyclic_graph.json");
+    let spec = graph_body(3, "[[0,1],[1,2],[2,1]]");
+    let spec = Value::parse(&spec).unwrap();
+    std::fs::write(&cyclic, spec.get("chain").unwrap().to_json_string()).unwrap();
+    let bad_file = run(&["solve", "--graph", cyclic.to_str().unwrap(), "--memory", "1G"]);
+    assert_eq!(
+        bad_file.status.code(),
+        Some(2),
+        "{}",
+        String::from_utf8_lossy(&bad_file.stderr)
+    );
+    let _ = std::fs::remove_file(&cyclic);
+
+    drop(client);
+    server.stop();
+}
+
 #[test]
 fn chains_and_stats_expose_the_catalog_and_counters() {
     let _guard = lock();
@@ -482,7 +640,7 @@ fn chains_and_stats_expose_the_catalog_and_counters() {
         .iter()
         .map(|p| p.get("name").unwrap().as_str().unwrap())
         .collect();
-    assert_eq!(presets, vec!["quickstart", "default", "wide"]);
+    assert_eq!(presets, vec!["quickstart", "default", "wide", "residual", "unet"]);
 
     // a preset-planned solve straight from the catalog
     let body = r#"{"chain": {"preset": "quickstart"}, "memory": "1G", "slots": 100}"#;

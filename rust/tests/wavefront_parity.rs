@@ -1,0 +1,74 @@
+//! Regression suite for the wavefront-parallel DP table fill: the
+//! chunked scoped-thread fill must be **bit-identical** to a forced
+//! single-worker fill over the entire `(s, t, m)` space — same costs,
+//! same infeasibility pattern — on every preset chain and on seeded
+//! random chains, in both solver modes. The fill is deterministic by
+//! construction (each anti-diagonal cell is computed in isolation and
+//! written back in diagonal order); this suite pins that guarantee.
+
+mod common;
+
+use chainckpt::api::PRESET_FLOPS_PER_US;
+use chainckpt::backend::native::presets;
+use chainckpt::chain::DiscreteChain;
+use chainckpt::solver::{solve_table, solve_table_with_workers, DpTable, Mode};
+use common::{for_random_cases, random_budget, random_chain};
+
+fn assert_tables_bit_identical(a: &DpTable, b: &DpTable, label: &str) {
+    assert_eq!(a.stages(), b.stages(), "{label}: stage axis");
+    assert_eq!(a.slots(), b.slots(), "{label}: slot axis");
+    for t in 1..=a.stages() {
+        for s in 1..=t {
+            for m in 0..=a.slots() as u32 {
+                let (ca, cb) = (a.cost(s, t, m), b.cost(s, t, m));
+                assert_eq!(
+                    ca.to_bits(),
+                    cb.to_bits(),
+                    "{label}: C({s},{t},{m}) diverged: {ca} vs {cb}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_fill_is_bit_identical_on_every_preset_chain() {
+    for name in presets::NAMES {
+        let chain =
+            presets::preset(name).unwrap().to_chain_analytic(PRESET_FLOPS_PER_US);
+        let memory = chain.store_all_memory() + chain.wa0;
+        let dc = DiscreteChain::new(&chain, memory, 150);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            let serial = solve_table_with_workers(&dc, mode, 1);
+            for workers in [2, 7] {
+                let par = solve_table_with_workers(&dc, mode, workers);
+                assert_tables_bit_identical(
+                    &serial,
+                    &par,
+                    &format!("{name}/{mode:?}/workers={workers}"),
+                );
+            }
+            // and the public entry point (auto worker count) agrees too
+            let auto = solve_table(&dc, mode);
+            assert_tables_bit_identical(&serial, &auto, &format!("{name}/{mode:?}/auto"));
+        }
+    }
+}
+
+#[test]
+fn parallel_fill_is_bit_identical_on_random_chains() {
+    for_random_cases(12, 0x7AB1E, |rng| {
+        let chain = random_chain(rng);
+        let memory = random_budget(rng, &chain);
+        let dc = DiscreteChain::new(&chain, memory, 120);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            let serial = solve_table_with_workers(&dc, mode, 1);
+            let par = solve_table_with_workers(&dc, mode, 5);
+            assert_tables_bit_identical(
+                &serial,
+                &par,
+                &format!("random L+1={} m={memory} {mode:?}", chain.len()),
+            );
+        }
+    });
+}
