@@ -136,6 +136,39 @@ fn bind<'a>(
     Ok(())
 }
 
+/// The binding loop below assumes the *chain* lowering's read layout:
+/// forwards read exactly `[a^{ℓ-1}]`, backwards exactly `[a^{ℓ-1}, ā^ℓ,
+/// δ^ℓ]`. [`plan::lower_graph`] emits variable-arity `[preds…, ā, δ]`
+/// rows instead — a multi-predecessor backward would put a second
+/// activation where this executor expects the tape, silently corrupting
+/// the replay. Executing those needs multi-input kernels no backend has,
+/// so graph-shaped plans are rejected here with a clear error; graph
+/// presets execute through their fused chain (see `plan_parity.rs`).
+fn ensure_chain_read_layout(plan: &ExecPlan) -> Result<()> {
+    for (i, s) in plan.steps.iter().enumerate() {
+        match s.op {
+            Op::FwdNoSave(_) | Op::FwdCk(_) | Op::FwdAll(_) => ensure!(
+                s.reads.len() == 1,
+                "step {i} ({}): {} activation reads — not a chain-lowered plan; \
+                 graph plans do not execute, solve the fused chain instead",
+                s.op,
+                s.reads.len()
+            ),
+            Op::Bwd(_) => ensure!(
+                s.reads.len() == 3
+                    && matches!(plan.values[s.reads[1]].item, Item::Abar(_))
+                    && matches!(plan.values[s.reads[2]].item, Item::Delta(_)),
+                "step {i} ({}): backward reads are not [a, ā, δ] — not a \
+                 chain-lowered plan; graph plans do not execute, solve the \
+                 fused chain instead",
+                s.op
+            ),
+            Op::DropA(_) => {}
+        }
+    }
+    Ok(())
+}
+
 impl<'rt, B: Backend> Executor<'rt, B> {
     /// Compile `schedule` into a [`Lowered`] replay bound to this
     /// executor's stages: plan lowering (liveness + slots + plan-time
@@ -150,6 +183,7 @@ impl<'rt, B: Backend> Executor<'rt, B> {
         );
         let plan = plan::lower(&self.chain_sizes, schedule)
             .map_err(|e| anyhow::anyhow!("schedule does not lower: {e}"))?;
+        ensure_chain_read_layout(&plan)?;
         let mf = &self.rt.manifest;
         let n = mf.stages.len();
         debug_assert_eq!(plan.chain_len, n);
@@ -405,5 +439,37 @@ impl<'rt, B: Backend> Executor<'rt, B> {
             elapsed_s: start.elapsed().as_secs_f64(),
             ops: low.plan.steps.len(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphSpec, Node};
+    use crate::plan::lower_graph;
+    use crate::solver::store_all_schedule;
+
+    #[test]
+    fn chain_layout_check_rejects_multi_predecessor_graph_plans() {
+        let g = GraphSpec::new(
+            "diamond",
+            vec![
+                Node::new("a", 1.0, 2.0, 100, 120),
+                Node::new("b", 1.0, 2.0, 80, 90),
+                Node::new("c", 1.0, 2.0, 60, 60),
+                Node::new("loss", 0.5, 0.5, 4, 4),
+            ],
+            vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+            32,
+        )
+        .unwrap();
+        // node c's backward reads two predecessors → 4 reads, not [a, ā, δ]
+        let plan = lower_graph(&g, &store_all_schedule(&g.to_chain())).unwrap();
+        let err = ensure_chain_read_layout(&plan).unwrap_err();
+        assert!(err.to_string().contains("not a chain-lowered plan"), "{err}");
+        // …while every chain lowering passes the same gate
+        let chain = g.node_chain();
+        let chain_plan = plan::lower(&chain, &store_all_schedule(&chain)).unwrap();
+        ensure_chain_read_layout(&chain_plan).unwrap();
     }
 }

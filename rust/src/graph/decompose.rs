@@ -44,12 +44,11 @@ pub struct Segment {
 }
 
 impl Segment {
+    /// Node count of the run. Segments are non-empty by construction
+    /// (`start ≤ end`), so there is deliberately no `is_empty`.
+    #[allow(clippy::len_without_is_empty)]
     pub fn len(&self) -> usize {
         self.end - self.start + 1
-    }
-
-    pub fn is_empty(&self) -> bool {
-        false
     }
 }
 

@@ -266,7 +266,10 @@ pub fn bind(g: &GraphSpec, schedule: &Schedule) -> Result<Bindings, SimError> {
             }
             Op::Bwd(_) => {
                 st.touch_peak(node_chain.ob(l));
-                // frees mirror the chain transition: δ^ℓ and ā^ℓ retire here
+                // frees mirror the chain transition: δ^ℓ and ā^ℓ retire
+                // here. Only the op's *own* tape — a predecessor read may
+                // also bind to an Abar mat (pred stored via Fall), but
+                // that tape retires at the pred's own backward.
                 for r in 0..ops[i].reads.len() {
                     let id = ops[i].reads[r];
                     match mats[id].kind {
@@ -275,7 +278,7 @@ pub fn bind(g: &GraphSpec, schedule: &Schedule) -> Result<Bindings, SimError> {
                             mats[id].death = Some(i);
                             ops[i].frees.push(id);
                         }
-                        MatKind::Abar(_) => {
+                        MatKind::Abar(u) if u == j0 => {
                             st.free_abar(l);
                             mats[id].death = Some(i);
                             ops[i].frees.push(id);

@@ -12,6 +12,14 @@
 //! transients, exactly like the chain analysis) and reuses the chain
 //! slot assigner verbatim. On a chain-shaped graph the result is
 //! byte-identical to [`super::lower`] on the node chain.
+//!
+//! These plans are for **accounting and arena sizing only** — the pooled
+//! executor does not replay them. Its binding loop assumes the chain read
+//! layout (one activation per forward, `[a, ā, δ]` per backward) and
+//! rejects anything else; a multi-predecessor node here emits `[preds…,
+//! ā, δ]` with several activation reads, which would need multi-input
+//! kernels no backend provides. Execution of graph presets goes through
+//! the fused chain (whose kernels absorb the skip adds).
 
 use crate::graph::{GraphSpec, MatKind};
 use crate::simulator::SimError;

@@ -31,6 +31,12 @@
 //! Graphs lower through the same IR: [`lower_graph`] compiles a schedule
 //! solved for a [`crate::graph::GraphSpec`] under multi-consumer
 //! liveness, so skip values hold one slot until their last consumer.
+//! Graph plans are planning artifacts — they size arenas and report the
+//! multi-consumer peak, but they are **not executable**: a
+//! multi-predecessor backward reads `[preds…, ā, δ]`, and no backend has
+//! multi-input kernels. [`Executor::lower`](crate::executor::Executor::lower)
+//! works from the chain lowering and rejects variable-arity read
+//! layouts; graph presets execute through their fused chain.
 //!
 //! ```
 //! use chainckpt::chain::{Chain, Stage};
