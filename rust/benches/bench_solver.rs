@@ -4,6 +4,12 @@
 //! measures the Planner's amortization: one DP table serving a whole
 //! budget sweep vs a fresh `solve` per budget.
 //!
+//! The scaling section drives the frontier-compressed fill up the depth
+//! axis (L = 100 / 1 000 / 10 000 on `profiles::deep_chain`), recording
+//! fill time, compressed table bytes, stored runs, and schedule
+//! reconstruction time — with a dense-reference arm at L ≤ 1 000 that
+//! gates the ≥ 4× fill-time win and would catch a pruning regression.
+//!
 //! Custom harness (the offline build has no criterion): median-of-N
 //! wall-clock per configuration, printed as a table and written to
 //! `results/bench_solver.csv` plus machine-readable `BENCH_solver.json`.
@@ -16,8 +22,10 @@
 use std::fmt::Write as _;
 use std::time::Instant;
 
-use chainckpt::chain::{profiles, Chain};
-use chainckpt::solver::{cache_stats, clear_cache, solve, Mode, Planner};
+use chainckpt::chain::{profiles, Chain, DiscreteChain};
+use chainckpt::solver::{
+    cache_stats, clear_cache, solve, solve_table, solve_table_dense, Mode, Planner,
+};
 use chainckpt::util::{median, Args};
 
 struct Case {
@@ -103,6 +111,83 @@ fn bench_sweep(
         per_budget_s,
         planner_s,
         speedup: per_budget_s / planner_s,
+    }
+}
+
+struct ScalingResult {
+    depth: usize,
+    chain_len: usize,
+    slots: usize,
+    mode: Mode,
+    fill_s: f64,
+    dense_fill_s: Option<f64>,
+    table_bytes: usize,
+    dense_table_bytes: Option<usize>,
+    run_count: usize,
+    schedule_at_s: f64,
+    ops: usize,
+}
+
+/// One point on the depth-scaling curve: fill the frontier table for a
+/// `deep_chain(depth)` at `slots`, reconstruct the schedule at the top
+/// budget, and (optionally) fill the retained dense reference on the
+/// same inputs — the pre-PR baseline the ≥ 4× gate compares against.
+fn bench_scaling(
+    depth: usize,
+    slots: usize,
+    mode: Mode,
+    with_dense: bool,
+    reps: usize,
+) -> ScalingResult {
+    let chain = profiles::deep_chain(depth);
+    let memory = chain.store_all_memory() / 2;
+    let dc = DiscreteChain::new(&chain, memory, slots);
+
+    let mut fills = Vec::new();
+    let mut tab = None;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        tab = Some(solve_table(&dc, mode));
+        fills.push(t0.elapsed().as_secs_f64());
+    }
+    let tab = tab.expect("at least one fill");
+
+    let dense = if with_dense {
+        let mut times = Vec::new();
+        let mut dt = None;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            dt = Some(solve_table_dense(&dc, mode));
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        Some((median(&mut times), dt.expect("dense fill ran").mem_bytes()))
+    } else {
+        None
+    };
+
+    let top = dc.top_budget().expect("deep_chain input fits its own budget");
+    let mut recon = Vec::new();
+    let mut ops_len = 0usize;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let ops = tab.ops_at(&dc, top).expect("half of store-all must be feasible");
+        recon.push(t0.elapsed().as_secs_f64());
+        ops_len = ops.len();
+    }
+    assert!(ops_len > chain.len(), "a schedule visits every stage at least once");
+
+    ScalingResult {
+        depth,
+        chain_len: chain.len(),
+        slots,
+        mode,
+        fill_s: median(&mut fills),
+        dense_fill_s: dense.map(|(t, _)| t),
+        table_bytes: tab.mem_bytes(),
+        dense_table_bytes: dense.map(|(_, b)| b),
+        run_count: tab.run_count(),
+        schedule_at_s: median(&mut recon),
+        ops: ops_len,
     }
 }
 
@@ -208,11 +293,97 @@ fn main() {
         );
     }
 
+    // depth-scaling curve for the frontier-compressed fill. The dense
+    // arm stops at L = 1 000 (a dense L = 10⁴ table would need hundreds
+    // of GB — the point of the compressed layout); the depth-10⁴ case
+    // uses a coarse slot axis so its worst-case admission bound fits the
+    // solver ceiling, and runs in both modes to pin the acceptance
+    // criterion end to end.
+    let scaling_cases: Vec<(usize, usize, Mode, bool)> = if quick {
+        vec![(100, 150, Mode::Full, true)]
+    } else {
+        vec![
+            (100, 150, Mode::Full, true),
+            (1000, 150, Mode::Full, true),
+            (10_000, 16, Mode::Full, false),
+            (10_000, 16, Mode::AdRevolve, false),
+        ]
+    };
+    println!(
+        "\n{:<20} {:>7} {:>5} {:>10} {:>10} {:>8} {:>12} {:>12}",
+        "scaling", "L", "S", "fill (s)", "dense (s)", "speedup", "table (B)", "sched (s)"
+    );
+    let mut json_scaling = String::new();
+    for &(depth, slots, mode, with_dense) in &scaling_cases {
+        // the depth-10⁴ fill is minutes of wall-clock — one rep is the curve
+        let case_reps = if depth >= 10_000 { 1 } else { reps.min(2) };
+        let r = bench_scaling(depth, slots, mode, with_dense, case_reps);
+        let speedup = r.dense_fill_s.map(|d| d / r.fill_s);
+        let label = format!(
+            "deep-{depth}{}",
+            if r.mode == Mode::AdRevolve { "-revolve" } else { "" }
+        );
+        println!(
+            "{:<20} {:>7} {:>5} {:>10.3} {:>10} {:>8} {:>12} {:>12.4}",
+            label,
+            r.depth,
+            r.slots,
+            r.fill_s,
+            r.dense_fill_s.map_or("-".into(), |d| format!("{d:.3}")),
+            speedup.map_or("-".into(), |x| format!("{x:.1}x")),
+            r.table_bytes,
+            r.schedule_at_s
+        );
+        csv.push_str(&format!(
+            "scaling-{label},{},{},{:.4},{:.4}\n",
+            r.chain_len, r.slots, r.fill_s, r.schedule_at_s
+        ));
+        if !json_scaling.is_empty() {
+            json_scaling.push(',');
+        }
+        let _ = write!(
+            json_scaling,
+            r#"{{"depth":{},"chain_len":{},"slots":{},"mode":"{}","fill_s":{:.4},"dense_fill_s":{},"speedup_vs_dense":{},"table_bytes":{},"dense_table_bytes":{},"run_count":{},"schedule_at_s":{:.5},"ops":{}}}"#,
+            r.depth,
+            r.chain_len,
+            r.slots,
+            if r.mode == Mode::AdRevolve { "ad_revolve" } else { "full" },
+            r.fill_s,
+            r.dense_fill_s.map_or("null".into(), |d| format!("{d:.4}")),
+            speedup.map_or("null".into(), |x| format!("{x:.2}")),
+            r.table_bytes,
+            r.dense_table_bytes.map_or("null".into(), |b| b.to_string()),
+            r.run_count,
+            r.schedule_at_s,
+            r.ops
+        );
+        // the PR's acceptance gate: ≥ 4× fill-time win over the dense
+        // reference at L = 1 000 (full runs only — quick mode stays CI-sized)
+        if !quick && depth == 1000 {
+            let x = speedup.expect("the L=1000 case carries the dense arm");
+            assert!(
+                x >= 4.0,
+                "deep-1000: compressed fill must beat dense ≥ 4x (got {x:.1}x)"
+            );
+        }
+        // compression is the thing that makes depth 10⁴ representable:
+        // the table must land under the admission ceiling with headroom
+        // (the fixed 20 B/cell row overhead alone is ~1 GB at 5·10⁷
+        // cells, so single-digit GB is the expected landing zone)
+        if depth == 10_000 {
+            assert!(
+                r.table_bytes < (12usize << 30),
+                "deep-10000: compressed table unexpectedly large ({} B)",
+                r.table_bytes
+            );
+        }
+    }
+
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_solver.csv", csv).ok();
     let json = format!(
-        r#"{{"bench":"bench_solver","quick":{},"cases":[{}],"sweeps":[{}]}}"#,
-        quick, json_cases, json_sweeps
+        r#"{{"bench":"bench_solver","quick":{},"cases":[{}],"sweeps":[{}],"scaling":[{}]}}"#,
+        quick, json_cases, json_sweeps, json_scaling
     );
     std::fs::write("BENCH_solver.json", &json).ok();
     println!("→ results/bench_solver.csv, BENCH_solver.json");

@@ -71,7 +71,8 @@ impl PlanRequest {
             .spec
             .resolve()
             .with_context(|| format!("resolving chain spec ({})", self.spec))?;
-        let planner = Planner::new(&chain, self.budget.get(), self.slots.get(), self.mode);
+        let planner = Planner::try_new(&chain, self.budget.get(), self.slots.get(), self.mode)
+            .with_context(|| format!("planning chain spec ({})", self.spec))?;
         Ok(Plan { chain, planner, budget: self.budget })
     }
 }
@@ -373,6 +374,25 @@ mod tests {
             .plan()
             .unwrap_err();
         assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn over_capacity_table_requests_are_invalid_spec_not_aborts() {
+        // 10⁴ stages at the default S = 500 would need a worst-case table
+        // beyond MAX_TABLE_BYTES; the preflight rejects it before any
+        // allocation, kind-tagged so the service answers 422.
+        let stages: Vec<Stage> = (1..=10_000)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300))
+            .collect();
+        let big = Chain::new("deep", stages, 100);
+        let err = PlanRequest::new(ChainSpec::inline(big), MemBytes(1 << 34))
+            .slots(SlotCount(500))
+            .plan()
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+        assert_eq!(err.kind().http_status(), 422);
+        let msg = format!("{err:#}");
+        assert!(msg.contains("500"), "names the slot axis: {msg}");
     }
 
     #[test]

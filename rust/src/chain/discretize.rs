@@ -116,6 +116,12 @@ impl DiscreteChain {
         (self.slots as u32).checked_sub(self.wa[0])
     }
 
+    /// Build the O(1) range-max oracle for the DP's memory thresholds
+    /// `m∅(s,t)` / `m_all(s,t)` (one O(L log L) precompute per solve).
+    pub fn peaks(&self) -> PeakOracle<'_> {
+        PeakOracle::new(self)
+    }
+
     // 1-based accessors mirroring `Chain`.
     pub fn wa_s(&self, l: usize) -> u32 {
         self.wa[l]
@@ -137,6 +143,77 @@ impl DiscreteChain {
     }
     pub fn ub_s(&self, l: usize) -> f64 {
         self.ub[l - 1]
+    }
+}
+
+/// O(1) queries for the solver's per-cell memory thresholds.
+///
+/// Both thresholds of §4.2 are range maxima over the chain:
+///
+/// * `m∅(s,t) = ω_δ^t + max(ω_a^s + o_f^s, max_{j=s+1..t-1} g_j)` with
+///   `g_j = ω_a^{j-1} + ω_a^j + o_f^j` — the peak of an `F∅` sweep;
+/// * `m_all(s,t) = max(ω_δ^t + ω_ā^s + o_f^s, ω_δ^s + ω_ā^s + o_b^s)` —
+///   already O(1).
+///
+/// The dense reference fill recomputes `m∅` with an O(t−s) scan per cell
+/// (O(L³) total); this oracle precomputes a binary-lifting sparse table
+/// over `g_j` once (O(L log L) time and space) so every cell query is two
+/// lookups. All sums stay far below `u32::MAX` because every discretized
+/// size is capped at [`DiscreteChain::SLOT_CAP`] (`u32::MAX / 8`) and at
+/// most four sizes are ever added.
+pub struct PeakOracle<'a> {
+    dc: &'a DiscreteChain,
+    /// `levels[k][i] = max g over j ∈ [i+2, i+2 + 2^k)` (indices are
+    /// `j - 2`; `g_j` is defined for `j ∈ 2..=L+1`).
+    levels: Vec<Vec<u32>>,
+}
+
+impl<'a> PeakOracle<'a> {
+    fn new(dc: &'a DiscreteChain) -> Self {
+        let n = dc.len();
+        let m = n.saturating_sub(1);
+        let mut base = Vec::with_capacity(m);
+        for j in 2..=n {
+            base.push(dc.wa_s(j - 1) + dc.wa_s(j) + dc.of_s(j));
+        }
+        let mut levels = vec![base];
+        let mut k = 0usize;
+        while m > 0 && (1usize << (k + 1)) <= m {
+            let half = 1usize << k;
+            let prev = &levels[k];
+            let next: Vec<u32> =
+                (0..prev.len() - half).map(|i| prev[i].max(prev[i + half])).collect();
+            levels.push(next);
+            k += 1;
+        }
+        PeakOracle { dc, levels }
+    }
+
+    /// `max g_j` over `j ∈ lo..=hi` (requires `2 ≤ lo ≤ hi ≤ L+1`).
+    fn gmax(&self, lo: usize, hi: usize) -> u32 {
+        let (a, b) = (lo - 2, hi - 2);
+        let len = b - a + 1;
+        let k = usize::BITS as usize - 1 - len.leading_zeros() as usize;
+        let row = &self.levels[k];
+        row[a].max(row[b + 1 - (1usize << k)])
+    }
+
+    /// `m∅(s,t)`: slots needed to sweep `F∅` from `s` to just before `t`
+    /// with `δ^t` resident. Bit-for-bit equal to the reference scan.
+    pub fn m_empty(&self, s: usize, t: usize) -> u32 {
+        let mut peak = self.dc.wa_s(s) + self.dc.of_s(s);
+        if t >= s + 2 {
+            peak = peak.max(self.gmax(s + 1, t - 1));
+        }
+        self.dc.wd_s(t) + peak
+    }
+
+    /// `m_all(s,t)`: slots needed to run `Fall^s` (with `δ^t` resident)
+    /// and later `B^s` (with `δ^s` resident).
+    pub fn m_all(&self, s: usize, t: usize) -> u32 {
+        let fwd = self.dc.wd_s(t) + self.dc.wabar_s(s) + self.dc.of_s(s);
+        let bwd = self.dc.wd_s(s) + self.dc.wabar_s(s) + self.dc.ob_s(s);
+        fwd.max(bwd)
     }
 }
 
@@ -207,6 +284,41 @@ mod tests {
         let d = DiscreteChain::new(&huge, 1, 10); // slot_bytes = 0.1
         assert_eq!(d.wa_s(1), DiscreteChain::SLOT_CAP);
         assert_eq!(d.wabar_s(1), DiscreteChain::SLOT_CAP);
+    }
+
+    #[test]
+    fn peak_oracle_matches_reference_scans() {
+        // heterogeneous sizes, including zero overheads and a tiny loss
+        let stages: Vec<Stage> = (0..17)
+            .map(|i| {
+                let wa = 40 + 37 * ((i * i + 3) % 11) as u64;
+                let wabar = wa * (1 + (i % 4) as u64);
+                let mut st = Stage::new(format!("s{i}"), 1.0, 2.0, wa, wabar);
+                if i % 3 == 0 {
+                    st = st.with_overheads(wa / 2, wa / 3);
+                }
+                st
+            })
+            .chain(std::iter::once(Stage::new("loss", 0.1, 0.1, 4, 4)))
+            .collect();
+        let c = Chain::new("hetero", stages, 123);
+        let dc = DiscreteChain::new(&c, 2048, 64);
+        let peaks = dc.peaks();
+        let n = dc.len();
+        for t in 1..=n {
+            for s in 1..=t {
+                // reference m∅: the dense fill's O(t−s) scan
+                let wd_t = dc.wd_s(t);
+                let mut want = wd_t + dc.wa_s(s) + dc.of_s(s);
+                for j in (s + 1)..t {
+                    want = want.max(wd_t + dc.wa_s(j - 1) + dc.wa_s(j) + dc.of_s(j));
+                }
+                assert_eq!(peaks.m_empty(s, t), want, "m_empty({s},{t})");
+                let fwd = dc.wd_s(t) + dc.wabar_s(s) + dc.of_s(s);
+                let bwd = dc.wd_s(s) + dc.wabar_s(s) + dc.ob_s(s);
+                assert_eq!(peaks.m_all(s, t), fwd.max(bwd), "m_all({s},{t})");
+            }
+        }
     }
 
     #[test]

@@ -13,7 +13,7 @@ mod discretize;
 pub mod manifest;
 pub mod profiles;
 
-pub use discretize::{DiscreteChain, DEFAULT_SLOTS};
+pub use discretize::{DiscreteChain, PeakOracle, DEFAULT_SLOTS};
 
 /// One stage of the chain (a layer or an arbitrarily complex block).
 #[derive(Debug, Clone, PartialEq)]

@@ -352,6 +352,42 @@ pub fn vgg19(image: u64, batch: u64) -> Chain {
     Chain::new(format!("vgg19-i{image}-b{batch}"), b.stages, input_bytes)
 }
 
+// ---------------------------------------------------------------------------
+// Synthetic deep chains (solver scaling)
+// ---------------------------------------------------------------------------
+
+/// Deterministic heterogeneous chain of `depth` compute stages plus a
+/// loss stage — the solver-scaling workload (`bench_solver`'s L = 10⁴
+/// case and the deep parity tests). Not a network profile and not in
+/// [`FAMILIES`]: the stage costs cycle through four "phases" (memory-heavy
+/// / balanced / compute-heavy / checkpoint-cheap) so every slice of the
+/// chain is heterogeneous the way the DP cares about, at any depth.
+pub fn deep_chain(depth: usize) -> Chain {
+    assert!(depth >= 1, "deep_chain needs at least one compute stage");
+    let mut stages = Vec::with_capacity(depth + 1);
+    for i in 0..depth {
+        // phase-cycling costs; the ×(1 + i%7) wobble keeps neighboring
+        // cells from sharing thresholds, which is the hard case for the
+        // compressed rows
+        let (uf, ub, wa, wabar) = match i % 4 {
+            0 => (0.8, 1.9, 96, 320),  // memory-heavy, cheap math
+            1 => (1.6, 3.1, 48, 128),  // balanced
+            2 => (3.2, 6.5, 24, 64),   // compute-heavy, small tensors
+            _ => (1.1, 2.3, 16, 192),  // cheap checkpoint, fat tape
+        };
+        let j = (1 + i % 7) as u64;
+        stages.push(Stage::new(
+            format!("d{i}"),
+            uf * j as f64,
+            ub * j as f64,
+            wa * j,
+            wabar * j,
+        ));
+    }
+    stages.push(Stage::new("loss", 0.2, 0.2, 8, 8));
+    Chain::new(format!("deep-{depth}"), stages, 96)
+}
+
 /// Every profile family this module can generate (service discovery and
 /// CLI validation).
 pub const FAMILIES: &[&str] = &["resnet", "densenet", "inception", "vgg"];
@@ -473,6 +509,22 @@ mod tests {
         for f in FAMILIES {
             assert!(!supported_depths(f).is_empty(), "{f}");
         }
+    }
+
+    #[test]
+    fn deep_chain_is_deterministic_and_heterogeneous() {
+        let a = deep_chain(200);
+        let b = deep_chain(200);
+        assert_eq!(a.len(), 201);
+        for l in 1..=a.len() {
+            assert_eq!(a.wa(l), b.wa(l));
+            assert_eq!(a.wabar(l), b.wabar(l));
+        }
+        // genuinely heterogeneous: many distinct checkpoint sizes
+        let mut sizes: Vec<u64> = (1..a.len()).map(|l| a.wa(l)).collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(sizes.len() >= 10, "only {} distinct sizes", sizes.len());
     }
 
     #[test]

@@ -27,7 +27,11 @@ mod sequence;
 mod store_all;
 
 pub use exhaustive::exhaustive_optimal;
-pub use optimal::{solve, solve_table, solve_table_with_workers, DpTable, Mode};
+pub use optimal::{
+    solve, solve_table, solve_table_dense, solve_table_dense_with_workers,
+    solve_table_with_workers, try_solve_table, try_solve_table_with_workers, Decision, DpTable,
+    Mode, MAX_TABLE_BYTES,
+};
 pub use periodic::{paper_segment_sweep, periodic_schedule, segment_bounds};
 pub use planner::{cache_stats, clear_cache, Planner, PlannerCacheStats};
 pub use sequence::{Op, Schedule, StrategyKind};

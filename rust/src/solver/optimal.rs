@@ -16,14 +16,68 @@
 //! [`Mode::AdRevolve`] disables the second branch for `t > s`, which is
 //! exactly the "revolve" comparator of §5.3 (heterogeneous AD optimum,
 //! storing only layer inputs, taping right before each backward).
+//!
+//! # Frontier rows: the compressed, pruned fill
+//!
+//! The production fill ([`solve_table`]) exploits three structural facts
+//! the dense formulation ignores:
+//!
+//! 1. **Thresholds are range maxima.** `m∅(s,t)` is a max over the span —
+//!    [`PeakOracle`] precomputes a sparse table once so each of the O(L³)
+//!    per-split queries is O(1) instead of an O(t−s) scan.
+//! 2. **Cost rows are non-increasing step functions.** Along the m axis
+//!    `C(s,t,·)` only ever steps *down* — an extra slot either buys a
+//!    strictly better strategy or it changes nothing — and in practice it
+//!    steps a handful of times (on the `t−s+2` scale of the candidate
+//!    structure), far fewer than the `S+1` hard ceiling. Rows are stored
+//!    run-length-compressed as sorted `(m_start, cost, decision)` runs
+//!    ("frontier rows") in a diagonal-major append-only arena
+//!    ([`FrontierStore`]); budgets below the first run are infeasible and
+//!    each run holds to the next run's start (or to `S`). A run breaks on
+//!    a change of `(cost bits, decision)` — equal adjacent costs do *not*
+//!    imply equal decisions, so dedup keys on the pair. The dense
+//!    accessors ([`DpTable::cost`] / [`DpTable::decision`]) are preserved
+//!    on top via binary search.
+//! 3. **Most splits are dominated.** A candidate split's value is bounded
+//!    below by `Σu_f + min(right) + min(left)`; if that bound already
+//!    fails to beat the incumbent row at the candidate's first feasible
+//!    slot, no budget can make the candidate win (rows are
+//!    non-increasing and updates require a *strict* improvement), so the
+//!    split is skipped after O(1) work. Per-row summaries (first feasible
+//!    slot, minimum cost) make the check two loads. The prune is exact —
+//!    the bound uses the same `(Σu_f + right) + left` float association
+//!    as the reference fill, and f64 addition is monotone — so the fast
+//!    fill is **bit-identical** to [`solve_table_dense`], which retains
+//!    the plain dense scan as the executable specification
+//!    (`tests/dp_fill_parity.rs` pins this).
+//!
+//! Surviving candidates are folded into the incumbent row by a
+//! breakpoint merge that costs O(runs) instead of O(S). The wavefront
+//! parallelism is unchanged: each anti-diagonal's cells are computed in
+//! isolation across scoped threads and appended to the arena in
+//! deterministic diagonal order, so results are bit-identical for every
+//! worker count (`tests/wavefront_parity.rs`).
 
 use super::sequence::{Op, Schedule};
-use crate::chain::{Chain, DiscreteChain};
+use crate::api::{Error, Result as ApiResult};
+use crate::chain::{Chain, DiscreteChain, PeakOracle};
 
 /// Decision markers packed into the DP table.
 const DEC_INFEASIBLE: u16 = 0;
 const DEC_ALL: u16 = 1;
 // k >= 2 encodes the checkpoint split s' = s + (k - 1).
+
+/// Hard ceiling on a single DP table's heap footprint. [`DpTable::try_new`]
+/// rejects any `(L, S)` whose *worst-case* compressed table could exceed
+/// this, so a fill that starts always finishes without exhausting memory.
+pub const MAX_TABLE_BYTES: u128 = 16 << 30;
+
+/// Bytes per frontier run: `m_start: u32` + `cost: f64` + `dec: u16`
+/// (struct-of-arrays, so no padding).
+const RUN_BYTES: u128 = 4 + 8 + 2;
+/// Per-row overhead: one `u64` arena offset plus the `(first_m, min_cost)`
+/// summary pair the dominance prune reads.
+const ROW_BYTES: u128 = 8 + 4 + 8;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
@@ -33,25 +87,157 @@ pub enum Mode {
     AdRevolve,
 }
 
-/// Packed triangular DP table: cost and decision for every `(s, t, m)`.
-pub struct DpTable {
+/// What the optimal strategy does first for a `(s, t, m)` cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// No persistent schedule fits in `m` slots.
+    Infeasible,
+    /// `Fall^s`: tape stage `s`, recurse on `(s+1, t)`.
+    TapeAll,
+    /// `Fck^s` then `F∅` up to `s'`: checkpoint `a^{s-1}`, recurse on
+    /// `(s', t)` then `(s, s'-1)`. The payload is the absolute `s'`.
+    Split(usize),
+}
+
+// ---------------------------------------------------------------------------
+// Storage: frontier-compressed rows (production) or dense (reference).
+// ---------------------------------------------------------------------------
+
+/// Frontier-compressed table storage: every `(s, t)` row is a sorted list
+/// of `(m_start, cost, dec)` runs in one diagonal-major append-only arena.
+/// `row_start[cell]..row_start[cell+1]` bounds a row's runs; cells are
+/// numbered in fill order (diagonal `d = t−s` ascending, then `s`
+/// ascending), which makes the parallel fill's write-back a plain append.
+struct FrontierStore {
+    n: usize,
+    /// Arena offsets; `cells + 1` entries once the fill completes.
+    row_start: Vec<u64>,
+    ms: Vec<u32>,
+    costs: Vec<f64>,
+    decs: Vec<u16>,
+    /// Per-row summaries for the O(1) dominance prune: first feasible slot
+    /// (`u32::MAX` when the row is empty) and minimum (= rightmost) cost.
+    row_first_m: Vec<u32>,
+    row_min_cost: Vec<f64>,
+}
+
+/// A borrowed view of one row's runs.
+#[derive(Clone, Copy)]
+struct Runs<'a> {
+    ms: &'a [u32],
+    costs: &'a [f64],
+    decs: &'a [u16],
+}
+
+impl<'a> Runs<'a> {
+    /// Index of the run covering slot `m` (caller guarantees the row is
+    /// non-empty and `m ≥ ms[0]`).
+    #[inline]
+    fn index_at(&self, m: u32) -> usize {
+        debug_assert!(!self.ms.is_empty() && self.ms[0] <= m);
+        self.ms.partition_point(|&x| x <= m) - 1
+    }
+
+    #[inline]
+    fn cost_at(&self, m: u32) -> f64 {
+        match self.ms.first() {
+            Some(&first) if m >= first => self.costs[self.index_at(m)],
+            _ => f64::INFINITY,
+        }
+    }
+
+    #[inline]
+    fn dec_at(&self, m: u32) -> u16 {
+        match self.ms.first() {
+            Some(&first) if m >= first => self.decs[self.index_at(m)],
+            _ => DEC_INFEASIBLE,
+        }
+    }
+}
+
+impl FrontierStore {
+    /// Diagonal-major cell index for 1-based `s ≤ t`.
+    #[inline]
+    fn cell(&self, s: usize, t: usize) -> usize {
+        debug_assert!(1 <= s && s <= t && t <= self.n);
+        let d = t - s;
+        d * self.n - d * (d - 1) / 2 + (s - 1)
+    }
+
+    #[inline]
+    fn runs(&self, s: usize, t: usize) -> Runs<'_> {
+        let c = self.cell(s, t);
+        let (lo, hi) = (self.row_start[c] as usize, self.row_start[c + 1] as usize);
+        Runs { ms: &self.ms[lo..hi], costs: &self.costs[lo..hi], decs: &self.decs[lo..hi] }
+    }
+
+    #[inline]
+    fn first_m(&self, s: usize, t: usize) -> u32 {
+        self.row_first_m[self.cell(s, t)]
+    }
+
+    #[inline]
+    fn min_cost(&self, s: usize, t: usize) -> f64 {
+        self.row_min_cost[self.cell(s, t)]
+    }
+
+    fn with_capacity(n: usize) -> ApiResult<FrontierStore> {
+        let cells = n * (n + 1) / 2;
+        let mut store = FrontierStore {
+            n,
+            row_start: Vec::new(),
+            ms: Vec::new(),
+            costs: Vec::new(),
+            decs: Vec::new(),
+            row_first_m: Vec::new(),
+            row_min_cost: Vec::new(),
+        };
+        let oom = |e| Error::invalid(format!("DP table row index allocation failed: {e}"));
+        store.row_start.try_reserve_exact(cells + 1).map_err(oom)?;
+        store.row_first_m.try_reserve_exact(cells).map_err(oom)?;
+        store.row_min_cost.try_reserve_exact(cells).map_err(oom)?;
+        store.row_start.push(0);
+        Ok(store)
+    }
+
+    /// Append the next row in cell order. Arena growth is fallible so an
+    /// unexpectedly incompressible fill degrades into a kind-tagged error
+    /// instead of an allocator abort.
+    fn append_row(&mut self, ms: &[u32], costs: &[f64], decs: &[u16]) -> ApiResult<()> {
+        debug_assert!(ms.len() == costs.len() && ms.len() == decs.len());
+        let oom = |e| Error::invalid(format!("DP table arena allocation failed: {e}"));
+        self.ms.try_reserve(ms.len()).map_err(oom)?;
+        self.costs.try_reserve(costs.len()).map_err(oom)?;
+        self.decs.try_reserve(decs.len()).map_err(oom)?;
+        self.ms.extend_from_slice(ms);
+        self.costs.extend_from_slice(costs);
+        self.decs.extend_from_slice(decs);
+        self.row_start.push(self.ms.len() as u64);
+        self.row_first_m.push(ms.first().copied().unwrap_or(u32::MAX));
+        self.row_min_cost.push(costs.last().copied().unwrap_or(f64::INFINITY));
+        Ok(())
+    }
+
+    fn mem_bytes(&self) -> usize {
+        self.row_start.len() * 8
+            + self.ms.len() * 4
+            + self.costs.len() * 8
+            + self.decs.len() * 2
+            + self.row_first_m.len() * 4
+            + self.row_min_cost.len() * 8
+    }
+}
+
+/// The pre-PR dense layout: one f64 + u16 per `(s, t, m)`, kept as the
+/// executable specification the compressed fill is verified against.
+struct DenseStore {
     n: usize,
     slots: usize,
     cost: Vec<f64>,
     dec: Vec<u16>,
 }
 
-impl DpTable {
-    fn new(n: usize, slots: usize) -> Self {
-        let pairs = n * (n + 1) / 2;
-        DpTable {
-            n,
-            slots,
-            cost: vec![f64::INFINITY; pairs * (slots + 1)],
-            dec: vec![DEC_INFEASIBLE; pairs * (slots + 1)],
-        }
-    }
-
+impl DenseStore {
     /// Triangular pair index for 1-based `s ≤ t`.
     #[inline]
     fn pair(&self, s: usize, t: usize) -> usize {
@@ -62,26 +248,6 @@ impl DpTable {
     #[inline]
     fn idx(&self, s: usize, t: usize, m: u32) -> usize {
         self.pair(s, t) * (self.slots + 1) + m as usize
-    }
-
-    #[inline]
-    pub fn cost(&self, s: usize, t: usize, m: u32) -> f64 {
-        self.cost[self.idx(s, t, m)]
-    }
-
-    /// Number of stages `L+1` the table covers.
-    pub fn stages(&self) -> usize {
-        self.n
-    }
-
-    /// Upper bound of the table's slot axis (budgets `0..=slots`).
-    pub fn slots(&self) -> usize {
-        self.slots
-    }
-
-    /// Approximate heap footprint, used by the planner cache's byte budget.
-    pub fn mem_bytes(&self) -> usize {
-        self.cost.len() * (std::mem::size_of::<f64>() + std::mem::size_of::<u16>())
     }
 
     /// Cost row of one `(s, t)` cell: contiguous over the m axis.
@@ -99,11 +265,6 @@ impl DpTable {
     }
 
     #[inline]
-    fn dec(&self, s: usize, t: usize, m: u32) -> u16 {
-        self.dec[self.idx(s, t, m)]
-    }
-
-    #[inline]
     fn set(&mut self, s: usize, t: usize, m: u32, cost: f64, dec: u16) {
         let i = self.idx(s, t, m);
         self.cost[i] = cost;
@@ -111,30 +272,557 @@ impl DpTable {
     }
 }
 
+enum Store {
+    Frontier(FrontierStore),
+    Dense(DenseStore),
+}
+
+/// Packed triangular DP table: cost and decision for every `(s, t, m)`.
+/// Backed by frontier-compressed rows (the production fill) or the dense
+/// reference layout; both answer the same point queries.
+pub struct DpTable {
+    n: usize,
+    slots: usize,
+    store: Store,
+}
+
+impl DpTable {
+    /// Reject `(stages, slots)` combinations the table cannot represent:
+    /// more stages than the u16 decision encoding addresses, or a
+    /// worst-case compressed footprint past [`MAX_TABLE_BYTES`]. The
+    /// worst case is the *provable* per-row ceiling of `S + 1` runs (run
+    /// starts are distinct slot values), so a fill that passes this check
+    /// can never run away — real rows are far smaller, so admission is
+    /// conservative by design: a rejection is deterministic at request
+    /// time instead of an allocator surprise mid-fill.
+    pub fn preflight(n: usize, slots: usize) -> ApiResult<()> {
+        if n == 0 {
+            return Err(Error::invalid("DP table needs at least one stage"));
+        }
+        if n > u16::MAX as usize {
+            return Err(Error::invalid(format!(
+                "chain of {n} stages exceeds the solver's limit of {} \
+                 (u16 split encoding)",
+                u16::MAX
+            )));
+        }
+        let cells = (n as u128) * (n as u128 + 1) / 2;
+        let runs = cells * (slots as u128 + 1);
+        let bytes = runs * RUN_BYTES + cells * ROW_BYTES + 8;
+        if bytes > MAX_TABLE_BYTES {
+            return Err(Error::invalid(format!(
+                "DP table for {n} stages at {slots} slots could need \
+                 ~{} MiB, over the {} MiB solver ceiling — reduce the \
+                 slot count or split the chain",
+                bytes >> 20,
+                MAX_TABLE_BYTES >> 20
+            )));
+        }
+        Ok(())
+    }
+
+    /// An empty frontier-compressed table for `n` stages and `slots`
+    /// slots, ready for the fill. Fails (kind-tagged, maps to HTTP 422)
+    /// instead of aborting when the request is beyond [`preflight`]'s
+    /// capacity limits or the row index cannot be allocated.
+    ///
+    /// [`preflight`]: DpTable::preflight
+    pub fn try_new(n: usize, slots: usize) -> ApiResult<DpTable> {
+        Self::preflight(n, slots)?;
+        Ok(DpTable { n, slots, store: Store::Frontier(FrontierStore::with_capacity(n)?) })
+    }
+
+    /// An infinity-initialized dense reference table (same capacity
+    /// checks; the dense footprint is exact, not worst-case).
+    pub fn try_new_dense(n: usize, slots: usize) -> ApiResult<DpTable> {
+        if n == 0 {
+            return Err(Error::invalid("DP table needs at least one stage"));
+        }
+        if n > u16::MAX as usize {
+            return Err(Error::invalid(format!(
+                "chain of {n} stages exceeds the solver's limit of {} \
+                 (u16 split encoding)",
+                u16::MAX
+            )));
+        }
+        let cells = (n as u128) * (n as u128 + 1) / 2 * (slots as u128 + 1);
+        if cells * 10 > MAX_TABLE_BYTES {
+            return Err(Error::invalid(format!(
+                "dense DP table for {n} stages at {slots} slots needs \
+                 ~{} MiB, over the {} MiB solver ceiling",
+                cells * 10 >> 20,
+                MAX_TABLE_BYTES >> 20
+            )));
+        }
+        let len = cells as usize;
+        let mut cost = Vec::new();
+        let mut dec = Vec::new();
+        let oom = |e| Error::invalid(format!("dense DP table allocation failed: {e}"));
+        cost.try_reserve_exact(len).map_err(oom)?;
+        dec.try_reserve_exact(len).map_err(oom)?;
+        cost.resize(len, f64::INFINITY);
+        dec.resize(len, DEC_INFEASIBLE);
+        Ok(DpTable { n, slots, store: Store::Dense(DenseStore { n, slots, cost, dec }) })
+    }
+
+    #[inline]
+    pub fn cost(&self, s: usize, t: usize, m: u32) -> f64 {
+        match &self.store {
+            Store::Frontier(f) => f.runs(s, t).cost_at(m),
+            Store::Dense(d) => d.cost[d.idx(s, t, m)],
+        }
+    }
+
+    #[inline]
+    fn dec_code(&self, s: usize, t: usize, m: u32) -> u16 {
+        match &self.store {
+            Store::Frontier(f) => f.runs(s, t).dec_at(m),
+            Store::Dense(d) => d.dec[d.idx(s, t, m)],
+        }
+    }
+
+    /// The optimal first move at `(s, t, m)`.
+    pub fn decision(&self, s: usize, t: usize, m: u32) -> Decision {
+        match self.dec_code(s, t, m) {
+            DEC_INFEASIBLE => Decision::Infeasible,
+            DEC_ALL => Decision::TapeAll,
+            k => Decision::Split(s + k as usize - 1),
+        }
+    }
+
+    /// Number of stages `L+1` the table covers.
+    pub fn stages(&self) -> usize {
+        self.n
+    }
+
+    /// Upper bound of the table's slot axis (budgets `0..=slots`).
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Whether this table uses the frontier-compressed layout.
+    pub fn is_compressed(&self) -> bool {
+        matches!(self.store, Store::Frontier(_))
+    }
+
+    /// Total stored runs (frontier layout) or m-axis entries (dense) —
+    /// the compression diagnostic `bench_solver` reports.
+    pub fn run_count(&self) -> usize {
+        match &self.store {
+            Store::Frontier(f) => f.ms.len(),
+            Store::Dense(d) => d.cost.len(),
+        }
+    }
+
+    /// Actual heap footprint — compressed, for frontier tables — used by
+    /// the planner cache's byte budget.
+    pub fn mem_bytes(&self) -> usize {
+        match &self.store {
+            Store::Frontier(f) => f.mem_bytes(),
+            Store::Dense(d) => d.cost.len() * 10,
+        }
+    }
+
+    /// Algorithm 2 at the whole-chain root: the op sequence for slot
+    /// budget `m` (the caller has already charged `ω_a^0`), or `None`
+    /// when `(1, L+1, m)` is infeasible.
+    pub fn ops_at(&self, dc: &DiscreteChain, m: u32) -> Option<Vec<Op>> {
+        assert!(m as usize <= self.slots, "budget beyond the table's slot axis");
+        if !self.cost(1, self.n, m).is_finite() {
+            return None;
+        }
+        let mut ops = Vec::new();
+        reconstruct(self, dc, 1, self.n, m, &mut ops);
+        Some(ops)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The compressed, pruned fill.
+// ---------------------------------------------------------------------------
+
 /// Full DP solve over a discretized chain. The table covers every
 /// `(s, t, m)`, so one solve supports reconstruction at any budget `≤ M`.
 ///
 /// Uses every available core for the wavefront fill; see
 /// [`solve_table_with_workers`] for an explicit worker count (the
 /// regression suite pins `workers = 1` to prove the parallel fill is
-/// bit-identical to the serial one).
+/// bit-identical to the serial one). Panics on capacity errors; use
+/// [`try_solve_table`] to surface them.
 pub fn solve_table(dc: &DiscreteChain, mode: Mode) -> DpTable {
+    try_solve_table(dc, mode).unwrap_or_else(|e| panic!("DP fill failed: {e:#}"))
+}
+
+/// [`solve_table`], but over-capacity chains return a kind-tagged
+/// [`Error`] (the planning service maps it to HTTP 422) instead of
+/// panicking.
+pub fn try_solve_table(dc: &DiscreteChain, mode: Mode) -> ApiResult<DpTable> {
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    solve_table_with_workers(dc, mode, workers)
+    try_solve_table_with_workers(dc, mode, workers)
 }
 
 /// [`solve_table`] with a pinned worker count. `workers <= 1` forces the
 /// serial fill; larger counts chunk each anti-diagonal across scoped
 /// threads. The result is bit-identical regardless of `workers`: cells
 /// on one diagonal depend only on strictly shorter sub-chains, each cell
-/// is computed in isolation ([`fill_cell`]), and the writeback order is
-/// the deterministic diagonal order either way.
+/// is computed in isolation ([`fill_cell`]), and rows are appended to the
+/// arena in the deterministic diagonal order either way.
 pub fn solve_table_with_workers(dc: &DiscreteChain, mode: Mode, workers: usize) -> DpTable {
+    try_solve_table_with_workers(dc, mode, workers)
+        .unwrap_or_else(|e| panic!("DP fill failed: {e:#}"))
+}
+
+/// Fallible form of [`solve_table_with_workers`].
+pub fn try_solve_table_with_workers(
+    dc: &DiscreteChain,
+    mode: Mode,
+    workers: usize,
+) -> ApiResult<DpTable> {
     let n = dc.len();
     let slots = dc.slots;
-    let mut tab = DpTable::new(n, slots);
+    let mut tab = DpTable::try_new(n, slots)?;
+    let Store::Frontier(store) = &mut tab.store else { unreachable!() };
+    let peaks = dc.peaks();
 
     // Prefix sums of u_f for O(1) Σ u_f^{s..s'-1}.
+    let mut uf_prefix = vec![0.0f64; n + 1];
+    for l in 1..=n {
+        uf_prefix[l] = uf_prefix[l - 1] + dc.uf_s(l);
+    }
+
+    // Base case (eq. 1): C(s,s,m) = u_f + u_b  iff  m ≥ m_all^{s,s} —
+    // a single run (or an empty, everywhere-infeasible row).
+    for s in 1..=n {
+        let need = peaks.m_all(s, s);
+        if need <= slots as u32 {
+            store.append_row(&[need], &[dc.uf_s(s) + dc.ub_s(s)], &[DEC_ALL])?;
+        } else {
+            store.append_row(&[], &[], &[])?;
+        }
+    }
+
+    // General case by increasing sub-chain length d = t - s (eq. 2).
+    // Cells on one diagonal depend only on strictly shorter sub-chains,
+    // so each diagonal is filled in parallel (scoped threads; no rayon in
+    // the offline build) and appended serially in cell order.
+    for d in 1..n {
+        let ts: Vec<usize> = ((d + 1)..=n).collect();
+        let chunks: Vec<ChunkRows> = if ts.len() < 2 || workers < 2 {
+            vec![fill_chunk(store, dc, &peaks, &uf_prefix, &ts, d, mode)]
+        } else {
+            let chunk = ts.len().div_ceil(workers);
+            std::thread::scope(|scope| {
+                let store_ref = &*store;
+                let (peaks_ref, uf_ref) = (&peaks, &uf_prefix);
+                let handles: Vec<_> = ts
+                    .chunks(chunk)
+                    .map(|part| {
+                        scope.spawn(move || {
+                            fill_chunk(store_ref, dc, peaks_ref, uf_ref, part, d, mode)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            })
+        };
+        for ch in &chunks {
+            let mut off = 0usize;
+            for &len in &ch.lens {
+                let end = off + len as usize;
+                store.append_row(&ch.ms[off..end], &ch.costs[off..end], &ch.decs[off..end])?;
+                off = end;
+            }
+        }
+    }
+    Ok(tab)
+}
+
+/// Rows produced by one worker's slice of an anti-diagonal, concatenated
+/// (`lens[i]` runs per row, in `t` order).
+struct ChunkRows {
+    lens: Vec<u32>,
+    ms: Vec<u32>,
+    costs: Vec<f64>,
+    decs: Vec<u16>,
+}
+
+/// A row under construction: sorted runs with `(cost bits, dec)` dedup.
+#[derive(Default)]
+struct RowBuf {
+    ms: Vec<u32>,
+    costs: Vec<f64>,
+    decs: Vec<u16>,
+}
+
+impl RowBuf {
+    fn clear(&mut self) {
+        self.ms.clear();
+        self.costs.clear();
+        self.decs.clear();
+    }
+
+    #[inline]
+    fn push(&mut self, m: u32, cost: f64, dec: u16) {
+        if let (Some(&lc), Some(&ld)) = (self.costs.last(), self.decs.last()) {
+            if lc.to_bits() == cost.to_bits() && ld == dec {
+                return; // same run continues
+            }
+            debug_assert!(*self.ms.last().unwrap() < m, "runs must advance");
+            debug_assert!(cost <= lc, "rows are non-increasing");
+        }
+        self.ms.push(m);
+        self.costs.push(cost);
+        self.decs.push(dec);
+    }
+
+    /// Row value at slot `m` (∞ below the first run).
+    fn eval(&self, m: u32) -> f64 {
+        let i = self.ms.partition_point(|&x| x <= m);
+        if i == 0 {
+            f64::INFINITY
+        } else {
+            self.costs[i - 1]
+        }
+    }
+}
+
+/// A candidate step function under construction (uniform decision, so
+/// dedup keys on cost bits alone).
+#[derive(Default)]
+struct CandBuf {
+    ms: Vec<u32>,
+    costs: Vec<f64>,
+}
+
+impl CandBuf {
+    fn clear(&mut self) {
+        self.ms.clear();
+        self.costs.clear();
+    }
+
+    #[inline]
+    fn push(&mut self, m: u32, cost: f64) {
+        if let Some(&lc) = self.costs.last() {
+            if lc.to_bits() == cost.to_bits() {
+                return;
+            }
+            debug_assert!(*self.ms.last().unwrap() < m);
+        }
+        self.ms.push(m);
+        self.costs.push(cost);
+    }
+}
+
+/// Per-thread scratch reused across a chunk's cells.
+#[derive(Default)]
+struct Scratch {
+    best: RowBuf,
+    out: RowBuf,
+    cand: CandBuf,
+}
+
+fn fill_chunk(
+    store: &FrontierStore,
+    dc: &DiscreteChain,
+    peaks: &PeakOracle<'_>,
+    uf_prefix: &[f64],
+    ts: &[usize],
+    d: usize,
+    mode: Mode,
+) -> ChunkRows {
+    let mut scratch = Scratch::default();
+    let mut out =
+        ChunkRows { lens: Vec::with_capacity(ts.len()), ms: Vec::new(), costs: Vec::new(), decs: Vec::new() };
+    for &t in ts {
+        fill_cell(store, dc, peaks, uf_prefix, t - d, t, mode, &mut scratch);
+        out.lens.push(scratch.best.ms.len() as u32);
+        out.ms.extend_from_slice(&scratch.best.ms);
+        out.costs.extend_from_slice(&scratch.best.costs);
+        out.decs.extend_from_slice(&scratch.best.decs);
+    }
+    out
+}
+
+/// Fill one `(s, t)` cell across the whole m axis (eq. 2), producing the
+/// row in `scratch.best`. Candidates are applied in the reference fill's
+/// order (splits `s' = s+1..=t` ascending, then `Fall`), each one either
+/// skipped by the exact dominance bound or folded in by a breakpoint
+/// merge with strict-improvement wins — so the resulting `(cost, dec)`
+/// function is bit-identical to the dense scan's.
+#[allow(clippy::too_many_arguments)]
+fn fill_cell(
+    store: &FrontierStore,
+    dc: &DiscreteChain,
+    peaks: &PeakOracle<'_>,
+    uf_prefix: &[f64],
+    s: usize,
+    t: usize,
+    mode: Mode,
+    scratch: &mut Scratch,
+) {
+    let slots = dc.slots as u32;
+    scratch.best.clear();
+
+    // C1: Fck^s, F∅^{s+1..s'-1}, recurse (s',t) with m−ω_a^{s'-1} and
+    // (s,s'-1) with m.
+    let m_nosave = peaks.m_empty(s, t);
+    for sp in (s + 1)..=t {
+        let hold = dc.wa_s(sp - 1); // a^{s'-1} stays resident
+        // feasibility frontier: the earliest slot where both child rows
+        // exist and the sweep fits (u64 math so empty-row sentinels and
+        // saturated sizes cannot wrap)
+        let start = (m_nosave as u64)
+            .max(hold as u64)
+            .max(store.first_m(s, sp - 1) as u64)
+            .max(store.first_m(sp, t) as u64 + hold as u64);
+        if start > slots as u64 {
+            continue;
+        }
+        let start = start as u32;
+        let pre = uf_prefix[sp - 1] - uf_prefix[s - 1];
+        // dominance: the candidate can never drop below this bound (same
+        // float association as the reference fill; f64 add is monotone),
+        // and the incumbent row never rises above its value at `start` —
+        // so a failed strict inequality here is a failed strict
+        // inequality at every budget.
+        let cand_min = (pre + store.min_cost(sp, t)) + store.min_cost(s, sp - 1);
+        if !(cand_min < scratch.best.eval(start)) {
+            continue;
+        }
+        let left = store.runs(s, sp - 1);
+        let right = store.runs(sp, t);
+        scratch.cand.clear();
+        let mut li = left.index_at(start);
+        let mut ri = right.index_at(start - hold);
+        let mut m = start;
+        loop {
+            scratch.cand.push(m, (pre + right.costs[ri]) + left.costs[li]);
+            let nl = if li + 1 < left.ms.len() { left.ms[li + 1] as u64 } else { u64::MAX };
+            let nr = if ri + 1 < right.ms.len() {
+                right.ms[ri + 1] as u64 + hold as u64
+            } else {
+                u64::MAX
+            };
+            let nxt = nl.min(nr);
+            if nxt > slots as u64 {
+                break;
+            }
+            if nl == nxt {
+                li += 1;
+            }
+            if nr == nxt {
+                ri += 1;
+            }
+            m = nxt as u32;
+        }
+        merge_candidate(&mut scratch.best, &mut scratch.out, &scratch.cand, (sp - s + 1) as u16);
+    }
+
+    // C2: Fall^s, recurse (s+1,t) with m−ω_ā^s, B^s. (Absent in AD mode.)
+    if mode == Mode::Full && t > s {
+        let habar = dc.wabar_s(s);
+        let start = (peaks.m_all(s, t) as u64)
+            .max(habar as u64)
+            .max(store.first_m(s + 1, t) as u64 + habar as u64);
+        if start <= slots as u64 {
+            let start = start as u32;
+            let fixed = dc.uf_s(s) + dc.ub_s(s);
+            let cand_min = fixed + store.min_cost(s + 1, t);
+            if cand_min < scratch.best.eval(start) {
+                let mid = store.runs(s + 1, t);
+                scratch.cand.clear();
+                let mut mi = mid.index_at(start - habar);
+                let mut m = start;
+                loop {
+                    scratch.cand.push(m, fixed + mid.costs[mi]);
+                    if mi + 1 >= mid.ms.len() {
+                        break;
+                    }
+                    let nxt = mid.ms[mi + 1] as u64 + habar as u64;
+                    if nxt > slots as u64 {
+                        break;
+                    }
+                    mi += 1;
+                    m = nxt as u32;
+                }
+                merge_candidate(&mut scratch.best, &mut scratch.out, &scratch.cand, DEC_ALL);
+            }
+        }
+    }
+}
+
+/// Fold a candidate into the incumbent row: below the candidate's first
+/// feasible slot the incumbent is copied verbatim; from there on, events
+/// (either function's breakpoints) are walked in order and the winner at
+/// each event is emitted — the candidate only on a *strict* improvement,
+/// matching the reference fill's first-in-order tie-breaking.
+fn merge_candidate(best: &mut RowBuf, out: &mut RowBuf, cand: &CandBuf, code: u16) {
+    let start = cand.ms[0];
+    out.clear();
+    let mut bi = 0usize;
+    while bi < best.ms.len() && best.ms[bi] < start {
+        out.push(best.ms[bi], best.costs[bi], best.decs[bi]);
+        bi += 1;
+    }
+    // `bact` = index of the incumbent run covering the current event
+    let mut bact: Option<usize> = bi.checked_sub(1);
+    let mut ci = 0usize;
+    let mut m = start;
+    loop {
+        while bi < best.ms.len() && best.ms[bi] <= m {
+            bact = Some(bi);
+            bi += 1;
+        }
+        let bcost = bact.map_or(f64::INFINITY, |i| best.costs[i]);
+        let ccost = cand.costs[ci];
+        if ccost < bcost {
+            out.push(m, ccost, code);
+        } else {
+            // candidate values are finite, so an incumbent run exists here
+            let i = bact.expect("incumbent must cover any non-winning event");
+            out.push(m, best.costs[i], best.decs[i]);
+        }
+        let nb = if bi < best.ms.len() { best.ms[bi] as u64 } else { u64::MAX };
+        let nc = if ci + 1 < cand.ms.len() { cand.ms[ci + 1] as u64 } else { u64::MAX };
+        let nxt = nb.min(nc);
+        if nxt == u64::MAX {
+            break;
+        }
+        if nc == nxt {
+            ci += 1;
+        }
+        m = nxt as u32;
+    }
+    std::mem::swap(best, out);
+}
+
+// ---------------------------------------------------------------------------
+// The dense reference fill (pre-PR semantics, retained as the spec).
+// ---------------------------------------------------------------------------
+
+/// The reference dense fill: plain m-axis scans, per-cell threshold
+/// re-scans, no pruning — exactly the pre-frontier semantics, kept as the
+/// executable specification. `tests/dp_fill_parity.rs` pins the
+/// compressed fill bit-identical to this; `bench_solver`'s L = 1000 gate
+/// measures the speedup against it.
+pub fn solve_table_dense(dc: &DiscreteChain, mode: Mode) -> DpTable {
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    solve_table_dense_with_workers(dc, mode, workers)
+}
+
+/// [`solve_table_dense`] with a pinned worker count (same bit-identity
+/// guarantee across counts as the compressed fill).
+pub fn solve_table_dense_with_workers(
+    dc: &DiscreteChain,
+    mode: Mode,
+    workers: usize,
+) -> DpTable {
+    let n = dc.len();
+    let slots = dc.slots;
+    let mut tab = DpTable::try_new_dense(n, slots)
+        .unwrap_or_else(|e| panic!("dense DP fill failed: {e:#}"));
+    let Store::Dense(store) = &mut tab.store else { unreachable!() };
+
     let mut uf_prefix = vec![0.0f64; n + 1];
     for l in 1..=n {
         uf_prefix[l] = uf_prefix[l - 1] + dc.uf_s(l);
@@ -146,31 +834,25 @@ pub fn solve_table_with_workers(dc: &DiscreteChain, mode: Mode, workers: usize) 
         let cost = dc.uf_s(s) + dc.ub_s(s);
         for m in 0..=slots as u32 {
             if m >= need {
-                tab.set(s, s, m, cost, DEC_ALL);
+                store.set(s, s, m, cost, DEC_ALL);
             }
         }
     }
 
-    // General case by increasing sub-chain length d = t - s (eq. 2).
-    // Cells on one diagonal depend only on strictly shorter sub-chains,
-    // so each diagonal is filled in parallel (scoped threads; no rayon in
-    // the offline build) and written back serially. The per-cell kernel
-    // iterates m *innermost over contiguous rows* — the dominant loop is
-    // two streaming adds + a compare over slot-indexed slices.
     for d in 1..n {
         let cells: Vec<usize> = ((d + 1)..=n).collect(); // t values; s = t - d
         let results: Vec<(usize, Vec<f64>, Vec<u16>)> = if cells.len() < 2 || workers < 2 {
             cells
                 .iter()
                 .map(|&t| {
-                    let (c, dec) = fill_cell(&tab, dc, &uf_prefix, t - d, t, mode);
+                    let (c, dec) = fill_cell_dense(store, dc, &uf_prefix, t - d, t, mode);
                     (t, c, dec)
                 })
                 .collect()
         } else {
             let chunk = cells.len().div_ceil(workers);
             std::thread::scope(|scope| {
-                let tab_ref = &tab;
+                let store_ref = &*store;
                 let uf_ref = &uf_prefix;
                 let handles: Vec<_> = cells
                     .chunks(chunk)
@@ -179,7 +861,7 @@ pub fn solve_table_with_workers(dc: &DiscreteChain, mode: Mode, workers: usize) 
                             part.iter()
                                 .map(|&t| {
                                     let (c, dec) =
-                                        fill_cell(tab_ref, dc, uf_ref, t - d, t, mode);
+                                        fill_cell_dense(store_ref, dc, uf_ref, t - d, t, mode);
                                     (t, c, dec)
                                 })
                                 .collect::<Vec<_>>()
@@ -190,18 +872,18 @@ pub fn solve_table_with_workers(dc: &DiscreteChain, mode: Mode, workers: usize) 
             })
         };
         for (t, cost, dec) in results {
-            tab.write_row(t - d, t, &cost, &dec);
+            store.write_row(t - d, t, &cost, &dec);
         }
     }
     tab
 }
 
-/// Fill one `(s, t)` cell across the whole m axis (eq. 2).
+/// Fill one `(s, t)` cell across the whole m axis (eq. 2), dense form.
 ///
 /// Infinity propagates through the adds, so no explicit feasibility
 /// branches are needed in the inner loops: `∞ < best` is always false.
-fn fill_cell(
-    tab: &DpTable,
+fn fill_cell_dense(
+    store: &DenseStore,
     dc: &DiscreteChain,
     uf_prefix: &[f64],
     s: usize,
@@ -212,14 +894,12 @@ fn fill_cell(
     let mut best = vec![f64::INFINITY; slots + 1];
     let mut dec = vec![DEC_INFEASIBLE; slots + 1];
 
-    // C1: Fck^s, F∅^{s+1..s'-1}, recurse (s',t) with m−ω_a^{s'-1} and
-    // (s,s'-1) with m.
     let m_nosave = m_empty(dc, s, t) as usize;
     for sp in (s + 1)..=t {
         let hold = dc.wa_s(sp - 1) as usize; // a^{s'-1} stays resident
         let pre = uf_prefix[sp - 1] - uf_prefix[s - 1];
-        let left = tab.row(s, sp - 1);
-        let right = tab.row(sp, t);
+        let left = store.row(s, sp - 1);
+        let right = store.row(sp, t);
         let code = (sp - s + 1) as u16;
         let start = m_nosave.max(hold);
         if start > slots {
@@ -234,12 +914,11 @@ fn fill_cell(
         }
     }
 
-    // C2: Fall^s, recurse (s+1,t) with m−ω_ā^s, B^s. (Absent in AD mode.)
     if mode == Mode::Full {
         let m_all_st = m_all(dc, s, t) as usize;
         let habar = dc.wabar_s(s) as usize;
         let fixed = dc.uf_s(s) + dc.ub_s(s);
-        let mid = tab.row(s + 1, t);
+        let mid = store.row(s + 1, t);
         let start = m_all_st.max(habar);
         if start <= slots {
             for m in start..=slots {
@@ -254,8 +933,8 @@ fn fill_cell(
     (best, dec)
 }
 
-/// `m∅^{s,t}`: slots needed to sweep `F∅` from `s` to just before `t`
-/// with `δ^t` resident (paper §4.2).
+/// `m∅^{s,t}` by the reference O(t−s) scan (dense fill only; the
+/// compressed fill uses [`PeakOracle::m_empty`], pinned equal).
 fn m_empty(dc: &DiscreteChain, s: usize, t: usize) -> u32 {
     let wd_t = dc.wd_s(t);
     let mut peak = wd_t + dc.wa_s(s) + dc.of_s(s);
@@ -273,9 +952,18 @@ fn m_all(dc: &DiscreteChain, s: usize, t: usize) -> u32 {
     fwd.max(bwd)
 }
 
+// ---------------------------------------------------------------------------
+// Reconstruction (Algorithm 2).
+// ---------------------------------------------------------------------------
+
 /// Algorithm 2: reconstruct the optimal sequence from the table. Valid at
 /// *any* slot budget `m`, not just the one a solve was requested at — the
 /// table covers the whole `(s, t, m)` space (the planner relies on this).
+///
+/// Iterative with an explicit work stack: the recursion depth of the
+/// naive form is Θ(L) (a store-all schedule nests one level per stage),
+/// which overflows a thread stack at the depth-10⁴ chains the compressed
+/// fill makes solvable.
 pub(crate) fn reconstruct(
     tab: &DpTable,
     dc: &DiscreteChain,
@@ -284,25 +972,40 @@ pub(crate) fn reconstruct(
     m: u32,
     ops: &mut Vec<Op>,
 ) {
-    match tab.dec(s, t, m) {
-        DEC_INFEASIBLE => unreachable!("reconstruct called on infeasible cell"),
-        DEC_ALL if s == t => {
-            ops.push(Op::FwdAll(s as u32));
-            ops.push(Op::Bwd(s as u32));
-        }
-        DEC_ALL => {
-            ops.push(Op::FwdAll(s as u32));
-            reconstruct(tab, dc, s + 1, t, m - dc.wabar_s(s), ops);
-            ops.push(Op::Bwd(s as u32));
-        }
-        k => {
-            let sp = s + (k as usize - 1);
-            ops.push(Op::FwdCk(s as u32));
-            for j in (s + 1)..sp {
-                ops.push(Op::FwdNoSave(j as u32));
+    enum Task {
+        Cell { s: usize, t: usize, m: u32 },
+        Emit(Op),
+    }
+    let mut stack = vec![Task::Cell { s, t, m }];
+    while let Some(task) = stack.pop() {
+        let (s, t, m) = match task {
+            Task::Emit(op) => {
+                ops.push(op);
+                continue;
             }
-            reconstruct(tab, dc, sp, t, m - dc.wa_s(sp - 1), ops);
-            reconstruct(tab, dc, s, sp - 1, m, ops);
+            Task::Cell { s, t, m } => (s, t, m),
+        };
+        match tab.dec_code(s, t, m) {
+            DEC_INFEASIBLE => unreachable!("reconstruct called on infeasible cell"),
+            DEC_ALL if s == t => {
+                ops.push(Op::FwdAll(s as u32));
+                ops.push(Op::Bwd(s as u32));
+            }
+            DEC_ALL => {
+                ops.push(Op::FwdAll(s as u32));
+                stack.push(Task::Emit(Op::Bwd(s as u32)));
+                stack.push(Task::Cell { s: s + 1, t, m: m - dc.wabar_s(s) });
+            }
+            k => {
+                let sp = s + (k as usize - 1);
+                ops.push(Op::FwdCk(s as u32));
+                for j in (s + 1)..sp {
+                    ops.push(Op::FwdNoSave(j as u32));
+                }
+                // LIFO: the (s', t) sub-problem runs first, then (s, s'-1)
+                stack.push(Task::Cell { s, t: sp - 1, m });
+                stack.push(Task::Cell { s: sp, t, m: m - dc.wa_s(sp - 1) });
+            }
         }
     }
 }
@@ -336,6 +1039,25 @@ mod tests {
             .collect();
         stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
         Chain::new("toy", stages, 100)
+    }
+
+    /// A deliberately heterogeneous chain (varying sizes, times, and
+    /// overheads) for fill-parity checks.
+    fn hetero(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (0..n)
+            .map(|i| {
+                let wa = 60 + 41 * ((i * i + 5) % 13) as u64;
+                let wabar = wa * (1 + (i % 5) as u64);
+                let uf = 1.0 + (i % 7) as f64 * 0.7;
+                let mut st = Stage::new(format!("s{i}"), uf, uf * 1.6, wa, wabar);
+                if i % 4 == 0 {
+                    st = st.with_overheads(wa / 3, wa / 2);
+                }
+                st
+            })
+            .collect();
+        stages.push(Stage::new("loss", 0.2, 0.2, 4, 4));
+        Chain::new("hetero", stages, 150)
     }
 
     #[test]
@@ -456,5 +1178,113 @@ mod tests {
                 last = cst;
             }
         }
+    }
+
+    #[test]
+    fn compressed_fill_is_bit_identical_to_dense_reference() {
+        for chain in [toy(7), hetero(11)] {
+            let memory = chain.store_all_memory() + chain.wa0;
+            let dc = DiscreteChain::new(&chain, memory, 90);
+            for mode in [Mode::Full, Mode::AdRevolve] {
+                let fast = solve_table(&dc, mode);
+                let dense = solve_table_dense(&dc, mode);
+                assert!(fast.is_compressed() && !dense.is_compressed());
+                for t in 1..=dc.len() {
+                    for s in 1..=t {
+                        for m in 0..=dc.slots as u32 {
+                            assert_eq!(
+                                fast.cost(s, t, m).to_bits(),
+                                dense.cost(s, t, m).to_bits(),
+                                "{mode:?}: cost({s},{t},{m})"
+                            );
+                            assert_eq!(
+                                fast.decision(s, t, m),
+                                dense.decision(s, t, m),
+                                "{mode:?}: dec({s},{t},{m})"
+                            );
+                        }
+                    }
+                }
+                assert!(
+                    fast.mem_bytes() < dense.mem_bytes(),
+                    "{mode:?}: compressed table ({} B) must undercut dense ({} B)",
+                    fast.mem_bytes(),
+                    dense.mem_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compression_is_minimal_and_rows_are_nonincreasing() {
+        // the stored run count must equal exactly the number of
+        // `(cost bits, decision)` transitions a dense scan observes —
+        // i.e. the compression is lossless *and* canonical
+        let c = hetero(14);
+        let dc = DiscreteChain::new(&c, c.store_all_memory() + c.wa0, 200);
+        let tab = solve_table(&dc, Mode::Full);
+        let mut want_runs = 0usize;
+        for t in 1..=dc.len() {
+            for s in 1..=t {
+                let mut last = f64::INFINITY;
+                let mut prev: Option<(u64, Decision)> = None;
+                for m in 0..=dc.slots as u32 {
+                    let cst = tab.cost(s, t, m);
+                    assert!(cst <= last, "row ({s},{t}) must be non-increasing");
+                    if cst.is_finite() {
+                        last = cst;
+                        let cur = (cst.to_bits(), tab.decision(s, t, m));
+                        if prev != Some(cur) {
+                            want_runs += 1;
+                            prev = Some(cur);
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(tab.run_count(), want_runs, "stored runs must be the minimal set");
+    }
+
+    #[test]
+    fn deep_chain_reconstruction_uses_no_recursion_depth() {
+        // 400 stages under tight memory: Algorithm 2's naive recursion
+        // nests a frame per stage along the split/tape spine (Θ(L) deep —
+        // fatal at the depth-10⁴ chains the compressed fill targets); the
+        // work-stack version uses O(1) program stack regardless of depth.
+        let n = 400usize;
+        let mut stages: Vec<Stage> = (0..n - 1)
+            .map(|i| Stage::new(format!("s{i}"), 1.0 + (i % 3) as f64, 2.0, 64, 128))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        let c = Chain::new("deep", stages, 64);
+        let memory = c.store_all_memory() + c.wa0;
+        let dc = DiscreteChain::new(&c, memory, 30);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            let tab = solve_table(&dc, mode);
+            let top = dc.top_budget().expect("input fits");
+            let ops = tab.ops_at(&dc, top).expect("top budget is feasible");
+            let bwds = ops.iter().filter(|o| matches!(o, Op::Bwd(_))).count();
+            assert_eq!(bwds, n, "{mode:?}: every stage backpropagated exactly once");
+        }
+    }
+
+    #[test]
+    fn try_new_rejects_over_capacity_requests() {
+        // more stages than the u16 split encoding addresses
+        let err = DpTable::preflight(70_000, 100).unwrap_err();
+        assert!(err.to_string().contains("70000"), "message names the stage count: {err}");
+        // a worst-case footprint past the ceiling, with both L and S named
+        let err = DpTable::try_new(60_000, 5_000).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("60000") && msg.contains("5000"), "names L and S: {msg}");
+        // dense has a (smaller) exact bound
+        assert!(DpTable::try_new_dense(20_000, 500).is_err());
+        // admission is worst-case-based: depth 10⁴ passes at a coarse
+        // slot axis (the bench configuration) but not at S = 500
+        assert!(DpTable::preflight(10_000, 16).is_ok());
+        assert!(DpTable::preflight(10_000, 500).is_err());
+        // the paper's regime (L = 336, S = 500) passes comfortably
+        assert!(DpTable::try_new(337, 500).is_ok());
+        assert!(DpTable::try_new_dense(337, 500).is_ok());
     }
 }

@@ -54,8 +54,9 @@ use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
 use std::sync::{Arc, Condvar, Mutex, Weak};
 
-use super::optimal::{reconstruct, solve_table, DpTable, Mode};
+use super::optimal::{reconstruct, try_solve_table, DpTable, Mode};
 use super::sequence::{Schedule, StrategyKind};
+use crate::api::Result as ApiResult;
 use crate::chain::{Chain, DiscreteChain};
 
 /// A chain's DP solved once, able to emit the optimal persistent schedule
@@ -74,11 +75,26 @@ pub struct Planner {
 
 impl Planner {
     /// Discretize `chain` against `top_memory` bytes with `slots` slots
-    /// and solve (or fetch) the DP table for `mode`.
+    /// and solve (or fetch) the DP table for `mode`. Panics on
+    /// over-capacity requests; use [`Planner::try_new`] to surface them.
     pub fn new(chain: &Chain, top_memory: u64, slots: usize, mode: Mode) -> Planner {
+        Self::try_new(chain, top_memory, slots, mode)
+            .unwrap_or_else(|e| panic!("planner construction failed: {e:#}"))
+    }
+
+    /// [`Planner::new`], but chains beyond the solver's capacity limits
+    /// ([`DpTable::preflight`]) return a kind-tagged [`crate::api::Error`]
+    /// — the planning service maps it to HTTP 422 — instead of aborting
+    /// on an OOM-scale allocation.
+    pub fn try_new(
+        chain: &Chain,
+        top_memory: u64,
+        slots: usize,
+        mode: Mode,
+    ) -> ApiResult<Planner> {
         let dc = DiscreteChain::new(chain, top_memory, slots);
-        let table = table_for(&dc, mode);
-        Planner { dc, table, mode }
+        let table = try_table_for(&dc, mode)?;
+        Ok(Planner { dc, table, mode })
     }
 
     /// The byte budget the discretization was built against (top of the
@@ -303,7 +319,12 @@ impl Drop for InflightGuard {
 /// takes the shared `Arc` (from the LRU, or from a weak handoff slot when
 /// the table was too large to retain). The fill itself runs outside the
 /// cache lock, so a long DP never blocks lookups for *other* chains.
-fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
+///
+/// A failed build (capacity rejection) propagates to the caller; the
+/// in-flight marker is cleared on the way out ([`InflightGuard`] runs on
+/// unwind and error alike), so parked waiters wake, re-check, and — with
+/// nothing cached — surface the same error from their own attempt.
+fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
     let key = fingerprint(dc, mode);
     {
         let mut cache = lock_cache();
@@ -314,13 +335,13 @@ fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
                 let entry = cache.entries.remove(pos);
                 let table = entry.table.clone();
                 cache.entries.push(entry); // most recently used at the back
-                return table;
+                return Ok(table);
             }
             if let Some(table) =
                 cache.handoff.iter().find(|(k, _)| *k == key).and_then(|(_, w)| w.upgrade())
             {
                 cache.hits += 1;
-                return table;
+                return Ok(table);
             }
             if cache.inflight.contains(&key) {
                 cache.coalesced += 1;
@@ -332,7 +353,7 @@ fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
         }
     }
     let _guard = InflightGuard { key };
-    let table = Arc::new(solve_table(dc, mode));
+    let table = Arc::new(try_solve_table(dc, mode)?);
     let bytes = table.mem_bytes();
     {
         let mut cache = lock_cache();
@@ -354,7 +375,7 @@ fn table_for(dc: &DiscreteChain, mode: Mode) -> Arc<DpTable> {
         }
     }
     // _guard drops here: clears the in-flight marker, wakes waiters
-    table
+    Ok(table)
 }
 
 /// Counters of the shared planner table cache (monotone since process
@@ -522,6 +543,23 @@ mod tests {
                 "budget #{i}"
             );
         }
+    }
+
+    #[test]
+    fn try_new_rejects_over_capacity_chains_without_aborting() {
+        // depth 10⁴ at S = 500 would worst-case past the table ceiling;
+        // the planner reports it as a kind-tagged error naming L and S
+        let stages: Vec<Stage> = (0..10_000)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 64, 128))
+            .collect();
+        let c = Chain::new("huge", stages, 64);
+        let err = Planner::try_new(&c, 1 << 30, 500, Mode::Full).unwrap_err();
+        assert_eq!(err.kind(), crate::api::ErrorKind::InvalidSpec);
+        let msg = format!("{err:#}");
+        assert!(msg.contains("10000") && msg.contains("500"), "names L and S: {msg}");
+        // the same depth is admissible at a coarse slot axis (capacity
+        // check only — a real depth-10⁴ fill belongs to `bench_solver`)
+        assert!(DpTable::preflight(10_000, 16).is_ok());
     }
 
     #[test]

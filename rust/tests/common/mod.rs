@@ -30,6 +30,12 @@ pub fn for_random_cases(cases: u64, base_seed: u64, mut f: impl FnMut(&mut Rng))
 /// final stage is a tiny "loss".
 pub fn random_chain(rng: &mut Rng) -> Chain {
     let l = 2 + rng.below(18) as usize; // compute stages
+    random_chain_with_len(rng, l)
+}
+
+/// [`random_chain`] at a caller-chosen number of compute stages — the
+/// deeper parity cases pin `l` instead of drawing it.
+pub fn random_chain_with_len(rng: &mut Rng, l: usize) -> Chain {
     let mut stages = Vec::with_capacity(l + 1);
     for i in 0..l {
         let wa = 64 * (1 + rng.below(256));

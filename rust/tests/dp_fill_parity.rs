@@ -1,0 +1,104 @@
+//! The frontier-compressed, pruned DP fill vs the retained dense
+//! reference fill: **bit-identical** costs, decisions, and reconstructed
+//! schedules over the entire `(s, t, m)` space, on seeded random chains
+//! in both solver modes. The dense fill is the executable specification
+//! (pre-frontier semantics, plain scans, no pruning); this suite is what
+//! makes the fast path trustworthy.
+
+mod common;
+
+use chainckpt::chain::DiscreteChain;
+use chainckpt::solver::{
+    solve_table_dense_with_workers, solve_table_with_workers, DpTable, Mode,
+};
+use common::{for_random_cases, random_budget, random_chain, random_chain_with_len};
+
+/// Full-space cost/decision parity plus schedule parity at every budget.
+fn assert_fill_parity(dc: &DiscreteChain, mode: Mode, label: &str) {
+    let fast = solve_table_with_workers(dc, mode, 1);
+    let dense = solve_table_dense_with_workers(dc, mode, 1);
+    assert!(fast.is_compressed(), "{label}: production fill must compress");
+    assert!(!dense.is_compressed(), "{label}: reference fill must stay dense");
+    for t in 1..=dc.len() {
+        for s in 1..=t {
+            for m in 0..=dc.slots as u32 {
+                let (cf, cd) = (fast.cost(s, t, m), dense.cost(s, t, m));
+                assert_eq!(
+                    cf.to_bits(),
+                    cd.to_bits(),
+                    "{label}: cost({s},{t},{m}) diverged: {cf} vs {cd}"
+                );
+                assert_eq!(
+                    fast.decision(s, t, m),
+                    dense.decision(s, t, m),
+                    "{label}: decision({s},{t},{m}) diverged"
+                );
+            }
+        }
+    }
+    assert_schedule_parity(&fast, &dense, dc, label);
+}
+
+/// Algorithm-2 reconstruction from both tables must emit the same ops at
+/// every slot budget (same decisions ⇒ same schedule, but reconstruct
+/// walks many cells — this catches any accessor-level disagreement).
+fn assert_schedule_parity(fast: &DpTable, dense: &DpTable, dc: &DiscreteChain, label: &str) {
+    for m in 0..=dc.slots as u32 {
+        let a = fast.ops_at(dc, m);
+        let b = dense.ops_at(dc, m);
+        assert_eq!(a, b, "{label}: schedule at m={m} diverged");
+    }
+}
+
+#[test]
+fn random_chains_fill_bit_identically_in_both_modes() {
+    for_random_cases(10, 0xF111_7E57, |rng| {
+        let chain = random_chain(rng);
+        let memory = random_budget(rng, &chain);
+        let dc = DiscreteChain::new(&chain, memory, 120);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            assert_fill_parity(
+                &dc,
+                mode,
+                &format!("random L+1={} m={memory} {mode:?}", chain.len()),
+            );
+        }
+    });
+}
+
+#[test]
+fn deeper_chains_fill_bit_identically_at_a_coarse_slot_axis() {
+    // longer sub-chains stress the breakpoint merge (more runs per row)
+    // and the dominance prune (more splits to skip); a coarse slot axis
+    // keeps the dense reference cheap enough to compare against
+    for_random_cases(3, 0xDEE9, |rng| {
+        let l = 60 + rng.below(60) as usize;
+        let chain = random_chain_with_len(rng, l);
+        let memory = chain.store_all_memory() + chain.wa0;
+        let dc = DiscreteChain::new(&chain, memory, 40);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            assert_fill_parity(&dc, mode, &format!("deep L+1={} {mode:?}", chain.len()));
+        }
+    });
+}
+
+#[test]
+fn compressed_tables_undercut_dense_footprint_on_random_chains() {
+    for_random_cases(6, 0xB17E5, |rng| {
+        let chain = random_chain(rng);
+        let memory = random_budget(rng, &chain);
+        let dc = DiscreteChain::new(&chain, memory, 150);
+        let fast = solve_table_with_workers(&dc, Mode::Full, 1);
+        let dense = solve_table_dense_with_workers(&dc, Mode::Full, 1);
+        assert!(
+            fast.mem_bytes() < dense.mem_bytes(),
+            "L+1={}: compressed {} B vs dense {} B",
+            chain.len(),
+            fast.mem_bytes(),
+            dense.mem_bytes()
+        );
+        // the arena really is run-length-compressed: far fewer stored
+        // runs than dense (s,t,m) entries
+        assert!(fast.run_count() * 2 < dense.run_count());
+    });
+}

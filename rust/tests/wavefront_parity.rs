@@ -11,7 +11,9 @@ mod common;
 use chainckpt::api::PRESET_FLOPS_PER_US;
 use chainckpt::backend::native::presets;
 use chainckpt::chain::DiscreteChain;
-use chainckpt::solver::{solve_table, solve_table_with_workers, DpTable, Mode};
+use chainckpt::solver::{
+    solve_table, solve_table_dense_with_workers, solve_table_with_workers, DpTable, Mode,
+};
 use common::{for_random_cases, random_budget, random_chain};
 
 fn assert_tables_bit_identical(a: &DpTable, b: &DpTable, label: &str) {
@@ -26,9 +28,19 @@ fn assert_tables_bit_identical(a: &DpTable, b: &DpTable, label: &str) {
                     cb.to_bits(),
                     "{label}: C({s},{t},{m}) diverged: {ca} vs {cb}"
                 );
+                assert_eq!(
+                    a.decision(s, t, m),
+                    b.decision(s, t, m),
+                    "{label}: decision({s},{t},{m}) diverged"
+                );
             }
         }
     }
+    // identical content must also mean an identical compressed layout:
+    // the arena is appended in deterministic diagonal order regardless of
+    // worker count, so the stored runs and footprint match exactly
+    assert_eq!(a.run_count(), b.run_count(), "{label}: stored run count");
+    assert_eq!(a.mem_bytes(), b.mem_bytes(), "{label}: table footprint");
 }
 
 #[test]
@@ -51,6 +63,27 @@ fn parallel_fill_is_bit_identical_on_every_preset_chain() {
             // and the public entry point (auto worker count) agrees too
             let auto = solve_table(&dc, mode);
             assert_tables_bit_identical(&serial, &auto, &format!("{name}/{mode:?}/auto"));
+        }
+    }
+}
+
+#[test]
+fn dense_reference_fill_is_bit_identical_across_worker_counts() {
+    // the retained dense fill is the parity suite's executable spec — it
+    // must be worker-count-deterministic too, or the spec itself wobbles
+    for name in presets::NAMES.iter().take(2) {
+        let chain =
+            presets::preset(name).unwrap().to_chain_analytic(PRESET_FLOPS_PER_US);
+        let memory = chain.store_all_memory() + chain.wa0;
+        let dc = DiscreteChain::new(&chain, memory, 150);
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            let serial = solve_table_dense_with_workers(&dc, mode, 1);
+            let par = solve_table_dense_with_workers(&dc, mode, 4);
+            assert_tables_bit_identical(
+                &serial,
+                &par,
+                &format!("dense {name}/{mode:?}/workers=4"),
+            );
         }
     }
 }
