@@ -17,9 +17,15 @@
 //!   matmul parallelism threshold, whose `thread::scope` spawns allocate
 //!   by design;
 //! * the lowered p50 shows no step-time regression vs legacy
-//!   (≤ 1.25× slack for timer noise; in practice it is faster).
+//!   (≤ 1.25× slack for timer noise; in practice it is faster);
+//! * span tracing costs ≤ 1.05× the untraced lowered p50 — the telemetry
+//!   hot path (relaxed counters + a preallocated ring) must stay cheap
+//!   enough to leave armed in production runs.
 //!
-//! Results land in `BENCH_executor.json` (uploaded as a CI artifact).
+//! Results land in `BENCH_executor.json` (with an embedded telemetry
+//! registry snapshot and a measured-vs-predicted drift report), and the
+//! traced replay's Chrome trace goes to `results/trace_quickstart.json`
+//! (both uploaded as CI artifacts).
 //!
 //! ```sh
 //! cargo bench --bench bench_executor -- [--preset quickstart] [--reps 7] [--quick]
@@ -34,6 +40,7 @@ use chainckpt::estimator::{measured_chain, EstimatorConfig};
 use chainckpt::executor::Executor;
 use chainckpt::runtime::Runtime;
 use chainckpt::solver::{periodic_schedule, store_all_schedule, Schedule};
+use chainckpt::telemetry;
 use chainckpt::util::json::{obj, Value};
 use chainckpt::util::{fmt_bytes, median, Args, Rng};
 
@@ -135,6 +142,30 @@ fn main() {
         rows.push(row);
     }
 
+    // traced replay of the first (store-all) schedule: the overhead gate
+    // plus a sample Chrome trace artifact. The alloc-count iterations
+    // above all ran untraced, so the zero-alloc gate is unaffected.
+    let (_, trace_sched) = &schedules[0];
+    let untraced_p50 = rows[0].lowered_ms_p50;
+    let (traced_p50, drift) = measure_traced(
+        &rt,
+        &chain,
+        trace_sched,
+        &input,
+        &target,
+        n_stages - 1,
+        reps,
+        "results/trace_quickstart.json",
+    );
+    let trace_overhead = if untraced_p50 > 0.0 { traced_p50 / untraced_p50 } else { 1.0 };
+    println!(
+        "traced lowered p50: {traced_p50:.2} ms vs untraced {untraced_p50:.2} ms \
+         (×{trace_overhead:.3})"
+    );
+    if let Some(d) = &drift {
+        println!("{}", d.summary());
+    }
+
     // gates
     let zero_alloc_gate_applies = preset == "quickstart";
     let zero_alloc_ok =
@@ -142,6 +173,7 @@ fn main() {
     let no_regression = rows
         .iter()
         .all(|r| r.lowered_ms_p50 <= r.legacy_ms_p50 * 1.25 + 0.05);
+    let trace_overhead_ok = traced_p50 <= untraced_p50 * 1.05 + 0.05;
     println!();
     println!(
         "GATE lowered zero-alloc steady state: {}",
@@ -150,6 +182,10 @@ fn main() {
     println!(
         "GATE lowered step-time no-regression (≤1.25× legacy p50): {}",
         if no_regression { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "GATE tracing overhead (≤1.05× untraced lowered p50): {}",
+        if trace_overhead_ok { "PASS" } else { "FAIL" }
     );
 
     let json_rows: Vec<Value> = rows
@@ -180,20 +216,87 @@ fn main() {
         ("reps", Value::from(reps)),
         ("rows", Value::Arr(json_rows)),
         (
+            "tracing",
+            obj([
+                ("traced_ms_p50", Value::from(traced_p50)),
+                ("untraced_ms_p50", Value::from(untraced_p50)),
+                ("overhead_ratio", Value::from(trace_overhead)),
+            ]),
+        ),
+        (
+            "drift",
+            drift
+                .as_ref()
+                .map(chainckpt::service::wire::drift_to_json)
+                .unwrap_or(Value::Null),
+        ),
+        ("telemetry", telemetry::registry().snapshot()),
+        (
             "gates",
             obj([
                 ("lowered_zero_alloc", Value::Bool(zero_alloc_ok)),
                 ("zero_alloc_gate_applies", Value::Bool(zero_alloc_gate_applies)),
                 ("no_step_time_regression", Value::Bool(no_regression)),
+                ("trace_overhead_ok", Value::Bool(trace_overhead_ok)),
             ]),
         ),
     ]);
     std::fs::write("BENCH_executor.json", doc.to_json_string()).expect("writing bench json");
     println!("wrote BENCH_executor.json");
 
-    if !zero_alloc_ok || !no_regression {
+    if !zero_alloc_ok || !no_regression || !trace_overhead_ok {
         std::process::exit(1);
     }
+}
+
+/// Replay one schedule through the lowered path with the span tracer
+/// armed: p50 of `reps` traced iterations, the Chrome trace written to
+/// `trace_path`, and a drift report joining the traced iterations'
+/// per-kind measurements against the chain's predictions.
+#[allow(clippy::too_many_arguments)]
+fn measure_traced(
+    rt: &Runtime<chainckpt::backend::NativeBackend>,
+    chain: &chainckpt::chain::Chain,
+    sched: &Schedule,
+    input: &NativeTensor,
+    target: &[f32],
+    loss_stage: usize,
+    reps: usize,
+    trace_path: &str,
+) -> (f64, Option<telemetry::DriftReport>) {
+    let mut ex = Executor::new(rt, 77).unwrap();
+    ex.set_data_param(loss_stage, target).unwrap();
+    let mut low = ex.lower(sched).unwrap();
+    ex.run_lowered(&mut low, input, None).unwrap();
+    ex.run_lowered(&mut low, input, None).unwrap();
+    telemetry::trace_start(telemetry::DEFAULT_TRACE_CAPACITY);
+    let (ops_t0, ns_t0) = telemetry::registry().kind_totals();
+    let mut times = Vec::with_capacity(reps);
+    let mut peak = 0u64;
+    for _ in 0..reps {
+        let res = ex.run_lowered(&mut low, input, None).unwrap();
+        times.push(res.elapsed_s * 1e3);
+        peak = res.peak_bytes;
+    }
+    let (ops_t1, ns_t1) = telemetry::registry().kind_totals();
+    let (events, dropped) = telemetry::trace_stop();
+    std::fs::create_dir_all("results").expect("creating results dir");
+    std::fs::write(trace_path, telemetry::chrome_trace_json(&events))
+        .expect("writing trace json");
+    println!(
+        "wrote {trace_path} ({} span events{})",
+        events.len(),
+        if dropped > 0 { format!(", {dropped} dropped") } else { String::new() }
+    );
+    let n = telemetry::OpKind::COUNT;
+    let mut ops_avg = [0u64; 5];
+    let mut ns_avg = [0u64; 5];
+    for k in 0..n {
+        ops_avg[k] = (ops_t1[k] - ops_t0[k]) / reps.max(1) as u64;
+        ns_avg[k] = (ns_t1[k] - ns_t0[k]) / reps.max(1) as u64;
+    }
+    let drift = telemetry::drift_report(chain, sched, ops_avg, ns_avg, peak);
+    (median(&mut times), drift)
 }
 
 /// Measure both replay paths for one schedule on one fresh executor per

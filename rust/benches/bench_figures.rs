@@ -90,5 +90,16 @@ fn main() {
         2 * all.len() as u64,
         "a panel sweep must cost exactly one table lookup per (chain, mode)"
     );
+    // solver fill internals from the process registry — the work behind
+    // those builds, one line for the CI log
+    let reg = chainckpt::telemetry::registry();
+    println!(
+        "solver fill: {} cells, {} runs, {} prune hits over {} diagonals ({:.2} s total)",
+        reg.solver_cells_filled.get(),
+        reg.solver_runs_emitted.get(),
+        reg.solver_prune_hits.get(),
+        reg.solver_diagonals.get(),
+        reg.solver_fill_ns.get() as f64 / 1e9
+    );
     println!("→ results/figure*.csv, results/summary.csv");
 }

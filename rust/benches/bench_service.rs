@@ -88,6 +88,17 @@ fn main() {
         cache.get("hits").unwrap().as_u64().unwrap(),
         cache.get("builds").unwrap().as_u64().unwrap(),
     );
+    // the Prometheus endpoint must hold up under the same load path
+    let (status, metrics_body) = probe.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        metrics_body.contains("# TYPE chainckpt_service_requests_total counter"),
+        "/metrics is missing the service request family"
+    );
+    assert!(
+        metrics_body.contains("chainckpt_planner_cache_lookups_total"),
+        "/metrics is missing the planner cache family"
+    );
     drop(probe);
 
     let total_reqs = threads * reqs_per_thread;
@@ -157,6 +168,7 @@ fn main() {
                 ("hit_rate", Value::from(hit_rate)),
             ]),
         ),
+        ("telemetry", chainckpt::telemetry::registry().snapshot()),
     ]);
     std::fs::create_dir_all("results").ok();
     let csv = format!(

@@ -381,9 +381,12 @@ fn main() {
 
     std::fs::create_dir_all("results").ok();
     std::fs::write("results/bench_solver.csv", csv).ok();
+    // the registry snapshot rides along: cells filled, prune hits,
+    // per-diagonal fill histogram — the fill internals behind the numbers
+    let telemetry = chainckpt::telemetry::registry().snapshot().to_json_string();
     let json = format!(
-        r#"{{"bench":"bench_solver","quick":{},"cases":[{}],"sweeps":[{}],"scaling":[{}]}}"#,
-        quick, json_cases, json_sweeps, json_scaling
+        r#"{{"bench":"bench_solver","quick":{},"cases":[{}],"sweeps":[{}],"scaling":[{}],"telemetry":{}}}"#,
+        quick, json_cases, json_sweeps, json_scaling, telemetry
     );
     std::fs::write("BENCH_solver.json", &json).ok();
     println!("→ results/bench_solver.csv, BENCH_solver.json");

@@ -60,3 +60,4 @@ pub use units::{MemBytes, SlotCount};
 // `plan`) for the types that appear in the facade's own signatures.
 pub use crate::plan::ExecPlan;
 pub use crate::solver::{Mode, Schedule};
+pub use crate::telemetry::{DriftReport, KindDrift};

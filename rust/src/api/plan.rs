@@ -20,6 +20,7 @@ use crate::plan::ExecPlan;
 use crate::runtime::Runtime;
 use crate::simulator::{simulate, SimReport};
 use crate::solver::{Mode, Planner, Schedule};
+use crate::telemetry::{self, DriftReport};
 use crate::train::SyntheticData;
 use crate::util::median;
 
@@ -192,6 +193,12 @@ impl Plan {
         opts: &ExecuteOptions,
     ) -> Result<ExecutionReport> {
         let schedule = self.schedule()?;
+        if opts.chain.is_none() {
+            // The plan knows its own chain — join the drift report against
+            // it without making the caller thread it through.
+            let opts = ExecuteOptions { chain: Some(self.chain.clone()), ..opts.clone() };
+            return execute_schedule(rt, &schedule, data, &opts);
+        }
         execute_schedule(rt, &schedule, data, opts)
     }
 }
@@ -213,11 +220,16 @@ pub struct ExecuteOptions {
     /// legacy-replay fallback — on backends without in-place kernels
     /// ([`Backend::SUPPORTS_LOWERED`] is `false`, i.e. pjrt).
     pub lowered: bool,
+    /// Cost-model chain for the schedule being executed. When set, the
+    /// report carries a [`DriftReport`] joining measured per-op-kind
+    /// timings and peak bytes against the simulator's predictions.
+    /// [`Plan::execute`] fills this from its own chain automatically.
+    pub chain: Option<Chain>,
 }
 
 impl Default for ExecuteOptions {
     fn default() -> Self {
-        ExecuteOptions { reps: 3, seed: 1, memory_limit: None, lowered: true }
+        ExecuteOptions { reps: 3, seed: 1, memory_limit: None, lowered: true, chain: None }
     }
 }
 
@@ -234,6 +246,9 @@ pub struct ExecutionReport {
     pub throughput: f64,
     /// Ops in the replayed schedule.
     pub ops: usize,
+    /// Measured-vs-predicted drift, when [`ExecuteOptions::chain`] gave
+    /// the cost model to join against (`None` otherwise).
+    pub drift: Option<DriftReport>,
 }
 
 /// Execute `schedule` against really-computing stages: a fresh
@@ -269,7 +284,13 @@ pub fn execute_schedule<B: Backend>(
     };
     let mut times = Vec::with_capacity(opts.reps);
     let mut last = None;
+    // Per-op-kind registry totals bracketing the timed reps (the warmup
+    // replay at r == 0 is excluded, like the wall-clock measurements).
+    let mut kinds_t0 = ([0u64; telemetry::OpKind::COUNT], [0u64; telemetry::OpKind::COUNT]);
     for r in 0..opts.reps.max(1) + 1 {
+        if r == 1 {
+            kinds_t0 = telemetry::registry().kind_totals();
+        }
         let res = match &mut lowered {
             Some(low) => ex.run_lowered(low, &data.inputs[0], limit),
             None => ex.run(schedule, &data.inputs[0], limit),
@@ -284,12 +305,24 @@ pub fn execute_schedule<B: Backend>(
     let res = last.expect("at least one replay ran");
     let elapsed_s = median(&mut times);
     let batch = rt.manifest.input_shape[0] as f64;
+    let drift = opts.chain.as_ref().and_then(|chain| {
+        let (ops_t1, ns_t1) = telemetry::registry().kind_totals();
+        let reps = opts.reps.max(1) as u64;
+        let mut ops_avg = [0u64; telemetry::OpKind::COUNT];
+        let mut ns_avg = [0u64; telemetry::OpKind::COUNT];
+        for k in 0..telemetry::OpKind::COUNT {
+            ops_avg[k] = ops_t1[k].saturating_sub(kinds_t0.0[k]) / reps;
+            ns_avg[k] = ns_t1[k].saturating_sub(kinds_t0.1[k]) / reps;
+        }
+        telemetry::drift_report(chain, schedule, ops_avg, ns_avg, res.peak_bytes)
+    });
     Ok(ExecutionReport {
         loss: res.loss,
         peak: MemBytes::new(res.peak_bytes),
         elapsed_s,
         throughput: batch / elapsed_s,
         ops: res.ops,
+        drift,
     })
 }
 

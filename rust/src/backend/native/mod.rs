@@ -39,6 +39,7 @@ pub struct NativeTensor {
 impl NativeTensor {
     pub(crate) fn from_parts(data: Vec<f32>, shape: Vec<usize>) -> Self {
         debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        crate::telemetry::registry().native_tensor_allocs.inc();
         NativeTensor { data, shape }
     }
 
@@ -63,11 +64,11 @@ impl Tensor for NativeTensor {
             n,
             data.len()
         );
-        Ok(NativeTensor { data: data.to_vec(), shape: shape.to_vec() })
+        Ok(NativeTensor::from_parts(data.to_vec(), shape.to_vec()))
     }
 
     fn scalar(x: f32) -> Self {
-        NativeTensor { data: vec![x], shape: Vec::new() }
+        NativeTensor::from_parts(vec![x], Vec::new())
     }
 
     fn to_vec(&self) -> Result<Vec<f32>> {

@@ -28,6 +28,7 @@ use super::{Executor, StepResult};
 use crate::backend::{Backend, Entry, Outs, Scratch, StageExecutable, Tensor};
 use crate::plan::{self, ExecPlan, Item, ValueId};
 use crate::solver::{Op, Schedule};
+use crate::telemetry::{self, drift::op_kind, OpKind};
 
 /// Max positional args of any entry (attn/bwd has 16).
 const MAX_ARGS: usize = 24;
@@ -62,6 +63,11 @@ struct RtStep {
     /// Read the loss scalar at this arena index after the step
     /// (`Fall^{L+1}`).
     read_loss: Option<usize>,
+    /// Telemetry, resolved at lower time so the hot loop only copies:
+    /// schedule-op kind, 1-based stage, bytes the output materializes.
+    kind: OpKind,
+    op_stage: u32,
+    out_bytes: u64,
 }
 
 /// A schedule lowered against one executor: the [`ExecPlan`], the pooled
@@ -76,6 +82,9 @@ pub struct Lowered {
     input_range: Range<usize>,
     seed_range: Range<usize>,
     delta0_range: Range<usize>,
+    /// Forward steps beyond the minimum `L+1` (plan-time constant; added
+    /// to the registry once per replay).
+    recomputed_forwards: u64,
 }
 
 impl Lowered {
@@ -242,6 +251,9 @@ impl<'rt, B: Backend> Executor<'rt, B> {
 
         let mut steps = Vec::with_capacity(plan.steps.len());
         for pstep in &plan.steps {
+            let kind = op_kind(pstep.op);
+            let op_stage = super::op_stage(pstep.op);
+            let out_bytes = super::op_bytes(&self.chain_sizes, pstep.op);
             match pstep.op {
                 // drops are pure liveness events — nothing to execute
                 Op::DropA(_) => {}
@@ -258,6 +270,9 @@ impl<'rt, B: Backend> Executor<'rt, B> {
                         n_outs: 1,
                         grads: false,
                         read_loss: None,
+                        kind,
+                        op_stage,
+                        out_bytes,
                     });
                 }
                 Op::FwdAll(l) => {
@@ -287,6 +302,9 @@ impl<'rt, B: Backend> Executor<'rt, B> {
                         pool_outs,
                         grads: false,
                         read_loss,
+                        kind,
+                        op_stage,
+                        out_bytes,
                     });
                 }
                 Op::Bwd(l) => {
@@ -320,6 +338,9 @@ impl<'rt, B: Backend> Executor<'rt, B> {
                         n_outs: 1 + sig.n_grads,
                         grads: sig.n_grads > 0,
                         read_loss: None,
+                        kind,
+                        op_stage,
+                        out_bytes,
                     });
                 }
             }
@@ -343,6 +364,10 @@ impl<'rt, B: Backend> Executor<'rt, B> {
             );
         }
         self.ensure_grad_buffers();
+        let fwd_steps = steps.iter().filter(|s| s.kind.is_forward()).count() as u64;
+        telemetry::registry()
+            .exec_arena_high_watermark_bytes
+            .record_max((total * std::mem::size_of::<f32>()) as u64);
         Ok(Lowered {
             input_range: value_ranges[plan.input].clone(),
             seed_range: value_ranges[plan.seed].clone(),
@@ -351,6 +376,7 @@ impl<'rt, B: Backend> Executor<'rt, B> {
             pool: BufferPool { data: vec![0.0; total], walk: Vec::new() },
             scratch: Scratch::new(),
             steps,
+            recomputed_forwards: fwd_steps.saturating_sub(n as u64),
         })
     }
 
@@ -404,8 +430,10 @@ impl<'rt, B: Backend> Executor<'rt, B> {
         low.pool.data[low.seed_range.clone()].fill(1.0); // δ^{L+1} = 1
 
         let mut loss = f32::NAN;
+        let reg = telemetry::registry();
         let Executor { exes, params, grads, .. } = self;
         for st in low.steps.iter() {
+            let op_t0 = std::time::Instant::now();
             {
                 let mut args_store: [&[f32]; MAX_ARGS] = [&[]; MAX_ARGS];
                 let mut outs_store: [Option<&mut [f32]>; MAX_OUTS] =
@@ -430,9 +458,26 @@ impl<'rt, B: Backend> Executor<'rt, B> {
             if let Some(ix) = st.read_loss {
                 loss = low.pool.data[ix];
             }
+            // Instrumentation stays allocation-free: two Instant reads
+            // plus relaxed atomic adds; a disabled tracer costs one
+            // relaxed load (the executor bench gates this at ≤1.05×).
+            let op_t1 = std::time::Instant::now();
+            reg.record_op(st.kind, op_t1.duration_since(op_t0).as_nanos() as u64);
+            if telemetry::trace_enabled() {
+                telemetry::trace_record(
+                    st.kind.label(),
+                    st.op_stage,
+                    op_t0,
+                    op_t1,
+                    st.out_bytes,
+                );
+            }
         }
         ensure!(loss.is_finite(), "loss stage produced a non-finite loss");
         self.grads_valid = true;
+        reg.exec_runs.inc();
+        reg.exec_recomputed_forwards.add(low.recomputed_forwards);
+        reg.exec_peak_bytes.record_max(low.plan.peak_bytes);
         Ok(StepResult {
             loss,
             peak_bytes: low.plan.peak_bytes,

@@ -45,7 +45,26 @@ use crate::chain::Chain;
 use crate::runtime::Runtime;
 use crate::simulator::MemState;
 use crate::solver::{Op, Schedule};
+use crate::telemetry::{self, drift::op_kind};
 use crate::util::Rng;
+
+/// The 1-based stage an op addresses.
+fn op_stage(op: Op) -> u32 {
+    match op {
+        Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) | Op::Bwd(l) | Op::DropA(l) => l,
+    }
+}
+
+/// Bytes the op materializes (its output value) per the chain size
+/// model — what a trace span reports as `args.bytes`.
+fn op_bytes(chain: &Chain, op: Op) -> u64 {
+    match op {
+        Op::FwdNoSave(l) | Op::FwdCk(l) => chain.wa(l as usize),
+        Op::FwdAll(l) => chain.wabar(l as usize),
+        Op::Bwd(l) => chain.wdelta(l as usize - 1),
+        Op::DropA(_) => 0,
+    }
+}
 
 /// Outcome of one executed iteration.
 #[derive(Debug)]
@@ -192,7 +211,11 @@ impl<'rt, B: Backend> Executor<'rt, B> {
         let mut ledger = MemState::initial(&self.chain_sizes);
         let mut loss = f32::NAN;
 
+        let reg = telemetry::registry();
+        let mut fwd_ops = 0u64;
+
         for (oi, &op) in schedule.ops.iter().enumerate() {
+            let op_t0 = std::time::Instant::now();
             match op {
                 Op::FwdNoSave(l) | Op::FwdCk(l) => {
                     let l = l as usize;
@@ -286,11 +309,29 @@ impl<'rt, B: Backend> Executor<'rt, B> {
                     ledger.free_a_if_standalone(l);
                 }
             }
+            let kind = op_kind(op);
+            let op_t1 = std::time::Instant::now();
+            reg.record_op(kind, op_t1.duration_since(op_t0).as_nanos() as u64);
+            if kind.is_forward() {
+                fwd_ops += 1;
+            }
+            if telemetry::trace_enabled() {
+                telemetry::trace_record(
+                    kind.label(),
+                    op_stage(op),
+                    op_t0,
+                    op_t1,
+                    op_bytes(&self.chain_sizes, op),
+                );
+            }
         }
 
         ensure!(self.delta[0].is_some(), "schedule ended without δ^0");
         ensure!(loss.is_finite(), "loss stage never taped (no Fall^{n})");
         self.grads_valid = true;
+        reg.exec_runs.inc();
+        reg.exec_recomputed_forwards.add(fwd_ops.saturating_sub(n as u64));
+        reg.exec_peak_bytes.record_max(ledger.peak);
         Ok(StepResult {
             loss,
             peak_bytes: ledger.peak,

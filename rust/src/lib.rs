@@ -48,8 +48,15 @@
 //!   evaluation as CSV series.
 //! * [`service`] — the planning daemon: a std-only HTTP/1.1 JSON server
 //!   (`chainckpt serve`) answering `/solve`, `/sweep`, `/simulate`,
-//!   `/chains`, `/stats` from a bounded thread pool, with the planner's
-//!   fingerprint-keyed table cache shared across all connections.
+//!   `/chains`, `/stats`, `/metrics` from a bounded thread pool, with
+//!   the planner's fingerprint-keyed table cache shared across all
+//!   connections.
+//! * [`telemetry`] — crate-wide observability: the process-global
+//!   metrics registry (atomic counters/gauges/histograms absorbing the
+//!   planner-cache stats, DP-fill internals, and executor replay
+//!   timings), the span tracer behind `--trace FILE` (Chrome
+//!   trace-event JSON), and the predicted-vs-measured
+//!   [`telemetry::DriftReport`].
 //! * [`api`] — **the public facade** over all of the above: [`api::ChainSpec`]
 //!   (one description of "which chain"), [`api::MemBytes`] /
 //!   [`api::SlotCount`] (typed units with the single human-suffix
@@ -71,6 +78,7 @@ pub mod runtime;
 pub mod service;
 pub mod simulator;
 pub mod solver;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 

@@ -40,6 +40,7 @@ use chainckpt::figures;
 use chainckpt::runtime::Runtime;
 use chainckpt::simulator::simulate;
 use chainckpt::solver::{paper_segment_sweep, periodic_schedule, store_all_schedule};
+use chainckpt::telemetry;
 use chainckpt::train::{mean_loss, SyntheticData, Trainer};
 use chainckpt::util::json::Value;
 use chainckpt::util::{fmt_bytes, Args, FLAG_SET};
@@ -57,9 +58,10 @@ USAGE:
                      [--memory 8M | --memory-frac 0.75] [--steps 100] [--lr 0.05]
                      [--strategy optimal|sequential|revolve|pytorch]
                      [--segments 4] [--batches 8] [--log-every 10] [--out loss.csv]
-                     [--lowered | --legacy]
+                     [--lowered | --legacy] [--trace trace.json]
   chainckpt compare  [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--points 6] [--out compare.csv] [--lowered | --legacy]
+                     [--trace trace.json]
   chainckpt figures  [--fig 3|all] [--out results]
   chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
                      [--slots 500] [--queue 64]
@@ -91,11 +93,21 @@ reference); --lowered states the default explicitly. Lowered execution
 needs the native engine's in-place kernels — on pjrt both flags fall
 back to the legacy replay.
 
+Observability: --trace FILE (train/compare) records every executed op
+as a span — (op kind, stage, start, end, bytes) — into a bounded ring
+and writes Chrome trace-event JSON on exit (open in Perfetto or
+chrome://tracing). compare also prints a measured-vs-predicted drift
+line per strategy: per-op-kind time ratios against the cost model and
+the executor's peak against the simulator's byte-exact prediction.
+
 The planning service answers POST /solve, /sweep, /simulate, /lower and
 GET /chains, /stats, /healthz with JSON; repeated requests for a chain
 hit the planner's shared DP-table cache. --port 0 picks a free port.
 POST /lower returns the lowered plan for a chain + budget (or explicit
 \"ops\"): slot table with byte offsets, arena size, plan-time peak.
+GET /metrics exposes the process-wide telemetry registry (planner
+cache, solver fill, executor replay, service latency) in the
+Prometheus text exposition format, ready to scrape.
 
 Backends: --backend native (pure-Rust engine, chains generated in-process
 from --preset quickstart|default|wide — the default) or --backend pjrt
@@ -392,6 +404,29 @@ fn estimate_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The `--trace FILE` flag of `train`/`compare`: arm the process-wide
+/// span tracer (bounded ring — memory stays flat under any run length)
+/// before the first replay. Returns the dump path when armed.
+fn trace_arm(args: &Args) -> Option<String> {
+    let path = args.opt_str("trace")?;
+    telemetry::trace_start(telemetry::DEFAULT_TRACE_CAPACITY);
+    Some(path.to_string())
+}
+
+/// Stop the tracer and write what it captured as Chrome trace-event
+/// JSON (Perfetto / chrome://tracing open it directly).
+fn trace_dump(path: &str) -> Result<()> {
+    let (events, dropped) = telemetry::trace_stop();
+    std::fs::write(path, telemetry::chrome_trace_json(&events))?;
+    if dropped > 0 {
+        println!("wrote {path} ({} span events; {dropped} older ones dropped by the ring)",
+            events.len());
+    } else {
+        println!("wrote {path} ({} span events)", events.len());
+    }
+    Ok(())
+}
+
 fn pick_schedule(args: &Args, chain: &Chain, memory: MemBytes) -> Result<Schedule> {
     // The DP strategies go through one api::Plan at the requested budget:
     // repeated picks for the same measured chain (e.g. train restarts)
@@ -451,6 +486,7 @@ fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
             fmt_bytes(plan.peak_bytes)
         );
     }
+    let trace_path = trace_arm(args);
     let logs = trainer
         .train(&data, steps, log_every, |log| {
             println!(
@@ -462,6 +498,9 @@ fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
             );
         })
         .kind(ErrorKind::Backend)?;
+    if let Some(path) = &trace_path {
+        trace_dump(path)?;
+    }
     let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
     let last = mean_loss(&logs, 10);
     println!("final loss (mean of last 10): {last:.6} (from {first:.6})");
@@ -500,7 +539,15 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
         "execution path: {}",
         if lowered { "lowered (pooled arena, zero-alloc steady state)" } else { "legacy per-op replay" }
     );
-    let opts = ExecuteOptions { reps, lowered, ..ExecuteOptions::default() };
+    // the measured chain is the executor's own cost model (µs units), so
+    // the drift report's time ratios are meaningful, not unit-skewed
+    let opts = ExecuteOptions {
+        reps,
+        lowered,
+        chain: Some(chain.clone()),
+        ..ExecuteOptions::default()
+    };
+    let trace_path = trace_arm(args);
     let mut rows: Vec<(String, String, u64, f64)> = Vec::new();
 
     // every row — baselines and DP strategies alike — is one
@@ -516,6 +563,9 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
             rep.elapsed_s * 1e3,
             rep.throughput
         );
+        if let Some(d) = &rep.drift {
+            println!("{:<12} {:>12} {}", "", "", d.summary());
+        }
         rows.push((name, param, rep.peak.get(), rep.throughput));
         Ok(())
     };
@@ -555,6 +605,9 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
         if let Some(s) = s_rev {
             run_measured("revolve".into(), fmt_bytes(m.get()), &s)?;
         }
+    }
+    if let Some(path) = &trace_path {
+        trace_dump(path)?;
     }
     if let Some(out) = args.opt_str("out") {
         let mut f = std::fs::File::create(out)?;
@@ -636,7 +689,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = chainckpt::service::serve(cfg)?;
     println!("planning service listening on http://{}", server.addr());
-    println!("endpoints: POST /solve /sweep /simulate /lower · GET /chains /stats /healthz");
+    println!(
+        "endpoints: POST /solve /sweep /simulate /lower · GET /chains /stats /metrics /healthz"
+    );
     println!("try: curl -s http://{}/chains", server.addr());
     server.join();
     Ok(())

@@ -226,6 +226,12 @@ impl Response {
         Response { status, body, content_type: "application/json" }
     }
 
+    /// A plain-text payload. The version suffix is the Prometheus text
+    /// exposition format marker (`GET /metrics` is the one text route).
+    pub fn text(status: u16, body: String) -> Response {
+        Response { status, body, content_type: "text/plain; version=0.0.4" }
+    }
+
     /// The service's structured error envelope:
     /// `{"error": {"code": <status>, "kind": "...", "message": "..."}}`.
     ///

@@ -9,6 +9,7 @@
 //! |                  | slot table, arena size, plan-time peak              |
 //! | `GET  /chains`   | built-in profiles and native presets, by name       |
 //! | `GET  /stats`    | request counters, latency percentiles, cache stats  |
+//! | `GET  /metrics`  | Prometheus text exposition of the process registry  |
 //! | `GET  /healthz`  | liveness probe                                      |
 //!
 //! Error contract: malformed JSON → `400`, semantically invalid input →
@@ -21,7 +22,6 @@
 //! *prefix*, because the vendored anyhow cannot downcast).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
 use std::time::Instant;
 
 use super::http::{Request, Response};
@@ -34,6 +34,7 @@ use crate::backend::native::presets;
 use crate::chain::profiles;
 use crate::simulator::simulate;
 use crate::solver::{cache_stats, Schedule, StrategyKind};
+use crate::telemetry::{self, Counter, Window};
 use crate::util::json::{obj, Value};
 
 /// Dispatch one request, recording per-route counters and latency.
@@ -53,6 +54,7 @@ const ROUTES: &[(&str, &str, &str)] = &[
     ("POST", "/lower", "lower"),
     ("GET", "/chains", "chains"),
     ("GET", "/stats", "stats"),
+    ("GET", "/metrics", "metrics"),
     ("GET", "/healthz", "healthz"),
 ];
 
@@ -74,6 +76,7 @@ fn dispatch(req: &Request, state: &ServiceState) -> (&'static str, Response) {
         "lower" => with_json_body(req, |body| lower(body, state)),
         "chains" => ok(chains()),
         "stats" => ok(stats(state)),
+        "metrics" => Response::text(200, telemetry::registry().prometheus_text()),
         "healthz" => ok(obj([("ok", Value::Bool(true))])),
         other => Response::error(500, format!("route '{other}' has no handler")),
     };
@@ -424,81 +427,118 @@ fn stats(state: &ServiceState) -> Value {
 /// keeps (a ring buffer — bounded memory under sustained traffic).
 const LATENCY_WINDOW: usize = 4096;
 
-#[derive(Default)]
-struct StatsInner {
-    by_route: BTreeMap<&'static str, u64>,
-    status_2xx: u64,
-    status_4xx: u64,
-    status_5xx: u64,
-    total: u64,
-    latencies_us: Vec<u64>,
-    next_slot: usize,
+/// Every counter label `record` can be called with: the route labels of
+/// [`ROUTES`] plus the two rejection labels dispatch can return.
+const STAT_LABELS: [&str; 10] = [
+    "solve",
+    "sweep",
+    "simulate",
+    "lower",
+    "chains",
+    "stats",
+    "metrics",
+    "healthz",
+    "method_not_allowed",
+    "not_found",
+];
+
+/// Thread-safe request counters + latency reservoir for `GET /stats`,
+/// built from the lock-free [`telemetry`] instruments (the hand-rolled
+/// mutex-and-`Vec` percentile code this replaced lives on only in git).
+///
+/// Counters are **per-instance** — each server answers `/stats` for its
+/// own traffic, which is what the integration tests assert — while
+/// [`Stats::record`] also mirrors every observation into the
+/// process-global [`telemetry::Registry`] so `GET /metrics` exposes
+/// service totals alongside solver and executor families.
+pub struct Stats {
+    by_route: [Counter; STAT_LABELS.len()],
+    status_2xx: Counter,
+    status_4xx: Counter,
+    status_5xx: Counter,
+    total: Counter,
+    latency_us: Window,
 }
 
-/// Thread-safe request counters + latency reservoir for `GET /stats`.
-#[derive(Default)]
-pub struct Stats {
-    inner: Mutex<StatsInner>,
+impl Default for Stats {
+    fn default() -> Stats {
+        Stats {
+            by_route: std::array::from_fn(|_| Counter::new()),
+            status_2xx: Counter::new(),
+            status_4xx: Counter::new(),
+            status_5xx: Counter::new(),
+            total: Counter::new(),
+            latency_us: Window::new(LATENCY_WINDOW),
+        }
+    }
 }
 
 impl Stats {
     pub fn record(&self, route: &'static str, status: u16, elapsed_us: u64) {
-        let mut s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        *s.by_route.entry(route).or_insert(0) += 1;
+        if let Some(i) = STAT_LABELS.iter().position(|&l| l == route) {
+            self.by_route[i].inc();
+        }
+        let reg = telemetry::registry();
+        reg.service_requests.inc();
+        reg.service_latency_us.observe(elapsed_us);
         match status {
-            200..=299 => s.status_2xx += 1,
-            400..=499 => s.status_4xx += 1,
-            _ => s.status_5xx += 1,
+            200..=299 => {
+                self.status_2xx.inc();
+                reg.service_responses_2xx.inc();
+            }
+            400..=499 => {
+                self.status_4xx.inc();
+                reg.service_responses_4xx.inc();
+            }
+            _ => {
+                self.status_5xx.inc();
+                reg.service_responses_5xx.inc();
+            }
         }
-        s.total += 1;
-        if s.latencies_us.len() < LATENCY_WINDOW {
-            s.latencies_us.push(elapsed_us);
-        } else {
-            let slot = s.next_slot;
-            s.latencies_us[slot] = elapsed_us;
-            s.next_slot = (slot + 1) % LATENCY_WINDOW;
-        }
+        self.total.inc();
+        self.latency_us.record(elapsed_us);
     }
 
     /// Requests handled so far (all routes).
     pub fn total(&self) -> u64 {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).total
+        self.total.get()
     }
 
     pub fn snapshot(&self) -> Value {
-        let s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
-        let requests: BTreeMap<String, Value> = s
-            .by_route
+        // same JSON shape as ever: routes appear only once hit, and the
+        // percentiles are Null until the first sample lands
+        let requests: BTreeMap<String, Value> = STAT_LABELS
             .iter()
-            .map(|(k, v)| (k.to_string(), Value::from(*v)))
+            .zip(&self.by_route)
+            .filter(|(_, c)| c.get() > 0)
+            .map(|(l, c)| (l.to_string(), Value::from(c.get())))
             .collect();
-        let mut sorted = s.latencies_us.clone();
-        sorted.sort_unstable();
-        let pct = |q: f64| -> Value {
-            if sorted.is_empty() {
-                return Value::Null;
+        let pcts = self.latency_us.percentiles(&[0.50, 0.90, 0.99]);
+        let pct = |i: usize| -> Value {
+            if self.latency_us.is_empty() {
+                Value::Null
+            } else {
+                Value::from(pcts[i])
             }
-            let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
-            Value::from(sorted[idx])
         };
         obj([
             ("requests", Value::Obj(requests)),
-            ("total", Value::from(s.total)),
+            ("total", Value::from(self.total.get())),
             (
                 "responses",
                 obj([
-                    ("2xx", Value::from(s.status_2xx)),
-                    ("4xx", Value::from(s.status_4xx)),
-                    ("5xx", Value::from(s.status_5xx)),
+                    ("2xx", Value::from(self.status_2xx.get())),
+                    ("4xx", Value::from(self.status_4xx.get())),
+                    ("5xx", Value::from(self.status_5xx.get())),
                 ]),
             ),
             (
                 "latency_us",
                 obj([
-                    ("window", Value::from(sorted.len())),
-                    ("p50", pct(0.50)),
-                    ("p90", pct(0.90)),
-                    ("p99", pct(0.99)),
+                    ("window", Value::from(self.latency_us.len())),
+                    ("p50", pct(0)),
+                    ("p90", pct(1)),
+                    ("p99", pct(2)),
                 ]),
             ),
         ])
@@ -564,8 +604,25 @@ mod tests {
         for i in 0..(LATENCY_WINDOW as u64 + 500) {
             stats.record("solve", 200, i);
         }
-        let s = stats.inner.lock().unwrap();
-        assert_eq!(s.latencies_us.len(), LATENCY_WINDOW);
-        assert_eq!(s.total, LATENCY_WINDOW as u64 + 500);
+        let v = stats.snapshot();
+        assert_eq!(
+            v.get("latency_us").unwrap().get("window").unwrap().as_u64(),
+            Some(LATENCY_WINDOW as u64)
+        );
+        assert_eq!(v.get("total").unwrap().as_u64(), Some(LATENCY_WINDOW as u64 + 500));
+        assert_eq!(stats.total(), LATENCY_WINDOW as u64 + 500);
+    }
+
+    #[test]
+    fn metrics_route_serves_the_prometheus_exposition() {
+        // dispatch-level smoke: the route table knows /metrics and the
+        // payload is the registry's text format (full parser-level
+        // validation lives in tests/telemetry_properties.rs)
+        let resp = Response::text(200, telemetry::registry().prometheus_text());
+        assert_eq!(resp.status, 200);
+        assert!(resp.content_type.starts_with("text/plain"));
+        assert!(resp.body.contains("# TYPE chainckpt_service_requests_total counter"));
+        assert!(STAT_LABELS.len() == ROUTES.len() + 2, "labels cover routes + rejections");
+        assert!(ROUTES.iter().any(|&(m, p, l)| (m, p, l) == ("GET", "/metrics", "metrics")));
     }
 }

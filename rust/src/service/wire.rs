@@ -222,6 +222,37 @@ pub fn report_to_json(rep: &SimReport) -> Value {
     Value::Obj(obj)
 }
 
+/// Serialize a measured-vs-predicted [`DriftReport`] — per-op-kind rows
+/// plus the peak and makespan joins (the same numbers
+/// [`DriftReport::summary`] prints for `chainckpt compare`).
+///
+/// [`DriftReport`]: crate::telemetry::DriftReport
+/// [`DriftReport::summary`]: crate::telemetry::DriftReport::summary
+pub fn drift_to_json(drift: &crate::telemetry::DriftReport) -> Value {
+    let kinds: Vec<Value> = drift
+        .kinds
+        .iter()
+        .map(|k| {
+            obj([
+                ("kind", Value::from(k.kind.label())),
+                ("ops", Value::from(k.ops)),
+                ("predicted_us", Value::from(k.predicted_us)),
+                ("measured_us", Value::from(k.measured_us)),
+                ("ratio", Value::from(k.ratio)),
+            ])
+        })
+        .collect();
+    obj([
+        ("kinds", Value::Arr(kinds)),
+        ("predicted_peak_bytes", Value::from(drift.predicted_peak_bytes)),
+        ("measured_peak_bytes", Value::from(drift.measured_peak_bytes)),
+        ("peak_exact", Value::Bool(drift.peak_exact())),
+        ("predicted_time_us", Value::from(drift.predicted_time_us)),
+        ("measured_time_us", Value::from(drift.measured_time_us)),
+        ("time_ratio", Value::from(drift.time_ratio)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -478,6 +478,14 @@ pub fn try_solve_table_with_workers(
     mode: Mode,
     workers: usize,
 ) -> ApiResult<DpTable> {
+    // Observability only: counters and wall-clock around the fill. No
+    // instrumentation touches the float math, so bit-parity with the
+    // dense reference (which stays uninstrumented) is preserved.
+    let reg = crate::telemetry::registry();
+    let fill_t0 = std::time::Instant::now();
+    let mut cells_filled = 0u64;
+    let mut prune_hits = 0u64;
+
     let n = dc.len();
     let slots = dc.slots;
     let mut tab = DpTable::try_new(n, slots)?;
@@ -499,6 +507,7 @@ pub fn try_solve_table_with_workers(
         } else {
             store.append_row(&[], &[], &[])?;
         }
+        cells_filled += 1;
     }
 
     // General case by increasing sub-chain length d = t - s (eq. 2).
@@ -506,6 +515,7 @@ pub fn try_solve_table_with_workers(
     // so each diagonal is filled in parallel (scoped threads; no rayon in
     // the offline build) and appended serially in cell order.
     for d in 1..n {
+        let diag_t0 = std::time::Instant::now();
         let ts: Vec<usize> = ((d + 1)..=n).collect();
         let chunks: Vec<ChunkRows> = if ts.len() < 2 || workers < 2 {
             vec![fill_chunk(store, dc, &peaks, &uf_prefix, &ts, d, mode)]
@@ -526,6 +536,8 @@ pub fn try_solve_table_with_workers(
             })
         };
         for ch in &chunks {
+            cells_filled += ch.lens.len() as u64;
+            prune_hits += ch.prune_hits;
             let mut off = 0usize;
             for &len in &ch.lens {
                 let end = off + len as usize;
@@ -533,17 +545,26 @@ pub fn try_solve_table_with_workers(
                 off = end;
             }
         }
+        reg.solver_diagonals.inc();
+        reg.solver_diagonal_fill_us.observe(diag_t0.elapsed().as_micros() as u64);
     }
+    reg.solver_cells_filled.add(cells_filled);
+    reg.solver_prune_hits.add(prune_hits);
+    reg.solver_runs_emitted.add(store.ms.len() as u64);
+    reg.solver_fill_ns.add(fill_t0.elapsed().as_nanos() as u64);
     Ok(tab)
 }
 
 /// Rows produced by one worker's slice of an anti-diagonal, concatenated
-/// (`lens[i]` runs per row, in `t` order).
+/// (`lens[i]` runs per row, in `t` order), plus the worker's dominance-
+/// prune count (summed into the telemetry registry at the serial merge
+/// so workers never touch shared counters mid-fill).
 struct ChunkRows {
     lens: Vec<u32>,
     ms: Vec<u32>,
     costs: Vec<f64>,
     decs: Vec<u16>,
+    prune_hits: u64,
 }
 
 /// A row under construction: sorted runs with `(cost bits, dec)` dedup.
@@ -619,6 +640,8 @@ struct Scratch {
     best: RowBuf,
     out: RowBuf,
     cand: CandBuf,
+    /// Candidates discarded by the O(1) dominance bound (telemetry).
+    prune_hits: u64,
 }
 
 fn fill_chunk(
@@ -631,8 +654,13 @@ fn fill_chunk(
     mode: Mode,
 ) -> ChunkRows {
     let mut scratch = Scratch::default();
-    let mut out =
-        ChunkRows { lens: Vec::with_capacity(ts.len()), ms: Vec::new(), costs: Vec::new(), decs: Vec::new() };
+    let mut out = ChunkRows {
+        lens: Vec::with_capacity(ts.len()),
+        ms: Vec::new(),
+        costs: Vec::new(),
+        decs: Vec::new(),
+        prune_hits: 0,
+    };
     for &t in ts {
         fill_cell(store, dc, peaks, uf_prefix, t - d, t, mode, &mut scratch);
         out.lens.push(scratch.best.ms.len() as u32);
@@ -640,6 +668,7 @@ fn fill_chunk(
         out.costs.extend_from_slice(&scratch.best.costs);
         out.decs.extend_from_slice(&scratch.best.decs);
     }
+    out.prune_hits = scratch.prune_hits;
     out
 }
 
@@ -687,6 +716,7 @@ fn fill_cell(
         // inequality at every budget.
         let cand_min = (pre + store.min_cost(sp, t)) + store.min_cost(s, sp - 1);
         if !(cand_min < scratch.best.eval(start)) {
+            scratch.prune_hits += 1;
             continue;
         }
         let left = store.runs(s, sp - 1);
@@ -728,7 +758,9 @@ fn fill_cell(
             let start = start as u32;
             let fixed = dc.uf_s(s) + dc.ub_s(s);
             let cand_min = fixed + store.min_cost(s + 1, t);
-            if cand_min < scratch.best.eval(start) {
+            if !(cand_min < scratch.best.eval(start)) {
+                scratch.prune_hits += 1;
+            } else {
                 let mid = store.runs(s + 1, t);
                 scratch.cand.clear();
                 let mut mi = mid.index_at(start - habar);

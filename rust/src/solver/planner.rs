@@ -250,11 +250,10 @@ struct TableCache {
     /// waiters. Weak: lives only as long as some caller holds the Arc.
     handoff: Vec<(u64, Weak<DpTable>)>,
     total_bytes: usize,
-    lookups: u64,
-    hits: u64,
-    builds: u64,
-    evictions: u64,
-    coalesced: u64,
+    // lookups/hits/builds/evictions/coalesced live in the global
+    // telemetry registry (`telemetry::registry().cache_*`), not here —
+    // one set of counters feeds `cache_stats()`, `/stats`, `/metrics`,
+    // and the bench snapshots alike.
 }
 
 static CACHE: Mutex<TableCache> = Mutex::new(TableCache {
@@ -262,11 +261,6 @@ static CACHE: Mutex<TableCache> = Mutex::new(TableCache {
     inflight: Vec::new(),
     handoff: Vec::new(),
     total_bytes: 0,
-    lookups: 0,
-    hits: 0,
-    builds: 0,
-    evictions: 0,
-    coalesced: 0,
 });
 
 /// Wakes waiters parked in [`table_for`] when an in-flight build finishes.
@@ -325,13 +319,14 @@ impl Drop for InflightGuard {
 /// unwind and error alike), so parked waiters wake, re-check, and — with
 /// nothing cached — surface the same error from their own attempt.
 fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
+    let reg = crate::telemetry::registry();
     let key = fingerprint(dc, mode);
     {
         let mut cache = lock_cache();
-        cache.lookups += 1;
+        reg.cache_lookups.inc();
         loop {
             if let Some(pos) = cache.entries.iter().position(|e| e.key == key) {
-                cache.hits += 1;
+                reg.cache_hits.inc();
                 let entry = cache.entries.remove(pos);
                 let table = entry.table.clone();
                 cache.entries.push(entry); // most recently used at the back
@@ -340,11 +335,11 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
             if let Some(table) =
                 cache.handoff.iter().find(|(k, _)| *k == key).and_then(|(_, w)| w.upgrade())
             {
-                cache.hits += 1;
+                reg.cache_hits.inc();
                 return Ok(table);
             }
             if cache.inflight.contains(&key) {
-                cache.coalesced += 1;
+                reg.cache_coalesced.inc();
                 cache = CACHE_CV.wait(cache).unwrap_or_else(|p| p.into_inner());
                 continue; // re-check: the builder has inserted (or failed)
             }
@@ -357,7 +352,7 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
     let bytes = table.mem_bytes();
     {
         let mut cache = lock_cache();
-        cache.builds += 1;
+        reg.cache_builds.inc();
         cache.handoff.retain(|(_, w)| w.strong_count() > 0);
         if bytes <= CACHE_MAX_ENTRY_BYTES && !cache.entries.iter().any(|e| e.key == key) {
             cache.entries.push(CacheEntry { key, bytes, table: table.clone() });
@@ -367,7 +362,7 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
             {
                 let evicted = cache.entries.remove(0);
                 cache.total_bytes -= evicted.bytes;
-                cache.evictions += 1;
+                reg.cache_evictions.inc();
             }
         } else {
             // too big for the LRU: still hand it to coalesced waiters
@@ -380,6 +375,10 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
 
 /// Counters of the shared planner table cache (monotone since process
 /// start, except `entries`/`bytes` which reflect current residency).
+/// The monotone counters are read from the global telemetry registry —
+/// this struct is the stable snapshot shape the benches and `/stats`
+/// consume; the instruments themselves live in
+/// [`crate::telemetry::Registry`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlannerCacheStats {
     /// Table requests (one per `Planner::new` / `solve` call).
@@ -401,15 +400,18 @@ pub struct PlannerCacheStats {
     pub bytes: usize,
 }
 
-/// Snapshot the planner cache counters (shared process-wide).
+/// Snapshot the planner cache counters (shared process-wide): the
+/// monotone counts come from the telemetry registry, residency from the
+/// cache itself.
 pub fn cache_stats() -> PlannerCacheStats {
+    let reg = crate::telemetry::registry();
     let cache = lock_cache();
     PlannerCacheStats {
-        lookups: cache.lookups,
-        hits: cache.hits,
-        builds: cache.builds,
-        evictions: cache.evictions,
-        coalesced: cache.coalesced,
+        lookups: reg.cache_lookups.get(),
+        hits: reg.cache_hits.get(),
+        builds: reg.cache_builds.get(),
+        evictions: reg.cache_evictions.get(),
+        coalesced: reg.cache_coalesced.get(),
         entries: cache.entries.len(),
         bytes: cache.total_bytes,
     }
@@ -424,11 +426,8 @@ pub fn clear_cache() {
     cache.entries.clear();
     cache.handoff.clear();
     cache.total_bytes = 0;
-    cache.lookups = 0;
-    cache.hits = 0;
-    cache.builds = 0;
-    cache.evictions = 0;
-    cache.coalesced = 0;
+    drop(cache);
+    crate::telemetry::registry().reset_cache_counters();
 }
 
 #[cfg(test)]

@@ -1,0 +1,222 @@
+//! Predicted-vs-measured drift accounting — the paper's experiments
+//! section as a first-class artifact.
+//!
+//! The DP's schedule is optimal *for the stage costs it was given*
+//! (`u_f`/`u_b`) and *for the simulator's memory model*. After a real
+//! replay, [`drift_report`] joins the measured per-op-kind times and
+//! peak against those predictions:
+//!
+//! * **time**: per kind, `Σ` of the chain's `u_f`/`u_b` over the
+//!   schedule's ops of that kind vs the executor's measured wall-clock.
+//!   The predicted side is in the chain's own unit — microseconds for
+//!   chains measured by [`crate::estimator`] (so ratios hover near 1 on
+//!   the native backend), milliseconds for the paper's analytic
+//!   profiles (where only relative drift across kinds is meaningful).
+//! * **memory**: the simulator's `MemState` peak vs the ledger/arena
+//!   peak the executor observed — byte-exact equality on the native
+//!   backend is an acceptance gate, not a hope.
+//!
+//! [`crate::api::Plan::execute`] attaches a report to its
+//! [`crate::api::ExecutionReport`]; `chainckpt compare` prints one per
+//! strategy.
+
+use crate::chain::Chain;
+use crate::simulator::simulate;
+use crate::solver::{Op, Schedule};
+
+use super::OpKind;
+
+/// Measured-vs-predicted totals for one op kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KindDrift {
+    pub kind: OpKind,
+    /// Ops of this kind actually executed (averaged over reps).
+    pub ops: u64,
+    /// Σ predicted cost, in the chain's time unit.
+    pub predicted_us: f64,
+    /// Σ measured wall-clock, microseconds.
+    pub measured_us: f64,
+    /// `measured / predicted` (0 when nothing was predicted).
+    pub ratio: f64,
+}
+
+/// The joined drift report for one executed schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    /// Only kinds the schedule actually contains.
+    pub kinds: Vec<KindDrift>,
+    /// The simulator's `MemState` peak for this chain + schedule.
+    pub predicted_peak_bytes: u64,
+    /// The peak the executor reported (ledger or lowered-plan peak).
+    pub measured_peak_bytes: u64,
+    /// Simulator makespan (chain time unit).
+    pub predicted_time_us: f64,
+    /// Measured makespan: Σ measured op time, microseconds.
+    pub measured_time_us: f64,
+    /// `measured_time_us / predicted_time_us` (0 when unpredicted).
+    pub time_ratio: f64,
+}
+
+impl DriftReport {
+    /// True when the executor's peak matched the simulator byte-exactly.
+    pub fn peak_exact(&self) -> bool {
+        self.measured_peak_bytes == self.predicted_peak_bytes
+    }
+
+    /// One-line summary for CLI output, e.g.
+    /// `drift: time ×1.03 (pred 812.0 meas 836.4) · peak 18.4 KiB == simulated`.
+    pub fn summary(&self) -> String {
+        let peak = if self.peak_exact() {
+            format!("peak {} B == simulated", self.measured_peak_bytes)
+        } else {
+            format!(
+                "peak {} B vs simulated {} B",
+                self.measured_peak_bytes, self.predicted_peak_bytes
+            )
+        };
+        format!(
+            "drift: time ×{:.3} (pred {:.1} meas {:.1} µs) · {}",
+            self.time_ratio, self.predicted_time_us, self.measured_time_us, peak
+        )
+    }
+}
+
+/// Classify a schedule op for drift/trace purposes.
+pub fn op_kind(op: Op) -> OpKind {
+    match op {
+        Op::FwdNoSave(_) => OpKind::FwdNoSave,
+        Op::FwdCk(_) => OpKind::FwdCk,
+        Op::FwdAll(_) => OpKind::FwdAll,
+        Op::Bwd(_) => OpKind::Bwd,
+        Op::DropA(_) => OpKind::DropA,
+    }
+}
+
+/// Join measured per-kind `(count, ns)` totals and a measured peak
+/// against the simulator's predictions for `chain` + `sched`. Returns
+/// `None` when the schedule doesn't simulate on the chain (a drift
+/// report for an invalid plan would be noise, not signal).
+///
+/// `measured_ops`/`measured_ns` are indexed by [`OpKind::index`] — the
+/// delta of two [`super::Registry::kind_totals`] calls around the timed
+/// region, divided by the rep count.
+pub fn drift_report(
+    chain: &Chain,
+    sched: &Schedule,
+    measured_ops: [u64; OpKind::COUNT],
+    measured_ns: [u64; OpKind::COUNT],
+    measured_peak_bytes: u64,
+) -> Option<DriftReport> {
+    let sim = simulate(chain, sched).ok()?;
+
+    // Σ predicted cost per kind over the schedule's ops
+    let mut predicted = [0.0f64; OpKind::COUNT];
+    for &op in &sched.ops {
+        let k = op_kind(op);
+        match op {
+            Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => {
+                predicted[k.index()] += chain.uf(l as usize);
+            }
+            Op::Bwd(l) => predicted[k.index()] += chain.ub(l as usize),
+            Op::DropA(_) => {} // frees are modeled as instantaneous
+        }
+    }
+
+    let mut kinds = Vec::new();
+    let mut measured_total_us = 0.0f64;
+    for k in OpKind::ALL {
+        let i = k.index();
+        let measured_us = measured_ns[i] as f64 / 1_000.0;
+        measured_total_us += measured_us;
+        if measured_ops[i] == 0 && predicted[i] == 0.0 {
+            continue;
+        }
+        let ratio = if predicted[i] > 0.0 { measured_us / predicted[i] } else { 0.0 };
+        kinds.push(KindDrift {
+            kind: k,
+            ops: measured_ops[i],
+            predicted_us: predicted[i],
+            measured_us,
+            ratio,
+        });
+    }
+
+    let time_ratio =
+        if sim.makespan > 0.0 { measured_total_us / sim.makespan } else { 0.0 };
+    Some(DriftReport {
+        kinds,
+        predicted_peak_bytes: sim.peak_bytes,
+        measured_peak_bytes,
+        predicted_time_us: sim.makespan,
+        measured_time_us: measured_total_us,
+        time_ratio,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::Stage;
+    use crate::solver::{store_all_schedule, StrategyKind};
+
+    fn toy() -> Chain {
+        let stage = |uf, ub| Stage {
+            name: String::new(),
+            uf,
+            ub,
+            wa: 100,
+            wabar: 200,
+            wd: 100,
+            of: 50,
+            ob: 50,
+        };
+        Chain::new("toy", vec![stage(10.0, 20.0), stage(30.0, 40.0)], 100)
+    }
+
+    #[test]
+    fn joins_predictions_against_measured_totals() {
+        let chain = toy();
+        let sched = store_all_schedule(&chain);
+        let sim = simulate(&chain, &sched).unwrap();
+
+        // pretend every op was measured at exactly 2× its prediction
+        // (predictions are µs here, so ns = us·1000)
+        let mut ops = [0u64; OpKind::COUNT];
+        let mut ns = [0u64; OpKind::COUNT];
+        for &op in &sched.ops {
+            let k = op_kind(op);
+            ops[k.index()] += 1;
+            let pred = match op {
+                Op::FwdNoSave(l) | Op::FwdCk(l) | Op::FwdAll(l) => chain.uf(l as usize),
+                Op::Bwd(l) => chain.ub(l as usize),
+                Op::DropA(_) => 0.0,
+            };
+            ns[k.index()] += (pred * 2.0 * 1_000.0) as u64;
+        }
+
+        let report = drift_report(&chain, &sched, ops, ns, sim.peak_bytes).unwrap();
+        assert!(report.peak_exact());
+        assert_eq!(report.predicted_peak_bytes, sim.peak_bytes);
+        assert!((report.time_ratio - 2.0).abs() < 1e-9, "ratio {}", report.time_ratio);
+        for kd in &report.kinds {
+            if kd.predicted_us > 0.0 {
+                assert!((kd.ratio - 2.0).abs() < 1e-9, "{:?}", kd);
+            }
+        }
+        assert_eq!(sched.strategy, StrategyKind::StoreAll);
+        // store-all on an L=2 chain: 1×FwdCk, 1×FwdAll, 2×Bwd — all present
+        assert!(report.kinds.iter().any(|k| k.kind == OpKind::FwdAll));
+        assert!(report.kinds.iter().any(|k| k.kind == OpKind::Bwd));
+        // the one-liner mentions both halves of the join
+        let s = report.summary();
+        assert!(s.contains("time ×") && s.contains("peak"), "{s}");
+    }
+
+    #[test]
+    fn invalid_schedule_yields_none() {
+        let chain = toy();
+        // Bwd before any forward: the simulator rejects this sequence
+        let sched = Schedule::new(vec![Op::Bwd(2)], StrategyKind::StoreAll, 0.0);
+        assert!(drift_report(&chain, &sched, [0; 5], [0; 5], 0).is_none());
+    }
+}

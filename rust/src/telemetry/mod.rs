@@ -1,0 +1,727 @@
+//! Crate-wide telemetry: one process-global metrics [`Registry`], a span
+//! [`trace`]r for executor replays, and the predicted-vs-measured
+//! [`drift`] report — std-only, zero dependencies, lock-free on every
+//! hot path.
+//!
+//! The paper's claim is quantitative: the DP's schedule is optimal *for
+//! the measured stage costs* `u_f`/`u_b` and the simulated peak. This
+//! module closes the loop the paper's experiments section runs by hand:
+//!
+//! * the **registry** ([`registry`]) absorbs every counter that used to
+//!   live in a bespoke corner — the planner's table-cache stats, the DP
+//!   fill's internals (cells filled, frontier runs emitted,
+//!   dominance-prune hits, per-diagonal fill time), the executor's
+//!   replay (per-op-kind kernel time, recomputed forwards, arena
+//!   high-watermark), the native backend's tensor allocations, and the
+//!   service's request/latency counts. Instruments are plain atomics
+//!   ([`Counter`], [`Gauge`]) and fixed-bucket [`Histogram`]s: recording
+//!   is a handful of relaxed atomic RMWs, never a lock.
+//! * the **tracer** ([`trace`]) records `(op, stage, t_start, t_end,
+//!   bytes)` spans during `Executor::run`/`run_lowered` into a bounded
+//!   ring buffer and dumps them as Chrome trace-event JSON
+//!   (Perfetto-compatible) — `chainckpt train --trace out.json`.
+//!   Disabled cost is one relaxed atomic load per op.
+//! * the **drift report** ([`drift::DriftReport`]) joins measured per-op
+//!   times against the simulator's predicted costs and peak —
+//!   [`crate::api::Plan::execute`] returns it, `chainckpt compare`
+//!   prints it.
+//!
+//! `GET /metrics` on the planning service serves the registry in
+//! Prometheus text exposition format ([`Registry::prometheus_text`]);
+//! benches embed [`Registry::snapshot`] in their `BENCH_*.json`.
+
+pub mod drift;
+pub mod trace;
+
+pub use drift::{drift_report, DriftReport, KindDrift};
+pub use trace::{
+    chrome_trace_json, trace_enabled, trace_record, trace_start, trace_stop, SpanEvent,
+    DEFAULT_TRACE_CAPACITY,
+};
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::json::{obj, Value};
+
+// ---------------------------------------------------------------------------
+// Instrument primitives
+// ---------------------------------------------------------------------------
+
+/// A monotonically increasing counter (one relaxed atomic RMW per
+/// record; `reset` exists for the planner cache's `clear_cache`, which
+/// the benches use to isolate measurements).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-value-or-maximum gauge (arena high-watermarks, ledger peaks).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if larger (high-watermark semantics).
+    #[inline]
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A fixed-bucket histogram with Prometheus `le` semantics: an
+/// observation equal to a bound lands in that bound's bucket. Bounds are
+/// a static, strictly increasing slice; one extra bucket catches
+/// everything above the last bound (`+Inf`). Recording is three relaxed
+/// atomic RMWs — no lock, no allocation.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [u64],
+    buckets: Vec<AtomicU64>, // bounds.len() + 1 (the +Inf bucket), non-cumulative
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [u64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds,
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn observe(&self, value: u64) {
+        // first bound ≥ value (== bounds.len() → the +Inf bucket)
+        let idx = self.bounds.partition_point(|&b| b < value);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Cumulative per-bucket counts in bound order, ending with the
+    /// `+Inf` bucket (whose value equals [`Histogram::count`] when no
+    /// observation races the read).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|b| {
+                acc += b.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.sum.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A bounded sliding window of samples answering *exact* percentiles —
+/// the shared replacement for the service's hand-rolled latency
+/// reservoir. Recording is lock-free (a slot index from one relaxed
+/// `fetch_add`, one relaxed store); reading sorts a copy of the window.
+#[derive(Debug)]
+pub struct Window {
+    slots: Vec<AtomicU64>,
+    next: AtomicU64, // total observations ever; the slot is next % capacity
+}
+
+impl Window {
+    pub fn new(capacity: usize) -> Window {
+        assert!(capacity > 0, "a window needs at least one slot");
+        Window {
+            slots: (0..capacity).map(|_| AtomicU64::new(0)).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, value: u64) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        self.slots[i].store(value, Ordering::Relaxed);
+    }
+
+    /// Samples currently held (saturates at the capacity).
+    pub fn len(&self) -> usize {
+        (self.next.load(Ordering::Relaxed) as usize).min(self.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// For each quantile `q ∈ [0, 1]`: the sample at rank
+    /// `round((len-1)·q)` of the sorted window — the exact-percentile
+    /// formula the `/stats` endpoint has always used. All zeros when the
+    /// window is empty.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<u64> {
+        let n = self.len();
+        if n == 0 {
+            return vec![0; qs.len()];
+        }
+        let mut samples: Vec<u64> =
+            self.slots[..n].iter().map(|s| s.load(Ordering::Relaxed)).collect();
+        samples.sort_unstable();
+        qs.iter().map(|q| samples[((n - 1) as f64 * q).round() as usize]).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op kinds (shared by the executor instrumentation, tracer, and drift)
+// ---------------------------------------------------------------------------
+
+/// The five operation kinds of the paper's Table 1 — the granularity at
+/// which the executor is timed and drift is reported.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    FwdNoSave,
+    FwdCk,
+    FwdAll,
+    Bwd,
+    DropA,
+}
+
+impl OpKind {
+    pub const COUNT: usize = 5;
+    pub const ALL: [OpKind; OpKind::COUNT] =
+        [OpKind::FwdNoSave, OpKind::FwdCk, OpKind::FwdAll, OpKind::Bwd, OpKind::DropA];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::FwdNoSave => "fwd_nosave",
+            OpKind::FwdCk => "fwd_ck",
+            OpKind::FwdAll => "fwd_all",
+            OpKind::Bwd => "bwd",
+            OpKind::DropA => "drop_a",
+        }
+    }
+
+    pub fn is_forward(self) -> bool {
+        matches!(self, OpKind::FwdNoSave | OpKind::FwdCk | OpKind::FwdAll)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Bucket bounds (µs) for per-diagonal DP fill times: sub-ms wavefronts
+/// up through multi-second diagonals on depth-10⁴ chains.
+const DIAGONAL_FILL_US_BOUNDS: &[u64] =
+    &[10, 50, 100, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000];
+
+/// Bucket bounds (µs) for service request latency.
+const LATENCY_US_BOUNDS: &[u64] =
+    &[50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 1_000_000];
+
+/// Every instrument in the crate, grouped by subsystem. One instance
+/// per process ([`registry`]); all fields are public so instrumentation
+/// sites record without accessor ceremony.
+pub struct Registry {
+    // --- planner table cache (solver/planner.rs) ---
+    pub cache_lookups: Counter,
+    pub cache_hits: Counter,
+    pub cache_builds: Counter,
+    pub cache_evictions: Counter,
+    pub cache_coalesced: Counter,
+    // --- DP fill internals (solver/optimal.rs, frontier fill) ---
+    pub solver_cells_filled: Counter,
+    pub solver_runs_emitted: Counter,
+    pub solver_prune_hits: Counter,
+    pub solver_diagonals: Counter,
+    pub solver_fill_ns: Counter,
+    pub solver_diagonal_fill_us: Histogram,
+    // --- executor replay (executor/{mod,lowered}.rs) ---
+    pub exec_op_count: [Counter; OpKind::COUNT],
+    pub exec_op_ns: [Counter; OpKind::COUNT],
+    pub exec_recomputed_forwards: Counter,
+    pub exec_runs: Counter,
+    pub exec_arena_high_watermark_bytes: Gauge,
+    pub exec_peak_bytes: Gauge,
+    // --- native backend ---
+    pub native_tensor_allocs: Counter,
+    // --- service (mirrored from every per-instance routes::Stats) ---
+    pub service_requests: Counter,
+    pub service_responses_2xx: Counter,
+    pub service_responses_4xx: Counter,
+    pub service_responses_5xx: Counter,
+    pub service_latency_us: Histogram,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            cache_lookups: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_builds: Counter::new(),
+            cache_evictions: Counter::new(),
+            cache_coalesced: Counter::new(),
+            solver_cells_filled: Counter::new(),
+            solver_runs_emitted: Counter::new(),
+            solver_prune_hits: Counter::new(),
+            solver_diagonals: Counter::new(),
+            solver_fill_ns: Counter::new(),
+            solver_diagonal_fill_us: Histogram::new(DIAGONAL_FILL_US_BOUNDS),
+            exec_op_count: std::array::from_fn(|_| Counter::new()),
+            exec_op_ns: std::array::from_fn(|_| Counter::new()),
+            exec_recomputed_forwards: Counter::new(),
+            exec_runs: Counter::new(),
+            exec_arena_high_watermark_bytes: Gauge::new(),
+            exec_peak_bytes: Gauge::new(),
+            native_tensor_allocs: Counter::new(),
+            service_requests: Counter::new(),
+            service_responses_2xx: Counter::new(),
+            service_responses_4xx: Counter::new(),
+            service_responses_5xx: Counter::new(),
+            service_latency_us: Histogram::new(LATENCY_US_BOUNDS),
+        }
+    }
+
+    /// One executed op of `kind` taking `ns` nanoseconds.
+    #[inline]
+    pub fn record_op(&self, kind: OpKind, ns: u64) {
+        self.exec_op_count[kind.index()].inc();
+        self.exec_op_ns[kind.index()].add(ns);
+    }
+
+    /// Per-kind `(count, ns)` totals. The measured side of a drift
+    /// report is the delta of two of these around a timed region.
+    pub fn kind_totals(&self) -> ([u64; OpKind::COUNT], [u64; OpKind::COUNT]) {
+        (
+            std::array::from_fn(|i| self.exec_op_count[i].get()),
+            std::array::from_fn(|i| self.exec_op_ns[i].get()),
+        )
+    }
+
+    /// Zero the planner-cache counters — `solver::clear_cache`'s
+    /// counter half, so benches keep their exact-count assertions.
+    pub fn reset_cache_counters(&self) {
+        for c in [
+            &self.cache_lookups,
+            &self.cache_hits,
+            &self.cache_builds,
+            &self.cache_evictions,
+            &self.cache_coalesced,
+        ] {
+            c.reset();
+        }
+    }
+
+    /// A point-in-time JSON snapshot, grouped by subsystem — embedded in
+    /// every `BENCH_*.json` so gates reference telemetry instead of
+    /// re-deriving it.
+    pub fn snapshot(&self) -> Value {
+        let lookups = self.cache_lookups.get();
+        let hits = self.cache_hits.get();
+        let cells = self.solver_cells_filled.get();
+        let prune_hits = self.solver_prune_hits.get();
+        let ops: Vec<(&str, Value)> = OpKind::ALL
+            .iter()
+            .map(|&k| {
+                (
+                    k.label(),
+                    obj([
+                        ("count", Value::from(self.exec_op_count[k.index()].get())),
+                        ("ns", Value::from(self.exec_op_ns[k.index()].get())),
+                    ]),
+                )
+            })
+            .collect();
+        let mut ops_obj = std::collections::BTreeMap::new();
+        for (k, v) in ops {
+            ops_obj.insert(k.to_string(), v);
+        }
+        obj([
+            (
+                "planner_cache",
+                obj([
+                    ("lookups", Value::from(lookups)),
+                    ("hits", Value::from(hits)),
+                    ("builds", Value::from(self.cache_builds.get())),
+                    ("evictions", Value::from(self.cache_evictions.get())),
+                    ("coalesced", Value::from(self.cache_coalesced.get())),
+                    (
+                        "hit_rate",
+                        Value::from(if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 }),
+                    ),
+                ]),
+            ),
+            (
+                "solver",
+                obj([
+                    ("cells_filled", Value::from(cells)),
+                    ("runs_emitted", Value::from(self.solver_runs_emitted.get())),
+                    ("prune_hits", Value::from(prune_hits)),
+                    (
+                        // prune hits per filled cell: how many split
+                        // candidates the dominance check discarded in O(1)
+                        "prune_hits_per_cell",
+                        Value::from(if cells > 0 { prune_hits as f64 / cells as f64 } else { 0.0 }),
+                    ),
+                    ("diagonals", Value::from(self.solver_diagonals.get())),
+                    ("fill_ns", Value::from(self.solver_fill_ns.get())),
+                ]),
+            ),
+            (
+                "executor",
+                obj([
+                    ("ops", Value::Obj(ops_obj)),
+                    ("recomputed_forwards", Value::from(self.exec_recomputed_forwards.get())),
+                    ("runs", Value::from(self.exec_runs.get())),
+                    (
+                        "arena_high_watermark_bytes",
+                        Value::from(self.exec_arena_high_watermark_bytes.get()),
+                    ),
+                    ("peak_bytes", Value::from(self.exec_peak_bytes.get())),
+                ]),
+            ),
+            ("native", obj([("tensor_allocs", Value::from(self.native_tensor_allocs.get()))])),
+            (
+                "service",
+                obj([
+                    ("requests", Value::from(self.service_requests.get())),
+                    (
+                        "responses",
+                        obj([
+                            ("2xx", Value::from(self.service_responses_2xx.get())),
+                            ("4xx", Value::from(self.service_responses_4xx.get())),
+                            ("5xx", Value::from(self.service_responses_5xx.get())),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// The registry in Prometheus text exposition format (version
+    /// 0.0.4): `# HELP`/`# TYPE` per family, `_total` counters,
+    /// cumulative `_bucket{le=…}`/`_sum`/`_count` histograms. Served by
+    /// `GET /metrics` on the planning service.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        counter_line(
+            &mut out,
+            "chainckpt_planner_cache_lookups_total",
+            "DP-table cache lookups.",
+            self.cache_lookups.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_planner_cache_hits_total",
+            "DP-table cache hits (LRU or single-flight handoff).",
+            self.cache_hits.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_planner_cache_builds_total",
+            "DP tables actually filled.",
+            self.cache_builds.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_planner_cache_evictions_total",
+            "DP tables evicted from the cache.",
+            self.cache_evictions.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_planner_cache_coalesced_total",
+            "Lookups that waited on an in-flight build instead of duplicating it.",
+            self.cache_coalesced.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_solver_cells_filled_total",
+            "DP cells filled by the frontier fill.",
+            self.solver_cells_filled.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_solver_runs_emitted_total",
+            "Frontier runs stored (compressed row segments).",
+            self.solver_runs_emitted.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_solver_prune_hits_total",
+            "Split candidates discarded by the exact dominance prune.",
+            self.solver_prune_hits.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_solver_diagonals_total",
+            "Anti-diagonal wavefronts filled.",
+            self.solver_diagonals.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_solver_fill_nanoseconds_total",
+            "Wall-clock nanoseconds spent in DP fills.",
+            self.solver_fill_ns.get(),
+        );
+        histogram_lines(
+            &mut out,
+            "chainckpt_solver_diagonal_fill_us",
+            "Per-anti-diagonal fill time, microseconds.",
+            &self.solver_diagonal_fill_us,
+        );
+        // one family, labeled per op kind
+        let _ = writeln!(
+            out,
+            "# HELP chainckpt_executor_ops_total Executed schedule operations by kind."
+        );
+        let _ = writeln!(out, "# TYPE chainckpt_executor_ops_total counter");
+        for k in OpKind::ALL {
+            let _ = writeln!(
+                out,
+                "chainckpt_executor_ops_total{{kind=\"{}\"}} {}",
+                k.label(),
+                self.exec_op_count[k.index()].get()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "# HELP chainckpt_executor_op_nanoseconds_total Wall-clock nanoseconds per op kind."
+        );
+        let _ = writeln!(out, "# TYPE chainckpt_executor_op_nanoseconds_total counter");
+        for k in OpKind::ALL {
+            let _ = writeln!(
+                out,
+                "chainckpt_executor_op_nanoseconds_total{{kind=\"{}\"}} {}",
+                k.label(),
+                self.exec_op_ns[k.index()].get()
+            );
+        }
+        counter_line(
+            &mut out,
+            "chainckpt_executor_recomputed_forwards_total",
+            "Forward ops re-run beyond the first pass (checkpointing's price).",
+            self.exec_recomputed_forwards.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_executor_runs_total",
+            "Complete schedule replays.",
+            self.exec_runs.get(),
+        );
+        gauge_line(
+            &mut out,
+            "chainckpt_executor_arena_high_watermark_bytes",
+            "Largest lowered arena bound so far.",
+            self.exec_arena_high_watermark_bytes.get(),
+        );
+        gauge_line(
+            &mut out,
+            "chainckpt_executor_peak_bytes",
+            "Largest ledger/plan peak observed in a replay.",
+            self.exec_peak_bytes.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_native_tensor_allocs_total",
+            "Tensors allocated by the native backend.",
+            self.native_tensor_allocs.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_service_requests_total",
+            "HTTP requests handled by the planning service.",
+            self.service_requests.get(),
+        );
+        let _ = writeln!(
+            out,
+            "# HELP chainckpt_service_responses_total HTTP responses by status class."
+        );
+        let _ = writeln!(out, "# TYPE chainckpt_service_responses_total counter");
+        for (class, c) in [
+            ("2xx", &self.service_responses_2xx),
+            ("4xx", &self.service_responses_4xx),
+            ("5xx", &self.service_responses_5xx),
+        ] {
+            let _ = writeln!(
+                out,
+                "chainckpt_service_responses_total{{class=\"{class}\"}} {}",
+                c.get()
+            );
+        }
+        histogram_lines(
+            &mut out,
+            "chainckpt_service_latency_us",
+            "Request latency, microseconds.",
+            &self.service_latency_us,
+        );
+        out
+    }
+}
+
+fn counter_line(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn gauge_line(out: &mut String, name: &str, help: &str, value: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {value}");
+}
+
+fn histogram_lines(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let cumulative = h.cumulative();
+    for (bound, count) in h.bounds().iter().zip(&cumulative) {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {count}");
+    }
+    // the +Inf bucket is the last cumulative entry by construction
+    let inf = cumulative.last().copied().unwrap_or(0);
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {inf}");
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry. First call initializes (one
+/// allocation); every later call is a single atomic load.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+        c.reset();
+        assert_eq!(c.get(), 0);
+
+        let g = Gauge::new();
+        g.set(10);
+        g.record_max(5); // lower → no change
+        assert_eq!(g.get(), 10);
+        g.record_max(99);
+        assert_eq!(g.get(), 99);
+    }
+
+    #[test]
+    fn histogram_le_bucket_selection() {
+        let h = Histogram::new(&[10, 20, 30]);
+        h.observe(10); // == bound → that bucket (le semantics)
+        h.observe(11); // → le=20
+        h.observe(30); // == last bound → le=30
+        h.observe(31); // → +Inf
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 82);
+        assert_eq!(h.cumulative(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn window_wraps_and_answers_exact_percentiles() {
+        let w = Window::new(8);
+        for v in 1..=8u64 {
+            w.record(v);
+        }
+        assert_eq!(w.len(), 8);
+        // rank round(7·0.5) = 4 → sorted[4] = 5
+        assert_eq!(w.percentiles(&[0.0, 0.5, 1.0]), vec![1, 5, 8]);
+        w.record(100); // overwrites the oldest slot
+        assert_eq!(w.len(), 8);
+        assert_eq!(w.percentiles(&[1.0]), vec![100]);
+    }
+
+    #[test]
+    fn registry_is_one_instance_and_exposes_prometheus_text() {
+        let a = registry() as *const Registry;
+        let b = registry() as *const Registry;
+        assert_eq!(a, b);
+        let text = registry().prometheus_text();
+        for family in [
+            "chainckpt_planner_cache_lookups_total",
+            "chainckpt_solver_prune_hits_total",
+            "chainckpt_executor_ops_total",
+            "chainckpt_service_latency_us_bucket",
+        ] {
+            assert!(text.contains(family), "missing family {family} in:\n{text}");
+        }
+        // the snapshot mirrors the same groups
+        let snap = registry().snapshot();
+        for key in ["planner_cache", "solver", "executor", "native", "service"] {
+            assert!(snap.get(key).is_some(), "snapshot missing group {key}");
+        }
+    }
+}

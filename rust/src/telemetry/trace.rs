@@ -1,0 +1,201 @@
+//! Span tracer: a bounded ring buffer of `(op, stage, t_start, t_end,
+//! bytes)` events recorded during executor replays, dumped as Chrome
+//! trace-event JSON so a schedule opens directly in Perfetto or
+//! `chrome://tracing`.
+//!
+//! The hot-path contract: when tracing is off, [`trace_enabled`] is one
+//! relaxed atomic load and nothing else runs. When on, each op takes one
+//! short mutex-guarded ring write — acceptable because tracing is an
+//! explicitly requested diagnostic (`--trace FILE`), never the measured
+//! configuration (the executor bench gates the *disabled* overhead).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{obj, Value};
+
+/// One completed executor operation, timestamps in microseconds since
+/// the `trace_start` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Op-kind label (one of [`super::OpKind::label`]'s values).
+    pub name: &'static str,
+    /// 1-based stage index (0 for whole-run spans).
+    pub stage: u32,
+    pub t_start_us: u64,
+    pub t_end_us: u64,
+    /// Bytes materialized by the op (activation/gradient output size).
+    pub bytes: u64,
+}
+
+/// Ring capacity when the caller doesn't choose one: enough for a full
+/// replay of a depth-10⁴ chain with heavy recomputation (~4·L ops) with
+/// room to spare, at 40 B/event ≈ 2.6 MiB.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACER: Mutex<Option<TracerInner>> = Mutex::new(None);
+
+struct TracerInner {
+    epoch: Instant,
+    events: Vec<SpanEvent>,
+    cap: usize,
+    head: usize, // next overwrite slot once the ring is full
+    dropped: u64,
+}
+
+/// One relaxed load — the only cost instrumentation pays when tracing
+/// is off.
+#[inline]
+pub fn trace_enabled() -> bool {
+    TRACE_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Arm the tracer with a ring of `capacity` events (the epoch for all
+/// timestamps is now). A second call discards any buffered events and
+/// restarts the epoch.
+pub fn trace_start(capacity: usize) {
+    let mut guard = TRACER.lock().unwrap();
+    *guard = Some(TracerInner {
+        epoch: Instant::now(),
+        events: Vec::with_capacity(capacity.max(1)),
+        cap: capacity.max(1),
+        head: 0,
+        dropped: 0,
+    });
+    drop(guard);
+    TRACE_ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm the tracer and return the buffered events in chronological
+/// order (plus how many older events the ring overwrote). A no-op
+/// `(empty, 0)` if tracing was never started.
+pub fn trace_stop() -> (Vec<SpanEvent>, u64) {
+    TRACE_ENABLED.store(false, Ordering::Relaxed);
+    let mut guard = TRACER.lock().unwrap();
+    match guard.take() {
+        None => (Vec::new(), 0),
+        Some(inner) => {
+            let TracerInner { events, cap, head, dropped, .. } = inner;
+            if events.len() < cap || head == 0 {
+                (events, dropped)
+            } else {
+                // ring wrapped: oldest surviving event sits at `head`
+                let mut ordered = Vec::with_capacity(events.len());
+                ordered.extend_from_slice(&events[head..]);
+                ordered.extend_from_slice(&events[..head]);
+                (ordered, dropped)
+            }
+        }
+    }
+}
+
+/// Record one completed span. Callers gate on [`trace_enabled`] first;
+/// this re-checks under the lock so a span finishing as the tracer is
+/// stopped is simply dropped instead of resurrecting a stale ring.
+pub fn trace_record(name: &'static str, stage: u32, t_start: Instant, t_end: Instant, bytes: u64) {
+    let mut guard = TRACER.lock().unwrap();
+    let Some(inner) = guard.as_mut() else {
+        return;
+    };
+    let t_start_us = t_start.saturating_duration_since(inner.epoch).as_micros() as u64;
+    let t_end_us = t_end.saturating_duration_since(inner.epoch).as_micros() as u64;
+    let ev = SpanEvent { name, stage, t_start_us, t_end_us, bytes };
+    if inner.events.len() < inner.cap {
+        inner.events.push(ev);
+    } else {
+        inner.events[inner.head] = ev;
+        inner.head = (inner.head + 1) % inner.cap;
+        inner.dropped += 1;
+    }
+}
+
+/// Serialize spans as Chrome trace-event JSON: an object with a
+/// `traceEvents` array of complete (`"ph":"X"`) events, timestamps and
+/// durations in microseconds — the format Perfetto and
+/// `chrome://tracing` load directly.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    let items: Vec<Value> = events
+        .iter()
+        .map(|ev| {
+            obj([
+                ("name", Value::from(ev.name)),
+                ("cat", Value::from("executor")),
+                ("ph", Value::from("X")),
+                ("ts", Value::from(ev.t_start_us)),
+                ("dur", Value::from(ev.t_end_us.saturating_sub(ev.t_start_us))),
+                ("pid", Value::from(1u64)),
+                ("tid", Value::from(1u64)),
+                (
+                    "args",
+                    obj([
+                        ("stage", Value::from(ev.stage as u64)),
+                        ("bytes", Value::from(ev.bytes)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    obj([
+        ("traceEvents", Value::from(items)),
+        ("displayTimeUnit", Value::from("ms")),
+    ])
+    .to_json_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    // The tracer is process-global; run the lifecycle scenarios in one
+    // test body so parallel test threads can't interleave arm/disarm.
+    #[test]
+    fn tracer_lifecycle_ring_wrap_and_json() {
+        // disabled by default, stop without start is a no-op
+        assert!(!trace_enabled());
+        assert_eq!(trace_stop(), (Vec::new(), 0));
+
+        // records land in order; timestamps are relative to the epoch
+        trace_start(8);
+        assert!(trace_enabled());
+        let t0 = Instant::now();
+        trace_record("fwd_ck", 1, t0, t0 + Duration::from_micros(5), 64);
+        trace_record("bwd", 2, t0 + Duration::from_micros(5), t0 + Duration::from_micros(9), 128);
+        let (events, dropped) = trace_stop();
+        assert!(!trace_enabled());
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "fwd_ck");
+        assert_eq!(events[1].stage, 2);
+        assert!(events[0].t_start_us <= events[0].t_end_us);
+        assert_eq!(events[1].t_end_us - events[1].t_start_us, 4);
+
+        // a full ring overwrites oldest-first and reports the drops
+        trace_start(3);
+        let t0 = Instant::now();
+        for i in 0..5u32 {
+            trace_record("fwd_nosave", i, t0, t0, 0);
+        }
+        let (events, dropped) = trace_stop();
+        assert_eq!(dropped, 2);
+        assert_eq!(events.iter().map(|e| e.stage).collect::<Vec<_>>(), vec![2, 3, 4]);
+
+        // the JSON dump parses and carries the trace-event fields
+        let json = chrome_trace_json(&[SpanEvent {
+            name: "fwd_all",
+            stage: 3,
+            t_start_us: 10,
+            t_end_us: 25,
+            bytes: 4096,
+        }]);
+        let v = crate::util::json::Value::parse(&json).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("ts").unwrap().as_u64(), Some(10));
+        assert_eq!(evs[0].get("dur").unwrap().as_u64(), Some(15));
+        assert_eq!(evs[0].get("args").unwrap().get("bytes").unwrap().as_u64(), Some(4096));
+    }
+}

@@ -660,6 +660,29 @@ fn chains_and_stats_expose_the_catalog_and_counters() {
     assert!(v.get("latency_us").unwrap().get("p50").unwrap().as_u64().is_some());
     assert!(v.get("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
 
+    // the same counters in Prometheus text exposition on /metrics
+    // (values are process-global, so assert families, not exact counts)
+    let (status, metrics) = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    for family in [
+        "# TYPE chainckpt_service_requests_total counter",
+        "# TYPE chainckpt_planner_cache_lookups_total counter",
+        "# TYPE chainckpt_solver_cells_filled_total counter",
+        "# TYPE chainckpt_executor_ops_total counter",
+        "# TYPE chainckpt_service_latency_us histogram",
+        "chainckpt_service_responses_total{class=\"2xx\"}",
+        "chainckpt_service_latency_us_bucket{le=\"+Inf\"}",
+    ] {
+        assert!(metrics.contains(family), "/metrics is missing {family:?}:\n{metrics}");
+    }
+    // the /solve + /chains + /stats traffic above reached the registry
+    let requests_line = metrics
+        .lines()
+        .find(|l| l.starts_with("chainckpt_service_requests_total "))
+        .expect("service request sample present");
+    let count: u64 = requests_line.split(' ').nth(1).unwrap().parse().unwrap();
+    assert!(count >= 3, "at least this test's requests must be counted: {requests_line}");
+
     drop(client);
     server.stop();
 }

@@ -1,0 +1,330 @@
+//! Telemetry subsystem properties: exact counters under contention,
+//! Prometheus `le` bucket semantics, a parser-level validation of the
+//! `/metrics` exposition text, the Chrome-trace JSON contract of a real
+//! quickstart replay, and the drift report's byte-exact peak join.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use chainckpt::api::{self, ExecuteOptions};
+use chainckpt::backend::{NativeTensor, Tensor};
+use chainckpt::estimator::{measured_chain, EstimatorConfig};
+use chainckpt::executor::Executor;
+use chainckpt::runtime::Runtime;
+use chainckpt::solver::store_all_schedule;
+use chainckpt::telemetry::{self, registry, Counter, Histogram, OpKind, Window};
+use chainckpt::train::SyntheticData;
+use chainckpt::util::json::Value;
+use chainckpt::util::Rng;
+
+/// The span tracer and the drift report's per-kind counter deltas are
+/// process-global; the tests that replay schedules serialize on this so
+/// one test's ops never leak into another's trace or measurement.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+// ---------------------------------------------------------------------------
+// Instrument exactness
+// ---------------------------------------------------------------------------
+
+#[test]
+fn counters_are_exact_under_16_thread_contention() {
+    const THREADS: usize = 16;
+    const PER_THREAD: u64 = 10_000;
+
+    let local = Counter::new();
+    let histogram = Histogram::new(&[10, 20, 30]);
+    let before = registry().cache_evictions.get();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let (local, histogram) = (&local, &histogram);
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    local.inc();
+                    registry().cache_evictions.inc();
+                    // spread observations over every bucket incl. +Inf
+                    histogram.observe((t as u64 + i) % 40);
+                }
+            });
+        }
+    });
+    let n = THREADS as u64 * PER_THREAD;
+    assert_eq!(local.get(), n, "relaxed increments must not lose updates");
+    assert_eq!(
+        registry().cache_evictions.get() - before,
+        n,
+        "the global registry counter must be exactly as lossless"
+    );
+    assert_eq!(histogram.count(), n);
+    assert_eq!(
+        histogram.cumulative().last().copied(),
+        Some(n),
+        "the +Inf cumulative bucket must equal the observation count"
+    );
+    local.reset();
+    assert_eq!(local.get(), 0);
+}
+
+#[test]
+fn histogram_bucket_boundaries_follow_le_semantics() {
+    let h = Histogram::new(&[10, 20, 30]);
+    // a value equal to a bound belongs to that bound's bucket —
+    // Prometheus le (≤) semantics, not strict-less-than
+    for v in [0, 10, 11, 20, 21, 30, 31, 1_000_000] {
+        h.observe(v);
+    }
+    // per-bound cumulative counts: ≤10 → {0,10}, ≤20 → +{11,20}, ≤30 → +{21,30}
+    assert_eq!(h.cumulative(), vec![2, 4, 6, 8]);
+    assert_eq!(h.count(), 8);
+    assert_eq!(h.sum(), 0 + 10 + 11 + 20 + 21 + 30 + 31 + 1_000_000);
+}
+
+#[test]
+fn window_percentiles_are_exact_on_a_known_distribution() {
+    let w = Window::new(4096);
+    for v in 1..=100u64 {
+        w.record(v);
+    }
+    // rank round((n-1)·q) of the sorted window, the /stats formula
+    let p = w.percentiles(&[0.0, 0.50, 0.90, 0.99, 1.0]);
+    assert_eq!(p, vec![1, 51, 90, 99, 100]);
+    assert_eq!(w.len(), 100);
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition (parser-level)
+// ---------------------------------------------------------------------------
+
+/// One sample line: `name 3` or `name{k="v",...} 3`.
+fn parse_sample(line: &str) -> (String, Option<String>, f64) {
+    let (name_labels, value) = line.rsplit_once(' ').expect("sample has a value");
+    let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value in '{line}'"));
+    match name_labels.split_once('{') {
+        None => (name_labels.to_string(), None, value),
+        Some((name, rest)) => {
+            let labels = rest.strip_suffix('}').expect("labels close");
+            (name.to_string(), Some(labels.to_string()), value)
+        }
+    }
+}
+
+#[test]
+fn metrics_exposition_is_well_formed() {
+    let text = registry().prometheus_text();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut helped: Vec<String> = Vec::new();
+    // histogram family → (per-le cumulative values in order, count value)
+    let mut buckets: BTreeMap<String, Vec<(String, f64)>> = BTreeMap::new();
+    let mut counts: BTreeMap<String, f64> = BTreeMap::new();
+
+    for line in text.lines() {
+        assert!(!line.trim().is_empty(), "no blank lines in the exposition");
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap().to_string();
+            assert!(rest.len() > name.len() + 1, "HELP without text: '{line}'");
+            helped.push(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let (name, kind) = (it.next().unwrap(), it.next().unwrap());
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram"),
+                "unknown type '{kind}'"
+            );
+            assert_eq!(
+                helped.last().map(|s| s.as_str()),
+                Some(name),
+                "# TYPE must directly follow its family's # HELP: '{line}'"
+            );
+            if kind == "counter" {
+                assert!(
+                    name.ends_with("_total"),
+                    "counter family '{name}' must end in _total"
+                );
+            }
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment line '{line}'");
+        let (name, labels, value) = parse_sample(line);
+        assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad metric name charset '{name}'"
+        );
+        assert!(value >= 0.0 && value.is_finite(), "bad value on '{line}'");
+        // resolve the sample to its declared family
+        if let Some(kind) = types.get(&name) {
+            assert!(kind == "counter" || kind == "gauge", "{name} sampled as {kind}");
+            continue;
+        }
+        let (family, suffix) = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|s| name.strip_suffix(s).map(|f| (f.to_string(), *s)))
+            .unwrap_or_else(|| panic!("sample '{name}' matches no declared family"));
+        assert_eq!(
+            types.get(&family).map(|s| s.as_str()),
+            Some("histogram"),
+            "histogram-suffixed sample '{name}' without a histogram family"
+        );
+        match suffix {
+            "_bucket" => {
+                let labels = labels.expect("_bucket carries an le label");
+                let le = labels
+                    .strip_prefix("le=\"")
+                    .and_then(|l| l.strip_suffix('"'))
+                    .unwrap_or_else(|| panic!("bad le label '{labels}'"))
+                    .to_string();
+                buckets.entry(family).or_default().push((le, value));
+            }
+            "_count" => {
+                counts.insert(family, value);
+            }
+            _ => {}
+        }
+    }
+
+    // the families the issue's acceptance criterion names
+    for family in [
+        "chainckpt_planner_cache_lookups_total",
+        "chainckpt_solver_cells_filled_total",
+        "chainckpt_solver_diagonal_fill_us",
+        "chainckpt_executor_ops_total",
+        "chainckpt_executor_peak_bytes",
+        "chainckpt_native_tensor_allocs_total",
+        "chainckpt_service_requests_total",
+        "chainckpt_service_latency_us",
+    ] {
+        assert!(types.contains_key(family), "missing family {family}");
+    }
+    // executor ops are labeled with every op kind
+    let op_lines: Vec<&str> = text
+        .lines()
+        .filter(|l| l.starts_with("chainckpt_executor_ops_total{"))
+        .collect();
+    assert_eq!(op_lines.len(), OpKind::COUNT);
+    for k in OpKind::ALL {
+        assert!(
+            op_lines.iter().any(|l| l.contains(&format!("kind=\"{}\"", k.label()))),
+            "no sample for op kind {}",
+            k.label()
+        );
+    }
+    // each histogram: cumulative non-decreasing, ends at le="+Inf",
+    // and the +Inf bucket equals the family's _count
+    assert_eq!(buckets.len(), 2, "two histogram families expected");
+    for (family, rows) in &buckets {
+        assert_eq!(rows.last().map(|(le, _)| le.as_str()), Some("+Inf"), "{family}");
+        let mut prev = 0.0;
+        for (le, v) in rows {
+            assert!(*v >= prev, "{family}: bucket le={le} decreased");
+            prev = *v;
+        }
+        assert_eq!(
+            rows.last().map(|(_, v)| *v),
+            counts.get(family).copied(),
+            "{family}: le=\"+Inf\" must equal _count"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace of a real replay
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quickstart_replay_trace_is_valid_chrome_trace_json() {
+    let _guard = EXEC_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let rt = Runtime::native_preset("quickstart").expect("quickstart preset builds");
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 1 }).unwrap();
+    let sched = store_all_schedule(&chain);
+
+    let mut rng = Rng::new(3);
+    let numel: usize = rt.manifest.input_shape.iter().product();
+    let input =
+        NativeTensor::from_vec(&rng.normal_vec(numel), &rt.manifest.input_shape).unwrap();
+    let n_stages = rt.manifest.stages.len();
+    let target = rng.normal_vec(rt.manifest.sig_of(n_stages - 1).params[0].nelem());
+    let mut ex = Executor::new(&rt, 7).unwrap();
+    ex.set_data_param(n_stages - 1, &target).unwrap();
+
+    telemetry::trace_start(telemetry::DEFAULT_TRACE_CAPACITY);
+    ex.run(&sched, &input, None).unwrap();
+    let (events, dropped) = telemetry::trace_stop();
+    assert_eq!(dropped, 0, "a quickstart replay fits the default ring");
+    assert_eq!(events.len(), sched.ops.len(), "one span per executed op");
+
+    let doc = Value::parse(&telemetry::chrome_trace_json(&events))
+        .expect("trace output must be parseable JSON");
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let trace_events = doc.get("traceEvents").and_then(|v| v.as_arr()).expect("traceEvents");
+    assert_eq!(trace_events.len(), sched.ops.len());
+
+    let labels: Vec<&str> = OpKind::ALL.iter().map(|k| k.label()).collect();
+    let mut prev_ts = 0;
+    for ev in trace_events {
+        // the complete-event contract chrome://tracing and Perfetto load
+        assert_eq!(ev.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(ev.get("cat").and_then(|v| v.as_str()), Some("executor"));
+        assert_eq!(ev.get("pid").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(ev.get("tid").and_then(|v| v.as_u64()), Some(1));
+        let name = ev.get("name").and_then(|v| v.as_str()).expect("name");
+        assert!(labels.contains(&name), "unknown span name '{name}'");
+        let ts = ev.get("ts").and_then(|v| v.as_u64()).expect("ts");
+        ev.get("dur").and_then(|v| v.as_u64()).expect("dur");
+        assert!(ts >= prev_ts, "events must be chronological");
+        prev_ts = ts;
+        let args = ev.get("args").expect("args");
+        args.get("stage").and_then(|v| v.as_u64()).expect("args.stage");
+        let bytes = args.get("bytes").and_then(|v| v.as_u64()).expect("args.bytes");
+        if name == "fwd_all" {
+            assert!(bytes > 0, "a saving forward writes a nonzero activation");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drift report on a real execution
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drift_report_joins_byte_exact_peak_on_quickstart() {
+    let _guard = EXEC_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let rt = Runtime::native_preset("quickstart").expect("quickstart preset builds");
+    let chain = measured_chain(&rt, EstimatorConfig { reps: 1, warmup: 1 }).unwrap();
+    let sched = store_all_schedule(&chain);
+    let data = SyntheticData::generate(&rt.manifest, 1, 7).unwrap();
+
+    let opts = ExecuteOptions { reps: 2, chain: Some(chain.clone()), ..Default::default() };
+    let rep = api::execute_schedule(&rt, &sched, &data, &opts).unwrap();
+    let drift = rep.drift.expect("a chain in the options must yield a drift report");
+
+    // the acceptance criterion: the executor's measured peak equals the
+    // simulator's predicted peak to the byte on the native backend
+    assert!(
+        drift.peak_exact(),
+        "measured peak {} B != simulated {} B",
+        drift.measured_peak_bytes,
+        drift.predicted_peak_bytes
+    );
+    assert_eq!(drift.measured_peak_bytes, rep.peak.get());
+    assert!(!drift.kinds.is_empty(), "store-all executes forwards and backwards");
+    for k in &drift.kinds {
+        assert!(k.ops > 0 || k.predicted_us > 0.0, "empty kind row {}", k.kind.label());
+        assert!(k.measured_us >= 0.0 && k.ratio >= 0.0);
+    }
+    // the measured chain is in µs, so the time join is unit-consistent;
+    // a real replay takes nonzero time
+    assert!(drift.measured_time_us > 0.0);
+    assert!(drift.time_ratio > 0.0);
+    assert!(drift.summary().contains("peak"));
+
+    // without a chain the report is absent, not garbage
+    let rep = api::execute_schedule(
+        &rt,
+        &sched,
+        &data,
+        &ExecuteOptions { reps: 1, ..Default::default() },
+    )
+    .unwrap();
+    assert!(rep.drift.is_none());
+}
