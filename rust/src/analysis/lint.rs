@@ -1,0 +1,553 @@
+//! Rule-driven architectural lints over the crate's own source tree.
+//!
+//! `tests/api_surface.rs` used to hand-roll one source scan ("only the
+//! facade constructs a `Planner` or parses memory suffixes"). This
+//! module generalizes that into a deterministic, std-only engine: a
+//! fixed rule set walks `rust/src/**`, every finding is attributed to a
+//! file and line, and each rule carries a checked-in **allowlist** under
+//! `rust/lints/<rule>.allow` that turns the existing debt into a
+//! ratchet — a file may never exceed its allowlisted count (new
+//! violations fail `tests/lints.rs`), while counts *below* the allowance
+//! are reported as available burn-down so the allowlist only ever
+//! shrinks.
+//!
+//! The scan is intentionally textual and grep-replicable, with two
+//! normalizations applied everywhere:
+//!
+//! * **production only** — each file is truncated at its first
+//!   `#[cfg(test)]` line, so in-module tests may use `unwrap()` freely;
+//! * **comments stripped** — everything from the first `//` on a line
+//!   (doc comments included) is ignored, so prose mentioning
+//!   `crate::api` is not an import edge.
+//!
+//! The rules:
+//!
+//! | rule | scope | forbids |
+//! |------|-------|---------|
+//! | `layering` | planning-math layers | `crate::` imports that point up the stack (see [`allowed_imports`]) |
+//! | `no-panics` | `service/`, `api/` | `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/`unimplemented!` |
+//! | `relaxed-atomics` | everything but `telemetry/` | `Ordering::Relaxed` |
+//! | `truncating-casts` | `solver/`, `service/wire.rs` | `as u8/u16/u32/i8/i16/i32` |
+//! | `facade-planner` | everything but `api/`, `solver/` | `Planner::new` |
+//! | `facade-suffix` | everything but `api/` | `parse_size`, `fn parse_suffix` |
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Every rule the engine knows, in report order.
+pub const RULES: [&str; 6] = [
+    "layering",
+    "no-panics",
+    "relaxed-atomics",
+    "truncating-casts",
+    "facade-planner",
+    "facade-suffix",
+];
+
+/// Where to scan and where the allowlists live.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Root of the source tree (normally `rust/src`).
+    pub src_root: PathBuf,
+    /// Directory holding `<rule>.allow` files (normally `rust/lints`).
+    pub allow_root: PathBuf,
+}
+
+/// One attributed violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuleFinding {
+    pub rule: &'static str,
+    /// Path relative to the source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// The offending token or import edge.
+    pub excerpt: String,
+}
+
+impl fmt::Display for RuleFinding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// One rule's findings evaluated against its allowlist.
+#[derive(Debug, Clone)]
+pub struct LintOutcome {
+    pub rule: &'static str,
+    pub findings: Vec<RuleFinding>,
+    /// Files over their allowance — these fail the lint test.
+    pub failures: Vec<String>,
+    /// Files under their allowance — the allowlist can shrink.
+    pub burn_down: Vec<String>,
+    /// Allowlist entries naming files with no findings at all.
+    pub stale: Vec<String>,
+}
+
+/// The whole engine run.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    pub outcomes: Vec<LintOutcome>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// All over-allowance messages across rules; empty means the ratchet
+    /// holds.
+    pub fn failures(&self) -> Vec<String> {
+        self.outcomes.iter().flat_map(|o| o.failures.iter().cloned()).collect()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.outcomes.iter().all(|o| o.failures.is_empty())
+    }
+
+    /// Non-fatal notes: burn-down opportunities and stale entries.
+    pub fn notes(&self) -> Vec<String> {
+        self.outcomes
+            .iter()
+            .flat_map(|o| o.burn_down.iter().chain(o.stale.iter()).cloned())
+            .collect()
+    }
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "lint scan over {} files", self.files_scanned)?;
+        for o in &self.outcomes {
+            writeln!(
+                f,
+                "  {}: {} finding(s), {} over allowance",
+                o.rule,
+                o.findings.len(),
+                o.failures.len()
+            )?;
+            for msg in &o.failures {
+                writeln!(f, "    FAIL {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Source normalization
+// ---------------------------------------------------------------------------
+
+/// The production view of a file: (1-based line number, comment-stripped
+/// text) pairs, truncated at the first `#[cfg(test)]` line.
+fn production_lines(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let stripped = match raw.find("//") {
+            Some(pos) => &raw[..pos],
+            None => raw,
+        };
+        out.push((i + 1, stripped.to_string()));
+    }
+    out
+}
+
+/// Is the byte *after* `end` an identifier continuation? Used to keep
+/// `as u32` from matching inside `as u320` or `as usize`.
+fn ident_continues(line: &str, end: usize) -> bool {
+    line[end..].chars().next().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// All occurrences of `needle` in `line`; with `boundary`, matches
+/// followed by an identifier character are skipped.
+fn occurrences(line: &str, needle: &str, boundary: bool) -> usize {
+    let mut count = 0;
+    let mut from = 0;
+    while let Some(pos) = line[from..].find(needle) {
+        let end = from + pos + needle.len();
+        if !boundary || !ident_continues(line, end) {
+            count += 1;
+        }
+        from = from + pos + needle.len().max(1);
+    }
+    count
+}
+
+/// The module identifiers following every `crate::` on the line.
+fn crate_imports(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = line[from..].find("crate::") {
+        let start = from + pos + "crate::".len();
+        let ident: String = line[start..]
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !ident.is_empty() {
+            out.push(ident);
+        }
+        from = start;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The rule set
+// ---------------------------------------------------------------------------
+
+/// The intended layering DAG, bottom-up. A constrained layer may only
+/// `crate::`-import the listed modules; everything else (api, service,
+/// backend, executor, runtime, …) is deliberately unconstrained — those
+/// layers *should* reach down. Debt against this map (e.g. the solver's
+/// kind-tagged `crate::api` preflight errors) lives in
+/// `rust/lints/layering.allow` until inverted.
+fn allowed_imports(layer: &str) -> Option<&'static [&'static str]> {
+    const UTIL: &[&str] = &["util"];
+    const TELEMETRY: &[&str] = &["util", "telemetry"];
+    const CHAIN: &[&str] = &["util", "telemetry", "chain"];
+    const SIMULATOR: &[&str] = &["util", "telemetry", "chain", "simulator"];
+    const SOLVER: &[&str] = &["util", "telemetry", "chain", "simulator", "solver"];
+    const GRAPH: &[&str] = &["util", "telemetry", "chain", "simulator", "solver", "graph"];
+    const PLAN: &[&str] =
+        &["util", "telemetry", "chain", "simulator", "solver", "graph", "plan"];
+    const ANALYSIS: &[&str] =
+        &["util", "telemetry", "chain", "simulator", "solver", "graph", "plan", "analysis"];
+    match layer {
+        "util" => Some(UTIL),
+        "telemetry" => Some(TELEMETRY),
+        "chain" => Some(CHAIN),
+        "simulator" => Some(SIMULATOR),
+        "solver" => Some(SOLVER),
+        "graph" => Some(GRAPH),
+        "plan" => Some(PLAN),
+        "analysis" => Some(ANALYSIS),
+        _ => None,
+    }
+}
+
+const PANIC_TOKENS: [&str; 6] =
+    [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+const CAST_TOKENS: [&str; 6] =
+    [" as u8", " as u16", " as u32", " as i8", " as i16", " as i32"];
+
+/// Apply every rule to one file. `rel` is the `/`-separated path below
+/// the source root; `text` the raw file contents.
+pub fn scan_file(rel: &str, text: &str) -> Vec<RuleFinding> {
+    let lines = production_lines(text);
+    let mut out = Vec::new();
+    let layer = rel.split('/').next().unwrap_or("");
+    // the engine's own rule table necessarily spells out the forbidden
+    // tokens — that is data, not usage, so this file is exempt from the
+    // token-matching rules (the layering rule still applies to it)
+    let self_scan = rel == "analysis/lint.rs";
+    let push = |out: &mut Vec<RuleFinding>, rule, line, excerpt: String| {
+        out.push(RuleFinding { rule, file: rel.to_string(), line, excerpt });
+    };
+
+    for (line_no, line) in &lines {
+        if let Some(allowed) = allowed_imports(layer) {
+            for import in crate_imports(line) {
+                if !allowed.contains(&import.as_str()) {
+                    push(
+                        &mut out,
+                        "layering",
+                        *line_no,
+                        format!("{layer}/ imports crate::{import}"),
+                    );
+                }
+            }
+        }
+
+        if layer == "service" || layer == "api" {
+            for tok in PANIC_TOKENS {
+                for _ in 0..occurrences(line, tok, false) {
+                    push(&mut out, "no-panics", *line_no, tok.to_string());
+                }
+            }
+        }
+
+        if layer != "telemetry" && !self_scan {
+            for _ in 0..occurrences(line, "Ordering::Relaxed", true) {
+                push(&mut out, "relaxed-atomics", *line_no, "Ordering::Relaxed".to_string());
+            }
+        }
+
+        if layer == "solver" || rel == "service/wire.rs" {
+            for tok in CAST_TOKENS {
+                for _ in 0..occurrences(line, tok, true) {
+                    push(&mut out, "truncating-casts", *line_no, tok.trim().to_string());
+                }
+            }
+        }
+
+        if layer != "api" && layer != "solver" && !self_scan {
+            for _ in 0..occurrences(line, "Planner::new", true) {
+                push(&mut out, "facade-planner", *line_no, "Planner::new".to_string());
+            }
+        }
+
+        if layer != "api" && !self_scan {
+            for tok in ["parse_size", "fn parse_suffix"] {
+                for _ in 0..occurrences(line, tok, true) {
+                    push(&mut out, "facade-suffix", *line_no, tok.to_string());
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Allowlists and the ratchet
+// ---------------------------------------------------------------------------
+
+/// Parse a `<rule>.allow` file: one `path count` pair per line, `#`
+/// comments and blank lines ignored. Malformed lines are reported as
+/// failures rather than silently dropped.
+fn parse_allowlist(text: &str) -> (BTreeMap<String, usize>, Vec<String>) {
+    let mut map = BTreeMap::new();
+    let mut errors = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match line.rsplit_once(char::is_whitespace) {
+            Some((path, count)) => match count.trim().parse::<usize>() {
+                Ok(n) => {
+                    map.insert(path.trim().to_string(), n);
+                }
+                Err(_) => errors.push(format!("allowlist line {}: bad count {line:?}", i + 1)),
+            },
+            None => errors.push(format!("allowlist line {}: expected 'path count'", i + 1)),
+        }
+    }
+    (map, errors)
+}
+
+/// Evaluate one rule's findings against its allowlist: per-file counts
+/// over the allowance fail; counts under it are burn-down notes.
+fn evaluate(
+    rule: &'static str,
+    findings: Vec<RuleFinding>,
+    allow: &BTreeMap<String, usize>,
+    allow_errors: Vec<String>,
+) -> LintOutcome {
+    let mut per_file: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in &findings {
+        *per_file.entry(f.file.as_str()).or_default() += 1;
+    }
+    let mut failures = allow_errors;
+    let mut burn_down = Vec::new();
+    for (file, &count) in &per_file {
+        let budget = allow.get(*file).copied().unwrap_or(0);
+        if count > budget {
+            let detail: Vec<String> = findings
+                .iter()
+                .filter(|f| f.file == *file)
+                .map(|f| format!("{}:{} {}", f.file, f.line, f.excerpt))
+                .collect();
+            failures.push(format!(
+                "[{rule}] {file}: {count} finding(s), allowance {budget}\n      {}",
+                detail.join("\n      ")
+            ));
+        } else if count < budget {
+            burn_down.push(format!(
+                "[{rule}] {file}: {count} < allowance {budget} — shrink {rule}.allow"
+            ));
+        }
+    }
+    let stale = allow
+        .keys()
+        .filter(|path| !per_file.contains_key(path.as_str()))
+        .map(|path| format!("[{rule}] {path}: allowlisted but clean — remove the entry"))
+        .collect();
+    LintOutcome { rule, findings, failures, burn_down, stale }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+fn rust_sources(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rust_sources(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the whole rule set over `cfg.src_root` and ratchet every rule
+/// against `cfg.allow_root/<rule>.allow`.
+pub fn run(cfg: &LintConfig) -> io::Result<LintReport> {
+    let mut files = Vec::new();
+    rust_sources(&cfg.src_root, &mut files)?;
+    let mut findings: Vec<RuleFinding> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&cfg.src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)?;
+        findings.extend(scan_file(&rel, &text));
+    }
+
+    let mut outcomes = Vec::new();
+    for rule in RULES {
+        let rule_findings: Vec<RuleFinding> =
+            findings.iter().filter(|f| f.rule == rule).cloned().collect();
+        let allow_path = cfg.allow_root.join(format!("{rule}.allow"));
+        let (allow, allow_errors) = match fs::read_to_string(&allow_path) {
+            Ok(text) => parse_allowlist(&text),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => (BTreeMap::new(), Vec::new()),
+            Err(e) => return Err(e),
+        };
+        outcomes.push(evaluate(rule, rule_findings, &allow, allow_errors));
+    }
+    Ok(LintReport { outcomes, files_scanned: files.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn production_view_truncates_at_cfg_test_and_strips_comments() {
+        let text = "fn a() {} // .unwrap() in a comment\nlet x = 1;\n#[cfg(test)]\nmod tests { fn b() { x.unwrap(); } }\n";
+        let lines = production_lines(text);
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0], (1, "fn a() {} ".to_string()));
+        assert_eq!(lines[1], (2, "let x = 1;".to_string()));
+    }
+
+    #[test]
+    fn occurrence_matcher_respects_identifier_boundaries() {
+        assert_eq!(occurrences("let x = y as u32;", " as u32", true), 1);
+        assert_eq!(occurrences("let x = y as u32z;", " as u32", true), 0);
+        assert_eq!(occurrences("a as u8 + b as u8", " as u8", true), 2);
+        assert_eq!(occurrences("y as usize", " as u8", true), 0);
+        assert_eq!(occurrences("v.unwrap().unwrap()", ".unwrap()", false), 2);
+    }
+
+    #[test]
+    fn crate_import_extraction_reads_the_module_identifier() {
+        assert_eq!(
+            crate_imports("use crate::api::{Error}; crate::service::serve();"),
+            vec!["api".to_string(), "service".to_string()]
+        );
+        assert!(crate_imports("no imports here").is_empty());
+    }
+
+    #[test]
+    fn layering_rule_flags_upward_imports_only() {
+        let up = scan_file("solver/bad.rs", "use crate::service::serve;\n");
+        assert_eq!(up.len(), 1);
+        assert_eq!(up[0].rule, "layering");
+        assert_eq!(up[0].line, 1);
+        let down = scan_file("solver/good.rs", "use crate::chain::Chain;\n");
+        assert!(down.iter().all(|f| f.rule != "layering"), "{down:?}");
+        // api/service are unconstrained layers
+        let api = scan_file("api/plan.rs", "use crate::service::serve;\n");
+        assert!(api.iter().all(|f| f.rule != "layering"));
+        // prose in comments is not an import edge
+        let doc = scan_file("plan/mod.rs", "//! see crate::api for the facade\n");
+        assert!(doc.iter().all(|f| f.rule != "layering"), "{doc:?}");
+    }
+
+    #[test]
+    fn panic_rule_covers_service_and_api_production_code_only() {
+        let hit = scan_file("service/x.rs", "let v = body.get(0).unwrap();\n");
+        assert!(hit.iter().any(|f| f.rule == "no-panics"));
+        let test_only =
+            scan_file("service/x.rs", "fn ok() {}\n#[cfg(test)]\nmod t { fn f() { x.unwrap(); } }\n");
+        assert!(test_only.iter().all(|f| f.rule != "no-panics"), "{test_only:?}");
+        let solver = scan_file("solver/x.rs", "let v = body.get(0).unwrap();\n");
+        assert!(solver.iter().all(|f| f.rule != "no-panics"));
+    }
+
+    #[test]
+    fn relaxed_atomics_allowed_in_telemetry_only() {
+        let t = scan_file("telemetry/mod.rs", "c.fetch_add(1, Ordering::Relaxed);\n");
+        assert!(t.iter().all(|f| f.rule != "relaxed-atomics"));
+        let s = scan_file("service/routes.rs", "c.fetch_add(1, Ordering::Relaxed);\n");
+        assert!(s.iter().any(|f| f.rule == "relaxed-atomics"));
+    }
+
+    #[test]
+    fn cast_rule_scopes_to_solver_and_wire() {
+        let s = scan_file("solver/optimal.rs", "let m = big as u32;\n");
+        assert!(s.iter().any(|f| f.rule == "truncating-casts"));
+        let w = scan_file("service/wire.rs", "let m = big as u16;\n");
+        assert!(w.iter().any(|f| f.rule == "truncating-casts"));
+        let widening = scan_file("service/wire.rs", "let m = small as u64;\n");
+        assert!(widening.iter().all(|f| f.rule != "truncating-casts"));
+        let elsewhere = scan_file("chain/mod.rs", "let m = big as u32;\n");
+        assert!(elsewhere.iter().all(|f| f.rule != "truncating-casts"));
+    }
+
+    #[test]
+    fn facade_rules_reproduce_the_api_surface_scan() {
+        let g = scan_file("graph/mod.rs", "let p = Planner::new(&chain, m, s, mode);\n");
+        assert!(g.iter().any(|f| f.rule == "facade-planner"));
+        let s = scan_file("solver/planner.rs", "let p = Planner::new(&chain, m, s, mode);\n");
+        assert!(s.iter().all(|f| f.rule != "facade-planner"));
+        let u = scan_file("util/cli.rs", "fn parse_suffix(s: &str) {}\n");
+        assert!(u.iter().any(|f| f.rule == "facade-suffix"));
+        let a = scan_file("api/units.rs", "fn parse_suffix(s: &str) {}\n");
+        assert!(a.iter().all(|f| f.rule != "facade-suffix"));
+    }
+
+    #[test]
+    fn ratchet_fails_over_allowance_and_notes_burn_down() {
+        let findings = vec![
+            RuleFinding {
+                rule: "no-panics",
+                file: "service/a.rs".into(),
+                line: 3,
+                excerpt: ".unwrap()".into(),
+            },
+            RuleFinding {
+                rule: "no-panics",
+                file: "service/a.rs".into(),
+                line: 9,
+                excerpt: ".expect(".into(),
+            },
+            RuleFinding {
+                rule: "no-panics",
+                file: "service/b.rs".into(),
+                line: 1,
+                excerpt: ".unwrap()".into(),
+            },
+        ];
+        let (allow, errs) =
+            parse_allowlist("# budgets\nservice/a.rs 1\nservice/b.rs 5\nservice/gone.rs 2\n");
+        assert!(errs.is_empty());
+        let outcome = evaluate("no-panics", findings, &allow, errs);
+        // a.rs is over (2 > 1) → failure naming both sites
+        assert_eq!(outcome.failures.len(), 1, "{:?}", outcome.failures);
+        assert!(outcome.failures[0].contains("service/a.rs"));
+        assert!(outcome.failures[0].contains("a.rs:3"));
+        // b.rs is under (1 < 5) → burn-down note
+        assert_eq!(outcome.burn_down.len(), 1);
+        // gone.rs has no findings → stale entry note
+        assert_eq!(outcome.stale.len(), 1);
+    }
+
+    #[test]
+    fn malformed_allowlists_fail_rather_than_pass_silently() {
+        let (_, errs) = parse_allowlist("service/a.rs notanumber\njustonepath\n");
+        assert_eq!(errs.len(), 2);
+        let outcome = evaluate("no-panics", Vec::new(), &BTreeMap::new(), errs);
+        assert_eq!(outcome.failures.len(), 2);
+    }
+}

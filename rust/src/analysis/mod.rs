@@ -1,0 +1,30 @@
+//! Static analysis: independent safety proofs for lowered plans and
+//! rule-driven architectural lints over the crate's own sources.
+//!
+//! Two pillars, both *checkers* rather than *builders* — they re-derive
+//! facts with different algorithms than the code under test and compare:
+//!
+//! * [`verify`] — the plan borrow-checker. Given an
+//!   [`ExecPlan`](crate::plan::ExecPlan) it re-proves, from the step and
+//!   value tables alone, that every read is of a defined and still-live
+//!   value, every value is freed exactly once, no two simultaneously-live
+//!   values share arena bytes, no kernel reads a range it is writing,
+//!   every free is performed by a consumer of the value (Table 1's
+//!   refcount discipline), and that the plan-claimed `peak_bytes` equals
+//!   an independent recomputation byte-for-byte. The findings come back
+//!   as a structured [`Verdict`] in the paper's notation
+//!   (`a^ℓ`/`ā^ℓ`/`δ^ℓ`).
+//! * [`lint`] — the architectural lint engine. A deterministic,
+//!   std-only scan of `rust/src/**` driven by a fixed rule set
+//!   (module-layering DAG, no panicking APIs in request-serving paths,
+//!   `Ordering::Relaxed` confined to `telemetry/`, no truncating `as`
+//!   casts in the solver and wire layers, facade ownership of
+//!   `Planner::new` and suffix parsing) with per-file allowlist files
+//!   under `rust/lints/` acting as a ratchet: new violations fail,
+//!   burn-down is reported so the allowlist can shrink.
+
+pub mod lint;
+pub mod verify;
+
+pub use lint::{LintConfig, LintOutcome, LintReport, RuleFinding};
+pub use verify::{verify, verify_counted, Verdict, Violation, ViolationKind};

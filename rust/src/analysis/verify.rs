@@ -1,0 +1,771 @@
+//! The plan borrow-checker: an independent static verifier for
+//! [`ExecPlan`]s.
+//!
+//! [`crate::plan::lower`] *builds* a plan by replaying the simulator's
+//! own transition function, so a bug in that shared machinery produces a
+//! plan that is wrong and self-consistent at the same time — exactly the
+//! failure mode of the PR-6 graph lowering, where a double-freed
+//! predecessor tape compiled into bogus slot reuse that nothing
+//! downstream could see. This module re-derives every safety fact from
+//! the finished plan's tables alone, with algorithms disjoint from the
+//! builder's:
+//!
+//! 1. **Dataflow** — a forward walk over [`Step`]s with a per-value
+//!    `Undefined → Live → Freed` state machine: def-before-use,
+//!    exactly-once-free, birth/death metadata conformance, and the
+//!    Table-1 refcount rule that every free (except `drop a^ℓ` and the
+//!    op's own transient) is performed by a step that *reads* the value.
+//! 2. **Arena geometry** — every value fits its slot, and slot byte
+//!    ranges tile `[0, arena_bytes)` with no gap or overlap.
+//! 3. **Lifetime ⊗ byte-range overlap** — no two values live at the same
+//!    step may share a single arena byte (lifetimes are inclusive: a
+//!    value freed *at* step `i` still occupies storage during `i`).
+//! 4. **Read/write disjointness** — per step, no input range intersects
+//!    an output or transient range (the "δ replaces a" ledger convention
+//!    is byte counting, never aliasing).
+//! 5. **Peak recomputation** — an independent sweep of the Table-1
+//!    charge order (forwards touch `current + writes + transient`,
+//!    backwards `max(current + transient, current − frees + writes)`,
+//!    `drop` touches nothing) whose result must equal the plan's claimed
+//!    [`ExecPlan::peak_bytes`] byte-for-byte, and be covered by
+//!    [`ExecPlan::arena_bytes`].
+//!
+//! The checker never panics on malformed input — out-of-range ids are
+//! themselves violations — so it can sit in front of untrusted or
+//! deliberately mutated plans (see `tests/plan_verifier.rs`).
+
+use std::fmt;
+
+use crate::plan::{ExecPlan, ValueId};
+use crate::solver::Op;
+
+/// What a [`Violation`] is about. Each seeded mutation class in the
+/// harness maps to exactly one primary kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ViolationKind {
+    /// A step reads a value no earlier step (or the initial set) defined.
+    UseBeforeDef,
+    /// A step reads a value a previous step already freed.
+    UseAfterFree,
+    /// A value is freed twice.
+    DoubleFree,
+    /// A step frees a value that was never defined.
+    FreeWithoutDef,
+    /// A value with a recorded death is never freed by any step.
+    MissingFree,
+    /// A value's recorded `death` disagrees with the step that frees it
+    /// (or a value without a death is freed anyway).
+    DeathMismatch,
+    /// A value's recorded `birth` disagrees with the step that writes it.
+    BirthMismatch,
+    /// A value is written twice, or a step writes an `initial` value.
+    DoubleDefine,
+    /// A non-initial value no step ever writes.
+    OrphanValue,
+    /// A step frees a value it does not read — the Table-1 refcount
+    /// discipline (last *consumer* frees) is broken. `drop a^ℓ` and the
+    /// step's own transient are the two sanctioned exceptions.
+    FreeWithoutRead,
+    /// Two simultaneously-live values share at least one arena byte.
+    SlotOverlap,
+    /// A value references a slot out of range or larger than its slot.
+    SlotBounds,
+    /// Slot byte ranges do not tile `[0, arena_bytes)` exactly.
+    ArenaTiling,
+    /// A step's input range intersects one of its output/transient ranges.
+    ReadWriteOverlap,
+    /// The independent peak recomputation disagrees with the plan's
+    /// claimed `peak_bytes`.
+    PeakMismatch,
+    /// The arena is smaller than the recomputed peak.
+    ArenaBelowPeak,
+}
+
+impl ViolationKind {
+    /// Stable label used in CLI/JSON output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ViolationKind::UseBeforeDef => "use-before-def",
+            ViolationKind::UseAfterFree => "use-after-free",
+            ViolationKind::DoubleFree => "double-free",
+            ViolationKind::FreeWithoutDef => "free-without-def",
+            ViolationKind::MissingFree => "missing-free",
+            ViolationKind::DeathMismatch => "death-mismatch",
+            ViolationKind::BirthMismatch => "birth-mismatch",
+            ViolationKind::DoubleDefine => "double-define",
+            ViolationKind::OrphanValue => "orphan-value",
+            ViolationKind::FreeWithoutRead => "free-without-read",
+            ViolationKind::SlotOverlap => "slot-overlap",
+            ViolationKind::SlotBounds => "slot-bounds",
+            ViolationKind::ArenaTiling => "arena-tiling",
+            ViolationKind::ReadWriteOverlap => "read-write-overlap",
+            ViolationKind::PeakMismatch => "peak-mismatch",
+            ViolationKind::ArenaBelowPeak => "arena-below-peak",
+        }
+    }
+}
+
+impl fmt::Display for ViolationKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One finding: kind, where (step / value), and a human-readable detail
+/// in the paper's notation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub kind: ViolationKind,
+    /// Step index the violation is anchored to, when step-local.
+    pub step: Option<usize>,
+    /// Primary value involved, when value-local.
+    pub value: Option<ValueId>,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.kind.label())?;
+        if let Some(s) = self.step {
+            write!(f, " step {s}")?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// The verifier's structured answer: all violations found, plus the two
+/// numbers the peak sweep derived (useful even on clean plans — the
+/// mutation harness uses `peak_step` to aim its byte-shrink mutation).
+#[derive(Debug, Clone)]
+pub struct Verdict {
+    pub violations: Vec<Violation>,
+    /// Independently recomputed Table-1 peak.
+    pub recomputed_peak: u64,
+    /// Step at which the recomputed peak is first attained (`None` when
+    /// the initial resident set is already the peak).
+    pub peak_step: Option<usize>,
+    pub steps_checked: usize,
+    pub values_checked: usize,
+}
+
+impl Verdict {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Whether any violation of `kind` was found.
+    pub fn has(&self, kind: ViolationKind) -> bool {
+        self.violations.iter().any(|v| v.kind == kind)
+    }
+
+    /// Distinct kinds present, in first-seen order.
+    pub fn kinds(&self) -> Vec<ViolationKind> {
+        let mut out: Vec<ViolationKind> = Vec::new();
+        for v in &self.violations {
+            if !out.contains(&v.kind) {
+                out.push(v.kind);
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Verdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            write!(
+                f,
+                "plan verified: {} steps, {} values, peak {} B (recomputed independently)",
+                self.steps_checked, self.values_checked, self.recomputed_peak
+            )
+        } else {
+            writeln!(f, "plan REJECTED: {} violation(s)", self.violations.len())?;
+            for v in &self.violations {
+                writeln!(f, "  {v}")?;
+            }
+            write!(f, "  recomputed peak {} B", self.recomputed_peak)
+        }
+    }
+}
+
+/// Paper-notation label for a value id, tolerant of out-of-range ids.
+fn label(plan: &ExecPlan, id: ValueId) -> String {
+    match plan.values.get(id) {
+        Some(v) => format!("{} (value {id})", v.item.label()),
+        None => format!("value {id} (out of range)"),
+    }
+}
+
+/// Byte range `[start, end)` a value occupies inside the arena, when its
+/// slot reference is valid.
+fn byte_range(plan: &ExecPlan, id: ValueId) -> Option<(u64, u64)> {
+    let v = plan.values.get(id)?;
+    let slot = plan.slots.get(v.slot)?;
+    (v.bytes > 0).then(|| (slot.offset, slot.offset + v.bytes))
+}
+
+/// Inclusive lifetime `[start, end]` in step indices (initial values are
+/// live from before step 0; deathless values to the end of time).
+fn lifetime(plan: &ExecPlan, id: ValueId) -> (usize, usize) {
+    let v = &plan.values[id];
+    let start = if v.initial { 0 } else { v.birth };
+    (start, v.death.unwrap_or(usize::MAX))
+}
+
+/// Verify `plan` end to end. Pure and total: never panics, touches no
+/// global state, and always returns a full [`Verdict`].
+pub fn verify(plan: &ExecPlan) -> Verdict {
+    let mut out: Vec<Violation> = Vec::new();
+    dataflow(plan, &mut out);
+    geometry(plan, &mut out);
+    overlap(plan, &mut out);
+    read_write_disjoint(plan, &mut out);
+    let (recomputed_peak, peak_step) = recompute_peak(plan, &mut out);
+    Verdict {
+        violations: out,
+        recomputed_peak,
+        peak_step,
+        steps_checked: plan.steps.len(),
+        values_checked: plan.values.len(),
+    }
+}
+
+/// [`verify`], plus bookkeeping in the process-global metrics registry:
+/// bumps `verifier.runs` and either `verifier.clean` or
+/// `verifier.violations` (by the violation count).
+pub fn verify_counted(plan: &ExecPlan) -> Verdict {
+    let verdict = verify(plan);
+    let t = crate::telemetry::registry();
+    t.verifier_runs.inc();
+    if verdict.is_clean() {
+        t.verifier_clean.inc();
+    } else {
+        t.verifier_violations.add(verdict.violations.len() as u64);
+    }
+    verdict
+}
+
+// ---------------------------------------------------------------------------
+// 1. Dataflow: def-before-use, exactly-once-free, refcount conformance
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Undefined,
+    Live,
+    Freed,
+}
+
+fn dataflow(plan: &ExecPlan, out: &mut Vec<Violation>) {
+    let mut state = vec![State::Undefined; plan.values.len()];
+    for (id, v) in plan.values.iter().enumerate() {
+        if v.initial {
+            state[id] = State::Live;
+            if v.birth != 0 {
+                out.push(Violation {
+                    kind: ViolationKind::BirthMismatch,
+                    step: None,
+                    value: Some(id),
+                    detail: format!(
+                        "initial {} records birth {}, expected 0",
+                        label(plan, id),
+                        v.birth
+                    ),
+                });
+            }
+        }
+    }
+
+    for (i, step) in plan.steps.iter().enumerate() {
+        for &r in &step.reads {
+            match state.get(r) {
+                None | Some(State::Undefined) => out.push(Violation {
+                    kind: ViolationKind::UseBeforeDef,
+                    step: Some(i),
+                    value: Some(r),
+                    detail: format!("{} reads undefined {}", step.op, label(plan, r)),
+                }),
+                Some(State::Freed) => out.push(Violation {
+                    kind: ViolationKind::UseAfterFree,
+                    step: Some(i),
+                    value: Some(r),
+                    detail: format!("{} reads freed {}", step.op, label(plan, r)),
+                }),
+                Some(State::Live) => {}
+            }
+        }
+
+        for &w in step.writes.iter().chain(step.transient.iter()) {
+            match state.get(w).copied() {
+                None => out.push(Violation {
+                    kind: ViolationKind::BirthMismatch,
+                    step: Some(i),
+                    value: Some(w),
+                    detail: format!("{} writes {}", step.op, label(plan, w)),
+                }),
+                Some(State::Undefined) => {
+                    state[w] = State::Live;
+                    if plan.values[w].birth != i {
+                        out.push(Violation {
+                            kind: ViolationKind::BirthMismatch,
+                            step: Some(i),
+                            value: Some(w),
+                            detail: format!(
+                                "{} written at step {i} but records birth {}",
+                                label(plan, w),
+                                plan.values[w].birth
+                            ),
+                        });
+                    }
+                }
+                Some(State::Live) | Some(State::Freed) => out.push(Violation {
+                    kind: ViolationKind::DoubleDefine,
+                    step: Some(i),
+                    value: Some(w),
+                    detail: format!("{} redefines {}", step.op, label(plan, w)),
+                }),
+            }
+        }
+
+        for &fid in &step.frees {
+            match state.get(fid).copied() {
+                None | Some(State::Undefined) => out.push(Violation {
+                    kind: ViolationKind::FreeWithoutDef,
+                    step: Some(i),
+                    value: Some(fid),
+                    detail: format!("{} frees undefined {}", step.op, label(plan, fid)),
+                }),
+                Some(State::Freed) => out.push(Violation {
+                    kind: ViolationKind::DoubleFree,
+                    step: Some(i),
+                    value: Some(fid),
+                    detail: format!("{} frees {} a second time", step.op, label(plan, fid)),
+                }),
+                Some(State::Live) => {
+                    state[fid] = State::Freed;
+                    if plan.values[fid].death != Some(i) {
+                        out.push(Violation {
+                            kind: ViolationKind::DeathMismatch,
+                            step: Some(i),
+                            value: Some(fid),
+                            detail: format!(
+                                "{} freed at step {i} but records death {:?}",
+                                label(plan, fid),
+                                plan.values[fid].death
+                            ),
+                        });
+                    }
+                    // Table-1 refcount discipline: a free is the freeing
+                    // step's *last read* of the value — except the pure
+                    // `drop a^ℓ` op and the step's own transient
+                    let sanctioned = step.transient == Some(fid)
+                        || matches!(step.op, Op::DropA(_))
+                        || step.reads.contains(&fid);
+                    if !sanctioned {
+                        out.push(Violation {
+                            kind: ViolationKind::FreeWithoutRead,
+                            step: Some(i),
+                            value: Some(fid),
+                            detail: format!(
+                                "{} frees {} without reading it",
+                                step.op,
+                                label(plan, fid)
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    for (id, v) in plan.values.iter().enumerate() {
+        match state[id] {
+            State::Undefined => out.push(Violation {
+                kind: ViolationKind::OrphanValue,
+                step: None,
+                value: Some(id),
+                detail: format!("{} is never written by any step", label(plan, id)),
+            }),
+            State::Live if v.death.is_some() => out.push(Violation {
+                kind: ViolationKind::MissingFree,
+                step: v.death,
+                value: Some(id),
+                detail: format!(
+                    "{} records death {:?} but no step frees it",
+                    label(plan, id),
+                    v.death
+                ),
+            }),
+            State::Live | State::Freed => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Arena geometry: slot fit + exact tiling of [0, arena_bytes)
+// ---------------------------------------------------------------------------
+
+fn geometry(plan: &ExecPlan, out: &mut Vec<Violation>) {
+    for (id, v) in plan.values.iter().enumerate() {
+        match plan.slots.get(v.slot) {
+            None => out.push(Violation {
+                kind: ViolationKind::SlotBounds,
+                step: None,
+                value: Some(id),
+                detail: format!(
+                    "{} references slot {} of {}",
+                    label(plan, id),
+                    v.slot,
+                    plan.slots.len()
+                ),
+            }),
+            Some(slot) if v.bytes > slot.bytes => out.push(Violation {
+                kind: ViolationKind::SlotBounds,
+                step: None,
+                value: Some(id),
+                detail: format!(
+                    "{} ({} B) exceeds slot {} ({} B)",
+                    label(plan, id),
+                    v.bytes,
+                    v.slot,
+                    slot.bytes
+                ),
+            }),
+            Some(_) => {}
+        }
+    }
+
+    let mut order: Vec<usize> = (0..plan.slots.len()).collect();
+    order.sort_by_key(|&s| plan.slots[s].offset);
+    let mut end = 0u64;
+    for &s in &order {
+        let slot = &plan.slots[s];
+        if slot.offset != end {
+            out.push(Violation {
+                kind: ViolationKind::ArenaTiling,
+                step: None,
+                value: None,
+                detail: format!(
+                    "slot {s} starts at offset {} where {} was expected ({})",
+                    slot.offset,
+                    end,
+                    if slot.offset < end { "overlap" } else { "gap" }
+                ),
+            });
+        }
+        end = end.max(slot.offset + slot.bytes);
+    }
+    if end != plan.arena_bytes {
+        out.push(Violation {
+            kind: ViolationKind::ArenaTiling,
+            step: None,
+            value: None,
+            detail: format!(
+                "slots cover [0, {end}) but the plan claims arena_bytes = {}",
+                plan.arena_bytes
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Lifetime ⊗ byte-range overlap
+// ---------------------------------------------------------------------------
+
+/// Inclusive lifetimes overlap unless one ends strictly before the other
+/// starts (frees release storage only *after* their step).
+fn lifetimes_overlap(a: (usize, usize), b: (usize, usize)) -> bool {
+    !(a.1 < b.0 || b.1 < a.0)
+}
+
+fn overlap(plan: &ExecPlan, out: &mut Vec<Violation>) {
+    // Values grouped by slot: same-slot values always share bytes, so a
+    // per-slot sweep over lifetime-sorted occupants finds temporal
+    // clashes in O(V log V) instead of O(V²).
+    let mut by_slot: Vec<Vec<ValueId>> = vec![Vec::new(); plan.slots.len()];
+    for (id, v) in plan.values.iter().enumerate() {
+        if v.slot < plan.slots.len() && v.bytes > 0 {
+            by_slot[v.slot].push(id);
+        }
+    }
+
+    for ids in &mut by_slot {
+        ids.sort_by_key(|&id| lifetime(plan, id).0);
+        let mut latest: Option<(usize, ValueId)> = None; // (end, id)
+        for &id in ids.iter() {
+            let (start, e) = lifetime(plan, id);
+            if let Some((prev_end, prev)) = latest {
+                if start <= prev_end {
+                    out.push(Violation {
+                        kind: ViolationKind::SlotOverlap,
+                        step: Some(start),
+                        value: Some(id),
+                        detail: format!(
+                            "{} and {} are both live at step {start} and share slot {}",
+                            label(plan, prev),
+                            label(plan, id),
+                            plan.values[id].slot
+                        ),
+                    });
+                }
+                if e > prev_end {
+                    latest = Some((e, id));
+                }
+            } else {
+                latest = Some((e, id));
+            }
+        }
+    }
+
+    // Cross-slot byte overlaps exist only when the tiling is broken; the
+    // slot pairs whose ranges intersect are few, so a pairwise pass over
+    // just those occupants is cheap.
+    for s1 in 0..plan.slots.len() {
+        for s2 in s1 + 1..plan.slots.len() {
+            let (a, b) = (&plan.slots[s1], &plan.slots[s2]);
+            if a.bytes == 0 || b.bytes == 0 {
+                continue;
+            }
+            if a.offset + a.bytes <= b.offset || b.offset + b.bytes <= a.offset {
+                continue;
+            }
+            for &v in &by_slot[s1] {
+                for &w in &by_slot[s2] {
+                    let (Some(rv), Some(rw)) = (byte_range(plan, v), byte_range(plan, w))
+                    else {
+                        continue;
+                    };
+                    if rv.1 <= rw.0 || rw.1 <= rv.0 {
+                        continue;
+                    }
+                    if lifetimes_overlap(lifetime(plan, v), lifetime(plan, w)) {
+                        out.push(Violation {
+                            kind: ViolationKind::SlotOverlap,
+                            step: None,
+                            value: Some(v),
+                            detail: format!(
+                                "{} (slot {s1}) and {} (slot {s2}) are live together \
+                                 over overlapping byte ranges [{}, {}) and [{}, {})",
+                                label(plan, v),
+                                label(plan, w),
+                                rv.0,
+                                rv.1,
+                                rw.0,
+                                rw.1
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Per-step read/write disjointness
+// ---------------------------------------------------------------------------
+
+fn read_write_disjoint(plan: &ExecPlan, out: &mut Vec<Violation>) {
+    for (i, step) in plan.steps.iter().enumerate() {
+        for &r in &step.reads {
+            for &w in step.writes.iter().chain(step.transient.iter()) {
+                let (Some(rr), Some(rw)) = (byte_range(plan, r), byte_range(plan, w)) else {
+                    continue;
+                };
+                if rr.1 <= rw.0 || rw.1 <= rr.0 {
+                    continue;
+                }
+                out.push(Violation {
+                    kind: ViolationKind::ReadWriteOverlap,
+                    step: Some(i),
+                    value: Some(r),
+                    detail: format!(
+                        "{} reads {} over bytes [{}, {}) while writing {} over [{}, {})",
+                        step.op,
+                        label(plan, r),
+                        rr.0,
+                        rr.1,
+                        label(plan, w),
+                        rw.0,
+                        rw.1
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Independent peak recomputation
+// ---------------------------------------------------------------------------
+
+/// Re-derive the Table-1 peak from the step tables alone, mirroring the
+/// ledger's charge order without sharing any code with it:
+///
+/// * initial residency is `Σ` initial value bytes;
+/// * a forward's high-water candidate is `current + writes + transient`
+///   (outputs and the transient coexist with every input — frees land
+///   after);
+/// * a backward's is `max(current + transient, current − frees + writes)`
+///   (the transient peaks first, then δ stores land after the frees; a
+///   graph backward's several δ stores grow monotonically toward the
+///   post-step residency, so the final store dominates);
+/// * `drop a^ℓ` only releases.
+///
+/// Signed 128-bit arithmetic keeps the sweep total on mutated plans
+/// whose frees exceed their residency.
+fn recompute_peak(plan: &ExecPlan, out: &mut Vec<Violation>) -> (u64, Option<usize>) {
+    let bytes =
+        |id: ValueId| plan.values.get(id).map(|v| v.bytes as i128).unwrap_or(0);
+    let mut cur: i128 =
+        plan.values.iter().filter(|v| v.initial).map(|v| v.bytes as i128).sum();
+    let mut peak = cur;
+    let mut peak_step: Option<usize> = None;
+
+    for (i, step) in plan.steps.iter().enumerate() {
+        let w: i128 = step.writes.iter().map(|&id| bytes(id)).sum();
+        let t: i128 = step.transient.map(bytes).unwrap_or(0);
+        let f: i128 = step
+            .frees
+            .iter()
+            .filter(|&&id| step.transient != Some(id))
+            .map(|&id| bytes(id))
+            .sum();
+        let candidate = match step.op {
+            Op::FwdNoSave(_) | Op::FwdCk(_) | Op::FwdAll(_) => Some(cur + w + t),
+            Op::Bwd(_) => Some((cur + t).max(cur - f + w)),
+            Op::DropA(_) => None,
+        };
+        if let Some(c) = candidate {
+            if c > peak {
+                peak = c;
+                peak_step = Some(i);
+            }
+        }
+        cur += w - f;
+    }
+
+    let recomputed = u64::try_from(peak.max(0)).unwrap_or(u64::MAX);
+    if recomputed != plan.peak_bytes {
+        out.push(Violation {
+            kind: ViolationKind::PeakMismatch,
+            step: peak_step,
+            value: None,
+            detail: format!(
+                "plan claims peak_bytes = {} but the independent sweep finds {}",
+                plan.peak_bytes, recomputed
+            ),
+        });
+    }
+    if plan.arena_bytes < recomputed {
+        out.push(Violation {
+            kind: ViolationKind::ArenaBelowPeak,
+            step: peak_step,
+            value: None,
+            detail: format!(
+                "arena_bytes = {} cannot cover the recomputed peak {}",
+                plan.arena_bytes, recomputed
+            ),
+        });
+    }
+    (recomputed, peak_step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::{Chain, Stage};
+    use crate::plan::lower;
+    use crate::solver::{periodic_schedule, solve, store_all_schedule, Mode, Schedule, StrategyKind};
+
+    fn toy(n: usize) -> Chain {
+        let mut stages: Vec<Stage> = (1..=n)
+            .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300).with_overheads(16, 24))
+            .collect();
+        stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+        Chain::new("toy", stages, 100)
+    }
+
+    #[test]
+    fn clean_plans_verify_clean_with_byte_exact_peak() {
+        let c = toy(6);
+        let mut schedules = vec![store_all_schedule(&c), periodic_schedule(&c, 3)];
+        let hi = c.store_all_memory() + c.wa0;
+        for m in [hi / 2, hi] {
+            if let Some(s) = solve(&c, m, 200, Mode::Full) {
+                schedules.push(s);
+            }
+        }
+        for sched in &schedules {
+            let plan = lower(&c, sched).unwrap();
+            let verdict = verify(&plan);
+            assert!(verdict.is_clean(), "{}: {verdict}", sched.strategy);
+            assert_eq!(verdict.recomputed_peak, plan.peak_bytes, "{}", sched.strategy);
+            assert_eq!(verdict.steps_checked, plan.op_count());
+        }
+    }
+
+    #[test]
+    fn drop_a_schedules_verify_clean() {
+        let c = toy(2);
+        let ops = vec![
+            Op::FwdCk(1),
+            Op::DropA(1),
+            Op::FwdAll(1),
+            Op::FwdAll(2),
+            Op::FwdAll(3),
+            Op::Bwd(3),
+            Op::Bwd(2),
+            Op::Bwd(1),
+        ];
+        let sched = Schedule::new(ops, StrategyKind::Optimal, 0.0);
+        let plan = lower(&c, &sched).unwrap();
+        let verdict = verify(&plan);
+        assert!(verdict.is_clean(), "{verdict}");
+    }
+
+    #[test]
+    fn a_dropped_free_is_flagged_missing_free() {
+        let c = toy(4);
+        let mut plan = lower(&c, &store_all_schedule(&c)).unwrap();
+        // drop the last backward's first free — leaves a dead value alive
+        let victim = plan
+            .steps
+            .iter()
+            .rposition(|s| !s.frees.is_empty())
+            .expect("some step frees");
+        plan.steps[victim].frees.remove(0);
+        let verdict = verify(&plan);
+        assert!(verdict.has(ViolationKind::MissingFree), "{verdict}");
+    }
+
+    #[test]
+    fn verdict_display_names_values_in_paper_notation() {
+        let c = toy(3);
+        let mut plan = lower(&c, &store_all_schedule(&c)).unwrap();
+        let bwd = plan.steps.iter().position(|s| matches!(s.op, Op::Bwd(_))).unwrap();
+        let freed = plan.steps[bwd].frees[0];
+        plan.steps[bwd].frees.push(freed); // same step, second free
+        let verdict = verify(&plan);
+        assert!(verdict.has(ViolationKind::DoubleFree), "{verdict}");
+        let text = verdict.to_string();
+        assert!(text.contains("double-free"), "{text}");
+        // the freed item is named in the paper's alphabet
+        let name = plan.values[freed].item.label();
+        assert!(text.contains(&name), "{text} lacks {name}");
+    }
+
+    #[test]
+    fn verifier_never_panics_on_garbage_ids() {
+        let c = toy(3);
+        let mut plan = lower(&c, &store_all_schedule(&c)).unwrap();
+        let huge = plan.values.len() + 100;
+        plan.steps[0].reads.push(huge);
+        plan.steps[0].frees.push(huge);
+        plan.values[0].slot = plan.slots.len() + 7;
+        let verdict = verify(&plan);
+        assert!(verdict.has(ViolationKind::UseBeforeDef));
+        assert!(verdict.has(ViolationKind::FreeWithoutDef));
+        assert!(verdict.has(ViolationKind::SlotBounds));
+    }
+}

@@ -178,8 +178,17 @@ impl Plan {
     /// chain. An invalid sequence is an [`ErrorKind::Internal`] error,
     /// like [`Plan::verify`].
     pub fn lower_schedule(&self, schedule: &Schedule) -> Result<ExecPlan> {
-        crate::plan::lower(&self.chain, schedule)
-            .map_err(|e| Error::internal(format!("schedule does not lower: {e}")))
+        let plan = crate::plan::lower(&self.chain, schedule)
+            .map_err(|e| Error::internal(format!("schedule does not lower: {e}")))?;
+        // In debug builds every lowered plan passes through the static
+        // verifier (analysis/verify.rs) — an independent re-proof of
+        // liveness, slot disjointness, and the claimed peak.
+        #[cfg(debug_assertions)]
+        {
+            let verdict = crate::analysis::verify_counted(&plan);
+            debug_assert!(verdict.is_clean(), "lowered plan failed static verification: {verdict}");
+        }
+        Ok(plan)
     }
 
     /// Plan → really execute: replay this plan's optimal schedule against
@@ -302,7 +311,7 @@ pub fn execute_schedule<B: Backend>(
         }
         last = Some(res);
     }
-    let res = last.expect("at least one replay ran");
+    let res = last.ok_or_else(|| Error::internal("no replay ran"))?;
     let elapsed_s = median(&mut times);
     let batch = rt.manifest.input_shape[0] as f64;
     let drift = opts.chain.as_ref().and_then(|chain| {

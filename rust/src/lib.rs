@@ -57,6 +57,13 @@
 //!   timings), the span tracer behind `--trace FILE` (Chrome
 //!   trace-event JSON), and the predicted-vs-measured
 //!   [`telemetry::DriftReport`].
+//! * [`analysis`] — static analysis: [`analysis::verify`] independently
+//!   re-proves a lowered [`plan::ExecPlan`] safe (def-before-use,
+//!   exactly-once-free, no arena-byte sharing between live values,
+//!   read/write disjointness, and a byte-exact independent peak
+//!   recomputation) with algorithms disjoint from the lowering that
+//!   built it; [`analysis::lint`] is the rule-driven architectural lint
+//!   engine ratcheted by the allowlists under `rust/lints/`.
 //! * [`api`] — **the public facade** over all of the above: [`api::ChainSpec`]
 //!   (one description of "which chain"), [`api::MemBytes`] /
 //!   [`api::SlotCount`] (typed units with the single human-suffix
@@ -66,6 +73,7 @@
 //!   each. The CLI, the service routes, the figure harness, and the
 //!   benches all go through it — start here.
 
+pub mod analysis;
 pub mod api;
 pub mod backend;
 pub mod chain;

@@ -51,6 +51,7 @@ chainckpt — optimal checkpointing for heterogeneous chains (RR-9302)
 USAGE:
   chainckpt solve    [CHAIN SPEC] --memory 4G
                      [--slots 500] [--strategy optimal|revolve] [--show-ops]
+                     [--verify-plan]
   chainckpt simulate [CHAIN SPEC]
   chainckpt estimate [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--reps 5] [--warmup 2]
@@ -58,10 +59,10 @@ USAGE:
                      [--memory 8M | --memory-frac 0.75] [--steps 100] [--lr 0.05]
                      [--strategy optimal|sequential|revolve|pytorch]
                      [--segments 4] [--batches 8] [--log-every 10] [--out loss.csv]
-                     [--lowered | --legacy] [--trace trace.json]
+                     [--lowered | --legacy] [--trace trace.json] [--verify-plan]
   chainckpt compare  [--backend native|pjrt] [--preset default] [--artifacts DIR]
                      [--points 6] [--out compare.csv] [--lowered | --legacy]
-                     [--trace trace.json]
+                     [--trace trace.json] [--verify-plan]
   chainckpt figures  [--fig 3|all] [--out results]
   chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
                      [--slots 500] [--queue 64]
@@ -92,6 +93,13 @@ allocations. --legacy forces the old per-op replay (the parity
 reference); --lowered states the default explicitly. Lowered execution
 needs the native engine's in-place kernels — on pjrt both flags fall
 back to the legacy replay.
+
+--verify-plan (solve/train/compare) lowers the chosen schedule(s) and
+runs the static plan verifier over the result: an independent re-proof
+of def-before-use, exactly-once frees, arena-slot disjointness, and a
+byte-exact peak recomputation (see the `analysis` module). A rejected
+plan aborts with exit 1 and prints every violation in the paper's
+notation.
 
 Observability: --trace FILE (train/compare) records every executed op
 as a span — (op kind, stage, start, end, bytes) — into a bounded ring
@@ -244,6 +252,21 @@ fn solve_mode(args: &Args) -> Result<Mode> {
     }
 }
 
+/// `--verify-plan`: run the static verifier (analysis/verify.rs) over a
+/// lowered plan and print the one-line verdict. A rejected plan is an
+/// internal error (exit 1) with every violation listed.
+fn print_verdict(plan: &chainckpt::plan::ExecPlan) -> Result<()> {
+    let verdict = chainckpt::analysis::verify_counted(plan);
+    println!("static verify   : {verdict}");
+    if !verdict.is_clean() {
+        for v in &verdict.violations {
+            println!("  {v}");
+        }
+        return Err(Error::internal("lowered plan failed static verification"));
+    }
+    Ok(())
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     let spec = chain_spec(args)?;
     let memory = mem_flag(args, "memory")?.unwrap_or(MemBytes::new(4 << 30));
@@ -262,6 +285,10 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     let sched = plan.schedule()?; // ErrorKind::InfeasibleBudget → exit 3
     describe(plan.chain(), &sched, Some(memory), "ms")?;
+    if args.has("verify-plan") {
+        let lowered = plan.lower_schedule(&sched)?;
+        print_verdict(&lowered)?;
+    }
     if args.has("show-ops") {
         println!("{}", sched.compact());
     }
@@ -466,6 +493,11 @@ fn train_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     );
     let sched = pick_schedule(args, &chain, memory)?;
     describe(&chain, &sched, Some(memory), "µs")?;
+    if args.has("verify-plan") {
+        let plan = chainckpt::plan::lower(&chain, &sched)
+            .map_err(|e| Error::internal(format!("schedule does not lower: {e}")))?;
+        print_verdict(&plan)?;
+    }
     let lowered = lowered_flag::<B>(args)?;
 
     let steps = usize_flag(args, "steps", 100)?;
@@ -553,7 +585,13 @@ fn compare_on<B: Backend>(rt: &Runtime<B>, args: &Args) -> Result<()> {
     // every row — baselines and DP strategies alike — is one
     // api::execute_schedule measurement (fresh executor, warmup + timed
     // median), the same path Plan::execute and the executor bench use
+    let verify_plan = args.has("verify-plan");
     let mut run_measured = |name: String, param: String, sched: &Schedule| -> Result<()> {
+        if verify_plan {
+            let plan = chainckpt::plan::lower(&chain, sched)
+                .map_err(|e| Error::internal(format!("schedule does not lower: {e}")))?;
+            print_verdict(&plan)?;
+        }
         let rep = api::execute_schedule(rt, sched, &data, &opts)?;
         println!(
             "{:<12} {:>12} peak {:>12} {:>8.1} ms/iter {:>8.2} im/s",

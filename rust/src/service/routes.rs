@@ -188,7 +188,8 @@ fn sweep(body: &Value, state: &ServiceState) -> Result<Value> {
     // Reconstruction is serial on purpose — `Plan::sweep`'s scoped
     // threads would oversubscribe the CPU when several pool workers run
     // sweeps at once, and each point is only O(L) anyway (≤ MAX_BUDGETS).
-    let top = *budgets.iter().max().expect("budgets validated non-empty");
+    let top =
+        *budgets.iter().max().ok_or_else(|| Error::internal("budgets validated non-empty"))?;
     let plan = PlanRequest::new(spec, top).slots(slots).mode(mode).plan()?;
     let chain = plan.chain();
     let schedules: Vec<_> = budgets.iter().map(|&m| plan.schedule_at(m)).collect();
@@ -287,6 +288,9 @@ fn simulate_ops(body: &Value) -> Result<Value> {
 /// exactly like `/solve`.
 fn lower(body: &Value, state: &ServiceState) -> Result<Value> {
     let spec = ChainSpec::from_json(body.get("chain").context("missing 'chain'")?)?;
+    // `"verify": true` additionally runs the static plan verifier
+    // (analysis/verify.rs) over the lowered plan and attaches its verdict.
+    let run_verifier = matches!(body.get("verify"), Some(Value::Bool(true)));
     let mut out = BTreeMap::new();
 
     if body.get("ops").is_some() {
@@ -313,6 +317,10 @@ fn lower(body: &Value, state: &ServiceState) -> Result<Value> {
                     );
                 }
                 out.insert("plan".to_string(), wire::plan_to_json(&plan));
+                if run_verifier {
+                    let verdict = crate::analysis::verify_counted(&plan);
+                    out.insert("verdict".to_string(), wire::verdict_to_json(&verdict));
+                }
             }
             Err(e) => {
                 out.insert("valid".to_string(), Value::Bool(false));
@@ -344,6 +352,10 @@ fn lower(body: &Value, state: &ServiceState) -> Result<Value> {
             let lowered = plan.lower_schedule(&sched)?;
             out.insert("schedule".to_string(), wire::schedule_to_json(&sched));
             out.insert("plan".to_string(), wire::plan_to_json(&lowered));
+            if run_verifier {
+                let verdict = crate::analysis::verify_counted(&lowered);
+                out.insert("verdict".to_string(), wire::verdict_to_json(&verdict));
+            }
         }
     }
     Ok(Value::Obj(out))

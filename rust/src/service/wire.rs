@@ -212,6 +212,30 @@ pub fn plan_to_json(plan: &ExecPlan) -> Value {
     ])
 }
 
+/// Serialize a static-verifier verdict (`POST /lower` with
+/// `"verify": true`).
+pub fn verdict_to_json(verdict: &crate::analysis::Verdict) -> Value {
+    let violations: Vec<Value> = verdict
+        .violations
+        .iter()
+        .map(|v| {
+            obj([
+                ("kind", Value::from(v.kind.label())),
+                ("step", v.step.map(Value::from).unwrap_or(Value::Null)),
+                ("value", v.value.map(Value::from).unwrap_or(Value::Null)),
+                ("detail", Value::from(v.detail.as_str())),
+            ])
+        })
+        .collect();
+    obj([
+        ("clean", Value::Bool(verdict.is_clean())),
+        ("recomputed_peak", Value::from(verdict.recomputed_peak)),
+        ("steps_checked", Value::from(verdict.steps_checked)),
+        ("values_checked", Value::from(verdict.values_checked)),
+        ("violations", Value::Arr(violations)),
+    ])
+}
+
 /// Serialize a simulator verdict.
 pub fn report_to_json(rep: &SimReport) -> Value {
     let mut obj = BTreeMap::new();

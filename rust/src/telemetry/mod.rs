@@ -315,6 +315,10 @@ pub struct Registry {
     pub service_responses_4xx: Counter,
     pub service_responses_5xx: Counter,
     pub service_latency_us: Histogram,
+    // --- plan verifier (analysis/verify.rs) ---
+    pub verifier_runs: Counter,
+    pub verifier_clean: Counter,
+    pub verifier_violations: Counter,
 }
 
 impl Registry {
@@ -343,6 +347,9 @@ impl Registry {
             service_responses_4xx: Counter::new(),
             service_responses_5xx: Counter::new(),
             service_latency_us: Histogram::new(LATENCY_US_BOUNDS),
+            verifier_runs: Counter::new(),
+            verifier_clean: Counter::new(),
+            verifier_violations: Counter::new(),
         }
     }
 
@@ -457,6 +464,14 @@ impl Registry {
                             ("5xx", Value::from(self.service_responses_5xx.get())),
                         ]),
                     ),
+                ]),
+            ),
+            (
+                "verifier",
+                obj([
+                    ("runs", Value::from(self.verifier_runs.get())),
+                    ("clean", Value::from(self.verifier_clean.get())),
+                    ("violations", Value::from(self.verifier_violations.get())),
                 ]),
             ),
         ])
@@ -618,6 +633,24 @@ impl Registry {
             "chainckpt_service_latency_us",
             "Request latency, microseconds.",
             &self.service_latency_us,
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_verifier_runs_total",
+            "Static plan verifications performed.",
+            self.verifier_runs.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_verifier_clean_total",
+            "Verifications that returned a clean verdict.",
+            self.verifier_clean.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_verifier_violations_total",
+            "Violations reported across all verifications.",
+            self.verifier_violations.get(),
         );
         out
     }

@@ -144,45 +144,7 @@ fn inline_source_is_byte_identical_across_api_cli_and_service() {
     assert_eq!(via_api, via_service, "api vs /solve");
 }
 
-// ---------------------------------------------------------------------------
-// Facade ownership: the acceptance criterion "no module outside
-// rust/src/api/ constructs a Planner or parses a memory suffix directly"
-// ---------------------------------------------------------------------------
-
-fn rust_sources(dir: &std::path::Path, out: &mut Vec<std::path::PathBuf>) {
-    for entry in std::fs::read_dir(dir).expect("readable source tree") {
-        let path = entry.expect("dir entry").path();
-        if path.is_dir() {
-            rust_sources(&path, out);
-        } else if path.extension().is_some_and(|e| e == "rs") {
-            out.push(path);
-        }
-    }
-}
-
-#[test]
-fn facade_owns_planner_construction_and_suffix_parsing() {
-    let src = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
-    let mut files = Vec::new();
-    rust_sources(&src, &mut files);
-    assert!(files.len() > 30, "source scan found only {} files", files.len());
-    for path in files {
-        let rel = path.strip_prefix(&src).unwrap().to_string_lossy().replace('\\', "/");
-        let text = std::fs::read_to_string(&path).unwrap();
-        // the solver layer owns Planner; the facade wraps it; nobody else
-        // builds one directly
-        if !(rel.starts_with("api/") || rel.starts_with("solver/")) {
-            assert!(
-                !text.contains("Planner::new"),
-                "{rel} constructs a Planner directly — route it through api::PlanRequest"
-            );
-        }
-        // the one suffix parser is api::MemBytes::parse
-        if !rel.starts_with("api/") {
-            assert!(
-                !text.contains("parse_size") && !text.contains("fn parse_suffix"),
-                "{rel} parses memory suffixes — route it through api::MemBytes::parse"
-            );
-        }
-    }
-}
+// Facade ownership ("no module outside rust/src/api/ constructs a
+// Planner or parses a memory suffix directly") is now enforced by the
+// `facade-planner` / `facade-suffix` rules of the architectural lint
+// engine — see rust/tests/lints.rs and rust/src/analysis/lint.rs.

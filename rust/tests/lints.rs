@@ -1,0 +1,67 @@
+//! Architectural lints over `rust/src/**`, driven by the rule engine in
+//! `analysis/lint.rs` and ratcheted by the allowlists under `rust/lints/`.
+//!
+//! One test, one verdict: every rule's findings must be covered by its
+//! allowlist (`rust/lints/<rule>.allow`, `path count` lines). A *new*
+//! violation — or one more occurrence in an already-listed file — fails
+//! here with the offending line quoted. Burn-down (fewer findings than
+//! allowed) and stale entries (allowlisted files with zero findings) are
+//! printed as notes so the allowlists can shrink, but never fail.
+//!
+//! This suite replaces the hand-rolled source walker that used to live in
+//! `tests/api_surface.rs`: the facade-ownership scan is now the
+//! `facade-planner` / `facade-suffix` rules.
+
+use std::path::Path;
+
+use chainckpt::analysis::lint::{run, LintConfig, RULES};
+
+fn config() -> LintConfig {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    LintConfig {
+        src_root: root.join("rust/src"),
+        allow_root: root.join("rust/lints"),
+    }
+}
+
+#[test]
+fn architectural_lints_hold_under_the_allowlist_ratchet() {
+    let report = run(&config()).expect("lint scan reads rust/src");
+
+    // the scan really walked the tree (the old api_surface walker
+    // asserted the same floor before it was migrated here)
+    assert!(
+        report.files_scanned > 30,
+        "source scan found only {} files — wrong src_root?",
+        report.files_scanned
+    );
+
+    // every rule ran
+    let ran: Vec<&str> = report.outcomes.iter().map(|o| o.rule).collect();
+    assert_eq!(ran, RULES.to_vec(), "rule set drifted from lint::RULES");
+
+    // burn-down / stale-entry notes are informational: print them so a
+    // shrinking allowlist is visible in the test log
+    for note in report.notes() {
+        println!("note: {note}");
+    }
+
+    let failures = report.failures();
+    assert!(
+        failures.is_empty(),
+        "architectural lint failures (fix the code or, with justification, \
+         extend rust/lints/<rule>.allow):\n  {}",
+        failures.join("\n  ")
+    );
+}
+
+#[test]
+fn allowlists_exist_for_every_rule() {
+    // the ratchet only bites if the allowlist files stay checked in; a
+    // deleted file silently resets a rule to "empty allowlist"
+    let cfg = config();
+    for rule in RULES {
+        let path = cfg.allow_root.join(format!("{rule}.allow"));
+        assert!(path.is_file(), "missing allowlist {}", path.display());
+    }
+}

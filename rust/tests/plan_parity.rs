@@ -77,6 +77,14 @@ fn plan_peak_matches_simulator_for_every_preset_strategy_and_budget() {
                 plan.peak_bytes
             );
             assert_eq!(plan.op_count(), sched.ops.len(), "{preset}/{name}");
+            // the static verifier independently re-proves the plan safe,
+            // with a byte-exact peak of its own (analysis/verify.rs)
+            let verdict = chainckpt::analysis::verify(&plan);
+            assert!(verdict.is_clean(), "{preset}/{name}: {verdict}");
+            assert_eq!(
+                verdict.recomputed_peak, plan.peak_bytes,
+                "{preset}/{name}: verifier peak must equal the plan's byte-for-byte"
+            );
         }
     }
 }
@@ -200,6 +208,13 @@ fn graph_preset_schedules_share_one_peak_per_accounting() {
                 "{name}@{tag}: lowered graph plan vs multi-consumer replay"
             );
             assert!(rep.graph_peak <= sim.peak_bytes, "{name}@{tag}");
+            // both lowerings pass the static verifier (the graph plan is
+            // exactly the shape whose PR-6 double-free nothing else saw)
+            for (what, plan) in [("chain", &chain_plan), ("graph", &graph_plan)] {
+                let verdict = chainckpt::analysis::verify(plan);
+                assert!(verdict.is_clean(), "{name}@{tag} {what} plan: {verdict}");
+                assert_eq!(verdict.recomputed_peak, plan.peak_bytes, "{name}@{tag} {what}");
+            }
         }
         assert!(solved >= 1, "{name}: store-all budget must be feasible");
     }

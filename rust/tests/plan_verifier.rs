@@ -1,0 +1,236 @@
+//! Mutation harness for the static plan verifier (`analysis/verify.rs`).
+//!
+//! The verifier's acceptance contract has two sides. Soundness lives in
+//! `tests/plan_parity.rs` (every plan the lowering produces across the
+//! preset × strategy × budget matrix verifies clean, peak byte-exact).
+//! This suite is the *completeness* side: seed a known corruption class
+//! into an otherwise-clean plan and require the verdict to name it.
+//! Every mutation class maps to one primary [`ViolationKind`]; extra
+//! secondary findings are allowed (a corrupted table rarely breaks just
+//! one invariant), a missing primary finding fails.
+//!
+//! The final test replays the shape of the PR-6 graph-lowering bug — a
+//! predecessor tape freed by two different backwards — against a lowered
+//! diamond-DAG plan, the regression that motivated an independent
+//! checker in the first place.
+
+use chainckpt::analysis::{verify, Verdict, ViolationKind};
+use chainckpt::chain::{Chain, Stage};
+use chainckpt::graph::{GraphSpec, Node};
+use chainckpt::plan::{lower, lower_graph, ExecPlan};
+use chainckpt::solver::{store_all_schedule, Mode, Op};
+
+fn toy(n: usize) -> Chain {
+    let mut stages: Vec<Stage> = (1..=n)
+        .map(|i| Stage::new(format!("s{i}"), 1.0, 2.0, 100, 300).with_overheads(16, 24))
+        .collect();
+    stages.push(Stage::new("loss", 0.1, 0.1, 4, 4));
+    Chain::new("toy", stages, 100)
+}
+
+/// A clean lowered plan to corrupt: the toy chain under the optimal DP
+/// schedule (checkpointing, drops, recomputation — richer step structure
+/// than store-all), falling back to store-all if the budget solve fails.
+fn base_plan() -> ExecPlan {
+    let c = toy(6);
+    let top = c.store_all_memory() + c.wa0;
+    let sched = chainckpt::solver::solve(&c, top * 2 / 3, 200, Mode::Full)
+        .unwrap_or_else(|| store_all_schedule(&c));
+    let plan = lower(&c, &sched).unwrap();
+    let verdict = verify(&plan);
+    assert!(verdict.is_clean(), "base plan must start clean: {verdict}");
+    plan
+}
+
+/// Apply `mutate` to a fresh clean plan and require `kind` among the
+/// verdict's findings.
+fn expect_caught(kind: ViolationKind, mutate: impl FnOnce(&mut ExecPlan)) -> Verdict {
+    let mut plan = base_plan();
+    mutate(&mut plan);
+    let verdict = verify(&plan);
+    assert!(
+        verdict.has(kind),
+        "mutation should be caught as {kind:?}; verdict: {verdict}"
+    );
+    verdict
+}
+
+/// First backward step index and one non-transient value it frees.
+fn first_bwd_free(plan: &ExecPlan) -> (usize, usize) {
+    let step = plan
+        .steps
+        .iter()
+        .position(|s| matches!(s.op, Op::Bwd(_)) && !s.frees.is_empty())
+        .expect("a backward frees something");
+    let v = plan.steps[step]
+        .frees
+        .iter()
+        .copied()
+        .find(|&f| plan.steps[step].transient != Some(f))
+        .expect("a non-transient free");
+    (step, v)
+}
+
+// ---------------------------------------------------------------------------
+// Mutation classes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dropped_free_is_caught_as_missing_free() {
+    expect_caught(ViolationKind::MissingFree, |plan| {
+        let (step, v) = first_bwd_free(plan);
+        plan.steps[step].frees.retain(|&f| f != v);
+    });
+}
+
+#[test]
+fn overlapping_slot_offsets_are_caught_as_slot_overlap() {
+    // park the δ-seed's slot on top of the input's: both values are
+    // initial, so they are simultaneously live from before step 0
+    expect_caught(ViolationKind::SlotOverlap, |plan| {
+        let input_slot = plan.values[plan.input].slot;
+        let seed_slot = plan.values[plan.seed].slot;
+        assert_ne!(input_slot, seed_slot, "distinct slots in a clean plan");
+        plan.slots[seed_slot].offset = plan.slots[input_slot].offset;
+    });
+}
+
+#[test]
+fn read_of_a_freed_value_is_caught_as_use_after_free() {
+    expect_caught(ViolationKind::UseAfterFree, |plan| {
+        let (step, dead) = first_bwd_free(plan);
+        // a later backward now reads storage released many steps ago
+        let later = plan
+            .steps
+            .iter()
+            .rposition(|s| matches!(s.op, Op::Bwd(_)))
+            .expect("a final backward");
+        assert!(later > step, "the first freeing backward is not the last");
+        plan.steps[later].reads[0] = dead;
+    });
+}
+
+#[test]
+fn shrunk_value_bytes_are_caught_as_peak_mismatch() {
+    // a^0 is resident at every high-water candidate, so shaving one byte
+    // off it moves the true peak while the plan still claims the old one
+    let verdict = expect_caught(ViolationKind::PeakMismatch, |plan| {
+        plan.values[plan.input].bytes -= 1;
+    });
+    let claimed = base_plan().peak_bytes;
+    assert_eq!(verdict.recomputed_peak, claimed - 1, "off by exactly the shaved byte");
+}
+
+#[test]
+fn reordered_steps_are_caught_as_use_before_def() {
+    expect_caught(ViolationKind::UseBeforeDef, |plan| {
+        // swap a producer with the consumer right behind it: the
+        // consumer now reads a value nothing has written yet
+        let i = (1..plan.steps.len())
+            .find(|&i| {
+                plan.steps[i]
+                    .reads
+                    .iter()
+                    .any(|r| plan.steps[i - 1].writes.contains(r))
+            })
+            .expect("a consumer directly behind its producer");
+        plan.steps.swap(i - 1, i);
+    });
+}
+
+#[test]
+fn bumped_death_is_caught_as_death_mismatch() {
+    expect_caught(ViolationKind::DeathMismatch, |plan| {
+        let (_, v) = first_bwd_free(plan);
+        plan.values[v].death = plan.values[v].death.map(|d| d + 1);
+    });
+}
+
+#[test]
+fn duplicated_free_is_caught_as_double_free() {
+    expect_caught(ViolationKind::DoubleFree, |plan| {
+        let (step, v) = first_bwd_free(plan);
+        let later = plan
+            .steps
+            .iter()
+            .rposition(|s| matches!(s.op, Op::Bwd(_)))
+            .expect("a final backward");
+        assert!(later > step);
+        plan.steps[later].frees.push(v);
+    });
+}
+
+#[test]
+fn frees_outside_the_reader_are_caught_as_free_without_read() {
+    expect_caught(ViolationKind::FreeWithoutRead, |plan| {
+        let (step, v) = first_bwd_free(plan);
+        // move the free onto an earlier op that never reads v (while v
+        // is already live, so the only new finding class is the broken
+        // refcount discipline)
+        let born = if plan.values[v].initial { 0 } else { plan.values[v].birth };
+        let earlier = (born..step)
+            .rev()
+            .find(|&i| {
+                !plan.steps[i].reads.contains(&v) && !matches!(plan.steps[i].op, Op::DropA(_))
+            })
+            .expect("an earlier non-reader");
+        plan.steps[step].frees.retain(|&f| f != v);
+        plan.steps[earlier].frees.push(v);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// The PR-6 regression, replayed
+// ---------------------------------------------------------------------------
+
+fn diamond() -> GraphSpec {
+    let nd = |name: &str, wa: u64, wabar: u64| Node::new(name, 1.0, 2.0, wa, wabar);
+    GraphSpec::new(
+        "diamond",
+        vec![nd("a", 100, 120), nd("b", 80, 90), nd("c", 60, 60), nd("loss", 4, 4)],
+        vec![(0, 1), (0, 2), (1, 2), (2, 3)],
+        32,
+    )
+    .unwrap()
+}
+
+#[test]
+fn pr6_diamond_double_freed_predecessor_tape_is_rejected() {
+    // PR 6 shipped a graph lowering in which a multi-consumer
+    // predecessor tape was freed by *two* backwards — the resulting plan
+    // was self-consistent enough that peak parity never noticed. Rebuild
+    // that corruption on today's (fixed) lowering and require the
+    // verifier to reject it.
+    let g = diamond();
+    let sched = store_all_schedule(&g.to_chain());
+    let mut plan = lower_graph(&g, &sched).unwrap();
+    let verdict = verify(&plan);
+    assert!(verdict.is_clean(), "fixed graph lowering starts clean: {verdict}");
+
+    // the tape a later backward frees, freed once more by an earlier
+    // backward it was already live at
+    let earlier_bwd = plan
+        .steps
+        .iter()
+        .position(|s| matches!(s.op, Op::Bwd(_)))
+        .expect("a first backward");
+    let last_free_step = plan
+        .steps
+        .iter()
+        .rposition(|s| matches!(s.op, Op::Bwd(_)) && !s.frees.is_empty())
+        .expect("a freeing backward");
+    assert!(earlier_bwd < last_free_step, "diamond has >1 backward");
+    let tape = plan.steps[last_free_step]
+        .frees
+        .iter()
+        .copied()
+        .find(|&f| {
+            plan.steps[last_free_step].transient != Some(f)
+                && (plan.values[f].initial || plan.values[f].birth < earlier_bwd)
+        })
+        .expect("a tape live across both backwards");
+    plan.steps[earlier_bwd].frees.push(tape);
+
+    let verdict = verify(&plan);
+    assert!(verdict.has(ViolationKind::DoubleFree), "{verdict}");
+}
