@@ -1,7 +1,16 @@
-//! Planning-service loopback load benchmark: N client threads × M
-//! requests against an in-process `serve` daemon on an ephemeral port,
-//! measuring end-to-end request latency (p50/p99), throughput, and the
-//! planner table-cache hit rate that makes warm traffic cheap.
+//! Planning-service loopback load benchmark, in two phases:
+//!
+//! 1. **Cold-start vs warm-start** — with a `table_dir` configured, the
+//!    first answer for a chain costs a DP fill on a cold store but only
+//!    a file load on a warm one. Both times are measured
+//!    (`cold_start_us`, `warm_start_us`) and warm must beat cold.
+//! 2. **Concurrent keep-alive scale** — 1024 simultaneously-open
+//!    keep-alive connections (128× the 8 the old thread-per-connection
+//!    bench could field) driven round-robin by a small fixed set of
+//!    client threads, measuring end-to-end latency (p50/p99),
+//!    throughput, and the cache hit rate. The process thread count is
+//!    read from `/proc/self/status` *while all connections are open* to
+//!    prove connections no longer cost threads.
 //!
 //! Custom harness (no criterion offline), same contract as the other
 //! benches: human-readable table on stdout, machine-readable
@@ -13,39 +22,75 @@
 //! cargo bench --bench bench_service -- --quick # CI-sized subset
 //! ```
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use chainckpt::service::http::Client;
-use chainckpt::service::{serve, ServiceConfig};
+use chainckpt::service::{serve, Server, ServiceConfig};
 use chainckpt::solver::clear_cache;
 use chainckpt::util::json::{obj, Value};
 use chainckpt::util::Args;
-
-/// One client worker: `reqs` solve requests on a keep-alive connection,
-/// returning per-request latencies in microseconds.
-fn client_worker(addr: std::net::SocketAddr, reqs: usize, body: &str) -> Vec<u64> {
-    let mut client = Client::connect(addr).expect("connect to the loopback daemon");
-    let mut latencies = Vec::with_capacity(reqs);
-    for i in 0..reqs {
-        let t0 = Instant::now();
-        let (status, resp) =
-            client.request("POST", "/solve", Some(body)).expect("solve round-trip");
-        latencies.push(t0.elapsed().as_micros() as u64);
-        assert_eq!(status, 200, "request {i}: {resp}");
-        assert!(resp.contains("\"feasible\":true"), "request {i}: {resp}");
-    }
-    latencies
-}
 
 fn percentile(sorted: &[u64], q: f64) -> u64 {
     sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
+/// The kernel's view of how many threads this process is running
+/// (`Threads:` in `/proc/self/status`); 0 if unreadable (non-Linux).
+fn process_threads() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("Threads:"))
+                .and_then(|l| l.split_ascii_whitespace().nth(1))
+                .and_then(|n| n.parse().ok())
+        })
+        .unwrap_or(0)
+}
+
+fn start_server(workers: usize, table_dir: Option<PathBuf>) -> Server {
+    serve(ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        read_timeout: Duration::from_secs(30),
+        table_dir,
+        ..ServiceConfig::default()
+    })
+    .expect("bind the loopback daemon")
+}
+
+/// One `/solve` round-trip; returns the latency in µs.
+fn solve_once(client: &mut Client, body: &str) -> u64 {
+    let t0 = Instant::now();
+    let (status, resp) = client.request("POST", "/solve", Some(body)).expect("solve round-trip");
+    let us = t0.elapsed().as_micros() as u64;
+    assert_eq!(status, 200, "{resp}");
+    assert!(resp.contains("\"feasible\":true"), "{resp}");
+    us
+}
+
+fn cache_counters(addr: std::net::SocketAddr) -> (u64, u64, u64) {
+    let mut probe = Client::connect(addr).unwrap();
+    let (status, stats_body) = probe.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let stats = Value::parse(&stats_body).expect("stats JSON");
+    let cache = stats.get("planner_cache").expect("planner_cache in /stats");
+    (
+        cache.get("lookups").unwrap().as_u64().unwrap(),
+        cache.get("hits").unwrap().as_u64().unwrap(),
+        cache.get("builds").unwrap().as_u64().unwrap(),
+    )
+}
+
 fn main() {
     let args = Args::from_env();
     let quick = args.has("quick");
-    let threads: usize = if quick { 4 } else { 8 };
-    let reqs_per_thread: usize = if quick { 50 } else { 200 };
+    // the scale phase: a fixed, small driver-thread count fans out over
+    // many keep-alive connections — conns no longer imply threads
+    let driver_threads: usize = 16;
+    let conns_per_thread: usize = 64; // 16 × 64 = 1024 concurrent connections
+    let rounds: usize = if quick { 2 } else { 3 };
 
     // a mid-size profile: big enough that a cache miss is visible, small
     // enough that the cold fill stays in milliseconds; budget = half of
@@ -58,37 +103,79 @@ fn main() {
     );
     let body = body.as_str(); // scoped threads below borrow it
 
-    clear_cache(); // charge the benchmark its own cold build
-    let server = serve(ServiceConfig {
-        addr: "127.0.0.1:0".to_string(),
-        workers: threads,
-        read_timeout: Duration::from_secs(10),
-        ..ServiceConfig::default()
-    })
-    .expect("bind the loopback daemon");
+    let table_dir =
+        std::env::temp_dir().join(format!("chainckpt-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&table_dir);
+
+    // --- phase 1: cold start vs warm start through the table store ---
+    let server = start_server(4, Some(table_dir.clone()));
     let addr = server.addr();
 
+    let reg = chainckpt::telemetry::registry();
+
+    clear_cache(); // empty LRU, empty dir: the genuine cold path
+    let mut probe = Client::connect(addr).expect("connect");
+    let cold_start_us = solve_once(&mut probe, body);
+    let (_, _, cold_builds) = cache_counters(addr);
+    let (store_misses, store_writes) = (reg.store_misses.get(), reg.store_writes.get());
+    assert_eq!(cold_builds, 1, "cold start must be exactly one DP fill");
+    assert_eq!(store_writes, 1, "the cold fill must be written to the store");
+
+    clear_cache(); // empty LRU again (counters reset) — the table file survives
+    let warm_start_us = solve_once(&mut probe, body);
+    let (_, _, warm_builds) = cache_counters(addr);
+    let (store_hits, store_errors) = (reg.store_hits.get(), reg.store_errors.get());
+    assert_eq!(warm_builds, 0, "warm start must load from disk, not re-run the DP");
+    assert_eq!(store_hits, 1, "warm start is a store hit");
+    assert_eq!(store_errors, 0, "a clean store file must load without errors");
+    assert!(
+        warm_start_us < cold_start_us,
+        "loading the stored table ({warm_start_us} µs) must beat re-filling the DP \
+         ({cold_start_us} µs)"
+    );
+    drop(probe);
+    server.stop();
+
+    // --- phase 2: concurrent keep-alive scale ---
+    // fresh daemon, same store: the one table is loaded once from disk
+    clear_cache();
+    let server = start_server(driver_threads, Some(table_dir.clone()));
+    let addr = server.addr();
+    let threads_idle = process_threads();
+
     let t0 = Instant::now();
-    let mut latencies: Vec<u64> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| scope.spawn(move || client_worker(addr, reqs_per_thread, body)))
+    let (mut latencies, threads_under_load): (Vec<u64>, u64) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..driver_threads)
+            .map(|_| {
+                scope.spawn(move || {
+                    // open this thread's share of connections *first* so
+                    // all 1024 are simultaneously established…
+                    let mut clients: Vec<Client> = (0..conns_per_thread)
+                        .map(|_| Client::connect(addr).expect("connect keep-alive conn"))
+                        .collect();
+                    // …then drive them round-robin
+                    let mut lats = Vec::with_capacity(conns_per_thread * rounds);
+                    for _ in 0..rounds {
+                        for client in &mut clients {
+                            lats.push(solve_once(client, body));
+                        }
+                    }
+                    lats
+                })
+            })
             .collect();
-        handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect()
+        // sample the thread count while every connection is open and busy
+        std::thread::sleep(Duration::from_millis(50));
+        let under_load = process_threads();
+        (handles.into_iter().flat_map(|h| h.join().expect("client thread")).collect(), under_load)
     });
     let elapsed = t0.elapsed().as_secs_f64();
+    let concurrent_connections = driver_threads * conns_per_thread;
+    let total_reqs = concurrent_connections * rounds;
 
-    // cache + request counters over the real wire, like a client would
-    let mut probe = Client::connect(addr).unwrap();
-    let (status, stats_body) = probe.request("GET", "/stats", None).unwrap();
-    assert_eq!(status, 200);
-    let stats = Value::parse(&stats_body).expect("stats JSON");
-    let cache = stats.get("planner_cache").expect("planner_cache in /stats");
-    let (lookups, hits, builds) = (
-        cache.get("lookups").unwrap().as_u64().unwrap(),
-        cache.get("hits").unwrap().as_u64().unwrap(),
-        cache.get("builds").unwrap().as_u64().unwrap(),
-    );
+    let (lookups, hits, builds) = cache_counters(addr);
     // the Prometheus endpoint must hold up under the same load path
+    let mut probe = Client::connect(addr).unwrap();
     let (status, metrics_body) = probe.request("GET", "/metrics", None).unwrap();
     assert_eq!(status, 200);
     assert!(
@@ -96,12 +183,11 @@ fn main() {
         "/metrics is missing the service request family"
     );
     assert!(
-        metrics_body.contains("chainckpt_planner_cache_lookups_total"),
-        "/metrics is missing the planner cache family"
+        metrics_body.contains("chainckpt_table_store_hits_total"),
+        "/metrics is missing the table store family"
     );
     drop(probe);
 
-    let total_reqs = threads * reqs_per_thread;
     latencies.sort_unstable();
     let (p50, p90, p99) = (
         percentile(&latencies, 0.50),
@@ -117,7 +203,7 @@ fn main() {
     );
     println!(
         "{:<26} {:>8.0} {:>10} {:>10} {:>10} {:>9.1}%",
-        format!("{threads}x{reqs_per_thread} solve"),
+        format!("{concurrent_connections} conns × {rounds} solve"),
         req_per_s,
         p50,
         p90,
@@ -128,29 +214,46 @@ fn main() {
         "cache: {lookups} lookups, {hits} hits, {builds} builds ({} total requests in {:.2} s)",
         total_reqs, elapsed
     );
-
-    // warm traffic for one chain must be served from the shared table:
-    // one cold DP fill (give a little slack for a cold/warm boundary
-    // race where the discretization differs — there is exactly one
-    // (chain, budget, slots) here, so in practice builds == 1)
-    assert!(
-        builds <= 2,
-        "{builds} DP builds for one repeated (chain, budget): the cache is not working"
+    println!(
+        "store: cold start {cold_start_us} µs, warm start {warm_start_us} µs \
+         ({store_hits} hits, {store_misses} misses, {store_writes} writes, {store_errors} errors)"
     );
+    println!(
+        "threads: {threads_idle} idle, {threads_under_load} under {concurrent_connections} \
+         open connections"
+    );
+
+    // warm traffic for one chain must be served from the shared table —
+    // and this daemon's first answer came off disk, so *zero* DP builds
+    assert_eq!(builds, 0, "the scale phase must be answered by the stored table");
     assert!(
         hit_rate > 0.9,
         "hit rate {hit_rate:.3} too low for single-chain traffic"
     );
     assert!(p50 > 0, "sub-microsecond p50 means the clock did not advance");
+    // the point of the event loop: connections do not cost threads. The
+    // budget is drivers + workers + event loop + slack — far below the
+    // old one-thread-per-connection floor of `concurrent_connections`.
+    if threads_under_load > 0 {
+        assert!(
+            threads_under_load < (concurrent_connections / 8) as u64,
+            "{threads_under_load} threads for {concurrent_connections} connections: \
+             connection handling is scaling with conns again"
+        );
+    }
 
     let json = obj([
         ("bench", Value::from("bench_service")),
         ("quick", Value::from(quick)),
-        ("threads", Value::from(threads)),
-        ("requests_per_thread", Value::from(reqs_per_thread)),
+        ("threads", Value::from(driver_threads)),
+        ("concurrent_connections", Value::from(concurrent_connections)),
+        ("requests_per_thread", Value::from(conns_per_thread * rounds)),
         ("total_requests", Value::from(total_reqs)),
         ("elapsed_s", Value::from(elapsed)),
         ("req_per_s", Value::from(req_per_s)),
+        ("cold_start_us", Value::from(cold_start_us)),
+        ("warm_start_us", Value::from(warm_start_us)),
+        ("process_threads_under_load", Value::from(threads_under_load)),
         (
             "latency_us",
             obj([
@@ -168,16 +271,36 @@ fn main() {
                 ("hit_rate", Value::from(hit_rate)),
             ]),
         ),
+        (
+            "table_store",
+            obj([
+                ("hits", Value::from(store_hits)),
+                ("misses", Value::from(store_misses)),
+                ("writes", Value::from(store_writes)),
+                ("errors", Value::from(store_errors)),
+            ]),
+        ),
         ("telemetry", chainckpt::telemetry::registry().snapshot()),
     ]);
     std::fs::create_dir_all("results").ok();
     let csv = format!(
-        "threads,reqs_per_thread,req_per_s,p50_us,p90_us,p99_us,hit_rate\n{},{},{:.1},{},{},{},{:.4}\n",
-        threads, reqs_per_thread, req_per_s, p50, p90, p99, hit_rate
+        "conns,rounds,req_per_s,p50_us,p90_us,p99_us,hit_rate,cold_start_us,warm_start_us,threads_under_load\n\
+         {},{},{:.1},{},{},{},{:.4},{},{},{}\n",
+        concurrent_connections,
+        rounds,
+        req_per_s,
+        p50,
+        p90,
+        p99,
+        hit_rate,
+        cold_start_us,
+        warm_start_us,
+        threads_under_load
     );
     std::fs::write("results/bench_service.csv", csv).ok();
     std::fs::write("BENCH_service.json", json.to_json_string()).ok();
     println!("→ results/bench_service.csv, BENCH_service.json");
 
     server.stop();
+    let _ = std::fs::remove_dir_all(&table_dir);
 }

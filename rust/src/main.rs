@@ -65,7 +65,7 @@ USAGE:
                      [--trace trace.json] [--verify-plan]
   chainckpt figures  [--fig 3|all] [--out results]
   chainckpt serve    [--addr 127.0.0.1] [--port 8080] [--threads N]
-                     [--slots 500] [--queue 64]
+                     [--slots 500] [--queue 64] [--table-dir DIR]
 
 CHAIN SPEC (solve/simulate; one pipeline with the service and library):
   --family resnet|densenet|inception|vgg  --depth N  --image N  --batch N
@@ -108,9 +108,14 @@ chrome://tracing). compare also prints a measured-vs-predicted drift
 line per strategy: per-op-kind time ratios against the cost model and
 the executor's peak against the simulator's byte-exact prediction.
 
-The planning service answers POST /solve, /sweep, /simulate, /lower and
-GET /chains, /stats, /healthz with JSON; repeated requests for a chain
-hit the planner's shared DP-table cache. --port 0 picks a free port.
+The planning service answers POST /solve, /sweep, /simulate, /lower,
+/prewarm and GET /chains, /stats, /healthz with JSON; repeated requests
+for a chain hit the planner's shared DP-table cache. --port 0 picks a
+free port. A single poll(2) event loop multiplexes every connection, so
+thousands of idle keep-alive clients cost file descriptors, not threads.
+--table-dir DIR persists solved DP tables to disk (versioned,
+fingerprint-keyed, checksummed): a restarted daemon reloads them instead
+of re-running the DP, and POST /prewarm fills cache + store up front.
 POST /lower returns the lowered plan for a chain + budget (or explicit
 \"ops\"): slot table with byte offsets, arena size, plan-time peak.
 GET /metrics exposes the process-wide telemetry registry (planner
@@ -723,13 +728,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: usize_flag(args, "threads", 0)?, // 0 = one per core
         queue_depth: usize_flag(args, "queue", 64)?,
         slots: usize_flag(args, "slots", DEFAULT_SLOTS)?,
+        table_dir: args.opt_str("table-dir").map(PathBuf::from),
         ..Default::default()
     };
     let server = chainckpt::service::serve(cfg)?;
     println!("planning service listening on http://{}", server.addr());
     println!(
-        "endpoints: POST /solve /sweep /simulate /lower · GET /chains /stats /metrics /healthz"
+        "endpoints: POST /solve /sweep /simulate /lower /prewarm · GET /chains /stats /metrics /healthz"
     );
+    if let Some(dir) = chainckpt::solver::table_dir() {
+        println!("persistent table store: {}", dir.display());
+    }
     println!("try: curl -s http://{}/chains", server.addr());
     server.join();
     Ok(())

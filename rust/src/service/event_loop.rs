@@ -1,0 +1,533 @@
+//! Readiness-based connection IO: one thread multiplexes every client
+//! socket through `poll(2)`, so concurrent keep-alive connections cost a
+//! file descriptor and a parser buffer each — not a parked thread.
+//!
+//! The previous accept loop handed each connection to a pool worker that
+//! *blocked* in `read_request` between requests, capping live clients at
+//! `workers + queue_depth`. This module inverts that: the event thread
+//! owns all sockets, feeds raw bytes to the incremental
+//! [`RequestParser`](super::http::RequestParser), and hands only
+//! *complete* requests to the bounded worker pool. Workers never touch a
+//! socket — they compute the [`Response`] and push it back through
+//! [`Shared`], waking the loop via a self-pipe. 10k idle keep-alive
+//! clients therefore pin 10k fds and zero threads.
+//!
+//! Backpressure is preserved at both ends: a connection with a request
+//! in flight is not polled for reads (its kernel receive buffer fills —
+//! TCP pushback, one request per connection at a time), and a full
+//! worker queue hands the job back ([`ThreadPool::try_execute`]) to be
+//! retried next tick instead of blocking the event thread.
+//!
+//! std-only like the rest of the crate: the `poll(2)` binding is a
+//! seven-line `extern "C"` shim against the platform libc the process
+//! already links, not a dependency.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::http::{self, RecvError, Request, RequestParser, Response};
+use super::pool::{Job, ThreadPool};
+use super::routes;
+use super::ServiceState;
+
+// ---------------------------------------------------------------------------
+// poll(2) shim
+// ---------------------------------------------------------------------------
+
+/// `struct pollfd` (poll(2)); layout fixed by the C ABI.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+extern "C" {
+    /// poll(2) from the libc the binary already links — the std runtime
+    /// pulls it in, so no crate and no extra linkage is needed.
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Block until an fd is ready or `timeout_ms` passes, retrying EINTR.
+fn poll_ready(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker → event-loop handoff
+// ---------------------------------------------------------------------------
+
+/// A finished request: the response plus the connection it belongs to.
+pub(crate) struct Completion {
+    token: u64,
+    resp: Response,
+    keep_alive: bool,
+}
+
+/// The mailbox between pool workers and the event thread. Workers
+/// [`push`](Shared::push) completions and tickle the self-pipe; the
+/// loop drains both each tick.
+pub(crate) struct Shared {
+    done: Mutex<Vec<Completion>>,
+    /// Write side of the self-pipe (nonblocking: a full pipe already
+    /// means a wake is pending, so short writes are ignored).
+    wake_tx: UnixStream,
+}
+
+impl Shared {
+    pub(crate) fn new(wake_tx: UnixStream) -> Shared {
+        let _ = wake_tx.set_nonblocking(true);
+        Shared { done: Mutex::new(Vec::new()), wake_tx }
+    }
+
+    /// Interrupt the event thread's `poll` (shutdown, completions).
+    pub(crate) fn wake(&self) {
+        let _ = (&self.wake_tx).write(&[1]);
+    }
+
+    fn push(&self, c: Completion) {
+        self.done.lock().unwrap_or_else(|p| p.into_inner()).push(c);
+        self.wake();
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.done.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection state
+// ---------------------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    parser: RequestParser,
+    /// Outbound bytes (response framing), drained by `flush_out`.
+    out: Vec<u8>,
+    written: usize,
+    /// A request is with the worker pool; reads pause (TCP backpressure)
+    /// until its completion lands.
+    inflight: bool,
+    /// Deliver `out`, then drop the connection.
+    close_after_write: bool,
+    /// Peer EOF seen; no further reads.
+    read_closed: bool,
+    /// Last successful read/write/completion — the idle-timeout clock.
+    last_activity: Instant,
+    /// Wall-clock bound on finishing the *current* partial request
+    /// ([`http::MAX_REQUEST_TIME`]); `None` between requests, so idle
+    /// keep-alive connections are governed by the idle timeout alone.
+    req_deadline: Option<Instant>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            out: Vec::new(),
+            written: 0,
+            inflight: false,
+            close_after_write: false,
+            read_closed: false,
+            last_activity: Instant::now(),
+            req_deadline: None,
+        }
+    }
+
+    /// Queue a terminal error response: deliver it, then close.
+    fn queue_close(&mut self, resp: Response) {
+        self.out.extend_from_slice(&resp.to_bytes(false));
+        self.close_after_write = true;
+        self.read_closed = true;
+        self.req_deadline = None;
+    }
+}
+
+/// Drain the socket's readable bytes into the parser. `false` = fatal
+/// socket error, drop the connection.
+fn read_some(conn: &mut Conn) -> bool {
+    let mut buf = [0u8; 16 << 10];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.read_closed = true;
+                return true;
+            }
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                conn.parser.feed(&buf[..n]);
+                if n < buf.len() {
+                    return true; // likely drained; poll re-signals if not
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Write as much of `out` as the socket accepts. `false` = fatal error.
+fn flush_out(conn: &mut Conn) -> bool {
+    while conn.written < conn.out.len() {
+        match conn.stream.write(&conn.out[conn.written..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                conn.written += n;
+                conn.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+    conn.out.clear();
+    conn.written = 0;
+    true
+}
+
+/// Try to complete one request from the parser. Framing errors become a
+/// terminal 400/413 written straight from the loop — they never reach
+/// `routes::handle`, so `/stats` counts stay request-exact, matching the
+/// blocking reader's behavior byte for byte.
+fn advance(conn: &mut Conn) -> Option<Request> {
+    if conn.inflight || conn.close_after_write {
+        return None;
+    }
+    match conn.parser.poll() {
+        Ok(Some(req)) => {
+            conn.req_deadline = None;
+            conn.inflight = true;
+            Some(req)
+        }
+        Ok(None) => {
+            if conn.parser.take_interim_100() {
+                conn.out.extend_from_slice(b"HTTP/1.1 100 Continue\r\n\r\n");
+            }
+            if conn.parser.in_progress() {
+                if conn.req_deadline.is_none() {
+                    conn.req_deadline = Some(Instant::now() + http::MAX_REQUEST_TIME);
+                }
+            } else {
+                conn.req_deadline = None;
+            }
+            None
+        }
+        Err(RecvError::TooLarge(msg)) => {
+            conn.queue_close(Response::error(413, msg));
+            None
+        }
+        Err(RecvError::Malformed(msg)) => {
+            conn.queue_close(Response::error(400, format!("malformed request: {msg}")));
+            None
+        }
+        Err(RecvError::Closed) => {
+            // the push parser never reports Closed, but stay total
+            conn.queue_close(Response::error(400, "malformed request: connection closed"));
+            None
+        }
+    }
+}
+
+/// Package a parsed request as a pool job that computes the response and
+/// mails it back through `shared`.
+fn make_job(
+    token: u64,
+    req: Request,
+    state: &Arc<ServiceState>,
+    shared: &Arc<Shared>,
+) -> Job {
+    let state = Arc::clone(state);
+    let shared = Arc::clone(shared);
+    let keep_alive = req.keep_alive();
+    Box::new(move || {
+        let resp = routes::handle(&req, &state);
+        shared.push(Completion { token, resp, keep_alive });
+    })
+}
+
+/// Milliseconds until the earliest connection deadline (idle timeout or
+/// in-progress request deadline), capped at one second; near-zero when
+/// rejected jobs are waiting for a pool slot.
+fn next_timeout_ms(
+    conns: &HashMap<u64, Conn>,
+    read_timeout: Duration,
+    jobs_waiting: bool,
+    stopping: bool,
+) -> i32 {
+    let now = Instant::now();
+    let until = |t: Instant| t.saturating_duration_since(now).as_millis().min(1000) as i32;
+    let mut ms: i32 = 1000;
+    if jobs_waiting || stopping {
+        ms = ms.min(20);
+    }
+    for conn in conns.values() {
+        if let Some(d) = conn.req_deadline {
+            ms = ms.min(until(d));
+        }
+        if !conn.inflight {
+            ms = ms.min(until(conn.last_activity + read_timeout));
+        }
+    }
+    ms.max(0)
+}
+
+/// How long a stopping loop keeps delivering in-flight responses before
+/// dropping the remaining connections.
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+/// The event thread: owns the listener, every connection, and the worker
+/// pool (dropping the pool on exit joins the workers). Runs until `stop`
+/// is set and in-flight responses have drained (or the grace expires).
+pub(crate) fn run(
+    listener: TcpListener,
+    pool: ThreadPool,
+    state: Arc<ServiceState>,
+    shared: Arc<Shared>,
+    wake_rx: UnixStream,
+    read_timeout: Duration,
+    stop: Arc<AtomicBool>,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let _ = wake_rx.set_nonblocking(true);
+    let wake_fd = wake_rx.as_raw_fd();
+    let listener_fd = listener.as_raw_fd();
+
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 0;
+    let mut pending_jobs: Vec<Job> = Vec::new();
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        let stopping = stop.load(Ordering::SeqCst);
+        if stopping {
+            // deliver what's owed, drop idle connections now
+            conns.retain(|_, c| c.inflight || !c.out.is_empty());
+            let deadline =
+                *drain_deadline.get_or_insert_with(|| Instant::now() + DRAIN_GRACE);
+            if conns.is_empty() || Instant::now() >= deadline {
+                break;
+            }
+        }
+
+        // jobs the full pool handed back last tick
+        let mut still_waiting = Vec::new();
+        for job in pending_jobs.drain(..) {
+            if let Err(job) = pool.try_execute(job) {
+                still_waiting.push(job);
+            }
+        }
+        pending_jobs = still_waiting;
+
+        // --- build the poll set: [wake, listener?, conns…] ---
+        let accepting = !stopping;
+        let mut fds = Vec::with_capacity(conns.len() + 2);
+        fds.push(PollFd { fd: wake_fd, events: POLLIN, revents: 0 });
+        if accepting {
+            fds.push(PollFd { fd: listener_fd, events: POLLIN, revents: 0 });
+        }
+        let mut tokens = Vec::with_capacity(conns.len());
+        for (&token, conn) in &conns {
+            let mut events = 0i16;
+            if !conn.inflight && !conn.read_closed && !conn.close_after_write {
+                events |= POLLIN;
+            }
+            if conn.written < conn.out.len() {
+                events |= POLLOUT;
+            }
+            // zero `events` still reports POLLERR/POLLHUP
+            fds.push(PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+            tokens.push(token);
+        }
+
+        let timeout =
+            next_timeout_ms(&conns, read_timeout, !pending_jobs.is_empty(), stopping);
+        if poll_ready(&mut fds, timeout).is_err() {
+            // pathological (bad fd table, ENOMEM): back off, don't spin
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+
+        // --- self-pipe: swallow accumulated wake bytes ---
+        if fds.first().is_some_and(|f| f.revents != 0) {
+            let mut sink = [0u8; 64];
+            while matches!((&wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+        }
+
+        // --- completions from the worker pool ---
+        for done in shared.drain() {
+            // the connection may already be gone (timeout, error) —
+            // the computed response is then dropped, like the old
+            // worker writing to a closed socket
+            if let Some(conn) = conns.get_mut(&done.token) {
+                conn.out.extend_from_slice(&done.resp.to_bytes(done.keep_alive));
+                conn.inflight = false;
+                if !done.keep_alive {
+                    conn.close_after_write = true;
+                }
+                conn.last_activity = Instant::now();
+            }
+        }
+
+        // --- new connections ---
+        if accepting && fds.get(1).is_some_and(|f| f.revents != 0) {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue; // drop this one, keep accepting
+                        }
+                        let _ = stream.set_nodelay(true);
+                        conns.insert(next_token, Conn::new(stream));
+                        next_token += 1;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    // EMFILE & friends: leave the backlog to the kernel,
+                    // retry next tick instead of spinning
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // --- per-connection IO (every conn gets a progress attempt:
+        //     completions above may have queued bytes on conns whose fd
+        //     reported nothing this tick) ---
+        let base = if accepting { 2 } else { 1 };
+        let mut dead: Vec<u64> = Vec::new();
+        for (i, &token) in tokens.iter().enumerate() {
+            let revents = fds.get(base + i).map_or(0, |f| f.revents);
+            let Some(conn) = conns.get_mut(&token) else { continue };
+            let mut alive = revents & (POLLERR | POLLNVAL) == 0;
+            if alive
+                && revents & (POLLIN | POLLHUP) != 0
+                && !conn.read_closed
+                && !conn.inflight
+                && !conn.close_after_write
+            {
+                alive = read_some(conn);
+            }
+            if alive {
+                if let Some(req) = advance(conn) {
+                    let job = make_job(token, req, &state, &shared);
+                    if let Err(job) = pool.try_execute(job) {
+                        pending_jobs.push(job);
+                    }
+                }
+                // EOF mid-request: no more bytes can complete it
+                if conn.read_closed
+                    && !conn.inflight
+                    && !conn.close_after_write
+                    && conn.parser.in_progress()
+                {
+                    conn.queue_close(Response::error(
+                        400,
+                        "malformed request: eof mid-request",
+                    ));
+                }
+                alive = flush_out(conn);
+            }
+            if alive && conn.out.is_empty() {
+                if conn.close_after_write {
+                    alive = false; // error/close response fully delivered
+                } else if conn.read_closed && !conn.inflight && !conn.parser.in_progress() {
+                    alive = false; // clean keep-alive end
+                }
+            }
+            if !alive {
+                dead.push(token);
+            }
+        }
+        for token in dead {
+            conns.remove(&token);
+        }
+
+        // --- deadlines ---
+        let now = Instant::now();
+        let mut expired: Vec<u64> = Vec::new();
+        for (&token, conn) in conns.iter_mut() {
+            if conn.req_deadline.is_some_and(|d| now >= d) {
+                // total-time bound on one request: the per-read idle
+                // clock cannot stop a byte-at-a-time trickler
+                conn.queue_close(Response::error(
+                    400,
+                    "malformed request: request read deadline exceeded",
+                ));
+                if !flush_out(conn) {
+                    expired.push(token);
+                }
+            } else if !conn.inflight
+                && now.duration_since(conn.last_activity) >= read_timeout
+            {
+                // idle keep-alive (or a stalled reader): close silently,
+                // exactly like the blocking reader's socket timeout
+                expired.push(token);
+            }
+        }
+        for token in expired {
+            conns.remove(&token);
+        }
+    }
+    // `pool` drops here: the queue closes, workers finish and join.
+    // Late completions land in `shared.done` and are dropped with it.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_mailbox_roundtrip_and_wake() {
+        let (tx, rx) = UnixStream::pair().expect("socketpair");
+        rx.set_nonblocking(true).expect("nonblocking");
+        let shared = Shared::new(tx);
+        shared.push(Completion {
+            token: 7,
+            resp: Response::json(200, "{}".to_string()),
+            keep_alive: true,
+        });
+        let drained = shared.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].token, 7);
+        assert!(drained[0].keep_alive);
+        // the push tickled the self-pipe
+        let mut sink = [0u8; 8];
+        let n = (&rx).read(&mut sink).expect("wake byte present");
+        assert!(n >= 1);
+        // a second drain is empty
+        assert!(shared.drain().is_empty());
+    }
+
+    #[test]
+    fn timeout_tracks_the_nearest_deadline() {
+        let conns: HashMap<u64, Conn> = HashMap::new();
+        // no connections: full tick
+        assert_eq!(next_timeout_ms(&conns, Duration::from_secs(30), false, false), 1000);
+        // waiting jobs shrink the tick
+        assert!(next_timeout_ms(&conns, Duration::from_secs(30), true, false) <= 20);
+    }
+}

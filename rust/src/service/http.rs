@@ -212,6 +212,193 @@ pub fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Request, RecvEr
     Ok(Request { method, path, query, headers, body })
 }
 
+// ---------------------------------------------------------------------------
+// Incremental parser (event loop)
+// ---------------------------------------------------------------------------
+
+/// A request head parsed out of the incremental buffer, waiting for its
+/// body bytes.
+#[derive(Debug)]
+struct PendingHead {
+    method: String,
+    path: String,
+    query: String,
+    headers: BTreeMap<String, String>,
+    content_length: usize,
+}
+
+/// Push-based counterpart of [`read_request`] for the readiness loop:
+/// the caller [`RequestParser::feed`]s whatever bytes the socket had,
+/// then [`RequestParser::poll`]s for complete requests — the parser
+/// never blocks, never owns a socket, and keeps pipelined leftovers
+/// buffered for the next poll.
+///
+/// The framing rules are identical to the blocking reader: same
+/// [`MAX_HEAD_BYTES`]/[`MAX_BODY_BYTES`] caps, same `Transfer-Encoding`
+/// rejection, same `Expect: 100-continue` handling (surfaced as
+/// [`RequestParser::take_interim_100`] since the parser cannot write).
+/// An error from `poll` is terminal: the connection is broken-framed and
+/// must be closed after the error response.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    head: Option<PendingHead>,
+    interim_100: bool,
+    failed: bool,
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser::default()
+    }
+
+    /// Buffer freshly read socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Mid-request? Distinguishes a clean keep-alive EOF (between
+    /// requests) from a truncated one.
+    pub fn in_progress(&self) -> bool {
+        self.head.is_some() || !self.buf.is_empty()
+    }
+
+    /// True once per request that asked `Expect: 100-continue` with a
+    /// body: the event loop writes the interim response and clears the
+    /// flag by taking it.
+    pub fn take_interim_100(&mut self) -> bool {
+        std::mem::take(&mut self.interim_100)
+    }
+
+    /// Try to complete one request from the buffered bytes. `Ok(None)`
+    /// means "need more bytes"; errors are terminal for the connection.
+    pub fn poll(&mut self) -> Result<Option<Request>, RecvError> {
+        if self.failed {
+            return Err(malformed("parser already failed"));
+        }
+        match self.poll_inner() {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.failed = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn poll_inner(&mut self) -> Result<Option<Request>, RecvError> {
+        if self.head.is_none() {
+            let Some(head_end) = find_head_end(&self.buf) else {
+                if self.buf.len() > MAX_HEAD_BYTES {
+                    return Err(RecvError::TooLarge(format!(
+                        "request head exceeds {MAX_HEAD_BYTES} bytes"
+                    )));
+                }
+                return Ok(None);
+            };
+            if head_end > MAX_HEAD_BYTES {
+                return Err(RecvError::TooLarge(format!(
+                    "request head exceeds {MAX_HEAD_BYTES} bytes"
+                )));
+            }
+            let head_bytes: Vec<u8> = self.buf.drain(..head_end).collect();
+            let head = parse_head(&head_bytes)?;
+            if head.content_length > MAX_BODY_BYTES {
+                return Err(RecvError::TooLarge(format!(
+                    "body of {} bytes exceeds the {MAX_BODY_BYTES}-byte cap",
+                    head.content_length
+                )));
+            }
+            if head.content_length > 0
+                && head
+                    .headers
+                    .get("expect")
+                    .is_some_and(|v| v.to_ascii_lowercase().contains("100-continue"))
+            {
+                self.interim_100 = true;
+            }
+            self.head = Some(head);
+        }
+        let ready = self
+            .head
+            .as_ref()
+            .is_some_and(|h| self.buf.len() >= h.content_length);
+        if !ready {
+            return Ok(None);
+        }
+        let Some(head) = self.head.take() else {
+            return Ok(None);
+        };
+        let body: Vec<u8> = self.buf.drain(..head.content_length).collect();
+        self.interim_100 = false; // body arrived without the interim nudge
+        Ok(Some(Request {
+            method: head.method,
+            path: head.path,
+            query: head.query,
+            headers: head.headers,
+            body,
+        }))
+    }
+}
+
+/// Index one past the head terminator (`\n` + optional `\r` + `\n`), or
+/// `None` while incomplete.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            match buf.get(i + 1) {
+                Some(b'\n') => return Some(i + 2),
+                Some(b'\r') if buf.get(i + 2) == Some(&b'\n') => return Some(i + 3),
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse a complete head (request line + headers + blank line) with the
+/// exact rules of [`read_request`].
+fn parse_head(bytes: &[u8]) -> Result<PendingHead, RecvError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| malformed("request head is not UTF-8"))?;
+    let mut lines = text.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(malformed(format!("bad request line '{request_line}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let mut headers = BTreeMap::new();
+    for hline in lines {
+        if hline.is_empty() {
+            break;
+        }
+        let Some((name, value)) = hline.split_once(':') else {
+            return Err(malformed(format!("bad header line '{hline}'")));
+        };
+        headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+    }
+    if headers.contains_key("transfer-encoding") {
+        return Err(malformed(
+            "Transfer-Encoding is not supported; send a Content-Length body",
+        ));
+    }
+    let content_length = match headers.get("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| malformed(format!("bad Content-Length '{v}'")))?,
+    };
+    Ok(PendingHead { method, path, query, headers, content_length })
+}
+
 /// One response, always written with an explicit `Content-Length`.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -260,7 +447,9 @@ impl Response {
         Response::json(status, payload.to_json_string())
     }
 
-    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> io::Result<()> {
+    /// The full wire form (head + body) — what the event loop queues on
+    /// a connection's outbound buffer.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
         let head = format!(
             "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
             self.status,
@@ -269,8 +458,14 @@ impl Response {
             self.body.len(),
             if keep_alive { "keep-alive" } else { "close" },
         );
-        w.write_all(head.as_bytes())?;
-        w.write_all(self.body.as_bytes())?;
+        let mut out = Vec::with_capacity(head.len() + self.body.len());
+        out.extend_from_slice(head.as_bytes());
+        out.extend_from_slice(self.body.as_bytes());
+        out
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> io::Result<()> {
+        w.write_all(&self.to_bytes(keep_alive))?;
         w.flush()
     }
 }
@@ -488,6 +683,82 @@ mod tests {
         let req = read_request(&mut reader).unwrap();
         assert_eq!(req.body, b"{}");
         client.join().unwrap();
+    }
+
+    #[test]
+    fn incremental_parser_handles_byte_at_a_time_feeding() {
+        let raw = b"POST /solve?x=1 HTTP/1.1\r\nHost: h\r\nContent-Length: 7\r\n\r\n{\"a\":1}";
+        let mut p = RequestParser::new();
+        for (i, b) in raw.iter().enumerate() {
+            assert!(
+                p.poll().expect("prefix must not error").is_none(),
+                "complete at byte {i} of {}",
+                raw.len()
+            );
+            p.feed(&[*b]);
+        }
+        let req = p.poll().unwrap().expect("full request buffered");
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/solve");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.body, b"{\"a\":1}");
+        assert!(!p.in_progress());
+    }
+
+    #[test]
+    fn incremental_parser_yields_pipelined_requests_in_order() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET /healthz HTTP/1.1\r\n\r\nGET /stats HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let a = p.poll().unwrap().expect("first request");
+        assert_eq!(a.path, "/healthz");
+        assert!(a.keep_alive());
+        let b = p.poll().unwrap().expect("second request");
+        assert_eq!(b.path, "/stats");
+        assert!(!b.keep_alive());
+        assert!(p.poll().unwrap().is_none());
+        assert!(!p.in_progress());
+    }
+
+    #[test]
+    fn incremental_parser_enforces_the_same_caps_and_rejections() {
+        // unterminated head flood
+        let mut p = RequestParser::new();
+        p.feed(&vec![b'A'; MAX_HEAD_BYTES + 1]);
+        assert!(matches!(p.poll(), Err(RecvError::TooLarge(_))));
+
+        // oversized declared body, rejected before any body byte
+        let mut p = RequestParser::new();
+        p.feed(
+            format!("POST /solve HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1)
+                .as_bytes(),
+        );
+        assert!(matches!(p.poll(), Err(RecvError::TooLarge(_))));
+
+        // chunked framing refused exactly like the blocking reader
+        let mut p = RequestParser::new();
+        p.feed(b"POST /solve HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n");
+        match p.poll() {
+            Err(RecvError::Malformed(msg)) => assert!(msg.contains("Transfer-Encoding")),
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+
+        // bad request line
+        let mut p = RequestParser::new();
+        p.feed(b"NONSENSE\r\n\r\n");
+        assert!(matches!(p.poll(), Err(RecvError::Malformed(_))));
+    }
+
+    #[test]
+    fn incremental_parser_surfaces_expect_100_continue_once() {
+        let mut p = RequestParser::new();
+        p.feed(b"POST /solve HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\n");
+        assert!(p.poll().unwrap().is_none(), "body still outstanding");
+        assert!(p.take_interim_100(), "interim flag raised with the head");
+        assert!(!p.take_interim_100(), "taking clears it");
+        p.feed(b"{}");
+        let req = p.poll().unwrap().expect("body arrived");
+        assert_eq!(req.body, b"{}");
+        assert!(!p.take_interim_100());
     }
 
     #[test]

@@ -5,16 +5,21 @@
 //! The paper's tool answers one `(chain, budget)` query per offline run;
 //! [`crate::solver::Planner`] already amortizes one DP table across every
 //! budget of a chain. This module is where that amortization meets
-//! *traffic*: a [`TcpListener`] accept loop feeds a bounded
-//! [`pool::ThreadPool`], each request routes through [`routes`], and every
-//! planning request for a chain the service has seen before — from any
-//! connection, any thread — is a fingerprint-keyed table lookup instead
-//! of an O(L²·S) DP fill. Single-flight building (see
-//! `solver::planner::table_for`) means even a thundering herd for a cold
-//! chain runs the DP exactly once.
+//! *traffic*: a single [`event_loop`] thread multiplexes every client
+//! socket through `poll(2)`, feeding complete requests to a bounded
+//! [`pool::ThreadPool`] that routes through [`routes`]. Connections cost
+//! a file descriptor, not a thread, so thousands of idle keep-alive
+//! clients coexist with a handful of workers. Every planning request for
+//! a chain the service has seen before — from any connection, any
+//! thread — is a fingerprint-keyed table lookup instead of an O(L²·S) DP
+//! fill, and with a `table_dir` configured the tables also persist
+//! across restarts (`solver::persist`): a rebooted daemon reloads solved
+//! tables from disk instead of re-running the DP. Single-flight building
+//! (see `solver::planner::table_for`) means even a thundering herd for a
+//! cold chain runs the DP exactly once.
 //!
 //! ```sh
-//! chainckpt serve --port 8080 &
+//! chainckpt serve --port 8080 --table-dir /var/lib/chainckpt &
 //! curl -s localhost:8080/solve -d '{
 //!   "chain": {"profile": {"family": "resnet", "depth": 101,
 //!             "image": 1000, "batch": 8}},
@@ -26,15 +31,17 @@
 //! daemon on drop — the integration tests and the loopback benchmark run
 //! the real wire protocol this way.
 
+pub mod event_loop;
 pub mod http;
 pub mod pool;
 pub mod routes;
 pub mod wire;
 
-use std::io::BufReader;
-use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::net::{SocketAddr, TcpListener};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -49,16 +56,22 @@ pub struct ServiceConfig {
     pub addr: String,
     /// Worker threads; `0` = one per available core.
     pub workers: usize,
-    /// Connections queued beyond busy workers before the accept loop
-    /// blocks (kernel backlog then holds the rest).
+    /// Jobs queued beyond busy workers; the event loop holds further
+    /// complete requests itself (and stops reading their connections), so
+    /// the queue bounds *compute* backlog, not connection count.
     pub queue_depth: usize,
     /// Default DP discretization for requests that don't pass `"slots"`.
     pub slots: usize,
-    /// Per-read idle timeout: a connection with no next request after
-    /// this long is closed. (A single request's head+body read is
-    /// additionally wall-clock-bounded by [`http::MAX_REQUEST_TIME`], so
-    /// a byte-at-a-time trickler cannot pin a worker indefinitely.)
+    /// Idle timeout: a connection with no in-progress request and no
+    /// traffic for this long is closed. (A single request's head+body
+    /// read is additionally wall-clock-bounded by
+    /// [`http::MAX_REQUEST_TIME`], so a byte-at-a-time trickler cannot
+    /// pin a connection indefinitely.)
     pub read_timeout: Duration,
+    /// Directory for the persistent DP-table store (`solver::persist`).
+    /// `None` disables the disk tier: tables then live only in the
+    /// in-process LRU and die with the daemon.
+    pub table_dir: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -69,6 +82,7 @@ impl Default for ServiceConfig {
             queue_depth: 64,
             slots: DEFAULT_SLOTS,
             read_timeout: Duration::from_secs(30),
+            table_dir: None,
         }
     }
 }
@@ -83,54 +97,22 @@ pub struct ServiceState {
     pub started: Instant,
 }
 
-/// Socket clones of every live connection, so shutdown can unblock
-/// workers parked in a keep-alive read instead of waiting out the idle
-/// timeout.
-#[derive(Default)]
-struct ConnRegistry {
-    conns: Mutex<Vec<(u64, TcpStream)>>,
-    next_id: AtomicU64,
-}
-
-impl ConnRegistry {
-    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<(u64, TcpStream)>> {
-        self.conns.lock().unwrap_or_else(|p| p.into_inner())
-    }
-
-    fn register(&self, stream: &TcpStream) -> u64 {
-        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        if let Ok(clone) = stream.try_clone() {
-            self.lock().push((id, clone));
-        }
-        id
-    }
-
-    fn deregister(&self, id: u64) {
-        self.lock().retain(|(i, _)| *i != id);
-    }
-
-    fn shutdown_all(&self) {
-        for (_, stream) in self.lock().iter() {
-            // Read only: wakes workers parked on a keep-alive read while
-            // letting a worker mid-request still write its response
-            let _ = stream.shutdown(Shutdown::Read);
-        }
-    }
-}
-
 /// A running daemon. Dropping it (or calling [`Server::stop`]) shuts the
-/// accept loop down and joins every worker.
+/// event loop down and joins every thread.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept: Option<JoinHandle<()>>,
+    event: Option<JoinHandle<()>>,
     state: Arc<ServiceState>,
-    registry: Arc<ConnRegistry>,
+    shared: Arc<event_loop::Shared>,
 }
 
 /// Bind and start serving in background threads; returns once the
 /// listener is live (requests can be sent immediately).
 pub fn serve(cfg: ServiceConfig) -> Result<Server> {
+    // the disk tier is planner-global (one process, one planner cache):
+    // configure it before the first request can race a table build
+    crate::solver::set_table_dir(cfg.table_dir.clone());
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding planning service to {}", cfg.addr))?;
     let addr = listener.local_addr().context("reading bound address")?;
@@ -140,49 +122,36 @@ pub fn serve(cfg: ServiceConfig) -> Result<Server> {
         started: Instant::now(),
     });
     let stop = Arc::new(AtomicBool::new(false));
-    let registry = Arc::new(ConnRegistry::default());
 
-    let accept = {
+    let workers = if cfg.workers == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        cfg.workers
+    };
+    let pool = pool::ThreadPool::new("chainckpt-http", workers, cfg.queue_depth)
+        .context("spawning the worker pool")?;
+    // self-pipe: workers (and shutdown) interrupt the event thread's poll
+    let (wake_tx, wake_rx) =
+        UnixStream::pair().context("creating the event-loop wake pipe")?;
+    let shared = Arc::new(event_loop::Shared::new(wake_tx));
+
+    let event = {
         let state = Arc::clone(&state);
         let stop = Arc::clone(&stop);
-        let registry = Arc::clone(&registry);
-        let workers = if cfg.workers == 0 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
-        } else {
-            cfg.workers
-        };
-        let queue_depth = cfg.queue_depth;
+        let shared = Arc::clone(&shared);
         let read_timeout = cfg.read_timeout;
         std::thread::Builder::new()
-            .name("chainckpt-accept".to_string())
+            .name("chainckpt-eventloop".to_string())
             .spawn(move || {
-                // the pool lives (and dies) with the accept loop: dropping
-                // it at the end drains queued connections and joins workers
-                let pool = pool::ThreadPool::new("chainckpt-http", workers, queue_depth);
-                for conn in listener.incoming() {
-                    if stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else {
-                        // e.g. EMFILE under fd exhaustion: back off instead
-                        // of spinning the accept thread at 100% CPU
-                        std::thread::sleep(Duration::from_millis(50));
-                        continue;
-                    };
-                    let state = Arc::clone(&state);
-                    let stop = Arc::clone(&stop);
-                    let registry = Arc::clone(&registry);
-                    pool.execute(move || {
-                        let id = registry.register(&stream);
-                        handle_connection(stream, &state, read_timeout, &stop);
-                        registry.deregister(id);
-                    });
-                }
+                // the pool lives (and dies) with the event loop: run()
+                // drops it on exit, draining queued jobs and joining
+                // workers
+                event_loop::run(listener, pool, state, shared, wake_rx, read_timeout, stop);
             })
-            .context("spawning the accept thread")?
+            .context("spawning the event-loop thread")?
     };
 
-    Ok(Server { addr, stop, accept: Some(accept), state, registry })
+    Ok(Server { addr, stop, event: Some(event), state, shared })
 }
 
 impl Server {
@@ -199,7 +168,7 @@ impl Server {
     /// Block the calling thread for the daemon's lifetime (the `serve`
     /// subcommand's foreground mode).
     pub fn join(mut self) {
-        if let Some(handle) = self.accept.take() {
+        if let Some(handle) = self.event.take() {
             let _ = handle.join();
         }
     }
@@ -213,11 +182,10 @@ impl Server {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
         }
-        // unblock workers parked on keep-alive reads (no waiting out the
-        // idle timeout), then the accept loop with a throwaway connection
-        self.registry.shutdown_all();
-        let _ = TcpStream::connect(self.addr);
-        if let Some(handle) = self.accept.take() {
+        // interrupt the poll; the loop then stops accepting, delivers
+        // in-flight responses (bounded grace), and exits
+        self.shared.wake();
+        if let Some(handle) = self.event.take() {
             let _ = handle.join();
         }
     }
@@ -229,44 +197,6 @@ impl Drop for Server {
     }
 }
 
-/// Serve one connection: HTTP/1.1 keep-alive loop until the peer closes,
-/// errs, times out idle, asks for `Connection: close`, or the daemon
-/// shuts down (which also force-closes the socket via the registry).
-fn handle_connection(
-    stream: TcpStream,
-    state: &ServiceState,
-    read_timeout: Duration,
-    stop: &AtomicBool,
-) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(read_timeout));
-    let mut reader = BufReader::new(stream);
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return; // draining: close instead of starting another read
-        }
-        let req = match http::read_request(&mut reader) {
-            Ok(req) => req,
-            Err(http::RecvError::Closed) => return,
-            Err(http::RecvError::Malformed(msg)) => {
-                let resp = http::Response::error(400, format!("malformed request: {msg}"));
-                let _ = resp.write_to(reader.get_mut(), false);
-                return;
-            }
-            Err(http::RecvError::TooLarge(msg)) => {
-                let resp = http::Response::error(413, msg);
-                let _ = resp.write_to(reader.get_mut(), false);
-                return;
-            }
-        };
-        let keep_alive = req.keep_alive();
-        let resp = routes::handle(&req, state);
-        if resp.write_to(reader.get_mut(), keep_alive).is_err() || !keep_alive {
-            return;
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,7 +204,7 @@ mod tests {
 
     /// End-to-end smoke entirely in unit-test scope: bind an ephemeral
     /// port, one request, clean shutdown. (The full protocol matrix lives
-    /// in `tests/service_integration.rs`.)
+    /// in `tests/service_integration.rs` and `tests/service_event_loop.rs`.)
     #[test]
     fn serve_healthz_and_shutdown() {
         let server = serve(ServiceConfig {
@@ -289,9 +219,9 @@ mod tests {
         let v = Value::parse(&body).unwrap();
         assert_eq!(v.get("ok"), Some(&Value::Bool(true)));
         assert_eq!(server.state().stats.total(), 1);
-        // stop with the keep-alive connection still open: the registry
-        // force-closes the socket, so this returns promptly instead of
-        // waiting out the 30 s idle read timeout
+        // stop with the keep-alive connection still open: the event loop
+        // drops idle connections immediately on stop, so this returns
+        // promptly instead of waiting out the 30 s idle timeout
         let t0 = std::time::Instant::now();
         server.stop();
         assert!(

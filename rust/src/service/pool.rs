@@ -2,18 +2,22 @@
 //! tokio/rayon offline; plain `std::thread` + `mpsc::sync_channel`, the
 //! same no-dependency threading discipline as `solver::planner::sweep`).
 //!
-//! The queue is *bounded*: when every worker is busy and the backlog is
-//! full, [`ThreadPool::execute`] blocks the submitting thread (the accept
-//! loop), which is exactly the backpressure a loopback daemon wants —
-//! the kernel's listen backlog holds new connections instead of this
-//! process buffering unbounded closures.
+//! The queue is *bounded*, and callers choose their backpressure:
+//! [`ThreadPool::execute`] blocks the submitting thread until a slot
+//! frees (the original accept-loop discipline), while
+//! [`ThreadPool::try_execute`] hands the job straight back on a full
+//! queue — the shape the event loop needs, since it must never block
+//! its readiness thread on worker availability.
 
+use std::io;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+/// A unit of work for the pool — boxed so submitters can hand jobs back
+/// and forth (see [`ThreadPool::try_execute`]).
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
 
 pub struct ThreadPool {
     /// `None` once the pool is shutting down (drop closes the channel).
@@ -23,20 +27,30 @@ pub struct ThreadPool {
 
 impl ThreadPool {
     /// Spawn `workers` threads consuming from a queue of `queue_depth`
-    /// pending jobs. Worker counts are clamped to ≥ 1.
-    pub fn new(name: &str, workers: usize, queue_depth: usize) -> ThreadPool {
+    /// pending jobs. Worker counts are clamped to ≥ 1. Fails only when
+    /// the OS refuses to spawn a thread; already-spawned workers are
+    /// joined on the way out (the channel closes with the partial pool).
+    pub fn new(name: &str, workers: usize, queue_depth: usize) -> io::Result<ThreadPool> {
         let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
-        let workers = (0..workers.max(1))
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("{name}-{i}"))
-                    .spawn(move || worker_loop(&rx))
-                    .expect("spawning a pool worker thread")
-            })
-            .collect();
-        ThreadPool { tx: Some(tx), workers }
+        let mut handles = Vec::with_capacity(workers.max(1));
+        for i in 0..workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let spawned = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || worker_loop(&rx));
+            match spawned {
+                Ok(handle) => handles.push(handle),
+                Err(e) => {
+                    drop(tx); // close the channel so partial workers exit
+                    for handle in handles {
+                        let _ = handle.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ThreadPool { tx: Some(tx), workers: handles })
     }
 
     /// Number of worker threads.
@@ -50,6 +64,16 @@ impl ThreadPool {
             // send only fails if every worker died, which `worker_loop`
             // prevents by catching job panics; drop the job in that case
             let _ = tx.send(Box::new(job));
+        }
+    }
+
+    /// Submit a job without blocking: on a full queue (or a shut-down
+    /// pool) the job comes back as `Err` so the caller can retry later.
+    pub fn try_execute(&self, job: Job) -> Result<(), Job> {
+        let Some(tx) = &self.tx else { return Err(job) };
+        match tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => Err(job),
         }
     }
 }
@@ -96,11 +120,15 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::time::Duration;
 
+    fn pool(name: &str, workers: usize, depth: usize) -> ThreadPool {
+        ThreadPool::new(name, workers, depth).expect("spawning test pool")
+    }
+
     #[test]
     fn runs_all_jobs_across_workers() {
         let counter = Arc::new(AtomicUsize::new(0));
         {
-            let pool = ThreadPool::new("t", 4, 2);
+            let pool = pool("t", 4, 2);
             assert_eq!(pool.workers(), 4);
             for _ in 0..64 {
                 let counter = Arc::clone(&counter);
@@ -117,7 +145,7 @@ mod tests {
     fn a_panicking_job_does_not_kill_the_pool() {
         let counter = Arc::new(AtomicUsize::new(0));
         {
-            let pool = ThreadPool::new("t", 1, 4);
+            let pool = pool("t", 1, 4);
             pool.execute(|| panic!("boom"));
             // give the lone worker time to survive the panic
             std::thread::sleep(Duration::from_millis(20));
@@ -131,7 +159,7 @@ mod tests {
 
     #[test]
     fn zero_workers_clamps_to_one() {
-        let pool = ThreadPool::new("t", 0, 0);
+        let pool = pool("t", 0, 0);
         assert_eq!(pool.workers(), 1);
         let done = Arc::new(AtomicUsize::new(0));
         let d = Arc::clone(&done);
@@ -140,5 +168,50 @@ mod tests {
         });
         drop(pool);
         assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn try_execute_returns_the_job_when_the_queue_is_full() {
+        let gate = Arc::new(AtomicUsize::new(0));
+        let pool = pool("t", 1, 1);
+        // occupy the lone worker…
+        let g = Arc::clone(&gate);
+        pool.execute(move || {
+            while g.load(Ordering::SeqCst) == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        // …and fill the 1-slot queue (may need a beat for the worker to
+        // pick up the first job)
+        let mut queued = false;
+        for _ in 0..100 {
+            if pool.try_execute(Box::new(|| {})).is_ok() {
+                queued = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(queued, "queue slot never freed");
+        // now both worker and queue are busy: the job must come back
+        let ran = Arc::new(AtomicUsize::new(0));
+        let r = Arc::clone(&ran);
+        let job: Job = Box::new(move || {
+            r.fetch_add(1, Ordering::SeqCst);
+        });
+        let job = pool.try_execute(job).expect_err("full queue must reject");
+        gate.store(1, Ordering::SeqCst); // release the worker
+        // the returned job is still runnable — resubmit until it lands
+        let mut job = Some(job);
+        for _ in 0..1000 {
+            match pool.try_execute(job.take().expect("job present")) {
+                Ok(()) => break,
+                Err(back) => {
+                    job = Some(back);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        drop(pool);
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "returned job must run when resubmitted");
     }
 }

@@ -7,6 +7,7 @@
 //! | `POST /simulate` | chain + op sequence → simulator peak/cost verdict   |
 //! | `POST /lower`    | chain + budget (or op sequence) → lowered plan:     |
 //! |                  | slot table, arena size, plan-time peak              |
+//! | `POST /prewarm`  | admin: pre-fill the table cache (and disk store)    |
 //! | `GET  /chains`   | built-in profiles and native presets, by name       |
 //! | `GET  /stats`    | request counters, latency percentiles, cache stats  |
 //! | `GET  /metrics`  | Prometheus text exposition of the process registry  |
@@ -33,7 +34,7 @@ use crate::api::{
 use crate::backend::native::presets;
 use crate::chain::profiles;
 use crate::simulator::simulate;
-use crate::solver::{cache_stats, Schedule, StrategyKind};
+use crate::solver::{cache_stats, Mode, Schedule, StrategyKind};
 use crate::telemetry::{self, Counter, Window};
 use crate::util::json::{obj, Value};
 
@@ -52,6 +53,7 @@ const ROUTES: &[(&str, &str, &str)] = &[
     ("POST", "/sweep", "sweep"),
     ("POST", "/simulate", "simulate"),
     ("POST", "/lower", "lower"),
+    ("POST", "/prewarm", "prewarm"),
     ("GET", "/chains", "chains"),
     ("GET", "/stats", "stats"),
     ("GET", "/metrics", "metrics"),
@@ -74,6 +76,7 @@ fn dispatch(req: &Request, state: &ServiceState) -> (&'static str, Response) {
         "sweep" => with_json_body(req, |body| sweep(body, state)),
         "simulate" => with_json_body(req, |body| simulate_ops(body)),
         "lower" => with_json_body(req, |body| lower(body, state)),
+        "prewarm" => with_json_body(req, |body| prewarm(body, state)),
         "chains" => ok(chains()),
         "stats" => ok(stats(state)),
         "metrics" => Response::text(200, telemetry::registry().prometheus_text()),
@@ -362,6 +365,93 @@ fn lower(body: &Value, state: &ServiceState) -> Result<Value> {
 }
 
 // ---------------------------------------------------------------------------
+// POST /prewarm
+// ---------------------------------------------------------------------------
+
+/// Chains a prewarm sweep may enumerate in one request; each one costs a
+/// DP fill per strategy, so the cap keeps an admin typo from queueing
+/// hours of work.
+const MAX_PREWARM_CHAINS: usize = 64;
+
+/// Admin endpoint: solve the DP for a catalog of chains *now*, at each
+/// chain's store-all top budget, so later traffic — and, with a
+/// `--table-dir`, later *processes* — hits the table cache instead of
+/// paying the fill. `{}` prewarms every native preset under both
+/// strategies; `"chains"` (array of chain specs), `"slots"`, and
+/// `"strategy"` narrow the sweep.
+fn prewarm(body: &Value, state: &ServiceState) -> Result<Value> {
+    let slots = wire::parse_slots(body, state.slots)?;
+    let modes: Vec<Mode> = if body.get("strategy").is_some() {
+        vec![wire::parse_mode(body)?]
+    } else {
+        vec![Mode::Full, Mode::AdRevolve]
+    };
+    let specs: Vec<ChainSpec> = match body.get("chains") {
+        None => presets::NAMES.iter().map(|&name| ChainSpec::preset(name)).collect(),
+        Some(Value::Arr(items)) => {
+            if items.len() > MAX_PREWARM_CHAINS {
+                return Err(Error::invalid(format!(
+                    "'chains' lists {} entries; the prewarm cap is {MAX_PREWARM_CHAINS}",
+                    items.len()
+                )));
+            }
+            items.iter().map(ChainSpec::from_json).collect::<Result<_>>()?
+        }
+        Some(other) => {
+            return Err(Error::invalid(format!(
+                "'chains' must be an array of chain specs, got {}",
+                other.to_json_string()
+            )))
+        }
+    };
+
+    let mut entries = Vec::new();
+    let mut warmed = 0u64;
+    for spec in &specs {
+        for &mode in &modes {
+            let strategy = match mode {
+                Mode::Full => "optimal",
+                Mode::AdRevolve => "revolve",
+            };
+            let mut entry = BTreeMap::new();
+            entry.insert("strategy".to_string(), Value::from(strategy));
+            entry.insert("slots".to_string(), Value::from(slots));
+            // top budget = the chain's store-all peak + resident input:
+            // the largest budget any sweep can ask, so the one table
+            // answers everything below it
+            let outcome = spec.resolve().and_then(|chain| {
+                let top = MemBytes::new(chain.store_all_memory() + chain.wa0);
+                entry.insert("chain".to_string(), Value::from(chain.name.clone()));
+                entry.insert("top_budget".to_string(), Value::from(top.get()));
+                PlanRequest::new(spec.clone(), top).slots(slots).mode(mode).plan()
+            });
+            match outcome {
+                Ok(_) => {
+                    warmed += 1;
+                    entry.insert("ok".to_string(), Value::Bool(true));
+                }
+                Err(e) => {
+                    entry.insert("ok".to_string(), Value::Bool(false));
+                    entry.insert("error".to_string(), Value::from(format!("{e:#}")));
+                }
+            }
+            entries.push(Value::Obj(entry));
+        }
+    }
+    Ok(obj([
+        ("warmed", Value::from(warmed)),
+        ("entries", Value::Arr(entries)),
+        (
+            "table_dir",
+            match crate::solver::table_dir() {
+                Some(dir) => Value::from(dir.display().to_string()),
+                None => Value::Null,
+            },
+        ),
+    ]))
+}
+
+// ---------------------------------------------------------------------------
 // GET /chains
 // ---------------------------------------------------------------------------
 
@@ -441,11 +531,12 @@ const LATENCY_WINDOW: usize = 4096;
 
 /// Every counter label `record` can be called with: the route labels of
 /// [`ROUTES`] plus the two rejection labels dispatch can return.
-const STAT_LABELS: [&str; 10] = [
+const STAT_LABELS: [&str; 11] = [
     "solve",
     "sweep",
     "simulate",
     "lower",
+    "prewarm",
     "chains",
     "stats",
     "metrics",

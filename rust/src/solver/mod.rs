@@ -22,6 +22,7 @@
 mod exhaustive;
 mod optimal;
 mod periodic;
+pub mod persist;
 pub mod planner;
 mod sequence;
 mod store_all;
@@ -33,7 +34,9 @@ pub use optimal::{
     Mode, MAX_TABLE_BYTES,
 };
 pub use periodic::{paper_segment_sweep, periodic_schedule, segment_bounds};
-pub use planner::{cache_stats, clear_cache, Planner, PlannerCacheStats};
+pub use planner::{
+    cache_stats, clear_cache, set_table_dir, table_dir, Planner, PlannerCacheStats,
+};
 pub use sequence::{Op, Schedule, StrategyKind};
 pub use store_all::store_all_schedule;
 

@@ -79,6 +79,28 @@ const RUN_BYTES: u128 = 4 + 8 + 2;
 /// summary pair the dominance prune reads.
 const ROW_BYTES: u128 = 8 + 4 + 8;
 
+/// Checked narrowing for values on the u32 slot/stage axes. Every call
+/// site is bounded by construction — [`DpTable::preflight`] caps stages
+/// at `u16::MAX` and slot budgets live on a `u32` axis — so a failure
+/// here is a solver invariant violation, not an input error.
+#[inline]
+fn idx32(v: u64) -> u32 {
+    u32::try_from(v).unwrap_or_else(|_| panic!("index {v} exceeds the u32 slot/stage axis"))
+}
+
+/// Checked narrowing for stage indices (`≤ u16::MAX` per `preflight`).
+#[inline]
+fn stage32(s: usize) -> u32 {
+    idx32(s as u64)
+}
+
+/// Checked narrowing for the u16 split encoding (`k = s' − s + 1 ≤ n`).
+#[inline]
+fn split16(k: usize) -> u16 {
+    u16::try_from(k)
+        .unwrap_or_else(|_| panic!("split code {k} exceeds the u16 encoding preflight admits"))
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// Full model of the paper (both branches).
@@ -108,17 +130,17 @@ pub enum Decision {
 /// `row_start[cell]..row_start[cell+1]` bounds a row's runs; cells are
 /// numbered in fill order (diagonal `d = t−s` ascending, then `s`
 /// ascending), which makes the parallel fill's write-back a plain append.
-struct FrontierStore {
-    n: usize,
+pub(crate) struct FrontierStore {
+    pub(crate) n: usize,
     /// Arena offsets; `cells + 1` entries once the fill completes.
-    row_start: Vec<u64>,
-    ms: Vec<u32>,
-    costs: Vec<f64>,
-    decs: Vec<u16>,
+    pub(crate) row_start: Vec<u64>,
+    pub(crate) ms: Vec<u32>,
+    pub(crate) costs: Vec<f64>,
+    pub(crate) decs: Vec<u16>,
     /// Per-row summaries for the O(1) dominance prune: first feasible slot
     /// (`u32::MAX` when the row is empty) and minimum (= rightmost) cost.
-    row_first_m: Vec<u32>,
-    row_min_cost: Vec<f64>,
+    pub(crate) row_first_m: Vec<u32>,
+    pub(crate) row_min_cost: Vec<f64>,
 }
 
 /// A borrowed view of one row's runs.
@@ -230,11 +252,11 @@ impl FrontierStore {
 
 /// The pre-PR dense layout: one f64 + u16 per `(s, t, m)`, kept as the
 /// executable specification the compressed fill is verified against.
-struct DenseStore {
-    n: usize,
-    slots: usize,
-    cost: Vec<f64>,
-    dec: Vec<u16>,
+pub(crate) struct DenseStore {
+    pub(crate) n: usize,
+    pub(crate) slots: usize,
+    pub(crate) cost: Vec<f64>,
+    pub(crate) dec: Vec<u16>,
 }
 
 impl DenseStore {
@@ -435,6 +457,35 @@ impl DpTable {
         reconstruct(self, dc, 1, self.n, m, &mut ops);
         Some(ops)
     }
+
+    // -- internal store access for the on-disk persistence layer
+    //    (`super::persist`); not part of the public API -----------------
+
+    pub(crate) fn store_frontier(&self) -> Option<&FrontierStore> {
+        match &self.store {
+            Store::Frontier(f) => Some(f),
+            Store::Dense(_) => None,
+        }
+    }
+
+    pub(crate) fn store_dense(&self) -> Option<&DenseStore> {
+        match &self.store {
+            Store::Dense(d) => Some(d),
+            Store::Frontier(_) => None,
+        }
+    }
+
+    /// Rebuild a table from a deserialized frontier store. The caller
+    /// (the persist layer) has already validated structural invariants
+    /// and the checksum; `n`/`slots` must match the store's geometry.
+    pub(crate) fn from_frontier(n: usize, slots: usize, store: FrontierStore) -> DpTable {
+        DpTable { n, slots, store: Store::Frontier(store) }
+    }
+
+    /// Rebuild a table from a deserialized dense store.
+    pub(crate) fn from_dense(n: usize, slots: usize, store: DenseStore) -> DpTable {
+        DpTable { n, slots, store: Store::Dense(store) }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -502,7 +553,7 @@ pub fn try_solve_table_with_workers(
     // a single run (or an empty, everywhere-infeasible row).
     for s in 1..=n {
         let need = peaks.m_all(s, s);
-        if need <= slots as u32 {
+        if u64::from(need) <= slots as u64 {
             store.append_row(&[need], &[dc.uf_s(s) + dc.ub_s(s)], &[DEC_ALL])?;
         } else {
             store.append_row(&[], &[], &[])?;
@@ -663,7 +714,7 @@ fn fill_chunk(
     };
     for &t in ts {
         fill_cell(store, dc, peaks, uf_prefix, t - d, t, mode, &mut scratch);
-        out.lens.push(scratch.best.ms.len() as u32);
+        out.lens.push(idx32(scratch.best.ms.len() as u64));
         out.ms.extend_from_slice(&scratch.best.ms);
         out.costs.extend_from_slice(&scratch.best.costs);
         out.decs.extend_from_slice(&scratch.best.decs);
@@ -689,7 +740,7 @@ fn fill_cell(
     mode: Mode,
     scratch: &mut Scratch,
 ) {
-    let slots = dc.slots as u32;
+    let slots = dc.slots as u64;
     scratch.best.clear();
 
     // C1: Fck^s, F∅^{s+1..s'-1}, recurse (s',t) with m−ω_a^{s'-1} and
@@ -704,10 +755,10 @@ fn fill_cell(
             .max(hold as u64)
             .max(store.first_m(s, sp - 1) as u64)
             .max(store.first_m(sp, t) as u64 + hold as u64);
-        if start > slots as u64 {
+        if start > slots {
             continue;
         }
-        let start = start as u32;
+        let start = idx32(start);
         let pre = uf_prefix[sp - 1] - uf_prefix[s - 1];
         // dominance: the candidate can never drop below this bound (same
         // float association as the reference fill; f64 add is monotone),
@@ -734,7 +785,7 @@ fn fill_cell(
                 u64::MAX
             };
             let nxt = nl.min(nr);
-            if nxt > slots as u64 {
+            if nxt > slots {
                 break;
             }
             if nl == nxt {
@@ -743,9 +794,9 @@ fn fill_cell(
             if nr == nxt {
                 ri += 1;
             }
-            m = nxt as u32;
+            m = idx32(nxt);
         }
-        merge_candidate(&mut scratch.best, &mut scratch.out, &scratch.cand, (sp - s + 1) as u16);
+        merge_candidate(&mut scratch.best, &mut scratch.out, &scratch.cand, split16(sp - s + 1));
     }
 
     // C2: Fall^s, recurse (s+1,t) with m−ω_ā^s, B^s. (Absent in AD mode.)
@@ -754,8 +805,8 @@ fn fill_cell(
         let start = (peaks.m_all(s, t) as u64)
             .max(habar as u64)
             .max(store.first_m(s + 1, t) as u64 + habar as u64);
-        if start <= slots as u64 {
-            let start = start as u32;
+        if start <= slots {
+            let start = idx32(start);
             let fixed = dc.uf_s(s) + dc.ub_s(s);
             let cand_min = fixed + store.min_cost(s + 1, t);
             if !(cand_min < scratch.best.eval(start)) {
@@ -771,11 +822,11 @@ fn fill_cell(
                         break;
                     }
                     let nxt = mid.ms[mi + 1] as u64 + habar as u64;
-                    if nxt > slots as u64 {
+                    if nxt > slots {
                         break;
                     }
                     mi += 1;
-                    m = nxt as u32;
+                    m = idx32(nxt);
                 }
                 merge_candidate(&mut scratch.best, &mut scratch.out, &scratch.cand, DEC_ALL);
             }
@@ -823,7 +874,7 @@ fn merge_candidate(best: &mut RowBuf, out: &mut RowBuf, cand: &CandBuf, code: u1
         if nc == nxt {
             ci += 1;
         }
-        m = nxt as u32;
+        m = idx32(nxt);
     }
     std::mem::swap(best, out);
 }
@@ -864,7 +915,7 @@ pub fn solve_table_dense_with_workers(
     for s in 1..=n {
         let need = m_all(dc, s, s);
         let cost = dc.uf_s(s) + dc.ub_s(s);
-        for m in 0..=slots as u32 {
+        for m in 0..=idx32(slots as u64) {
             if m >= need {
                 store.set(s, s, m, cost, DEC_ALL);
             }
@@ -932,7 +983,7 @@ fn fill_cell_dense(
         let pre = uf_prefix[sp - 1] - uf_prefix[s - 1];
         let left = store.row(s, sp - 1);
         let right = store.row(sp, t);
-        let code = (sp - s + 1) as u16;
+        let code = split16(sp - s + 1);
         let start = m_nosave.max(hold);
         if start > slots {
             continue;
@@ -1020,19 +1071,19 @@ pub(crate) fn reconstruct(
         match tab.dec_code(s, t, m) {
             DEC_INFEASIBLE => unreachable!("reconstruct called on infeasible cell"),
             DEC_ALL if s == t => {
-                ops.push(Op::FwdAll(s as u32));
-                ops.push(Op::Bwd(s as u32));
+                ops.push(Op::FwdAll(stage32(s)));
+                ops.push(Op::Bwd(stage32(s)));
             }
             DEC_ALL => {
-                ops.push(Op::FwdAll(s as u32));
-                stack.push(Task::Emit(Op::Bwd(s as u32)));
+                ops.push(Op::FwdAll(stage32(s)));
+                stack.push(Task::Emit(Op::Bwd(stage32(s))));
                 stack.push(Task::Cell { s: s + 1, t, m: m - dc.wabar_s(s) });
             }
             k => {
                 let sp = s + (k as usize - 1);
-                ops.push(Op::FwdCk(s as u32));
+                ops.push(Op::FwdCk(stage32(s)));
                 for j in (s + 1)..sp {
-                    ops.push(Op::FwdNoSave(j as u32));
+                    ops.push(Op::FwdNoSave(stage32(j)));
                 }
                 // LIFO: the (s', t) sub-problem runs first, then (s, s'-1)
                 stack.push(Task::Cell { s, t: sp - 1, m });

@@ -17,6 +17,14 @@
 use super::sequence::{Op, Schedule, StrategyKind};
 use crate::chain::Chain;
 
+/// A 1-based stage index in the op alphabet's `u32`. Chain lengths are
+/// validated to a few thousand stages at construction, so the conversion
+/// only fails on a corrupted length — surfaced as a panic naming it.
+#[inline]
+fn stage32(i: usize) -> u32 {
+    u32::try_from(i).unwrap_or_else(|_| panic!("stage index {i} exceeds the u32 op alphabet"))
+}
+
 /// Balanced segment boundaries: `k` contiguous segments covering `1..=l`.
 /// Returns `(start, end)` pairs, 1-based inclusive.
 pub fn segment_bounds(l: usize, k: usize) -> Vec<(usize, usize)> {
@@ -46,31 +54,31 @@ pub fn periodic_schedule(chain: &Chain, segments: usize) -> Schedule {
     // Forward phase: checkpoint heads of segments 1..k-1, tape the last.
     for (i, &(b, e)) in bounds.iter().enumerate() {
         if i + 1 < k {
-            ops.push(Op::FwdCk(b as u32));
+            ops.push(Op::FwdCk(stage32(b)));
             for j in (b + 1)..=e {
-                ops.push(Op::FwdNoSave(j as u32));
+                ops.push(Op::FwdNoSave(stage32(j)));
             }
         } else {
             for j in b..=e {
-                ops.push(Op::FwdAll(j as u32));
+                ops.push(Op::FwdAll(stage32(j)));
             }
         }
     }
     // Loss stage: tape + backward.
-    ops.push(Op::FwdAll(n as u32));
-    ops.push(Op::Bwd(n as u32));
+    ops.push(Op::FwdAll(stage32(n)));
+    ops.push(Op::Bwd(stage32(n)));
     // Backward of the last (already taped) segment.
     let (bk, ek) = bounds[k - 1];
     for j in (bk..=ek).rev() {
-        ops.push(Op::Bwd(j as u32));
+        ops.push(Op::Bwd(stage32(j)));
     }
     // Earlier segments: re-run with taping from the stored input, then backward.
     for &(b, e) in bounds[..k - 1].iter().rev() {
         for j in b..=e {
-            ops.push(Op::FwdAll(j as u32));
+            ops.push(Op::FwdAll(stage32(j)));
         }
         for j in (b..=e).rev() {
-            ops.push(Op::Bwd(j as u32));
+            ops.push(Op::Bwd(stage32(j)));
         }
     }
 

@@ -1,0 +1,591 @@
+//! On-disk persistence for solved DP tables — the planner cache's second
+//! tier.
+//!
+//! Theorem 1's operational property is that one solved table answers
+//! *every* budget at or below its top, so the expensive artifact of the
+//! planning service is the table, not the query. This module makes that
+//! artifact durable: a solved [`DpTable`] (frontier-compressed or dense)
+//! round-trips through a versioned, fingerprint-keyed, checksummed binary
+//! file, so restarts and horizontally-scaled replicas answer sweeps
+//! without re-filling the DP.
+//!
+//! # File format (version 1, all little-endian)
+//!
+//! ```text
+//! magic            8 B   b"CKPTDPT\0"
+//! format version   u32   FORMAT_VERSION
+//! mode             u8    0 = Full, 1 = AdRevolve
+//! store kind       u8    0 = frontier-compressed, 1 = dense
+//! padding          u16   zero
+//! fingerprint      u64   planner cache key (chain timings/sizes + slots + mode)
+//! n                u64   stages covered
+//! slots            u64   top of the slot axis
+//! payload len      u64   bytes of payload that follow
+//! payload          …     store arrays, length-prefixed (see below)
+//! checksum         u64   FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! The loader rejects — with a kind-tagged [`StoreError`], never a panic
+//! or a silently wrong table — any file that is truncated, carries the
+//! wrong magic or a stale format version, fails the checksum, or whose
+//! fingerprint/mode disagree with what the planner asked for. Structural
+//! invariants of the deserialized arrays (row offsets monotone, run
+//! starts strictly increasing and on the slot axis, array lengths
+//! consistent with the triangular cell count) are re-validated after the
+//! checksum so even an adversarially consistent file cannot induce
+//! out-of-bounds lookups.
+//!
+//! Writes go through a temporary file in the same directory followed by
+//! an atomic rename, so a crash mid-write never leaves a half-table
+//! where the loader would find it.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::optimal::{DenseStore, DpTable, FrontierStore, Mode};
+
+/// Bump on any incompatible change to the byte layout; stale files are
+/// rejected with [`StoreErrorKind::BadVersion`] and rebuilt.
+pub const FORMAT_VERSION: u32 = 1;
+
+const MAGIC: [u8; 8] = *b"CKPTDPT\0";
+/// Fixed-size header: magic + version + mode + kind + pad + fingerprint
+/// + n + slots + payload length.
+const HEADER_BYTES: usize = 8 + 4 + 1 + 1 + 2 + 8 + 8 + 8 + 8;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Why a table file could not be read or written. Load failures are
+/// always recoverable — the planner falls back to a fresh DP fill — but
+/// the kind keeps telemetry and logs precise about *why* the store
+/// missed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreErrorKind {
+    /// Filesystem error (open/read/write/rename).
+    Io,
+    /// The file does not start with the table-store magic.
+    BadMagic,
+    /// The file's format version is not [`FORMAT_VERSION`].
+    BadVersion,
+    /// The file ends before its declared payload/checksum.
+    Truncated,
+    /// The trailing FNV-1a checksum does not match the bytes.
+    BadChecksum,
+    /// Fingerprint or mode in the header disagree with the request.
+    Mismatch,
+    /// Checksummed but structurally inconsistent payload.
+    Corrupt,
+}
+
+impl StoreErrorKind {
+    /// Stable snake_case tag (telemetry labels, log lines, tests).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StoreErrorKind::Io => "io",
+            StoreErrorKind::BadMagic => "bad_magic",
+            StoreErrorKind::BadVersion => "bad_version",
+            StoreErrorKind::Truncated => "truncated",
+            StoreErrorKind::BadChecksum => "bad_checksum",
+            StoreErrorKind::Mismatch => "mismatch",
+            StoreErrorKind::Corrupt => "corrupt",
+        }
+    }
+}
+
+/// A kind-tagged table-store error.
+#[derive(Debug)]
+pub struct StoreError {
+    kind: StoreErrorKind,
+    msg: String,
+}
+
+impl StoreError {
+    fn new(kind: StoreErrorKind, msg: impl Into<String>) -> StoreError {
+        StoreError { kind, msg: msg.into() }
+    }
+
+    pub fn kind(&self) -> StoreErrorKind {
+        self.kind
+    }
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "table store [{}]: {}", self.kind.as_str(), self.msg)
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+type StoreResult<T> = Result<T, StoreError>;
+
+// ---------------------------------------------------------------------------
+// Checksum: FNV-1a 64 (std-only, stable, fast enough for tens of MB)
+// ---------------------------------------------------------------------------
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Serialization
+// ---------------------------------------------------------------------------
+
+fn mode_byte(mode: Mode) -> u8 {
+    match mode {
+        Mode::Full => 0,
+        Mode::AdRevolve => 1,
+    }
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_len(out: &mut Vec<u8>, v: usize) {
+    push_u64(out, v as u64);
+}
+
+/// The canonical file name for a fingerprint: `dp-<16 hex digits>.tbl`.
+/// The fingerprint already covers the chain's discretized
+/// timings/sizes, the slot count, and the DP mode, so one flat directory
+/// holds the whole catalog.
+pub fn table_file_name(fingerprint: u64) -> String {
+    format!("dp-{fingerprint:016x}.tbl")
+}
+
+/// Serialize `table` into the version-1 byte format.
+pub fn to_bytes(fingerprint: u64, mode: Mode, table: &DpTable) -> Vec<u8> {
+    let mut payload = Vec::new();
+    let kind: u8;
+    if let Some(f) = table.store_frontier() {
+        kind = 0;
+        push_len(&mut payload, f.row_start.len());
+        for &v in &f.row_start {
+            push_u64(&mut payload, v);
+        }
+        push_len(&mut payload, f.ms.len());
+        for &v in &f.ms {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &f.costs {
+            push_u64(&mut payload, v.to_bits());
+        }
+        for &v in &f.decs {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        push_len(&mut payload, f.row_first_m.len());
+        for &v in &f.row_first_m {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for &v in &f.row_min_cost {
+            push_u64(&mut payload, v.to_bits());
+        }
+    } else if let Some(d) = table.store_dense() {
+        kind = 1;
+        push_len(&mut payload, d.cost.len());
+        for &v in &d.cost {
+            push_u64(&mut payload, v.to_bits());
+        }
+        for &v in &d.dec {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    } else {
+        unreachable!("a DpTable is always frontier or dense");
+    }
+
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len() + 8);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.push(mode_byte(mode));
+    out.push(kind);
+    out.extend_from_slice(&0u16.to_le_bytes());
+    push_u64(&mut out, fingerprint);
+    push_len(&mut out, table.stages());
+    push_len(&mut out, table.slots());
+    push_len(&mut out, payload.len());
+    out.extend_from_slice(&payload);
+    let sum = fnv1a(&out);
+    push_u64(&mut out, sum);
+    out
+}
+
+/// Persist `table` under `dir` at its canonical file name, atomically
+/// (temp file + rename). Returns the final path.
+pub fn save(dir: &Path, fingerprint: u64, mode: Mode, table: &DpTable) -> StoreResult<PathBuf> {
+    let io_err = |what: &str| {
+        let dir = dir.display().to_string();
+        move |e: std::io::Error| StoreError::new(StoreErrorKind::Io, format!("{what} {dir}: {e}"))
+    };
+    fs::create_dir_all(dir).map_err(io_err("creating table dir"))?;
+    let bytes = to_bytes(fingerprint, mode, table);
+    let final_path = dir.join(table_file_name(fingerprint));
+    // unique-enough temp name: pid disambiguates racing processes; racing
+    // threads in one process are already serialized by the planner's
+    // single-flight build path
+    let tmp_path = dir.join(format!(".{}.{}.tmp", table_file_name(fingerprint), std::process::id()));
+    let mut f = fs::File::create(&tmp_path).map_err(io_err("creating temp table file in"))?;
+    let write_res = f.write_all(&bytes).and_then(|()| f.sync_all());
+    drop(f);
+    if let Err(e) = write_res {
+        let _ = fs::remove_file(&tmp_path);
+        return Err(StoreError::new(
+            StoreErrorKind::Io,
+            format!("writing {}: {e}", tmp_path.display()),
+        ));
+    }
+    if let Err(e) = fs::rename(&tmp_path, &final_path) {
+        let _ = fs::remove_file(&tmp_path);
+        return Err(StoreError::new(
+            StoreErrorKind::Io,
+            format!("renaming into {}: {e}", final_path.display()),
+        ));
+    }
+    Ok(final_path)
+}
+
+// ---------------------------------------------------------------------------
+// Deserialization
+// ---------------------------------------------------------------------------
+
+/// A bounds-checked little-endian reader over the payload.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> StoreResult<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.data.len()).ok_or_else(|| {
+            StoreError::new(
+                StoreErrorKind::Truncated,
+                format!(
+                    "payload ends at {} of {} needed",
+                    self.data.len(),
+                    self.pos.saturating_add(n)
+                ),
+            )
+        })?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> StoreResult<u64> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn len(&mut self, what: &str) -> StoreResult<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            StoreError::new(StoreErrorKind::Corrupt, format!("{what} length {v} exceeds usize"))
+        })
+    }
+
+    fn u64_vec(&mut self, n: usize) -> StoreResult<Vec<u64>> {
+        let b = self.take(n.checked_mul(8).ok_or_else(overflow)?)?;
+        Ok(b.chunks_exact(8)
+            .map(|c| {
+                let mut a = [0u8; 8];
+                a.copy_from_slice(c);
+                u64::from_le_bytes(a)
+            })
+            .collect())
+    }
+
+    fn f64_vec(&mut self, n: usize) -> StoreResult<Vec<f64>> {
+        Ok(self.u64_vec(n)?.into_iter().map(f64::from_bits).collect())
+    }
+
+    fn u32_vec(&mut self, n: usize) -> StoreResult<Vec<u32>> {
+        let b = self.take(n.checked_mul(4).ok_or_else(overflow)?)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(c);
+                u32::from_le_bytes(a)
+            })
+            .collect())
+    }
+
+    fn u16_vec(&mut self, n: usize) -> StoreResult<Vec<u16>> {
+        let b = self.take(n.checked_mul(2).ok_or_else(overflow)?)?;
+        Ok(b.chunks_exact(2)
+            .map(|c| {
+                let mut a = [0u8; 2];
+                a.copy_from_slice(c);
+                u16::from_le_bytes(a)
+            })
+            .collect())
+    }
+}
+
+fn overflow() -> StoreError {
+    StoreError::new(StoreErrorKind::Corrupt, "array length overflows the address space")
+}
+
+fn corrupt(msg: impl Into<String>) -> StoreError {
+    StoreError::new(StoreErrorKind::Corrupt, msg)
+}
+
+/// Parse and fully validate a version-1 table file image. `expect` pins
+/// the fingerprint and mode the caller is looking for; any header
+/// disagreement is a [`StoreErrorKind::Mismatch`].
+pub fn from_bytes(data: &[u8], expect_fingerprint: u64, expect_mode: Mode) -> StoreResult<DpTable> {
+    if data.len() < HEADER_BYTES + 8 {
+        return Err(StoreError::new(
+            StoreErrorKind::Truncated,
+            format!("{} bytes is shorter than the fixed header", data.len()),
+        ));
+    }
+    if data[..8] != MAGIC {
+        return Err(StoreError::new(StoreErrorKind::BadMagic, "not a chainckpt table file"));
+    }
+    let mut head = Cursor { data, pos: 8 };
+    let version = {
+        let b = head.take(4)?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(b);
+        u32::from_le_bytes(a)
+    };
+    if version != FORMAT_VERSION {
+        return Err(StoreError::new(
+            StoreErrorKind::BadVersion,
+            format!("format version {version}, this build reads {FORMAT_VERSION}"),
+        ));
+    }
+    let mode_b = head.take(1)?[0];
+    let kind = head.take(1)?[0];
+    let _pad = head.take(2)?;
+    let fingerprint = head.u64()?;
+    let n = head.len("stage count")?;
+    let slots = head.len("slot count")?;
+    let payload_len = head.len("payload")?;
+
+    // checksum before anything payload-shaped is interpreted
+    let declared_end = HEADER_BYTES.checked_add(payload_len).ok_or_else(overflow)?;
+    if data.len() != declared_end + 8 {
+        return Err(StoreError::new(
+            StoreErrorKind::Truncated,
+            format!("file is {} bytes, header declares {}", data.len(), declared_end + 8),
+        ));
+    }
+    let mut sum_bytes = [0u8; 8];
+    sum_bytes.copy_from_slice(&data[declared_end..]);
+    let declared_sum = u64::from_le_bytes(sum_bytes);
+    let actual_sum = fnv1a(&data[..declared_end]);
+    if declared_sum != actual_sum {
+        return Err(StoreError::new(
+            StoreErrorKind::BadChecksum,
+            format!("checksum {declared_sum:#018x} != computed {actual_sum:#018x}"),
+        ));
+    }
+
+    if fingerprint != expect_fingerprint {
+        return Err(StoreError::new(
+            StoreErrorKind::Mismatch,
+            format!("fingerprint {fingerprint:#018x}, wanted {expect_fingerprint:#018x}"),
+        ));
+    }
+    if mode_b != mode_byte(expect_mode) {
+        return Err(StoreError::new(
+            StoreErrorKind::Mismatch,
+            format!("DP mode byte {mode_b}, wanted {}", mode_byte(expect_mode)),
+        ));
+    }
+
+    // geometry must be representable before any O(cells) allocation
+    DpTable::preflight(n, slots).map_err(|e| corrupt(format!("{e:#}")))?;
+    let cells = n * (n + 1) / 2;
+    let slots_u64 = slots as u64;
+
+    let mut cur = Cursor { data: &data[HEADER_BYTES..declared_end], pos: 0 };
+    let table = match kind {
+        0 => {
+            let row_start_len = cur.len("row_start")?;
+            if row_start_len != cells + 1 {
+                return Err(corrupt(format!(
+                    "row_start has {row_start_len} entries, {n} stages need {}",
+                    cells + 1
+                )));
+            }
+            let row_start = cur.u64_vec(row_start_len)?;
+            let runs = cur.len("runs")?;
+            let ms = cur.u32_vec(runs)?;
+            let costs = cur.f64_vec(runs)?;
+            let decs = cur.u16_vec(runs)?;
+            let summaries = cur.len("row summaries")?;
+            if summaries != cells {
+                return Err(corrupt(format!(
+                    "{summaries} row summaries for {cells} cells"
+                )));
+            }
+            let row_first_m = cur.u32_vec(cells)?;
+            let row_min_cost = cur.f64_vec(cells)?;
+
+            // structural invariants: offsets bound the arena and are
+            // monotone; run starts are strictly increasing on the slot
+            // axis within every row — together these make every lookup
+            // (`runs()`, `index_at`, binary search) in-bounds and sane
+            if row_start.first() != Some(&0) {
+                return Err(corrupt("row_start[0] must be 0"));
+            }
+            if row_start.last().copied() != Some(runs as u64) {
+                return Err(corrupt("row_start must end at the arena length"));
+            }
+            for w in row_start.windows(2) {
+                if w[0] > w[1] {
+                    return Err(corrupt("row_start must be non-decreasing"));
+                }
+            }
+            for c in 0..cells {
+                let lo = usize::try_from(row_start[c]).map_err(|_| overflow())?;
+                let hi = usize::try_from(row_start[c + 1]).map_err(|_| overflow())?;
+                let row = &ms[lo..hi];
+                for w in row.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err(corrupt(format!("cell {c}: run starts must increase")));
+                    }
+                }
+                if row.iter().any(|&m| u64::from(m) > slots_u64) {
+                    return Err(corrupt(format!("cell {c}: run start beyond the slot axis")));
+                }
+            }
+
+            let store =
+                FrontierStore { n, row_start, ms, costs, decs, row_first_m, row_min_cost };
+            DpTable::from_frontier(n, slots, store)
+        }
+        1 => {
+            let want = cells.checked_mul(slots + 1).ok_or_else(overflow)?;
+            let len = cur.len("dense cells")?;
+            if len != want {
+                return Err(corrupt(format!(
+                    "dense payload has {len} cells, geometry needs {want}"
+                )));
+            }
+            let cost = cur.f64_vec(len)?;
+            let dec = cur.u16_vec(len)?;
+            DpTable::from_dense(n, slots, DenseStore { n, slots, cost, dec })
+        }
+        k => return Err(corrupt(format!("unknown store kind {k}"))),
+    };
+    if cur.pos != cur.data.len() {
+        return Err(corrupt(format!(
+            "{} trailing payload bytes after the arrays",
+            cur.data.len() - cur.pos
+        )));
+    }
+    Ok(table)
+}
+
+/// Load and validate a table file. Every failure is a kind-tagged
+/// [`StoreError`]; the planner treats all of them as a cache miss and
+/// rebuilds.
+pub fn load(path: &Path, expect_fingerprint: u64, expect_mode: Mode) -> StoreResult<DpTable> {
+    let data = fs::read(path).map_err(|e| {
+        StoreError::new(StoreErrorKind::Io, format!("reading {}: {e}", path.display()))
+    })?;
+    from_bytes(&data, expect_fingerprint, expect_mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::{Chain, DiscreteChain, Stage};
+
+    fn table() -> (DiscreteChain, DpTable) {
+        let stages = vec![
+            Stage::new("s1", 1.0, 2.0, 100, 300),
+            Stage::new("s2", 1.5, 2.5, 120, 260),
+            Stage::new("loss", 0.1, 0.1, 4, 4),
+        ];
+        let chain = Chain::new("t", stages, 100);
+        let dc = DiscreteChain::new(&chain, chain.store_all_memory() + chain.wa0, 60);
+        let tab = super::super::solve_table(&dc, Mode::Full);
+        (dc, tab)
+    }
+
+    #[test]
+    fn bytes_round_trip_bit_exact() {
+        let (dc, tab) = table();
+        let bytes = to_bytes(42, Mode::Full, &tab);
+        let back = from_bytes(&bytes, 42, Mode::Full).expect("round-trip");
+        assert_eq!(back.stages(), tab.stages());
+        assert_eq!(back.slots(), tab.slots());
+        assert_eq!(back.run_count(), tab.run_count());
+        for t in 1..=dc.len() {
+            for s in 1..=t {
+                for m in 0..=u32::try_from(dc.slots).unwrap() {
+                    assert_eq!(back.cost(s, t, m).to_bits(), tab.cost(s, t, m).to_bits());
+                    assert_eq!(back.decision(s, t, m), tab.decision(s, t, m));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_header_field_is_enforced() {
+        let (_dc, tab) = table();
+        let good = to_bytes(7, Mode::Full, &tab);
+
+        // magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert_eq!(from_bytes(&bad, 7, Mode::Full).unwrap_err().kind(), StoreErrorKind::BadMagic);
+
+        // version (re-checksum so the version check, not the checksum, fires)
+        let mut bad = good.clone();
+        bad[8] = 0xfe;
+        let sum = fnv1a(&bad[..bad.len() - 8]);
+        let at = bad.len() - 8;
+        bad[at..].copy_from_slice(&sum.to_le_bytes());
+        assert_eq!(
+            from_bytes(&bad, 7, Mode::Full).unwrap_err().kind(),
+            StoreErrorKind::BadVersion
+        );
+
+        // checksum
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert_eq!(
+            from_bytes(&bad, 7, Mode::Full).unwrap_err().kind(),
+            StoreErrorKind::BadChecksum
+        );
+
+        // truncation
+        let bad = &good[..good.len() - 3];
+        assert_eq!(from_bytes(bad, 7, Mode::Full).unwrap_err().kind(), StoreErrorKind::Truncated);
+
+        // fingerprint + mode mismatches
+        assert_eq!(from_bytes(&good, 8, Mode::Full).unwrap_err().kind(), StoreErrorKind::Mismatch);
+        assert_eq!(
+            from_bytes(&good, 7, Mode::AdRevolve).unwrap_err().kind(),
+            StoreErrorKind::Mismatch
+        );
+    }
+
+    #[test]
+    fn save_writes_the_canonical_name_and_load_round_trips() {
+        let (_dc, tab) = table();
+        let dir = std::env::temp_dir().join(format!("chainckpt-persist-{}", std::process::id()));
+        let path = save(&dir, 0xabcd, Mode::Full, &tab).expect("save");
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "dp-000000000000abcd.tbl");
+        let back = load(&path, 0xabcd, Mode::Full).expect("load");
+        assert_eq!(back.run_count(), tab.run_count());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -52,9 +52,12 @@
 
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::path::PathBuf;
 use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::time::Instant;
 
 use super::optimal::{reconstruct, try_solve_table, DpTable, Mode};
+use super::persist;
 use super::sequence::{Schedule, StrategyKind};
 use crate::api::Result as ApiResult;
 use crate::chain::{Chain, DiscreteChain};
@@ -167,7 +170,9 @@ impl Planner {
     pub fn feasible_range(&self) -> Option<(u64, u64)> {
         let n = self.dc.len();
         let wa0 = self.dc.wa_s(0);
-        let bmax = (self.dc.slots as u32).checked_sub(wa0)?;
+        // preflight bounds the slot axis well inside u32, so the
+        // conversion never fails in practice; `?` keeps it total anyway
+        let bmax = u32::try_from(self.dc.slots).ok()?.checked_sub(wa0)?;
         if !self.table.cost(1, n, bmax).is_finite() {
             return None;
         }
@@ -266,6 +271,24 @@ static CACHE: Mutex<TableCache> = Mutex::new(TableCache {
 /// Wakes waiters parked in [`table_for`] when an in-flight build finishes.
 static CACHE_CV: Condvar = Condvar::new();
 
+/// The cache's optional second tier: a directory of persisted DP tables
+/// ([`super::persist`] format). `None` (the default) disables the tier
+/// entirely — lookups skip the filesystem and behave exactly as before.
+static TABLE_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Point the planner cache at an on-disk table store (or detach it with
+/// `None`). Process-global, like the cache itself: the service sets it
+/// once at startup from `--table-dir`; benches set and clear it around
+/// cold/warm arms.
+pub fn set_table_dir(dir: Option<PathBuf>) {
+    *TABLE_DIR.lock().unwrap_or_else(|p| p.into_inner()) = dir;
+}
+
+/// The directory currently backing the cache's disk tier, if any.
+pub fn table_dir() -> Option<PathBuf> {
+    TABLE_DIR.lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
 fn lock_cache() -> std::sync::MutexGuard<'static, TableCache> {
     // the critical sections below never panic; recover anyway if a
     // panicking test poisoned the lock
@@ -308,6 +331,12 @@ impl Drop for InflightGuard {
 
 /// Fetch the table for a discretized chain, filling it on a cache miss.
 ///
+/// Misses consult the optional **disk tier** ([`set_table_dir`]) before
+/// filling: a persisted table with a matching fingerprint loads in IO
+/// time instead of DP time, and fresh builds are written back so later
+/// processes start warm. The memory LRU stays the first tier — a disk
+/// load is inserted there like any built table.
+///
 /// Builds are **single-flight** per fingerprint: a racing miss parks on a
 /// condvar until the thread that got there first finishes its fill, then
 /// takes the shared `Arc` (from the LRU, or from a weak handoff slot when
@@ -348,11 +377,24 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
         }
     }
     let _guard = InflightGuard { key };
-    let table = Arc::new(try_solve_table(dc, mode)?);
+    // Tier 2: a previous process may have persisted this exact table.
+    // A disk hit skips the O(L²·S) fill; a miss (or a rejected file)
+    // falls through to a normal build, which is then written back so
+    // the *next* cold start hits.
+    let (table, built) = match load_tier2(dc, mode, key) {
+        Some(table) => (table, false),
+        None => {
+            let table = Arc::new(try_solve_table(dc, mode)?);
+            save_tier2(key, mode, &table);
+            (table, true)
+        }
+    };
     let bytes = table.mem_bytes();
     {
         let mut cache = lock_cache();
-        reg.cache_builds.inc();
+        if built {
+            reg.cache_builds.inc();
+        }
         cache.handoff.retain(|(_, w)| w.strong_count() > 0);
         if bytes <= CACHE_MAX_ENTRY_BYTES && !cache.entries.iter().any(|e| e.key == key) {
             cache.entries.push(CacheEntry { key, bytes, table: table.clone() });
@@ -371,6 +413,50 @@ fn try_table_for(dc: &DiscreteChain, mode: Mode) -> ApiResult<Arc<DpTable>> {
     }
     // _guard drops here: clears the in-flight marker, wakes waiters
     Ok(table)
+}
+
+/// Try the persistent store for `key`. Returns `None` — counted as a
+/// miss or an error, never propagated — whenever the tier is detached,
+/// the file is absent, or [`persist::load`] rejects it (bad checksum,
+/// stale version, foreign fingerprint, geometry that disagrees with the
+/// discretized chain). The caller treats every `None` as a plain build.
+fn load_tier2(dc: &DiscreteChain, mode: Mode, key: u64) -> Option<Arc<DpTable>> {
+    let dir = table_dir()?;
+    let reg = crate::telemetry::registry();
+    let path = dir.join(persist::table_file_name(key));
+    if !path.exists() {
+        reg.store_misses.inc();
+        return None;
+    }
+    let start = Instant::now();
+    match persist::load(&path, key, mode) {
+        Ok(table) if table.stages() == dc.len() && table.slots() == dc.slots => {
+            reg.store_hits.inc();
+            reg.store_load_ns.add(u64::try_from(start.elapsed().as_nanos()).unwrap_or(u64::MAX));
+            Some(Arc::new(table))
+        }
+        Ok(_) => {
+            // fingerprint collision with different geometry — treat as
+            // absent rather than serve a wrong-shaped table
+            reg.store_errors.inc();
+            None
+        }
+        Err(_) => {
+            reg.store_errors.inc();
+            None
+        }
+    }
+}
+
+/// Persist a freshly built table, best-effort: a full disk or read-only
+/// directory costs a counter tick, never a failed plan.
+fn save_tier2(key: u64, mode: Mode, table: &DpTable) {
+    let Some(dir) = table_dir() else { return };
+    let reg = crate::telemetry::registry();
+    match persist::save(&dir, key, mode, table) {
+        Ok(_) => reg.store_writes.inc(),
+        Err(_) => reg.store_errors.inc(),
+    }
 }
 
 /// Counters of the shared planner table cache (monotone since process

@@ -293,6 +293,12 @@ pub struct Registry {
     pub cache_builds: Counter,
     pub cache_evictions: Counter,
     pub cache_coalesced: Counter,
+    // --- persistent table store, the cache's second tier (solver/persist.rs) ---
+    pub store_hits: Counter,
+    pub store_misses: Counter,
+    pub store_writes: Counter,
+    pub store_errors: Counter,
+    pub store_load_ns: Counter,
     // --- DP fill internals (solver/optimal.rs, frontier fill) ---
     pub solver_cells_filled: Counter,
     pub solver_runs_emitted: Counter,
@@ -329,6 +335,11 @@ impl Registry {
             cache_builds: Counter::new(),
             cache_evictions: Counter::new(),
             cache_coalesced: Counter::new(),
+            store_hits: Counter::new(),
+            store_misses: Counter::new(),
+            store_writes: Counter::new(),
+            store_errors: Counter::new(),
+            store_load_ns: Counter::new(),
             solver_cells_filled: Counter::new(),
             solver_runs_emitted: Counter::new(),
             solver_prune_hits: Counter::new(),
@@ -370,7 +381,9 @@ impl Registry {
     }
 
     /// Zero the planner-cache counters — `solver::clear_cache`'s
-    /// counter half, so benches keep their exact-count assertions.
+    /// counter half, so benches keep their exact-count assertions. The
+    /// disk-tier counters reset too: cold/warm bench arms isolate their
+    /// store traffic the same way they isolate hits and builds.
     pub fn reset_cache_counters(&self) {
         for c in [
             &self.cache_lookups,
@@ -378,6 +391,11 @@ impl Registry {
             &self.cache_builds,
             &self.cache_evictions,
             &self.cache_coalesced,
+            &self.store_hits,
+            &self.store_misses,
+            &self.store_writes,
+            &self.store_errors,
+            &self.store_load_ns,
         ] {
             c.reset();
         }
@@ -420,6 +438,16 @@ impl Registry {
                         "hit_rate",
                         Value::from(if lookups > 0 { hits as f64 / lookups as f64 } else { 0.0 }),
                     ),
+                ]),
+            ),
+            (
+                "table_store",
+                obj([
+                    ("hits", Value::from(self.store_hits.get())),
+                    ("misses", Value::from(self.store_misses.get())),
+                    ("writes", Value::from(self.store_writes.get())),
+                    ("errors", Value::from(self.store_errors.get())),
+                    ("load_ns", Value::from(self.store_load_ns.get())),
                 ]),
             ),
             (
@@ -512,6 +540,36 @@ impl Registry {
             "chainckpt_planner_cache_coalesced_total",
             "Lookups that waited on an in-flight build instead of duplicating it.",
             self.cache_coalesced.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_table_store_hits_total",
+            "DP tables loaded from the persistent on-disk store.",
+            self.store_hits.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_table_store_misses_total",
+            "Disk-store lookups that found no usable table file.",
+            self.store_misses.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_table_store_writes_total",
+            "DP tables persisted to the on-disk store.",
+            self.store_writes.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_table_store_errors_total",
+            "Rejected or failed store files (corruption, IO).",
+            self.store_errors.get(),
+        );
+        counter_line(
+            &mut out,
+            "chainckpt_table_store_load_nanoseconds_total",
+            "Wall-clock nanoseconds spent loading stored tables.",
+            self.store_load_ns.get(),
         );
         counter_line(
             &mut out,
@@ -753,7 +811,7 @@ mod tests {
         }
         // the snapshot mirrors the same groups
         let snap = registry().snapshot();
-        for key in ["planner_cache", "solver", "executor", "native", "service"] {
+        for key in ["planner_cache", "table_store", "solver", "executor", "native", "service"] {
             assert!(snap.get(key).is_some(), "snapshot missing group {key}");
         }
     }

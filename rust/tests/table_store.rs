@@ -1,0 +1,345 @@
+//! The persistent table store, end to end: a planner pointed at a
+//! `table_dir` must (a) write each freshly solved table to disk, (b)
+//! answer later planner constructions from that file with *bit-identical*
+//! schedules — Theorem 1's reconstruction runs on the loaded table, so
+//! any drift would be a silent correctness bug — and (c) treat every
+//! corrupted, truncated, stale, or mismatched file as a recoverable miss
+//! (kind-tagged error, DP rebuild), never a panic and never a wrong
+//! table.
+//!
+//! The table-dir configuration and the planner cache are process-global,
+//! so every test serializes on one mutex and resets both (`clear_cache`,
+//! `set_table_dir(None)`) on its way out.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use chainckpt::api::ChainSpec;
+use chainckpt::chain::Chain;
+use chainckpt::solver::persist::{self, StoreErrorKind, FORMAT_VERSION};
+use chainckpt::solver::{cache_stats, clear_cache, set_table_dir, Mode, Planner};
+use chainckpt::telemetry;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A per-test scratch directory (fresh at entry; caller removes at exit).
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("chainckpt-tstore-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn preset_chain(name: &str) -> Chain {
+    ChainSpec::preset(name).resolve().expect("preset resolves")
+}
+
+fn graph_chain() -> Chain {
+    let g = chainckpt::graph::preset("residual").expect("residual graph preset");
+    ChainSpec::graph(g).resolve().expect("graph fuses into a chain")
+}
+
+/// The `.tbl` files currently in `dir`.
+fn table_files(dir: &PathBuf) -> Vec<PathBuf> {
+    let Ok(rd) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "tbl"))
+        .collect();
+    out.sort();
+    out
+}
+
+/// Recover the fingerprint from the canonical `dp-<16 hex>.tbl` name.
+fn fingerprint_of(path: &PathBuf) -> u64 {
+    let name = path.file_name().and_then(|n| n.to_str()).expect("utf-8 file name");
+    let hex = name.strip_prefix("dp-").and_then(|s| s.strip_suffix(".tbl")).expect("canonical name");
+    u64::from_str_radix(hex, 16).expect("hex fingerprint")
+}
+
+/// FNV-1a 64, re-stated independently so tests can re-seal a header they
+/// deliberately edited (stale version, wrong geometry) and prove the
+/// *semantic* check fires rather than hiding behind the checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn reseal(bytes: &mut [u8]) {
+    let at = bytes.len() - 8;
+    let sum = fnv1a(&bytes[..at]);
+    bytes[at..].copy_from_slice(&sum.to_le_bytes());
+}
+
+const SLOTS: usize = 64;
+
+fn top_of(chain: &Chain) -> u64 {
+    chain.store_all_memory() + chain.wa0
+}
+
+/// Sweep budgets spanning the feasible range (plus infeasibly-low and
+/// top, so the None/Some pattern is exercised too).
+fn budgets_of(planner: &Planner) -> Vec<u64> {
+    let (lo, hi) = planner.feasible_range().expect("store-all top is feasible");
+    vec![lo.saturating_sub(1), lo, lo + (hi - lo) / 3, lo + (hi - lo) / 2, lo + 2 * (hi - lo) / 3, hi]
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loaded_tables_answer_bit_identically_to_fresh_solves() {
+    let _g = lock();
+    let chains = [preset_chain("quickstart"), preset_chain("default"), graph_chain()];
+    for chain in &chains {
+        for mode in [Mode::Full, Mode::AdRevolve] {
+            let dir = fresh_dir("parity");
+            let top = top_of(chain);
+
+            // reference: a fresh in-memory solve, no disk tier at all
+            clear_cache();
+            set_table_dir(None);
+            let fresh = Planner::new(chain, top, SLOTS, mode);
+            let budgets = budgets_of(&fresh);
+            let want = fresh.sweep(&budgets);
+            assert_eq!(
+                telemetry::registry().store_writes.get(),
+                0,
+                "no table_dir, no disk traffic"
+            );
+
+            // cold build with the disk tier armed: miss, fill, write
+            clear_cache();
+            set_table_dir(Some(dir.clone()));
+            let built = Planner::new(chain, top, SLOTS, mode);
+            let reg = telemetry::registry();
+            assert_eq!(cache_stats().builds, 1, "cold: one real DP fill");
+            assert_eq!(reg.store_misses.get(), 1, "cold: the store had no file");
+            assert_eq!(reg.store_writes.get(), 1, "cold: the table is persisted");
+            assert_eq!(table_files(&dir).len(), 1, "one canonical .tbl file");
+            drop(built);
+
+            // warm restart: LRU gone, file answers instead of the DP
+            clear_cache();
+            let loaded = Planner::new(chain, top, SLOTS, mode);
+            let reg = telemetry::registry();
+            assert_eq!(reg.store_hits.get(), 1, "warm: served from disk");
+            assert_eq!(cache_stats().builds, 0, "warm: the DP must not run");
+            assert!(reg.store_load_ns.get() > 0, "load time is recorded");
+
+            let got = loaded.sweep(&budgets);
+            assert_eq!(want.len(), got.len());
+            for (m, (w, g)) in budgets.iter().zip(want.iter().zip(&got)) {
+                match (w, g) {
+                    (None, None) => {}
+                    (Some(w), Some(g)) => {
+                        assert_eq!(
+                            w.predicted_time.to_bits(),
+                            g.predicted_time.to_bits(),
+                            "chain {} mode {mode:?} budget {m}: cost must be bit-identical",
+                            chain.name
+                        );
+                        assert_eq!(
+                            w.ops, g.ops,
+                            "chain {} mode {mode:?} budget {m}: ops must be identical",
+                            chain.name
+                        );
+                    }
+                    (w, g) => panic!(
+                        "chain {} mode {mode:?} budget {m}: feasibility disagrees (fresh {:?}, loaded {:?})",
+                        chain.name,
+                        w.is_some(),
+                        g.is_some()
+                    ),
+                }
+            }
+
+            set_table_dir(None);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    clear_cache();
+}
+
+// ---------------------------------------------------------------------------
+// Corruption matrix
+// ---------------------------------------------------------------------------
+
+/// One real file, every way it can go bad. Each arm must produce the
+/// matching kind-tagged [`StoreErrorKind`] — never a panic, never a
+/// silently loaded table.
+#[test]
+fn every_corruption_is_a_kind_tagged_rejection() {
+    let _g = lock();
+    let dir = fresh_dir("corrupt");
+    let chain = preset_chain("quickstart");
+
+    clear_cache();
+    set_table_dir(Some(dir.clone()));
+    let _ = Planner::new(&chain, top_of(&chain), SLOTS, Mode::Full);
+    set_table_dir(None);
+
+    let files = table_files(&dir);
+    assert_eq!(files.len(), 1);
+    let path = &files[0];
+    let fp = fingerprint_of(path);
+    let good = std::fs::read(path).expect("read the table file");
+
+    let kind_of = |bytes: &[u8]| {
+        persist::from_bytes(bytes, fp, Mode::Full).expect_err("corrupt image must not load").kind()
+    };
+
+    // sanity: the untouched image loads
+    assert!(persist::from_bytes(&good, fp, Mode::Full).is_ok());
+
+    // truncation — mid-payload and mid-header
+    assert_eq!(kind_of(&good[..good.len() - 5]), StoreErrorKind::Truncated);
+    assert_eq!(kind_of(&good[..20]), StoreErrorKind::Truncated);
+
+    // a flipped payload byte fails the checksum
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    assert_eq!(kind_of(&bad), StoreErrorKind::BadChecksum);
+
+    // wrong magic
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert_eq!(kind_of(&bad), StoreErrorKind::BadMagic);
+
+    // stale format version, *resealed* so the version check itself fires
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+    reseal(&mut bad);
+    assert_eq!(kind_of(&bad), StoreErrorKind::BadVersion);
+
+    // fingerprint / mode disagreement with the request
+    assert_eq!(
+        persist::from_bytes(&good, fp ^ 1, Mode::Full).expect_err("wrong fingerprint").kind(),
+        StoreErrorKind::Mismatch
+    );
+    assert_eq!(
+        persist::from_bytes(&good, fp, Mode::AdRevolve).expect_err("wrong mode").kind(),
+        StoreErrorKind::Mismatch
+    );
+
+    // checksummed-but-inconsistent: bump the stage count and reseal — the
+    // structural validation (not the checksum) must catch it
+    let mut bad = good.clone();
+    let n = u64::from_le_bytes(bad[24..32].try_into().expect("8 bytes"));
+    bad[24..32].copy_from_slice(&(n + 1).to_le_bytes());
+    reseal(&mut bad);
+    assert_eq!(kind_of(&bad), StoreErrorKind::Corrupt);
+
+    // load() surfaces filesystem problems as Io
+    assert_eq!(
+        persist::load(&dir.join("no-such-file.tbl"), fp, Mode::Full)
+            .expect_err("missing file")
+            .kind(),
+        StoreErrorKind::Io
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    clear_cache();
+}
+
+/// The planner-level guarantee built on the matrix above: a damaged file
+/// under `table_dir` degrades to a rebuild (counted in `store_errors`)
+/// and the rebuilt table overwrites the damage — the service never dies
+/// and never serves from a bad file.
+#[test]
+fn a_damaged_store_file_degrades_to_a_rebuild() {
+    let _g = lock();
+    let dir = fresh_dir("degrade");
+    let chain = preset_chain("quickstart");
+    let top = top_of(&chain);
+
+    clear_cache();
+    set_table_dir(Some(dir.clone()));
+    let fresh = Planner::new(&chain, top, SLOTS, Mode::Full);
+    let budgets = budgets_of(&fresh);
+    let want = fresh.sweep(&budgets);
+    drop(fresh);
+
+    // vandalize the stored file
+    let files = table_files(&dir);
+    assert_eq!(files.len(), 1);
+    let mut bytes = std::fs::read(&files[0]).expect("read");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&files[0], &bytes).expect("write damage");
+
+    // restart: the load fails, the DP refills, the answer is unchanged
+    clear_cache();
+    let rebuilt = Planner::new(&chain, top, SLOTS, Mode::Full);
+    let reg = telemetry::registry();
+    assert_eq!(reg.store_hits.get(), 0, "a damaged file is not a hit");
+    assert_eq!(reg.store_errors.get(), 1, "…it is a counted store error");
+    assert_eq!(cache_stats().builds, 1, "…answered by a rebuild");
+    let got = rebuilt.sweep(&budgets);
+    for (w, g) in want.iter().zip(&got) {
+        match (w, g) {
+            (Some(w), Some(g)) => {
+                assert_eq!(w.predicted_time.to_bits(), g.predicted_time.to_bits());
+                assert_eq!(w.ops, g.ops);
+            }
+            (None, None) => {}
+            _ => panic!("feasibility changed after rebuild"),
+        }
+    }
+    drop(rebuilt);
+
+    // the rebuild re-persisted a good file: a third restart hits disk
+    clear_cache();
+    let _third = Planner::new(&chain, top, SLOTS, Mode::Full);
+    let reg = telemetry::registry();
+    assert_eq!(reg.store_hits.get(), 1, "the rebuilt file is valid again");
+    assert_eq!(cache_stats().builds, 0);
+
+    set_table_dir(None);
+    let _ = std::fs::remove_dir_all(&dir);
+    clear_cache();
+}
+
+/// Distinct (chain, mode, slots) triples land in distinct files keyed by
+/// fingerprint, and a directory shared by all of them never cross-serves.
+#[test]
+fn the_catalog_keys_tables_by_fingerprint() {
+    let _g = lock();
+    let dir = fresh_dir("catalog");
+    let chain = preset_chain("quickstart");
+    let top = top_of(&chain);
+
+    clear_cache();
+    set_table_dir(Some(dir.clone()));
+    let _a = Planner::new(&chain, top, SLOTS, Mode::Full);
+    let _b = Planner::new(&chain, top, SLOTS, Mode::AdRevolve);
+    let _c = Planner::new(&chain, top, SLOTS / 2, Mode::Full);
+    let files = table_files(&dir);
+    assert_eq!(files.len(), 3, "mode and slot count are part of the key");
+
+    // each file round-trips only under its own fingerprint+mode
+    for path in &files {
+        let fp = fingerprint_of(path);
+        let bytes = std::fs::read(path).expect("read");
+        let full = persist::from_bytes(&bytes, fp, Mode::Full);
+        let rev = persist::from_bytes(&bytes, fp, Mode::AdRevolve);
+        assert!(
+            full.is_ok() != rev.is_ok(),
+            "exactly one mode matches each stored header"
+        );
+    }
+
+    set_table_dir(None);
+    let _ = std::fs::remove_dir_all(&dir);
+    clear_cache();
+}
